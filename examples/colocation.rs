@@ -1,0 +1,91 @@
+//! Live colocation demo (the paper's Fig 1 / §6.3 story on real
+//! hardware — this machine): run the same workload through the
+//! GPU-resident scheduler and the CPU-resident baseline scheduler, first
+//! isolated, then colocated with real memory-thrashing interferer
+//! threads. The CPU-resident baseline degrades (its per-step host
+//! orchestration contends for LLC); Blink's device-plane loop does not.
+//!
+//!     cargo run --release --example colocation -- [--requests 12]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blink::gpu::{Executor, Placement, Scheduler, SchedulerConfig};
+use blink::hostsim::Interferer;
+use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
+use blink::runtime::{artifacts_dir, ModelManifest};
+use blink::util::cli::Args;
+use blink::util::rng::Rng;
+
+fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
+    let dir = artifacts_dir();
+    let manifest = ModelManifest::load(&dir.join("blink-tiny/manifest.txt")).expect("manifest");
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 64,
+        max_prompt: 128,
+        max_output: 64,
+    }));
+    let executor = Executor::spawn(dir, "blink-tiny".into()).expect("executor");
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest,
+        SchedulerConfig { placement, apply_launch_delays: true, ..Default::default() },
+    );
+
+    let interferer = if interfere {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        Some(Interferer::spawn(threads, 8))
+    } else {
+        None
+    };
+    std::thread::sleep(Duration::from_millis(200)); // let interferers warm
+
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let prompt: Vec<u32> = (0..48).map(|_| rng.below(2048) as u32).collect();
+        assert!(ring.claim_for_write(i));
+        ring.write_prompt(i, &prompt);
+        ring.submit(i, i as u64, 48, 24, i as u32);
+    }
+    loop {
+        let done = (0..n)
+            .all(|i| matches!(ring.slot(i).state(), SlotState::DecodeCompleted | SlotState::Failed));
+        if done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    if let Some(i) = interferer {
+        i.stop();
+    }
+    sched.drain_and_stop();
+    makespan
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("requests", 12);
+    println!("[colocation] {n} requests x 48 prompt -> 24 output tokens, blink-tiny (live)");
+    println!("[colocation] each cell loads+compiles the engine (~30s) before measuring\n");
+
+    let configs: [(&str, Placement); 2] = [
+        ("BLINK (GPU-resident)", Placement::GpuResident),
+        (
+            "baseline (CPU-resident)",
+            Placement::CpuResident { scratch_mb: 16, touches_per_step: 400_000 },
+        ),
+    ];
+    println!(
+        "{:<26} {:>12} {:>12} {:>18}",
+        "scheduler", "isolated(s)", "colocated(s)", "colocated/isolated"
+    );
+    for (name, placement) in configs {
+        let iso = run_once(placement.clone(), n, false);
+        let co = run_once(placement.clone(), n, true);
+        println!("{:<26} {:>12.2} {:>12.2} {:>18.2}", name, iso, co, co / iso);
+    }
+    println!("\n(paper Fig 1: baselines retain 28-54 % of isolated throughput; BLINK ~100 %)");
+}

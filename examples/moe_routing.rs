@@ -1,0 +1,46 @@
+//! MoE serving demo: the blink-tiny-moe model end to end, demonstrating
+//! the paper's §6.2 observation that MoE routing is data-dependent but
+//! *shape*-static — the persistent scheduler launches MoE decode graphs
+//! exactly like dense ones, with zero host involvement in expert routing
+//! (the gating top-k runs inside the AOT graph; see
+//! python/compile/kernels/moe_gating.py).
+//!
+//!     cargo run --release --example moe_routing
+
+use blink::gpu::Placement;
+use blink::server::{BlinkServer, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("[moe] starting Blink on blink-tiny-moe (AOT compile ~30s)...");
+    let server = BlinkServer::start(ServerConfig {
+        model: "blink-tiny-moe".into(),
+        placement: Placement::GpuResident,
+        ..Default::default()
+    })?;
+    let m = &server.manifest;
+    println!(
+        "[moe] model={} experts={} top_k={} layers={} (moe={})",
+        m.model, m.n_experts, m.top_k, m.n_layers, m.moe
+    );
+
+    // A small batch of concurrent requests: routing differs per token but
+    // every launch uses the same fixed-shape graphs from the cache.
+    let prompts = [
+        "the scheduler claims pending prompts via atomic compare and swap",
+        "tokens stream back to clients over server sent events",
+        "expert routing is data dependent but not shape dependent",
+        "the ring buffer is the only shared data structure",
+    ];
+    let handles: Vec<_> =
+        prompts.iter().map(|p| server.submit_text(p, 16).expect("submit")).collect();
+    for (p, h) in prompts.iter().zip(handles) {
+        let toks = h.collect().map_err(|e| anyhow::anyhow!(e))?;
+        let text = blink::tokenizer::decode(&server.frontend.vocab, &toks);
+        println!("[moe] {:>2} tokens for {:?}\n      -> {:?}", toks.len(), p, text);
+    }
+    println!("[moe] scheduler: {}", server.scheduler.stats.summary());
+    println!("[moe] no host round-trip occurred for any routing decision:");
+    println!("      gating top-k executes inside each decode graph (L1 Pallas kernel).");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: start a Blink instance on the tiny model, submit one
+//! prompt through the DPU plane, and stream the generated text.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use blink::frontend::tracker::TokenEvent;
+use blink::server::{BlinkServer, ServerConfig};
+use blink::tokenizer::Detokenizer;
+
+fn main() -> anyhow::Result<()> {
+    println!("[quickstart] starting Blink (compiles AOT graphs once, ~30 s)...");
+    let server = BlinkServer::start(ServerConfig::default())?;
+    println!(
+        "[quickstart] model={} layers={} vocab={} graphs={}",
+        server.manifest.model,
+        server.manifest.n_layers,
+        server.manifest.vocab_size,
+        server.manifest.graphs.len()
+    );
+
+    let prompt = "the quick brown fox jumps over the lazy dog and the persistent \
+                  scheduler scans the ring buffer for newly submitted prompts";
+    println!("[quickstart] prompt: {prompt:?}");
+    let handle = server.submit_text(prompt, 32).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "[quickstart] submitted as request {} in ring slot {} ({} prompt tokens)",
+        handle.request_id, handle.slot, handle.prompt_tokens
+    );
+
+    // Stream tokens as the DPU token reader delivers them.
+    let mut detok = Detokenizer::new();
+    let mut n = 0;
+    print!("[quickstart] output: ");
+    loop {
+        match handle.rx.recv() {
+            Ok(TokenEvent::Token(t)) => {
+                n += 1;
+                print!("{}", detok.push(&server.frontend.vocab, t));
+                use std::io::Write;
+                std::io::stdout().flush().ok();
+            }
+            Ok(TokenEvent::Done) => {
+                println!("{}", detok.finish());
+                break;
+            }
+            Ok(TokenEvent::Failed) => anyhow::bail!("generation failed"),
+            Err(_) => anyhow::bail!("frontend dropped"),
+        }
+    }
+    println!("[quickstart] generated {n} tokens");
+    println!("[quickstart] scheduler: {}", server.scheduler.stats.summary());
+    let (ops, bytes) = server.rdma.stats();
+    println!("[quickstart] rdma: {ops} verbs, {bytes} bytes moved");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end serving driver (the validation run recorded in
+//! EXPERIMENTS.md): start the full Blink stack on the tiny real model,
+//! drive it with a Poisson workload through the DPU plane, and report
+//! latency/throughput — the live analogue of the paper's guidellm runs.
+//!
+//!     cargo run --release --example serve_e2e -- [--rate 4] [--seconds 30]
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use blink::server::{BlinkServer, ServerConfig};
+use blink::util::cli::Args;
+use blink::util::rng::Rng;
+use blink::util::stats::LatencySummary;
+use blink::workload::LengthModel;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rate = args.get_f64("rate", 4.0);
+    let seconds = args.get_f64("seconds", 30.0);
+
+    eprintln!("[e2e] starting Blink stack (AOT compile ~30s)...");
+    let server = Arc::new(BlinkServer::start(ServerConfig::default())?);
+    let http = blink::http::HttpServer::serve(
+        "127.0.0.1:0",
+        server.frontend.clone(),
+        server.scheduler.stats.clone(),
+    )?;
+    eprintln!("[e2e] http on {}, offered load {rate} req/s for {seconds}s", http.addr);
+
+    let lengths = LengthModel::sharegpt_tiny();
+    let mut rng = Rng::new(0xE2E);
+    // (ttft_ms, total_ms, tpot_ms, tokens)
+    let results: Arc<Mutex<Vec<(f64, f64, f64, usize)>>> = Arc::new(Mutex::new(vec![]));
+    let mut handles = vec![];
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut next_arrival = 0.0f64;
+
+    while t0.elapsed().as_secs_f64() < seconds {
+        let now = t0.elapsed().as_secs_f64();
+        if next_arrival > now {
+            std::thread::sleep(Duration::from_secs_f64((next_arrival - now).min(0.1)));
+            continue;
+        }
+        next_arrival += rng.exp(rate);
+        let (in_len, out_len) = lengths.sample(&mut rng, 200, 48);
+        let prompt: Vec<u32> = (0..in_len).map(|_| rng.below(2048) as u32).collect();
+        let server = server.clone();
+        let results = results.clone();
+        submitted += 1;
+        handles.push(std::thread::spawn(move || {
+            let t_submit = Instant::now();
+            let Ok(h) = server.submit_tokens(&prompt, out_len as u32) else { return };
+            use blink::frontend::tracker::TokenEvent;
+            let mut first: Option<Duration> = None;
+            let mut count = 0usize;
+            loop {
+                match h.rx.recv() {
+                    Ok(TokenEvent::Token(_)) => {
+                        count += 1;
+                        if first.is_none() {
+                            first = Some(t_submit.elapsed());
+                        }
+                    }
+                    Ok(TokenEvent::Done) | Ok(TokenEvent::Failed) | Err(_) => break,
+                }
+            }
+            if let Some(f) = first {
+                let total = t_submit.elapsed();
+                let tpot = if count > 1 {
+                    (total - f).as_secs_f64() * 1e3 / (count - 1) as f64
+                } else {
+                    0.0
+                };
+                results.lock().unwrap().push((
+                    f.as_secs_f64() * 1e3,
+                    total.as_secs_f64() * 1e3,
+                    tpot,
+                    count,
+                ));
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let res = results.lock().unwrap();
+    let ttft: Vec<f64> = res.iter().map(|r| r.0).collect();
+    let tpot: Vec<f64> = res.iter().filter(|r| r.2 > 0.0).map(|r| r.2).collect();
+    let tokens: usize = res.iter().map(|r| r.3).sum();
+    let ts = LatencySummary::from_samples(&ttft);
+    let ps = LatencySummary::from_samples(&tpot);
+    println!("\n== serve_e2e report (live blink-tiny, CPU PJRT) ==");
+    println!("offered rate        {rate:.2} req/s for {seconds:.0}s");
+    println!("submitted/completed {submitted}/{}", res.len());
+    println!("req throughput      {:.2} req/s", res.len() as f64 / wall);
+    println!("decode throughput   {:.1} tok/s", tokens as f64 / wall);
+    println!("TTFT ms             mean {:.1}  p50 {:.1}  p99 {:.1}", ts.mean, ts.p50, ts.p99);
+    println!("TPOT ms             mean {:.1}  p50 {:.1}  p99 {:.1}", ps.mean, ps.p50, ps.p99);
+    println!("scheduler           {}", server.scheduler.stats.summary());
+    let (ops, bytes) = server.rdma.stats();
+    println!("rdma                {ops} verbs, {:.1} MB", bytes as f64 / 1e6);
+    drop(http);
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    Ok(())
+}

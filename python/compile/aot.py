@@ -1,0 +1,140 @@
+"""AOT export: lower the L2 graphs to HLO text + weights npz + manifest.
+
+Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/<model>/``:
+    manifest.txt           line-based manifest the rust runtime parses
+    params.npz             weights (numpy savez; xla crate reads npz)
+    decode_b{B}.hlo.txt    one decode graph per batch size in the grid
+    prefill_b{B}_s{S}.hlo.txt
+
+This mirrors the paper's CUDA-graph cache (§4.2): a dense grid of
+(batch, seq) executables captured once at startup, selected at runtime by
+an O(1) tightest-fit lookup in rust/src/graphs/.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import TINY, TINY_MOE, ModelConfig, init_params, make_flat_fns
+
+# The (batch, seq) graph grids. Decode graphs are keyed by batch size;
+# prefill graphs by (batch, padded seq len).
+DENSE_DECODE_BATCHES = [1, 2, 4, 8, 16]
+DENSE_PREFILL_GRID = [
+    (b, s) for b in (1, 2, 4) for s in (16, 32, 64, 128, 256)
+]
+MOE_DECODE_BATCHES = [1, 2, 4, 8]
+MOE_PREFILL_GRID = [(b, s) for b in (1, 2) for s in (16, 32, 64, 128)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_specs(cfg: ModelConfig, batch: int, seq: int | None):
+    """ShapeDtypeStructs in manifest order for one graph."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs()]
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.num_blocks, 2, cfg.n_kv_heads, cfg.block_size, cfg.d_head),
+        jnp.float32,
+    )
+    bt = jax.ShapeDtypeStruct((batch, cfg.max_blocks_per_seq), jnp.int32)
+    sl = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    if seq is None:
+        tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    return specs + [kv, bt, sl, tok, seed]
+
+
+def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> None:
+    out = os.path.join(out_root, cfg.name)
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    params = init_params(cfg)
+    np.savez(
+        os.path.join(out, "params.npz"),
+        **{k: np.asarray(v) for k, v in params.items()},
+    )
+
+    decode_fn, prefill_fn = make_flat_fns(cfg, use_pallas=use_pallas)
+    # Donate the KV pool (input -> output alias): the rust runtime swaps
+    # the pool buffer each step anyway, and the alias lets XLA update it
+    # in place instead of copying ~33 MB per decode step (§Perf: ~2x on
+    # decode_b1). The alias survives the HLO-text interchange.
+    kv_arg = len(cfg.param_specs())
+    decode_batches = MOE_DECODE_BATCHES if cfg.moe else DENSE_DECODE_BATCHES
+    prefill_grid = MOE_PREFILL_GRID if cfg.moe else DENSE_PREFILL_GRID
+
+    graphs = []  # (name, kind, batch, seq)
+    for b in decode_batches:
+        name = f"decode_b{b}"
+        lowered = jax.jit(decode_fn, donate_argnums=(kv_arg,)).lower(*_arg_specs(cfg, b, None))
+        with open(os.path.join(out, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        graphs.append((name, "decode", b, 0))
+        print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
+    for b, s in prefill_grid:
+        name = f"prefill_b{b}_s{s}"
+        lowered = jax.jit(prefill_fn, donate_argnums=(kv_arg,)).lower(*_arg_specs(cfg, b, s))
+        with open(os.path.join(out, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        graphs.append((name, "prefill", b, s))
+        print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("blink-manifest v1\n")
+        f.write(f"model {cfg.name}\n")
+        for field in (
+            "vocab_size d_model n_layers n_heads n_kv_heads d_head d_ff "
+            "block_size num_blocks max_blocks_per_seq n_experts top_k eos_token"
+        ).split():
+            f.write(f"{field} {getattr(cfg, field)}\n")
+        f.write(f"moe {int(cfg.moe)}\n")
+        f.write(f"temperature {cfg.temperature}\n")
+        f.write(f"top_p {cfg.top_p}\n")
+        f.write(f"rope_theta {cfg.rope_theta}\n")
+        for name, shape in cfg.param_specs():
+            f.write(f"param {name} {'x'.join(map(str, shape))} f32\n")
+        for name, kind, b, s in graphs:
+            f.write(f"graph {name} {kind} {b} {s}\n")
+    print(f"[{cfg.name}] exported {len(graphs)} graphs in {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="blink-tiny,blink-tiny-moe")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower against the jnp oracles instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wanted = set(args.models.split(","))
+    for cfg in (TINY, TINY_MOE):
+        if cfg.name in wanted:
+            export_model(cfg, args.out, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

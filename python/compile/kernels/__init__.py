@@ -1,0 +1,23 @@
+"""L1: Pallas kernels for Blink's compute hot-spots (+ pure-jnp oracles).
+
+All kernels lower with interpret=True so the AOT HLO runs on the CPU PJRT
+client; see DESIGN.md §Hardware-Adaptation for the TPU mapping.
+"""
+
+from .flash_attention import flash_attention
+from .moe_gating import moe_gating
+from .paged_attention import paged_attention
+from .rmsnorm import rmsnorm
+from .rope import rope
+from .sampling import topp_sample
+from . import ref
+
+__all__ = [
+    "flash_attention",
+    "moe_gating",
+    "paged_attention",
+    "rmsnorm",
+    "rope",
+    "topp_sample",
+    "ref",
+]

@@ -1,0 +1,105 @@
+"""Flash-attention prefill Pallas kernel (causal, GQA, length-masked).
+
+TPU mapping of the paper's CUDA attention (DESIGN.md §Hardware-Adaptation):
+the CUDA version tiles Q over thread blocks and streams K/V through shared
+memory; here the grid is (batch, q_head, q_block) and BlockSpec stages one
+Q tile plus the full K/V row of the matching KV head into VMEM, with the
+online-softmax accumulation walking K in chunks — the same HBM↔scratchpad
+schedule expressed as an index map instead of threadblock logic. The inner
+dot products are MXU-shaped ([bq, Dh] x [Dh, bk]).
+
+interpret=True on CPU: numerics identical to kernels.ref.flash_attention_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, bq: int, bk: int, t: int, causal: bool):
+    # q_ref: [bq, Dh]; k_ref/v_ref: [T, Dh] (the full row for this kv head);
+    # len_ref: [1] actual sequence length; o_ref: [bq, Dh].
+    qb = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    seq_len = len_ref[0]
+
+    q_pos = qb * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
+        s = (q @ k.T) * scale  # [bq, bk]
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        mask = k_pos[None, :] < seq_len
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, t // bk, body, (m0, l0, acc0))
+    # Padded query rows (q_pos >= seq_len) have fully-masked score rows;
+    # l stays ~0 there. Guard the divide; their output is ignored upstream.
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seq_lens: jax.Array,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [B, T, Hq, Dh]; k/v: [B, T, Hkv, Dh]; seq_lens: [B]. -> [B, T, Hq, Dh]."""
+    b, t, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    if t % bq != 0:
+        bq = t
+    if t % bk != 0:
+        bk = t
+
+    # Layout for clean BlockSpecs: q -> [B, Hq, T, Dh]; k/v -> [B, Hkv, T, Dh].
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    grid = (b, hq, t // bq)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, t=t, causal=causal),
+        grid=grid,
+        in_specs=[
+            # `None` squeezes the singleton batch/head dims inside the kernel.
+            pl.BlockSpec((None, None, bq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, dh), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt, seq_lens)
+    return jnp.moveaxis(out, 1, 2)

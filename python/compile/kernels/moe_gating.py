@@ -1,0 +1,65 @@
+"""MoE top-k gating Pallas kernel (fixed-shape routing).
+
+The paper's MoE analysis (§6.2) leans on routing being *data-dependent but
+not shape-dependent*: expert choice varies per token but every tensor keeps
+a static shape, so the whole forward pass captures as one graph. This
+kernel produces a dense [T, E] routing-weight matrix (zeros off the top-k)
+via iterated masked argmax — no gather/scatter with dynamic shapes, so the
+lowered HLO is branch-free and graph-capturable.
+
+Grid: (token_blocks,). k is a compile-time constant (top-2 by default).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(g_ref, w_ref, *, top_k: int):
+    g = g_ref[...].astype(jnp.float32)  # [bt, E]
+    bt, e = g.shape
+    work = g
+    sel_mask = jnp.zeros((bt, e), jnp.bool_)
+    sel_vals = []
+    for _ in range(top_k):  # top_k is tiny and static: unrolled
+        mx = jnp.max(work, axis=-1, keepdims=True)
+        pick = (work == mx) & ~sel_mask
+        # Break ties toward the lowest expert index.
+        first = jnp.cumsum(pick.astype(jnp.int32), axis=-1) == 1
+        pick = pick & first
+        sel_mask = sel_mask | pick
+        sel_vals.append(mx[:, 0])
+        work = jnp.where(pick, NEG_INF, work)
+    # Softmax over the selected logits only, scattered back densely.
+    vals = jnp.stack(sel_vals, axis=-1)  # [bt, k]
+    m = jnp.max(vals, axis=-1, keepdims=True)
+    ev = jnp.exp(vals - m)
+    denom = jnp.sum(ev, axis=-1, keepdims=True)
+    eg = jnp.exp(g - m)
+    w_ref[...] = jnp.where(sel_mask, eg / denom, 0.0).astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block_rows", "interpret"))
+def moe_gating(
+    gate_logits: jax.Array,
+    top_k: int = 2,
+    block_rows: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """gate_logits: [T, E] -> dense routing weights [T, E] (rows sum to 1)."""
+    t, e = gate_logits.shape
+    bt = min(block_rows, t)
+    if t % bt != 0:
+        bt = 1
+    return pl.pallas_call(
+        functools.partial(_gating_kernel, top_k=top_k),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), jnp.float32),
+        interpret=interpret,
+    )(gate_logits)

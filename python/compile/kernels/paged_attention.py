@@ -1,0 +1,100 @@
+"""Paged decode-attention Pallas kernel.
+
+The paper's decode path reads K/V pages scattered through GPU memory via a
+block table (PagedAttention). CUDA implementations gather pages with warp
+loads; the TPU re-think (DESIGN.md §Hardware-Adaptation) keeps the pool in
+HBM-like memory and walks the block table page-by-page with an in-kernel
+fori_loop of dynamic-slice loads, online-softmax accumulation — so the
+fast-memory working set is one page of K/V per sequence plus accumulators:
+
+    VMEM footprint ≈ B * (Bs*Dh*2 (page K+V) + Hq*Dh*2 (q, acc)) floats.
+
+Kernel structure (§Perf iteration 3): a **single program** vectorized over
+(batch, kv_head, group) rather than a (batch, kv_head) grid. Decode is
+bandwidth-bound with tiny per-program compute, so a grid buys no MXU
+utilization but multiplies pool staging: under interpret=True each grid
+step re-materializes its in-spec blocks, which made the original
+(B × Hkv)-grid version copy the whole pool B×Hkv times per step (~50 ms
+of the tiny model's decode step on CPU). One program stages the pool
+once; on real TPU the same shape keeps the block-table walk as one
+sequential DMA stream per page across all sequences.
+
+interpret=True for CPU-PJRT execution; numerics must match
+kernels.ref.paged_attention_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(q_ref, pool_ref, bt_ref, len_ref, o_ref, *, bs: int, max_blocks: int):
+    # q_ref: [B, Hkv, G, Dh]; pool_ref: [N, 2, Hkv, Bs, Dh];
+    # bt_ref: [B, max_blocks]; len_ref: [B]; o_ref: [B, Hkv, G, Dh].
+    q = q_ref[...].astype(jnp.float32)
+    b, hkv, g, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    seq_lens = len_ref[...]
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        blk = bt_ref[:, j]  # [B]
+        kv = pool_ref[blk]  # [B, 2, Hkv, Bs, Dh] (gather of B pages)
+        k = kv[:, 0].astype(jnp.float32)  # [B, Hkv, Bs, Dh]
+        v = kv[:, 1].astype(jnp.float32)
+        s = jnp.einsum("bhgd,bhsd->bhgs", q, k) * scale  # [B, Hkv, G, Bs]
+        pos = j * bs + jax.lax.iota(jnp.int32, bs)  # [Bs]
+        valid = pos[None, :] < seq_lens[:, None]  # [B, Bs]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgs,bhsd->bhgd", p, v)
+        return m_cur, l_cur, acc
+
+    # Walk only pages that can contain valid tokens for the longest lane.
+    n_blocks = jnp.minimum((jnp.max(seq_lens) + bs - 1) // bs, max_blocks)
+    m0 = jnp.full((b, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [B, Hq, Dh]; kv_pool: [N, 2, Hkv, Bs, Dh]; block_tables: [B, M];
+    seq_lens: [B] (valid tokens incl. current). Returns [B, Hq, Dh]."""
+    b, hq, dh = q.shape
+    n, two, hkv, bs, _ = kv_pool.shape
+    m = block_tables.shape[1]
+    group = hq // hkv
+
+    # [B, Hkv, group, Dh] so GQA groups share their kv head's pages.
+    qg = q.reshape(b, hkv, group, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, max_blocks=m),
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(qg.shape, lambda: (0, 0, 0, 0)),
+            pl.BlockSpec(kv_pool.shape, lambda: (0, 0, 0, 0, 0)),
+            pl.BlockSpec((b, m), lambda: (0, 0)),
+            pl.BlockSpec((b,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec(qg.shape, lambda: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dh), q.dtype),
+        interpret=interpret,
+    )(qg, kv_pool, block_tables, seq_lens)
+    return out.reshape(b, hq, dh)

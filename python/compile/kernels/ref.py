@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each ``*_ref`` here is the mathematical definition; the Pallas kernels in
+this package must match these to tight tolerances (pytest + hypothesis
+sweeps in python/tests/). The L2 model can be built against either
+implementation (``use_pallas`` flag in model.py), which is how we A/B the
+kernels inside the full lowered graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis. x: [..., D], weight: [D]."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight).astype(x.dtype)
+
+
+def rope_ref(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.
+
+    x: [..., T, H, Dh] (Dh even), positions: broadcastable to [..., T].
+    Llama convention: rotate the two halves of the head dim.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None, None] * freqs  # [..., T, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seq_lens: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    """Masked causal attention for (padded) prefill.
+
+    q: [B, T, Hq, Dh], k/v: [B, T, Hkv, Dh] (GQA: Hq % Hkv == 0),
+    seq_lens: [B] actual lengths; key positions >= seq_len are masked out.
+    Returns [B, T, Hq, Dh].
+    """
+    b, t, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    qi = jnp.arange(t)[:, None]
+    ki = jnp.arange(t)[None, :]
+    mask = ki <= qi if causal else jnp.ones((t, t), bool)
+    valid = ki[None] < seq_lens[:, None, None]  # [B, 1, T] over the key axis
+    full = mask[None, None] & valid[:, None]
+    logits = jnp.where(full, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+) -> jax.Array:
+    """Single-token decode attention over a paged KV pool.
+
+    q: [B, Hq, Dh] — query for the current position of each sequence.
+    kv_pool: [N, 2, Hkv, Bs, Dh] — global block pool (0=K, 1=V).
+    block_tables: [B, M] int32 — block ids per sequence (padded, unused
+        entries arbitrary but must be < N).
+    seq_lens: [B] int32 — number of valid tokens per sequence (including
+        the current one, whose K/V must already be written to the pool).
+    Returns [B, Hq, Dh].
+    """
+    b, hq, dh = q.shape
+    n, _, hkv, bs, _ = kv_pool.shape
+    m = block_tables.shape[1]
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+
+    # Gather each sequence's logical KV: [B, M*Bs, Hkv, Dh]
+    k = kv_pool[block_tables, 0]  # [B, M, Hkv, Bs, Dh]
+    v = kv_pool[block_tables, 1]
+    k = jnp.moveaxis(k, 3, 2).reshape(b, m * bs, hkv, dh)
+    v = jnp.moveaxis(v, 3, 2).reshape(b, m * bs, hkv, dh)
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    pos = jnp.arange(m * bs)[None, :]
+    valid = pos < seq_lens[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def topp_sample_ref(
+    logits: jax.Array,
+    uniform: jax.Array,
+    temperature: float = 0.8,
+    top_p: float = 0.95,
+) -> jax.Array:
+    """Top-p (nucleus) sampling with temperature, driven by an external
+    uniform draw (deterministic given the uniform — what the AOT graph uses).
+
+    logits: [B, V], uniform: [B] in [0,1). Returns sampled token ids [B].
+    """
+    b, v = logits.shape
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # Keep tokens while the cumulative mass *before* them is < top_p
+    # (always keeps the top token).
+    keep = (cum - probs) < top_p
+    filtered = jnp.where(keep, probs, 0.0)
+    filtered = filtered / jnp.sum(filtered, axis=-1, keepdims=True)
+    cdf = jnp.cumsum(filtered, axis=-1)
+    idx_in_sorted = jnp.sum((cdf <= uniform[:, None]).astype(jnp.int32), axis=-1)
+    idx_in_sorted = jnp.clip(idx_in_sorted, 0, v - 1)
+    return jnp.take_along_axis(order, idx_in_sorted[:, None], axis=-1)[:, 0]
+
+
+def moe_gating_ref(gate_logits: jax.Array, top_k: int = 2):
+    """Softmax-normalized top-k routing weights.
+
+    gate_logits: [T, E]. Returns (weights [T, E], indices [T, top_k]) where
+    weights is dense over experts (zero off the top-k), renormalized over
+    the selected experts — fixed shapes regardless of routing, as the
+    paper's §6.2 MoE analysis requires.
+    """
+    t, e = gate_logits.shape
+    topv, topi = jax.lax.top_k(gate_logits, top_k)
+    w = jax.nn.softmax(topv.astype(jnp.float32), axis=-1)
+    dense = jnp.zeros((t, e), jnp.float32)
+    dense = dense.at[jnp.arange(t)[:, None], topi].set(w)
+    return dense, topi
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x @ w_gate) * (x @ w_up)) @ w_down."""
+    g = jax.nn.silu((x @ w_gate).astype(jnp.float32))
+    return ((g * (x @ w_up)) @ w_down).astype(x.dtype)

@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): rows are tiled into VMEM
+blocks via BlockSpec; the reduction + scale fuse into one VPU pass instead
+of the separate mean/rsqrt/mul HLO ops of the reference. interpret=True so
+the lowering is plain HLO executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    eps: float = 1e-5,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """RMSNorm over the last axis. x: [T, D] (callers flatten), weight: [D]."""
+    t, d = x.shape
+    bt = min(block_rows, t)
+    if t % bt != 0:
+        bt = 1
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(x, weight)

@@ -1,0 +1,67 @@
+"""Fused top-p (nucleus) sampling Pallas kernel.
+
+The paper captures Top-P + temperature sampling *inside* each CUDA graph so
+the forward pass through next-token selection is one device-side launch
+(§4.2 "CUDA graph cache"). We mirror that: the sort (argsort, an XLA sort)
+happens in the surrounding jax function, and this kernel fuses the
+temperature scale → softmax → cumulative top-p filter → renormalize →
+inverse-CDF draw into one VMEM pass over the sorted row.
+
+Grid: (batch,). Input `uniform` is the externally supplied U[0,1) draw, so
+the whole decode graph is a pure function of (state, seed) — required for
+AOT export and for the rust runtime's determinism tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topp_kernel(sorted_logits_ref, u_ref, idx_ref, *, temperature: float, top_p: float):
+    x = sorted_logits_ref[...].astype(jnp.float32)  # [V] descending
+    v = x.shape[0]
+    x = x / max(temperature, 1e-6)
+    # Numerically-stable softmax over the sorted row.
+    m = jnp.max(x)
+    e = jnp.exp(x - m)
+    probs = e / jnp.sum(e)
+    cum = jnp.cumsum(probs)
+    keep = (cum - probs) < top_p  # always keeps the argmax
+    filt = jnp.where(keep, probs, 0.0)
+    filt = filt / jnp.sum(filt)
+    cdf = jnp.cumsum(filt)
+    u = u_ref[0]
+    idx = jnp.sum((cdf <= u).astype(jnp.int32))
+    idx_ref[0] = jnp.clip(idx, 0, v - 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("temperature", "top_p", "interpret")
+)
+def topp_sample(
+    logits: jax.Array,
+    uniform: jax.Array,
+    temperature: float = 0.8,
+    top_p: float = 0.95,
+    interpret: bool = True,
+) -> jax.Array:
+    """logits: [B, V], uniform: [B] in [0,1). Returns token ids [B] int32."""
+    b, v = logits.shape
+    scaled = logits.astype(jnp.float32)
+    order = jnp.argsort(-scaled, axis=-1)  # XLA sort outside the kernel
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+
+    idx_in_sorted = pl.pallas_call(
+        functools.partial(_topp_kernel, temperature=temperature, top_p=top_p),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, v), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(sorted_logits, uniform)
+    return jnp.take_along_axis(order, idx_in_sorted[:, None], axis=-1)[:, 0]

@@ -1,0 +1,367 @@
+"""L2: the JAX model — llama-style decoder (dense + MoE) with paged KV.
+
+This is the compute graph Blink's GPU-resident scheduler launches: two
+entry points, ``prefill`` and ``decode_step``, both *pure functions* of
+(params, kv_pool, control tensors, seed). They call the L1 Pallas kernels
+(``use_pallas=True``, the AOT default) or the jnp oracles (``False``) —
+the A/B used by python/tests to validate kernels inside the full graph.
+
+Conventions shared with the rust coordinator (rust/src/runtime,
+rust/src/gpu) — change them in lockstep with artifacts/manifest:
+
+* KV pool: [L, N, 2, Hkv, Bs, Dh] float32, device-resident across steps.
+* block_tables: [B, M] int32. Every entry that any *padded* position of a
+  sequence can map to must be a block owned by that sequence (the rust
+  allocator allocates ceil(padded_len / Bs) blocks up front), because
+  prefill writes K/V for padded positions too (masked out of attention,
+  overwritten by later decode writes).
+* seq_lens (decode): number of tokens whose K/V is already cached; the
+  incoming token is written at position seq_lens and attention spans
+  seq_lens + 1 tokens.
+* seed: uint32 scalar; all sampling randomness derives from it, so the
+  rust side replays generations deterministically.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "blink-tiny"
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 704
+    rope_theta: float = 10000.0
+    # Paged KV cache geometry.
+    block_size: int = 16
+    num_blocks: int = 512
+    max_blocks_per_seq: int = 32  # max context = 512 tokens
+    # MoE.
+    moe: bool = False
+    n_experts: int = 4
+    top_k: int = 2
+    # Sampling (captured inside the graph, like the paper's CUDA graphs).
+    temperature: float = 0.8
+    top_p: float = 0.95
+    eos_token: int = 0
+
+    @property
+    def max_context(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the manifest/npz/rust arg order."""
+        l, d = self.n_layers, self.d_model
+        hq, hkv, dh, f = self.n_heads, self.n_kv_heads, self.d_head, self.d_ff
+        specs = [
+            ("tok_embed", (self.vocab_size, d)),
+            ("attn_norm", (l, d)),
+            ("wq", (l, d, hq * dh)),
+            ("wk", (l, d, hkv * dh)),
+            ("wv", (l, d, hkv * dh)),
+            ("wo", (l, hq * dh, d)),
+            ("mlp_norm", (l, d)),
+        ]
+        if self.moe:
+            e = self.n_experts
+            specs += [
+                ("router", (l, d, e)),
+                ("w_gate", (l, e, d, f)),
+                ("w_up", (l, e, d, f)),
+                ("w_down", (l, e, f, d)),
+            ]
+        else:
+            specs += [
+                ("w_gate", (l, d, f)),
+                ("w_up", (l, d, f)),
+                ("w_down", (l, f, d)),
+            ]
+        specs.append(("final_norm", (d,)))
+        return specs
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+TINY = ModelConfig()
+TINY_MOE = ModelConfig(name="blink-tiny-moe", moe=True, d_ff=512)
+
+# The four paper models, used by the simulator cost model (sim::costmodel
+# in rust mirrors these numbers; they are not instantiated as real weights).
+PAPER_MODELS = {
+    "llama3-8b": dict(params=8.0e9, active=8.0e9, layers=32, moe=False),
+    "phi4-15b": dict(params=14.7e9, active=14.7e9, layers=40, moe=False),
+    "qwen3-32b": dict(params=32.0e9, active=32.0e9, layers=64, moe=False),
+    "qwen3-30b-a3b": dict(params=30.0e9, active=3.0e9, layers=48, moe=True),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic random init, scaled for stable logits at depth."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (kernel / oracle switched by use_pallas)
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x2d, w, use_pallas):
+    return kernels.rmsnorm(x2d, w) if use_pallas else ref.rmsnorm_ref(x2d, w)
+
+
+def _rope(x, pos, theta, use_pallas):
+    # x: [T, H, Dh], pos: [T]
+    return kernels.rope(x, pos, theta=theta) if use_pallas else ref.rope_ref(x, pos, theta)
+
+
+def _sample(logits, uniform, cfg, use_pallas):
+    fn = kernels.topp_sample if use_pallas else ref.topp_sample_ref
+    return fn(logits, uniform, temperature=cfg.temperature, top_p=cfg.top_p)
+
+
+def _mlp_dense(h2d, wg, wu, wd):
+    g = jax.nn.silu(h2d @ wg)
+    return (g * (h2d @ wu)) @ wd
+
+
+def _mlp_moe(h2d, router, wg, wu, wd, cfg, use_pallas):
+    # h2d: [T, D]; router: [D, E]; wg/wu: [E, D, F]; wd: [E, F, D].
+    gate_logits = h2d @ router  # [T, E]
+    if use_pallas:
+        weights = kernels.moe_gating(gate_logits, top_k=cfg.top_k)
+    else:
+        weights, _ = ref.moe_gating_ref(gate_logits, top_k=cfg.top_k)
+    # Fixed-shape dispatch (paper §6.2): every expert runs on every token,
+    # outputs combined by the (mostly-zero) dense routing weights. This is
+    # the shape-static capture TensorRT's MoE plugin performs with fixed
+    # buffers; compute waste is irrelevant at tiny scale and the HLO stays
+    # branch-free.
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", h2d, wg))
+    u = jnp.einsum("td,edf->tef", h2d, wu)
+    eo = jnp.einsum("tef,efd->ted", g * u, wd)  # [T, E, D]
+    return jnp.einsum("te,ted->td", weights, eo)
+
+
+def _mlp(h2d, p, li, cfg, use_pallas):
+    if cfg.moe:
+        return _mlp_moe(
+            h2d,
+            p["router"][li],
+            p["w_gate"][li],
+            p["w_up"][li],
+            p["w_down"][li],
+            cfg,
+            use_pallas,
+        )
+    return _mlp_dense(h2d, p["w_gate"][li], p["w_up"][li], p["w_down"][li])
+
+
+def _write_kv_decode(pool_layer, k, v, block_tables, positions, cfg):
+    """Write one token's K/V per sequence into the pool.
+
+    pool_layer: [N, 2, Hkv, Bs, Dh]; k/v: [B, Hkv, Dh]; positions: [B]."""
+    bs = cfg.block_size
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None], axis=1)[:, 0]
+    slot = positions % bs
+    pool_layer = pool_layer.at[blk, 0, :, slot, :].set(k)
+    pool_layer = pool_layer.at[blk, 1, :, slot, :].set(v)
+    return pool_layer
+
+
+def _write_kv_prefill(pool_layer, k, v, block_tables, cfg):
+    """Write a whole padded prompt's K/V. k/v: [B, S, Hkv, Dh]."""
+    b, s = k.shape[0], k.shape[1]
+    bs = cfg.block_size
+    pos = jnp.arange(s, dtype=jnp.int32)
+    blk = block_tables[:, :][jnp.arange(b)[:, None], pos[None, :] // bs]  # [B, S]
+    slot = pos[None, :] % bs  # [1, S] -> broadcast
+    slot = jnp.broadcast_to(slot, (b, s))
+    # k is [B, S, Hkv, Dh]; advanced indices (blk, slot) pick [B, S] slots.
+    pool_layer = pool_layer.at[blk, 0, :, slot, :].set(jnp.moveaxis(k, 2, 2))
+    pool_layer = pool_layer.at[blk, 1, :, slot, :].set(jnp.moveaxis(v, 2, 2))
+    return pool_layer
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Dict[str, jax.Array],
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    tokens: jax.Array,
+    seed: jax.Array,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+):
+    """One decode iteration for a batch.
+
+    kv_pool: [L, N, 2, Hkv, Bs, Dh]; tokens: [B] int32 (current inputs);
+    seq_lens: [B] cached-token counts. Returns (next_tokens [B], kv_pool').
+    Inactive batch lanes (seq_lens == 0 convention is NOT used — the rust
+    side packs active lanes densely and pads with lane 0 duplicates).
+    """
+    b = tokens.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = seq_lens  # write position of the incoming token
+
+    x = params["tok_embed"][tokens]  # [B, D]
+
+    def layer(carry, inputs):
+        x, kv_pool = carry
+        li = inputs
+        h = _rmsnorm(x, params["attn_norm"][li], use_pallas)
+        q = (h @ params["wq"][li]).reshape(b, hq, dh)
+        k = (h @ params["wk"][li]).reshape(b, hkv, dh)
+        v = (h @ params["wv"][li]).reshape(b, hkv, dh)
+        # rope over the "token" axis: decode has T == B independent tokens.
+        q = _rope(q, positions, cfg.rope_theta, use_pallas)
+        k = _rope(k, positions, cfg.rope_theta, use_pallas)
+        pool_layer = kv_pool[li]
+        pool_layer = _write_kv_decode(pool_layer, k, v, block_tables, positions, cfg)
+        kv_pool = jax.lax.dynamic_update_index_in_dim(kv_pool, pool_layer, li, 0)
+        attn_fn = kernels.paged_attention if use_pallas else ref.paged_attention_ref
+        o = attn_fn(q, pool_layer, block_tables, seq_lens + 1)  # [B, Hq, Dh]
+        x = x + o.reshape(b, hq * dh) @ params["wo"][li]
+        h2 = _rmsnorm(x, params["mlp_norm"][li], use_pallas)
+        x = x + _mlp(h2, params, li, cfg, use_pallas)
+        return (x, kv_pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(
+        layer, (x, kv_pool), jnp.arange(cfg.n_layers), length=cfg.n_layers
+    )
+
+    x = _rmsnorm(x, params["final_norm"], use_pallas)
+    logits = x @ params["tok_embed"].T  # tied LM head, [B, V]
+    uniform = jax.random.uniform(jax.random.PRNGKey(seed), (b,), jnp.float32)
+    next_tokens = _sample(logits, uniform, cfg, use_pallas)
+    return next_tokens.astype(jnp.int32), kv_pool
+
+
+def prefill(
+    params: Dict[str, jax.Array],
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    tokens: jax.Array,
+    seed: jax.Array,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+):
+    """Prefill a padded batch of prompts and sample each first output token.
+
+    tokens: [B, S] int32 (padded with any id); seq_lens: [B] true lengths.
+    Writes K/V for all S positions (padded ones are masked in attention and
+    later overwritten by decode). Returns (first_tokens [B], kv_pool').
+    """
+    b, s = tokens.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    x = params["tok_embed"][tokens]  # [B, S, D]
+
+    def layer(carry, li):
+        x, kv_pool = carry
+        h2d = _rmsnorm(x.reshape(b * s, -1), params["attn_norm"][li], use_pallas)
+        h = h2d.reshape(b, s, -1)
+        q = (h @ params["wq"][li]).reshape(b, s, hq, dh)
+        k = (h @ params["wk"][li]).reshape(b, s, hkv, dh)
+        v = (h @ params["wv"][li]).reshape(b, s, hkv, dh)
+        # rope rows share positions across the batch: flatten to [B*S].
+        posf = jnp.broadcast_to(positions[None, :], (b, s)).reshape(b * s)
+        q = _rope(q.reshape(b * s, hq, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hq, dh
+        )
+        k = _rope(k.reshape(b * s, hkv, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hkv, dh
+        )
+        pool_layer = kv_pool[li]
+        pool_layer = _write_kv_prefill(pool_layer, k, v, block_tables, cfg)
+        kv_pool = jax.lax.dynamic_update_index_in_dim(kv_pool, pool_layer, li, 0)
+        attn_fn = kernels.flash_attention if use_pallas else ref.flash_attention_ref
+        o = attn_fn(q, k, v, seq_lens)  # [B, S, Hq, Dh]
+        x = x + o.reshape(b, s, hq * dh) @ params["wo"][li]
+        h2 = _rmsnorm(x.reshape(b * s, -1), params["mlp_norm"][li], use_pallas)
+        x = x + _mlp(h2, params, li, cfg, use_pallas).reshape(b, s, -1)
+        return (x, kv_pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(
+        layer, (x, kv_pool), jnp.arange(cfg.n_layers), length=cfg.n_layers
+    )
+
+    # Last valid hidden state per row -> first sampled token.
+    last_idx = jnp.clip(seq_lens - 1, 0, s - 1)
+    xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]  # [B, D]
+    xl = _rmsnorm(xl, params["final_norm"], use_pallas)
+    logits = xl @ params["tok_embed"].T
+    uniform = jax.random.uniform(jax.random.PRNGKey(seed), (b,), jnp.float32)
+    first = _sample(logits, uniform, cfg, use_pallas)
+    return first.astype(jnp.int32), kv_pool
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers for AOT export (rust passes positional buffers)
+# ---------------------------------------------------------------------------
+
+
+def make_flat_fns(cfg: ModelConfig, use_pallas: bool = True):
+    """Return (decode_fn, prefill_fn) taking flat positional args in
+    manifest order: [*params, kv_pool, block_tables, seq_lens, tokens, seed].
+    Outputs are (next_tokens, kv_pool) tuples."""
+    names = [n for n, _ in cfg.param_specs()]
+
+    def unflatten(args):
+        params = dict(zip(names, args[: len(names)]))
+        rest = args[len(names):]
+        return params, rest
+
+    def decode_fn(*args):
+        params, (kv, bt, sl, tok, seed) = unflatten(args)
+        return decode_step(params, kv, bt, sl, tok, seed, cfg, use_pallas)
+
+    def prefill_fn(*args):
+        params, (kv, bt, sl, tok, seed) = unflatten(args)
+        return prefill(params, kv, bt, sl, tok, seed, cfg, use_pallas)
+
+    return decode_fn, prefill_fn
+
+
+def empty_kv_pool(cfg: ModelConfig) -> jax.Array:
+    return jnp.zeros(
+        (
+            cfg.n_layers,
+            cfg.num_blocks,
+            2,
+            cfg.n_kv_heads,
+            cfg.block_size,
+            cfg.d_head,
+        ),
+        jnp.float32,
+    )

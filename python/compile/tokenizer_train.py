@@ -1,0 +1,144 @@
+"""Build-time BPE tokenizer trainer.
+
+Trains a byte-level BPE vocabulary on a small bundled corpus and emits
+``artifacts/vocab.blink`` — a flat text format the rust tokenizer
+(`rust/src/tokenizer/`) parses without any JSON dependency:
+
+    blink-vocab v1
+    vocab_size <n>
+    merges <m>
+    TOKEN <id> <hex-bytes>          # one per token, id order
+    MERGE <left-id> <right-id> <new-id> <rank>
+
+Byte-level: ids 0..255 are the raw bytes; merged tokens follow. This is the
+same construction family as GPT-2/llama BPE (greedy lowest-rank merge), so
+the rust tokenizer's flat-hash merge table (paper §4.4, Fig 4) is exercised
+exactly as in the paper.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import collections
+import os
+
+# A small English corpus, bundled so the build is hermetic (no downloads).
+# Repetition with variation gives BPE enough statistics for ~2k merges.
+_BASE_CORPUS = """
+Large language model inference is rapidly becoming a core datacenter
+service, yet current serving stacks keep the host processor on the critical
+path for orchestration and token level control. This makes performance
+sensitive to interference, undermining application colocation and forcing
+operators to reserve headroom, leaving substantial capacity unutilized.
+We introduce a serving architecture that removes the host from the steady
+state inference path by redistributing responsibilities across a network
+card and an accelerator. The system offloads request handling to the card,
+which delivers inputs directly into device memory, and replaces host driven
+scheduling with a persistent kernel that performs batching, scheduling, and
+cache management without host involvement. The quick brown fox jumps over
+the lazy dog while the five boxing wizards jump quickly. Pack my box with
+five dozen liquor jugs. How vexingly quick daft zebras jump! Autoregressive
+decoding transforms inference into a long lived, stateful process in which
+each generated token depends on previously produced state. Latency
+sensitive operations such as cache management, batching decisions, and
+token streaming are tightly coupled to per token scheduling. As a result,
+the control path becomes part of the critical loop. Existing systems
+offload portions of request handling or data movement, but they do not
+address autoregressive decoding. Token by token execution, placement, and
+flow control repeatedly interact with device resident state, while
+scheduling and coordination remain host centric. The scheduler executes an
+infinite control loop: it scans the ring buffer for newly submitted
+prompts, claims them via atomic compare and swap, selects and launches the
+appropriate graph for prefill or decode, polls device resident output
+buffers for completion after token sampling, and publishes generated tokens
+and status updates back to the ring buffer. Numbers like 0 1 2 3 4 5 6 7 8
+9 10 42 100 1024 2048 4096 and punctuation , . ; : ! ? ( ) [ ] { } " '
+appear in real traffic, as do capitalized Words, ALLCAPS tokens, and
+snake_case or camelCase identifiers common in code. def main(args): return
+sum(x * x for x in range(10)) if args else None. The protocol parser on the
+card validates requests, tokenizes prompts, locates a free ring buffer
+slot, writes prompts into device memory, retrieves generated tokens,
+detokenizes them, and streams responses back to clients over server sent
+events. A window based recovery mechanism maintains a monotonically
+increasing launch counter in shared memory and atomically replaces the
+current graph execution with a fresh instance upon reaching the limit.
+"""
+
+
+def build_corpus() -> bytes:
+    parts = [_BASE_CORPUS]
+    # Vary casing and spacing so merges generalize a little.
+    parts.append(_BASE_CORPUS.lower())
+    parts.append(_BASE_CORPUS.upper()[: len(_BASE_CORPUS) // 4])
+    parts.append(" ".join(w for w in _BASE_CORPUS.split()))
+    return ("\n".join(parts)).encode("utf-8")
+
+
+def train_bpe(corpus: bytes, vocab_size: int):
+    """Greedy byte-level BPE. Returns (tokens: list[bytes], merges)."""
+    tokens = [bytes([i]) for i in range(256)]
+    merges = []  # (left_id, right_id, new_id)
+
+    # Pre-tokenize on whitespace boundaries (merges never cross words),
+    # mirroring GPT-2-style pretokenization and the rust tokenizer.
+    words = collections.Counter()
+    for w in corpus.split():
+        words[b" " + w] += 1  # leading-space convention
+
+    # word -> list of token ids
+    word_syms = {w: list(w) for w in words}
+
+    while len(tokens) < vocab_size:
+        pair_counts = collections.Counter()
+        for w, cnt in words.items():
+            syms = word_syms[w]
+            for a, b in zip(syms, syms[1:]):
+                pair_counts[(a, b)] += cnt
+        if not pair_counts:
+            break
+        (a, b), cnt = pair_counts.most_common(1)[0]
+        if cnt < 2:
+            break
+        new_id = len(tokens)
+        tokens.append(tokens[a] + tokens[b])
+        merges.append((a, b, new_id))
+        for w in words:
+            syms = word_syms[w]
+            out, i = [], 0
+            while i < len(syms):
+                if i + 1 < len(syms) and syms[i] == a and syms[i + 1] == b:
+                    out.append(new_id)
+                    i += 2
+                else:
+                    out.append(syms[i])
+                    i += 1
+            word_syms[w] = out
+    return tokens, merges
+
+
+def write_vocab(path: str, tokens, merges) -> None:
+    with open(path, "w") as f:
+        f.write("blink-vocab v1\n")
+        f.write(f"vocab_size {len(tokens)}\n")
+        f.write(f"merges {len(merges)}\n")
+        for i, t in enumerate(tokens):
+            f.write(f"TOKEN {i} {t.hex()}\n")
+        for rank, (a, b, n) in enumerate(merges):
+            f.write(f"MERGE {a} {b} {n} {rank}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--vocab-size", type=int, default=2048)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    corpus = build_corpus()
+    tokens, merges = train_bpe(corpus, args.vocab_size)
+    out = os.path.join(args.out, "vocab.blink")
+    write_vocab(out, tokens, merges)
+    print(f"trained BPE: {len(tokens)} tokens, {len(merges)} merges -> {out}")
+
+
+if __name__ == "__main__":
+    main()

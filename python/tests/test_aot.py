@@ -1,0 +1,39 @@
+"""AOT export: HLO text emission + manifest schema (small config so the
+test stays fast; the full export is `make artifacts`)."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import _arg_specs, to_hlo_text
+from compile.model import TINY, make_flat_fns
+
+CFG = dataclasses.replace(TINY, n_layers=1, num_blocks=8, max_blocks_per_seq=2)
+
+
+def test_decode_graph_lowers_to_hlo_text():
+    decode_fn, _ = make_flat_fns(CFG, use_pallas=True)
+    lowered = jax.jit(decode_fn).lower(*_arg_specs(CFG, 2, None))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Tuple-rooted (tokens, kv) signature; 64-bit-id-free text form.
+    assert "s32[2]" in text
+
+def test_prefill_graph_lowers_to_hlo_text():
+    _, prefill_fn = make_flat_fns(CFG, use_pallas=True)
+    lowered = jax.jit(prefill_fn).lower(*_arg_specs(CFG, 1, 16))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[1,16]" in text
+
+
+def test_arg_specs_match_manifest_order():
+    specs = _arg_specs(CFG, 1, None)
+    n_params = len(CFG.param_specs())
+    assert len(specs) == n_params + 5  # params + kv + bt + sl + tok + seed
+    kv = specs[n_params]
+    assert kv.shape == (CFG.n_layers, CFG.num_blocks, 2, CFG.n_kv_heads, CFG.block_size, CFG.d_head)
+    assert specs[-1].dtype == jnp.uint32

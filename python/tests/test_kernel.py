@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes per the session contract; every Pallas
+kernel must match its pure-jnp oracle in kernels/ref.py to tight
+tolerances under interpret=True.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    flash_attention,
+    moe_gating,
+    paged_attention,
+    rmsnorm,
+    rope,
+    topp_sample,
+)
+from compile.kernels.ref import (
+    flash_attention_ref,
+    moe_gating_ref,
+    paged_attention_ref,
+    rmsnorm_ref,
+    rope_ref,
+    topp_sample_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 48),
+    d=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, (t, d), 3.0), arr(rng, (d,))
+    np.testing.assert_allclose(rmsnorm(x, w), rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 32),
+    h=st.sampled_from([1, 4, 8]),
+    dh=st.sampled_from([8, 32, 64]),
+    offset=st.integers(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_matches_ref(t, h, dh, offset, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (t, h, dh))
+    pos = jnp.arange(offset, offset + t, dtype=jnp.int32)
+    np.testing.assert_allclose(rope(x, pos), rope_ref(x, pos), rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    t=st.sampled_from([16, 32, 64, 128]),
+    heads=st.sampled_from([(4, 4), (8, 4), (8, 2)]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(b, t, heads, dh, seed):
+    hq, hkv = heads
+    rng = np.random.default_rng(seed)
+    q = arr(rng, (b, t, hq, dh))
+    k = arr(rng, (b, t, hkv, dh))
+    v = arr(rng, (b, t, hkv, dh))
+    lens = jnp.asarray(rng.integers(1, t + 1, b), dtype=jnp.int32)
+    got = flash_attention(q, k, v, lens)
+    want = flash_attention_ref(q, k, v, lens)
+    # Only rows < seq_len are consumed downstream; compare those.
+    for i in range(b):
+        n = int(lens[i])
+        np.testing.assert_allclose(got[i, :n], want[i, :n], rtol=3e-4, atol=3e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    heads=st.sampled_from([(4, 4), (8, 4)]),
+    dh=st.sampled_from([16, 32]),
+    bs=st.sampled_from([8, 16]),
+    m=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_attention_matches_ref(b, heads, dh, bs, m, seed):
+    hq, hkv = heads
+    rng = np.random.default_rng(seed)
+    n_blocks = 32
+    q = arr(rng, (b, hq, dh))
+    pool = arr(rng, (n_blocks, 2, hkv, bs, dh))
+    bt = jnp.asarray(rng.integers(0, n_blocks, (b, m)), dtype=jnp.int32)
+    lens = jnp.asarray(rng.integers(1, m * bs + 1, b), dtype=jnp.int32)
+    got = paged_attention(q, pool, bt, lens)
+    want = paged_attention_ref(q, pool, bt, lens)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    v=st.sampled_from([32, 256, 2048]),
+    temp=st.floats(0.2, 1.5),
+    top_p=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topp_sampling_matches_ref(b, v, temp, top_p, seed):
+    rng = np.random.default_rng(seed)
+    logits = arr(rng, (b, v), 3.0)
+    u = jnp.asarray(rng.random(b, dtype=np.float32))
+    got = topp_sample(logits, u, temperature=temp, top_p=top_p)
+    want = topp_sample_ref(logits, u, temperature=temp, top_p=top_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 40),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_gating_matches_ref(t, e, k, seed):
+    rng = np.random.default_rng(seed)
+    g = arr(rng, (t, e), 2.0)
+    got = moe_gating(g, top_k=k)
+    want, _ = moe_gating_ref(g, top_k=k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # Invariants: rows sum to 1, exactly k nonzeros.
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)
+    assert ((np.asarray(got) > 0).sum(-1) == k).all()
+
+
+def test_sampling_always_keeps_argmax():
+    # top_p tiny -> greedy.
+    logits = jnp.asarray([[0.1, 5.0, -2.0, 1.0]], dtype=jnp.float32)
+    for u in [0.0, 0.5, 0.999]:
+        tok = topp_sample(logits, jnp.asarray([u], dtype=jnp.float32), top_p=0.01)
+        assert int(tok[0]) == 1
+
+
+def test_paged_attention_ignores_padded_blocks():
+    # Garbage in unused block-table entries must not change the output.
+    rng = np.random.default_rng(0)
+    b, hq, hkv, dh, bs, m, n = 2, 4, 4, 16, 8, 4, 16
+    q = arr(rng, (b, hq, dh))
+    pool = arr(rng, (n, 2, hkv, bs, dh))
+    bt1 = jnp.asarray(rng.integers(0, n, (b, m)), dtype=jnp.int32)
+    lens = jnp.asarray([5, 9], dtype=jnp.int32)  # only block 0/1 valid
+    bt2 = bt1.at[:, 2:].set(jnp.asarray(rng.integers(0, n, (b, 2)), dtype=jnp.int32))
+    np.testing.assert_allclose(
+        paged_attention(q, pool, bt1, lens), paged_attention(q, pool, bt2, lens), rtol=1e-6
+    )

@@ -1,0 +1,113 @@
+"""L2 model semantics: pallas/oracle A-B equivalence inside the full
+graph, KV-cache write placement, decode/prefill consistency, shapes."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.model import (
+    TINY,
+    TINY_MOE,
+    decode_step,
+    empty_kv_pool,
+    init_params,
+    make_flat_fns,
+    prefill,
+)
+
+CFG = dataclasses.replace(TINY, n_layers=2, num_blocks=32, max_blocks_per_seq=4)
+CFG_MOE = dataclasses.replace(
+    TINY_MOE, n_layers=2, num_blocks=32, max_blocks_per_seq=4, d_ff=128
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG)
+    kv = empty_kv_pool(CFG)
+    bt = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], dtype=jnp.int32)
+    tok = jnp.asarray(
+        np.random.default_rng(0).integers(0, CFG.vocab_size, (2, 16)), dtype=jnp.int32
+    )
+    return params, kv, bt, tok
+
+
+def test_prefill_pallas_matches_oracle(setup):
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 16], dtype=jnp.int32)
+    t1, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=True)
+    t2, kv2 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(kv1), np.asarray(kv2), rtol=3e-4, atol=3e-4)
+
+
+def test_decode_pallas_matches_oracle(setup):
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 16], dtype=jnp.int32)
+    _, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=False)
+    t = jnp.asarray([7, 9], dtype=jnp.int32)
+    d1, kva = decode_step(params, kv1, bt, sl, t, jnp.uint32(2), CFG, use_pallas=True)
+    d2, kvb = decode_step(params, kv1, bt, sl, t, jnp.uint32(2), CFG, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_allclose(np.asarray(kva), np.asarray(kvb), rtol=3e-4, atol=3e-4)
+
+
+def test_decode_writes_kv_at_position(setup):
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 16], dtype=jnp.int32)
+    _, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=False)
+    t = jnp.asarray([7, 9], dtype=jnp.int32)
+    _, kv2 = decode_step(params, kv1, bt, sl, t, jnp.uint32(2), CFG, use_pallas=False)
+    bs = CFG.block_size
+    for b in range(2):
+        pos = int(sl[b])
+        blk = int(bt[b, pos // bs])
+        slot = pos % bs
+        assert not np.allclose(np.asarray(kv2)[0, blk, 0, :, slot, :], 0.0)
+
+
+def test_prefill_respects_seq_len_padding(setup):
+    """Changing tokens beyond seq_len must not change the sampled token."""
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 12], dtype=jnp.int32)
+    t1, _ = prefill(params, kv, bt, sl, tok, jnp.uint32(3), CFG, use_pallas=False)
+    tok2 = tok.at[:, 14:].set(0)
+    t2, _ = prefill(params, kv, bt, sl, tok2, jnp.uint32(3), CFG, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_moe_model_runs_and_matches_oracle():
+    params = init_params(CFG_MOE)
+    kv = empty_kv_pool(CFG_MOE)
+    bt = jnp.asarray([[1, 2, 3, 4]], dtype=jnp.int32)
+    tok = jnp.asarray(
+        np.random.default_rng(1).integers(0, CFG_MOE.vocab_size, (1, 16)), dtype=jnp.int32
+    )
+    sl = jnp.asarray([12], dtype=jnp.int32)
+    t1, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(4), CFG_MOE, use_pallas=True)
+    t2, kv2 = prefill(params, kv, bt, sl, tok, jnp.uint32(4), CFG_MOE, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(kv1), np.asarray(kv2), rtol=3e-4, atol=3e-4)
+
+
+def test_flat_fns_arg_order_matches_param_specs():
+    decode_fn, prefill_fn = make_flat_fns(CFG, use_pallas=False)
+    params = init_params(CFG)
+    args = [params[n] for n, _ in CFG.param_specs()]
+    kv = empty_kv_pool(CFG)
+    bt = jnp.zeros((1, 4), jnp.int32).at[0, 0].set(1)
+    sl = jnp.asarray([3], jnp.int32)
+    tokd = jnp.asarray([5], jnp.int32)
+    out, kv2 = decode_fn(*args, kv, bt, sl, tokd, jnp.uint32(0))
+    assert out.shape == (1,)
+    assert kv2.shape == kv.shape
+    tokp = jnp.zeros((1, 16), jnp.int32)
+    out, _ = prefill_fn(*args, kv, bt, sl, tokp, jnp.uint32(0))
+    assert out.shape == (1,)
+
+
+def test_param_count_reasonable():
+    assert 2_000_000 < TINY.param_count() < 10_000_000
+    assert TINY_MOE.param_count() > TINY.param_count() * 0.5

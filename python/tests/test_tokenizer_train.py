@@ -1,0 +1,35 @@
+"""BPE trainer invariants + vocab file format."""
+
+import os
+
+from compile.tokenizer_train import build_corpus, train_bpe, write_vocab
+
+
+def test_trained_vocab_structure(tmp_path):
+    corpus = build_corpus()
+    tokens, merges = train_bpe(corpus, 512)
+    assert len(tokens) <= 512
+    assert len(tokens) == 256 + len(merges)
+    # Byte tokens intact.
+    for i in range(256):
+        assert tokens[i] == bytes([i])
+    # Every merge produces the concatenation of its parts.
+    for a, b, n in merges:
+        assert tokens[n] == tokens[a] + tokens[b]
+    # Ranks are creation-ordered (new ids ascending).
+    ids = [n for _, _, n in merges]
+    assert ids == sorted(ids)
+
+    out = tmp_path / "vocab.blink"
+    write_vocab(str(out), tokens, merges)
+    text = out.read_text()
+    assert text.startswith("blink-vocab v1\n")
+    assert text.count("TOKEN ") == len(tokens)
+    assert text.count("MERGE ") == len(merges)
+
+
+def test_common_words_become_single_tokens():
+    corpus = build_corpus()
+    tokens, merges = train_bpe(corpus, 2048)
+    token_set = set(tokens)
+    assert b" the" in token_set, "highest-frequency word must merge fully"

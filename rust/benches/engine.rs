@@ -1,0 +1,45 @@
+//! Engine hot-path timings: per-graph execution latency on the CPU PJRT
+//! client — the L2 §Perf measurement (KV-donation before/after lives in
+//! EXPERIMENTS.md §Perf).
+use blink::runtime::{artifacts_dir, Engine};
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("blink-tiny/manifest.txt").exists() {
+        eprintln!("skipping engine bench: run `make artifacts`");
+        return;
+    }
+    let mut eng = Engine::load(&dir, "blink-tiny").expect("engine");
+    let mbs = eng.manifest.max_blocks_per_seq;
+    let budget = Duration::from_secs(3);
+
+    // Prefill b2 s64.
+    let g = eng.cache.select_prefill(2, 64).unwrap();
+    let mut bt = vec![0i32; 2 * mbs];
+    for (i, b) in bt.iter_mut().enumerate().take(8) {
+        *b = i as i32 + 1;
+    }
+    let toks: Vec<i32> = (0..128).map(|i| i % 2048).collect();
+    bench("engine/prefill_b2_s64", 3, budget, || {
+        std::hint::black_box(eng.execute(g, &bt, &[64, 64], &toks, 1).unwrap());
+    });
+
+    // Decode for batch 1 and 8.
+    for b in [1usize, 8] {
+        let g = eng.cache.select_decode(b).unwrap();
+        let mut bt = vec![0i32; b * mbs];
+        for lane in 0..b {
+            for j in 0..4 {
+                bt[lane * mbs + j] = (1 + lane * 4 + j) as i32;
+            }
+        }
+        let sl = vec![40i32; b];
+        let tk = vec![7i32; b];
+        bench(&format!("engine/decode_b{b} (steady-state step)"), 3, budget, || {
+            std::hint::black_box(eng.execute(g, &bt, &sl, &tk, 2).unwrap());
+        });
+    }
+    println!("engine steps executed: {}", eng.steps);
+}

@@ -1,0 +1,30 @@
+//! End-to-end benchmark harness: times the DES points behind each paper
+//! table/figure (the regeneration itself is `blink eval all`). One bench
+//! row per table/figure family.
+use blink::sim::costmodel::{LLAMA3_8B, QWEN3_30B_A3B, QWEN3_32B};
+use blink::sim::des::{simulate, SimConfig};
+use blink::sim::sweep::run_sweep;
+use blink::sim::systems::System;
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    bench("eval/table1_point (vLLM 7rps 60s)", 1, budget, || {
+        std::hint::black_box(simulate(&SimConfig::new(System::Vllm, LLAMA3_8B, 7.0, true)));
+    });
+    bench("eval/fig1_point (MoE 4rps)", 1, budget, || {
+        std::hint::black_box(simulate(&SimConfig::new(System::Blink, QWEN3_30B_A3B, 4.0, false)));
+    });
+    bench("eval/fig5_point (32B p999)", 1, budget, || {
+        std::hint::black_box(simulate(&SimConfig::new(System::Sglang, QWEN3_32B, 2.0, true)));
+    });
+    let t = std::time::Instant::now();
+    let r = run_sweep(&[LLAMA3_8B], 60.0, std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8));
+    println!(
+        "eval/full_llama_sweep (104 points, 60s windows): {:.2}s wall, sat level {}",
+        t.elapsed().as_secs_f64(),
+        r.blink_saturation_level("llama3-8b")
+    );
+    println!("(run `blink eval all --out results/` for the full table/figure regeneration)");
+}

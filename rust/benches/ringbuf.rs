@@ -1,0 +1,53 @@
+//! Microbenchmarks: ring-buffer hot-path operations (claim, publish,
+//! scan). Paper target: full 4096-slot scan in 1-5 µs (§4.2).
+use blink::ringbuf::{RingBuffer, RingConfig};
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let rb = RingBuffer::new(RingConfig::default()); // 4096 slots
+    let budget = Duration::from_millis(400);
+
+    bench("ringbuf/scan_4096_empty (paper: 1-5µs)", 100, budget, || {
+        std::hint::black_box(rb.scan_pending(256));
+    });
+
+    // Populate 64 pending slots spread across the ring.
+    for i in (0..4096).step_by(64) {
+        rb.claim_for_write(i);
+        rb.write_prompt(i, &[1, 2, 3]);
+        rb.submit(i, i as u64, 3, 8, 0);
+    }
+    bench("ringbuf/scan_4096_64pending", 100, budget, || {
+        std::hint::black_box(rb.scan_pending(256));
+    });
+
+    let rb2 = RingBuffer::new(RingConfig::default());
+    let mut slot = 0usize;
+    bench("ringbuf/claim+submit+release cycle", 100, budget, || {
+        rb2.claim_for_write(slot);
+        rb2.write_prompt(slot, &[1, 2, 3, 4]);
+        rb2.submit(slot, 1, 4, 4, 0);
+        rb2.claim_pending(slot);
+        rb2.slot(slot).set_state(blink::ringbuf::SlotState::DecodeProcessing);
+        rb2.publish_token(slot, 9);
+        rb2.complete(slot);
+        rb2.release(slot);
+        slot = (slot + 1) % 4096;
+    });
+
+    let rb3 = RingBuffer::new(RingConfig::default());
+    rb3.claim_for_write(0);
+    rb3.write_prompt(0, &[1]);
+    rb3.submit(0, 1, 1, 500_000, 0);
+    rb3.claim_pending(0);
+    rb3.slot(0).set_state(blink::ringbuf::SlotState::DecodeProcessing);
+    let mut published = 0u32;
+    bench("ringbuf/publish_token", 100, budget, || {
+        if published as usize >= rb3.config.max_output {
+            return;
+        }
+        rb3.publish_token(0, published);
+        published += 1;
+    });
+}

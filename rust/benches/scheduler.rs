@@ -1,0 +1,53 @@
+//! Scheduler-plane microbenchmarks that do NOT need artifacts: slot-scan
+//! latency at ring scale, KV admission, graph-cache selection.
+use blink::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
+use blink::kvcache::{KvConfig, KvManager};
+use blink::ringbuf::{RingBuffer, RingConfig};
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+
+    // Graph-cache O(1) tightest-fit selection.
+    let mut specs = vec![];
+    let mut id = 0;
+    for b in [1usize, 2, 4] {
+        for s in [16usize, 32, 64, 128, 256] {
+            specs.push(GraphSpec { id: GraphId(id), name: format!("p{b}_{s}"), kind: GraphKind::Prefill, batch: b, seq: s });
+            id += 1;
+        }
+    }
+    for b in [1usize, 2, 4, 8, 16] {
+        specs.push(GraphSpec { id: GraphId(id), name: format!("d{b}"), kind: GraphKind::Decode, batch: b, seq: 0 });
+        id += 1;
+    }
+    let cache = GraphCache::new(specs);
+    let mut q = 1usize;
+    bench("graphs/select_prefill (O(1) LUT)", 100, budget, || {
+        q = q % 250 + 1;
+        std::hint::black_box(cache.select_prefill(1 + q % 4, q));
+    });
+    bench("graphs/select_decode", 100, budget, || {
+        q = q % 16 + 1;
+        std::hint::black_box(cache.select_decode(q));
+    });
+
+    // KV admission + release cycle.
+    let mut kv = KvManager::new(KvConfig { block_size: 16, num_blocks: 512, max_blocks_per_seq: 32 });
+    bench("kvcache/admit+release (4 blocks)", 100, budget, || {
+        let c = kv.admit(64, 50, 10).unwrap();
+        kv.release(c);
+    });
+
+    // Overlapped-scan cost at paper scale with live traffic pattern.
+    let rb = RingBuffer::new(RingConfig::default());
+    for i in (0..4096).step_by(257) {
+        rb.claim_for_write(i);
+        rb.write_prompt(i, &[1]);
+        rb.submit(i, i as u64, 1, 4, 0);
+    }
+    bench("scheduler/overlapped_ring_scan(4096, 256 lanes)", 100, budget, || {
+        std::hint::black_box(rb.scan_pending(256));
+    });
+}

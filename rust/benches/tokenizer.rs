@@ -1,0 +1,37 @@
+//! Fig 4 microbenchmark form: the three tokenizers on identical text.
+use blink::runtime::artifacts_dir;
+use blink::tokenizer::baselines::{HeapliteTokenizer, NaiveTokenizer};
+use blink::tokenizer::blink::BlinkTokenizer;
+use blink::tokenizer::{Tokenizer, Vocab};
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let vocab = match Vocab::load(&artifacts_dir().join("vocab.blink")) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("skipping tokenizer bench: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    let blink = BlinkTokenizer::new(&vocab);
+    let naive = NaiveTokenizer::new(&vocab);
+    let heap = HeapliteTokenizer::new(&vocab);
+    let text: String = "the persistent scheduler scans the ring buffer for newly \
+                        submitted prompts and claims them via atomic compare and swap "
+        .repeat(32); // ~2k tokens
+    let budget = Duration::from_millis(500);
+    let mut out = Vec::with_capacity(4096);
+    for (name, t) in [
+        ("tokenizer/blink (flat-hash+SWAR)", &blink as &dyn Tokenizer),
+        ("tokenizer/naive-hf (SipHash+Box)", &naive),
+        ("tokenizer/heaplite (BinaryHeap)", &heap),
+    ] {
+        bench(name, 5, budget, || {
+            out.clear();
+            t.encode(&text, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+    println!("tokens per encode: {}", out.len());
+}

@@ -1,0 +1,200 @@
+//! The DPU frontend (paper §4.4): request lifecycle from arrival to token
+//! delivery, running on "BlueField ARM cores" (its own threads), touching
+//! backend state *only* through one-sided RDMA work requests.
+//!
+//! Subsystems, as in the paper:
+//! * request tracker — per-request state: slot assignment, token counts,
+//!   completion status ([`tracker`]);
+//! * slot tracker — local availability cache + hint-based circular scan,
+//!   so submission does not scan the remote ring ([`slot_tracker`]);
+//! * token reader — background thread: one bulk RDMA metadata read per
+//!   cycle, urgent-slot prioritization for TTFT, adaptive polling
+//!   ([`token_reader`]);
+//! * tokenizer — `crate::tokenizer::blink` (shared, zero-alloc request
+//!   path).
+
+pub mod slot_tracker;
+pub mod token_reader;
+pub mod tracker;
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+
+use crate::rdma::{Payload, QueuePair, RdmaEngine, RdmaOp};
+use crate::tokenizer::blink::BlinkTokenizer;
+use crate::tokenizer::{Tokenizer, Vocab};
+use slot_tracker::SlotTracker;
+use token_reader::ReaderConfig;
+use tracker::{ReqState, TokenEvent, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    pub num_slots: usize,
+    pub max_prompt: usize,
+    pub max_output: usize,
+    pub reader: ReaderConfig,
+}
+
+/// A submitted request: stream of token events + ids for bookkeeping.
+pub struct RequestHandle {
+    pub request_id: u64,
+    pub slot: usize,
+    pub prompt_tokens: usize,
+    pub rx: Receiver<TokenEvent>,
+}
+
+impl RequestHandle {
+    /// Drain to completion, returning all generated tokens (blocking).
+    pub fn collect(self) -> Result<Vec<u32>, String> {
+        let mut toks = vec![];
+        loop {
+            match self.rx.recv() {
+                Ok(TokenEvent::Token(t)) => toks.push(t),
+                Ok(TokenEvent::Done) => return Ok(toks),
+                Ok(TokenEvent::Failed) => return Err("request failed".into()),
+                Err(_) => return Err("frontend dropped".into()),
+            }
+        }
+    }
+}
+
+pub struct DpuFrontend {
+    submit_qp: Mutex<QueuePair>,
+    tracker: Arc<Mutex<Tracker>>,
+    slots: Arc<Mutex<SlotTracker>>,
+    urgent: Arc<AtomicU32>,
+    stop: Arc<AtomicBool>,
+    reader_handle: Option<std::thread::JoinHandle<()>>,
+    pub tokenizer: Arc<BlinkTokenizer>,
+    pub vocab: Arc<Vocab>,
+    next_id: AtomicU64,
+    config: FrontendConfig,
+    seed_ctr: AtomicU32,
+}
+
+impl DpuFrontend {
+    pub fn new(
+        engine: Arc<RdmaEngine>,
+        vocab: Arc<Vocab>,
+        config: FrontendConfig,
+    ) -> DpuFrontend {
+        let tokenizer = Arc::new(BlinkTokenizer::new(&vocab));
+        let tracker = Arc::new(Mutex::new(Tracker::new()));
+        let slots = Arc::new(Mutex::new(SlotTracker::new(config.num_slots)));
+        let urgent = Arc::new(AtomicU32::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let reader_qp = QueuePair::new(engine.clone());
+        let reader_handle = token_reader::spawn(
+            reader_qp,
+            tracker.clone(),
+            slots.clone(),
+            urgent.clone(),
+            stop.clone(),
+            config.num_slots,
+            config.reader.clone(),
+        );
+
+        DpuFrontend {
+            submit_qp: Mutex::new(QueuePair::new(engine)),
+            tracker,
+            slots,
+            urgent,
+            stop,
+            reader_handle: Some(reader_handle),
+            tokenizer,
+            vocab,
+            next_id: AtomicU64::new(1),
+            config,
+            seed_ctr: AtomicU32::new(0x5EED),
+        }
+    }
+
+    /// Tokenize on the DPU and submit (the paper's step ②③④⑤).
+    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, String> {
+        let mut toks = Vec::with_capacity(text.len() / 3 + 4);
+        self.tokenizer.encode(text, &mut toks);
+        self.submit_tokens(&toks, max_new)
+    }
+
+    /// Submit pre-tokenized input (workload generators / benches).
+    pub fn submit_tokens(&self, tokens: &[u32], max_new: u32) -> Result<RequestHandle, String> {
+        if tokens.is_empty() {
+            return Err("empty prompt".into());
+        }
+        if tokens.len() > self.config.max_prompt {
+            return Err(format!(
+                "prompt of {} tokens exceeds arena capacity {}",
+                tokens.len(),
+                self.config.max_prompt
+            ));
+        }
+        let max_new = max_new.clamp(1, self.config.max_output as u32);
+        let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let seed = self.seed_ctr.fetch_add(0x9E37, Ordering::Relaxed);
+
+        // Claim a slot: hint-based local scan, RDMA CAS to actually own it.
+        let mut qp = self.submit_qp.lock().unwrap();
+        let slot = {
+            let mut tries = 0;
+            loop {
+                let candidate = {
+                    let mut s = self.slots.lock().unwrap();
+                    s.acquire_hint()
+                };
+                let Some(candidate) = candidate else {
+                    return Err("ring buffer full (backpressure)".into());
+                };
+                match qp.exec(RdmaOp::ClaimSlot { slot: candidate }) {
+                    Payload::Cas(true) => break candidate,
+                    _ => {
+                        // Stale availability cache: mark used, try the next.
+                        self.slots.lock().unwrap().mark_used(candidate);
+                        tries += 1;
+                        if tries > self.config.num_slots {
+                            return Err("no free slot after full sweep".into());
+                        }
+                    }
+                }
+            }
+        };
+
+        // Register with the tracker *before* arming the slot so the token
+        // reader can never observe an untracked active slot.
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.tracker.lock().unwrap().insert(
+            slot,
+            ReqState::new(request_id, tx),
+        );
+        self.urgent.fetch_add(1, Ordering::AcqRel);
+
+        // One-sided writes: prompt into the input arena, then metadata +
+        // state flip (coalesced by the RDMA engine if bursty).
+        qp.post(RdmaOp::WritePrompt { slot, tokens: tokens.to_vec() });
+        let wr = qp.post(RdmaOp::Submit {
+            slot,
+            request_id,
+            prompt_len: tokens.len() as u32,
+            max_new,
+            seed,
+        });
+        qp.wait(wr);
+
+        Ok(RequestHandle { request_id, slot, prompt_tokens: tokens.len(), rx })
+    }
+
+    /// Snapshot of free-slot availability (diagnostics).
+    pub fn approx_free_slots(&self) -> usize {
+        self.slots.lock().unwrap().approx_free()
+    }
+}
+
+impl Drop for DpuFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.reader_handle.take() {
+            let _ = h.join();
+        }
+    }
+}

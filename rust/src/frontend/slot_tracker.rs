@@ -1,0 +1,91 @@
+//! Slot tracker (paper §4.4): a DPU-local availability cache over the
+//! remote ring buffer's slots, found via a hint-based circular scan in
+//! O(1) amortized, refreshed from the token reader's bulk metadata reads —
+//! so submission never scans all slots over RDMA.
+
+pub struct SlotTracker {
+    free: Vec<bool>,
+    hint: usize,
+    n: usize,
+}
+
+impl SlotTracker {
+    pub fn new(n: usize) -> SlotTracker {
+        SlotTracker { free: vec![true; n], hint: 0, n }
+    }
+
+    /// Next probably-free slot, starting at the hint (spatial locality:
+    /// consecutive submissions land in consecutive slots, which also makes
+    /// the scheduler's lane-chunked scan touch fewer cache lines).
+    pub fn acquire_hint(&mut self) -> Option<usize> {
+        for off in 0..self.n {
+            let i = (self.hint + off) % self.n;
+            if self.free[i] {
+                self.free[i] = false;
+                self.hint = (i + 1) % self.n;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn mark_used(&mut self, slot: usize) {
+        self.free[slot] = false;
+    }
+
+    pub fn mark_free(&mut self, slot: usize) {
+        self.free[slot] = true;
+    }
+
+    /// Bulk refresh from a metadata snapshot (EMPTY == free).
+    pub fn refresh(&mut self, metas: &[crate::rdma::SlotMeta]) {
+        for m in metas {
+            if m.slot < self.n {
+                // Only *freeing* transitions are taken from the snapshot;
+                // locally claimed slots stay used until observed EMPTY so a
+                // stale snapshot can't hand a slot to two requests.
+                if m.state == crate::ringbuf::SlotState::Empty {
+                    self.free[m.slot] = true;
+                }
+            }
+        }
+    }
+
+    pub fn approx_free(&self) -> usize {
+        self.free.iter().filter(|f| **f).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::SlotMeta;
+    use crate::ringbuf::SlotState;
+
+    #[test]
+    fn circular_hint_scan() {
+        let mut t = SlotTracker::new(4);
+        assert_eq!(t.acquire_hint(), Some(0));
+        assert_eq!(t.acquire_hint(), Some(1));
+        t.mark_free(0);
+        // Hint is at 2: scan gives 2, 3, then wraps to 0.
+        assert_eq!(t.acquire_hint(), Some(2));
+        assert_eq!(t.acquire_hint(), Some(3));
+        assert_eq!(t.acquire_hint(), Some(0));
+        assert_eq!(t.acquire_hint(), None);
+    }
+
+    #[test]
+    fn refresh_only_frees() {
+        let mut t = SlotTracker::new(2);
+        t.acquire_hint();
+        t.acquire_hint();
+        let metas = vec![
+            SlotMeta { slot: 0, state: SlotState::Empty, generated: 0, request_id: 0 },
+            SlotMeta { slot: 1, state: SlotState::DecodeProcessing, generated: 3, request_id: 9 },
+        ];
+        t.refresh(&metas);
+        assert_eq!(t.approx_free(), 1);
+        assert_eq!(t.acquire_hint(), Some(0));
+    }
+}

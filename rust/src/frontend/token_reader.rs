@@ -1,0 +1,156 @@
+//! Token reader (paper §4.4): a background DPU thread that polls the
+//! ring buffer for generated tokens.
+//!
+//! Per cycle: one bulk RDMA read refreshes cached slot metadata (the
+//! paper's 64 KB read), each active slot's generation count is compared
+//! with local state, and new tokens are fetched with targeted RDMA reads.
+//! Newly submitted requests are *urgent*: while any request still awaits
+//! its first token the reader polls at the minimum interval, bounding
+//! TTFT to one poll interval; otherwise the interval adapts (decay up,
+//! shrink on activity) to bound per-token latency while limiting RDMA
+//! traffic. Completion-queue saturation is avoided by capping per-poll
+//! token reads (`max_reads_per_poll`), mirroring the paper's task pools.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::rdma::{Payload, QueuePair, RdmaOp};
+use crate::ringbuf::SlotState;
+
+use super::slot_tracker::SlotTracker;
+use super::tracker::{TokenEvent, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct ReaderConfig {
+    pub min_interval_us: u64,
+    pub max_interval_us: u64,
+    /// Cap on per-cycle ReadTokens ops (CQ saturation guard).
+    pub max_reads_per_poll: usize,
+}
+
+impl Default for ReaderConfig {
+    fn default() -> Self {
+        ReaderConfig { min_interval_us: 20, max_interval_us: 2000, max_reads_per_poll: 64 }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn spawn(
+    mut qp: QueuePair,
+    tracker: Arc<Mutex<Tracker>>,
+    slots: Arc<Mutex<SlotTracker>>,
+    urgent: Arc<AtomicU32>,
+    stop: Arc<AtomicBool>,
+    num_slots: usize,
+    config: ReaderConfig,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("dpu-token-reader".into())
+        .spawn(move || {
+            let mut interval_us = config.min_interval_us;
+            while !stop.load(Ordering::Acquire) {
+                let metas = match qp.exec(RdmaOp::ReadMeta { first_slot: 0, count: num_slots }) {
+                    Payload::Meta(m) => m,
+                    _ => break,
+                };
+                // Refresh the submitter's availability cache for free.
+                slots.lock().unwrap().refresh(&metas);
+
+                let mut activity = false;
+                let mut reads = 0usize;
+                for m in &metas {
+                    if reads >= config.max_reads_per_poll {
+                        break;
+                    }
+                    // Cheap pre-check before taking the tracker lock.
+                    let interesting = matches!(
+                        m.state,
+                        SlotState::PrefillProcessing
+                            | SlotState::DecodeProcessing
+                            | SlotState::DecodePaused
+                            | SlotState::DecodeCompleted
+                            | SlotState::Failed
+                    );
+                    if !interesting {
+                        continue;
+                    }
+                    let (seen, done, failed) = {
+                        let mut t = tracker.lock().unwrap();
+                        let Some(st) = t.get_mut(m.slot) else { continue };
+                        (st.seen, m.state == SlotState::DecodeCompleted, m.state == SlotState::Failed)
+                    };
+                    if failed {
+                        if let Some(st) = tracker.lock().unwrap().remove(m.slot) {
+                            let _ = st.tx.send(TokenEvent::Failed);
+                            if !st.got_first {
+                                urgent.fetch_sub(1, Ordering::AcqRel);
+                            }
+                        }
+                        qp.post(RdmaOp::ReleaseSlot { slot: m.slot });
+                        activity = true;
+                        continue;
+                    }
+                    if m.generated > seen {
+                        // Targeted read of just the new tokens.
+                        let toks = match qp.exec(RdmaOp::ReadTokens {
+                            slot: m.slot,
+                            from: seen,
+                            to: m.generated,
+                        }) {
+                            Payload::Tokens(t) => t,
+                            _ => continue,
+                        };
+                        reads += 1;
+                        activity = true;
+                        let mut t = tracker.lock().unwrap();
+                        if let Some(st) = t.get_mut(m.slot) {
+                            if !st.got_first {
+                                st.got_first = true;
+                                urgent.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            for tok in toks {
+                                let _ = st.tx.send(TokenEvent::Token(tok));
+                            }
+                            st.seen = m.generated;
+                        }
+                    }
+                    if done {
+                        // Deliver any straggler tokens then finish. The
+                        // completed count is final once DECODE_COMPLETED is
+                        // visible (publish precedes the state flip).
+                        let final_seen =
+                            tracker.lock().unwrap().get_mut(m.slot).map(|s| s.seen);
+                        if final_seen == Some(m.generated) {
+                            if let Some(st) = tracker.lock().unwrap().remove(m.slot) {
+                                let _ = st.tx.send(TokenEvent::Done);
+                                if !st.got_first {
+                                    urgent.fetch_sub(1, Ordering::AcqRel);
+                                }
+                            }
+                            qp.post(RdmaOp::ReleaseSlot { slot: m.slot });
+                            activity = true;
+                        }
+                        // else: next cycle reads the stragglers first.
+                    }
+                }
+                // Drain release completions (fire-and-forget bookkeeping).
+                let _ = qp.poll_cq(usize::MAX);
+
+                // Adaptive interval; urgent submissions pin it to the floor.
+                if urgent.load(Ordering::Acquire) > 0 {
+                    interval_us = config.min_interval_us;
+                } else if activity {
+                    interval_us = (interval_us / 2).max(config.min_interval_us);
+                } else {
+                    interval_us = (interval_us * 3 / 2).min(config.max_interval_us);
+                }
+                if interval_us >= 200 {
+                    std::thread::sleep(Duration::from_micros(interval_us));
+                } else {
+                    crate::devsim::spin_us(interval_us as f64);
+                }
+            }
+        })
+        .expect("spawn token reader")
+}

@@ -1,0 +1,79 @@
+//! Request tracker (paper §4.4): per-request state — slot assignment,
+//! token counts, completion status — keyed by slot while in flight.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenEvent {
+    Token(u32),
+    Done,
+    Failed,
+}
+
+pub struct ReqState {
+    pub request_id: u64,
+    pub tx: Sender<TokenEvent>,
+    /// Tokens already read from the output arena and delivered.
+    pub seen: u32,
+    pub got_first: bool,
+}
+
+impl ReqState {
+    pub fn new(request_id: u64, tx: Sender<TokenEvent>) -> ReqState {
+        ReqState { request_id, tx, seen: 0, got_first: false }
+    }
+}
+
+#[derive(Default)]
+pub struct Tracker {
+    by_slot: HashMap<usize, ReqState>,
+}
+
+impl Tracker {
+    pub fn new() -> Tracker {
+        Tracker { by_slot: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, slot: usize, st: ReqState) {
+        self.by_slot.insert(slot, st);
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut ReqState> {
+        self.by_slot.get_mut(&slot)
+    }
+
+    pub fn remove(&mut self, slot: usize) -> Option<ReqState> {
+        self.by_slot.remove(&slot)
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.by_slot.keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_slot.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_slot.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mut t = Tracker::new();
+        t.insert(3, ReqState::new(42, tx));
+        assert_eq!(t.len(), 1);
+        t.get_mut(3).unwrap().seen = 5;
+        let st = t.remove(3).unwrap();
+        assert_eq!(st.request_id, 42);
+        assert_eq!(st.seen, 5);
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,121 @@
+//! The graph executor: models the GPU's SMs running pre-captured
+//! inference graphs. Owns the (!Send) PJRT [`Engine`] on a dedicated
+//! thread; receives fire-and-forget launch commands from the persistent
+//! scheduler and publishes sampled tokens into a polled
+//! [`CompletionBuffer`] — never a callback, matching the paper's
+//! completion-detection design.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::devsim::CompletionBuffer;
+use crate::graphs::GraphId;
+use crate::runtime::Engine;
+
+/// One launch: everything the graph needs, plus the completion buffer the
+/// scheduler will poll. `reset_kv` supports benchmark phase boundaries.
+pub struct LaunchCmd {
+    pub graph: GraphId,
+    pub block_tables: Vec<i32>,
+    pub seq_lens: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub seed: u32,
+    pub completion: Arc<CompletionBuffer>,
+    pub reset_kv: bool,
+}
+
+/// Handle to the executor thread.
+pub struct Executor {
+    tx: Sender<LaunchCmd>,
+    alive: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the executor thread; it loads the engine itself (PJRT handles
+    /// are thread-bound). Blocks until the engine is ready so callers see
+    /// load errors synchronously — this is host-assisted initialization,
+    /// the one phase where the host is allowed on the path.
+    pub fn spawn(artifacts: std::path::PathBuf, model: String) -> anyhow::Result<Executor> {
+        let (tx, rx) = channel::<LaunchCmd>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive2 = alive.clone();
+        let handle = std::thread::Builder::new()
+            .name("gpu-executor".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&artifacts, &model) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    if !alive2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if cmd.reset_kv {
+                        if engine.reset_kv().is_err() {
+                            cmd.completion.fail();
+                            continue;
+                        }
+                        if cmd.tokens.is_empty() {
+                            cmd.completion.publish(&[]);
+                            continue;
+                        }
+                    }
+                    match engine.execute(
+                        cmd.graph,
+                        &cmd.block_tables,
+                        &cmd.seq_lens,
+                        &cmd.tokens,
+                        cmd.seed,
+                    ) {
+                        Ok(tokens) => {
+                            let toks: Vec<u32> = tokens.iter().map(|t| *t as u32).collect();
+                            cmd.completion.publish(&toks);
+                        }
+                        Err(e) => {
+                            eprintln!("executor: graph execution failed: {e:#}");
+                            cmd.completion.fail();
+                        }
+                    }
+                }
+            })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Executor { tx, alive, handle: Some(handle) }),
+            Ok(Err(e)) => anyhow::bail!("engine load failed: {e}"),
+            Err(_) => anyhow::bail!("executor thread died during load"),
+        }
+    }
+
+    /// Fire-and-forget launch: returns immediately; the caller polls the
+    /// completion buffer it passed in.
+    pub fn launch(&self, cmd: LaunchCmd) {
+        let _ = self.tx.send(cmd);
+    }
+
+    pub fn shutdown(&mut self) {
+        self.alive.store(false, Ordering::Release);
+        // Unblock recv with a no-op command if needed: dropping tx suffices
+        // when Executor drops; explicit shutdown just marks the flag.
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.alive.store(false, Ordering::Release);
+        // Close the channel, then join.
+        let (dead_tx, _) = channel();
+        let tx = std::mem::replace(&mut self.tx, dead_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

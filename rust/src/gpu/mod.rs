@@ -1,0 +1,31 @@
+//! The GPU backend (paper §4.2): a persistent scheduler that performs
+//! continuous batching, paged-KV management, device-side graph launch and
+//! completion polling without ever yielding to the host plane, plus the
+//! executor that models the GPU's SMs running the launched graphs.
+//!
+//! Thread topology (mirrors the hardware topology of the paper):
+//!
+//! ```text
+//! host thread      — initialization only: spawns the planes, then idles.
+//! scheduler thread — the persistent scheduler kernel (one thread block).
+//! executor thread  — the SMs executing launched inference graphs; owns
+//!                    the PJRT Engine (weights + KV pool device state).
+//! rdma-nic thread  — crate::rdma engine.
+//! DPU threads      — crate::frontend.
+//! ```
+//!
+//! Scheduler ⇄ executor communicate only through the launch channel (a
+//! fire-and-forget doorbell) and the polled [`CompletionBuffer`] — no
+//! locks, no host involvement, exactly the paper's device-side launch +
+//! poll protocol. The same scheduler code also runs in *CPU-resident*
+//! placement (the Fig 3 baseline): identical policy, but each step pays a
+//! host round-trip through `crate::hostsim`'s interference-sensitive
+//! orchestrator.
+
+pub mod executor;
+pub mod scheduler;
+pub mod stats;
+
+pub use executor::{Executor, LaunchCmd};
+pub use scheduler::{Placement, Scheduler, SchedulerConfig};
+pub use stats::SchedulerStats;

@@ -1,0 +1,576 @@
+//! The persistent scheduler (paper §4.2): an infinite control loop that
+//! (1) scans the ring buffer for newly submitted prompts, (2) claims them
+//! via CAS, (3) selects and launches the tightest-fitting pre-compiled
+//! graph for prefill or decode, (4) polls device-resident completion
+//! buffers, and (5) publishes generated tokens and status updates back to
+//! the ring buffer — with continuous batching via pause-and-resume inline
+//! prefill and the fire-and-forget launch window protocol.
+//!
+//! The same policy runs under two *placements* (Fig 3's controlled
+//! comparison): `GpuResident` — the Blink design, overlapped ring scan
+//! hidden behind decode compute, 2 µs device launches, zero host work —
+//! and `CpuResident` — each step pays a host round trip: orchestration
+//! work on the interference-sensitive host heap plus host-launch latency,
+//! with the ring scan serialized after completion instead of overlapped.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::devsim::{CompletionBuffer, LaunchLatencies, LaunchWindow};
+use crate::gpu::executor::{Executor, LaunchCmd};
+use crate::gpu::stats::SchedulerStats;
+use crate::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
+use crate::hostsim::HostOrchestrator;
+use crate::kvcache::{KvConfig, KvManager, SeqCache};
+use crate::ringbuf::{RingBuffer, SlotState};
+use crate::runtime::ModelManifest;
+
+#[derive(Debug, Clone)]
+pub enum Placement {
+    GpuResident,
+    /// The host-driven baseline: per-step orchestration over a scratch
+    /// heap of `scratch_mb` with `touches_per_step` dependent accesses.
+    CpuResident { scratch_mb: usize, touches_per_step: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub placement: Placement,
+    /// Parallel scan lanes (paper: the 256-thread scheduler block).
+    pub scan_lanes: usize,
+    /// Apply the paper's launch-latency constants as spin delays.
+    pub apply_launch_delays: bool,
+    /// Stop automatically once idle (used by batch benchmarks).
+    pub exit_when_idle: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            placement: Placement::GpuResident,
+            scan_lanes: 256,
+            apply_launch_delays: true,
+            exit_when_idle: false,
+        }
+    }
+}
+
+struct Lane {
+    slot: usize,
+    cache: SeqCache,
+    generated: u32,
+    max_new: u32,
+    last_token: i32,
+}
+
+/// Handle to the running scheduler thread.
+pub struct Scheduler {
+    pub stats: Arc<SchedulerStats>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the persistent scheduler. Takes ownership of the executor
+    /// handle (the doorbell into the device) and shares the ring buffer
+    /// with the RDMA plane.
+    pub fn spawn(
+        ring: Arc<RingBuffer>,
+        executor: Executor,
+        manifest: ModelManifest,
+        config: SchedulerConfig,
+    ) -> Scheduler {
+        let stats = Arc::new(SchedulerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let drain = Arc::new(AtomicBool::new(false));
+        let (stats2, stop2, drain2) = (stats.clone(), stop.clone(), drain.clone());
+        let handle = std::thread::Builder::new()
+            .name("persistent-scheduler".into())
+            .spawn(move || {
+                let mut core = SchedulerCore::new(ring, executor, manifest, config, stats2);
+                core.run(&stop2, &drain2);
+            })
+            .expect("spawn scheduler");
+        Scheduler { stats, stop, drain, handle: Some(handle) }
+    }
+
+    /// Stop accepting new work, finish in-flight requests, then exit.
+    pub fn drain_and_stop(&mut self) {
+        self.drain.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Hard stop (in-flight requests abandoned).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the graph-cache metadata straight from the manifest (the
+/// scheduler's copy; the engine holds its own alongside the executables).
+pub fn cache_from_manifest(m: &ModelManifest) -> GraphCache {
+    let specs = m
+        .graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| GraphSpec {
+            id: GraphId(i),
+            name: g.name.clone(),
+            kind: if g.kind == "decode" { GraphKind::Decode } else { GraphKind::Prefill },
+            batch: g.batch,
+            seq: g.seq,
+        })
+        .collect();
+    GraphCache::new(specs)
+}
+
+struct SchedulerCore {
+    ring: Arc<RingBuffer>,
+    executor: Executor,
+    manifest: ModelManifest,
+    cache: GraphCache,
+    config: SchedulerConfig,
+    stats: Arc<SchedulerStats>,
+    window: LaunchWindow,
+    kv: KvManager,
+    lanes: Vec<Lane>,
+    orchestrator: Option<HostOrchestrator>,
+    completion: Arc<CompletionBuffer>,
+    completion_epoch: u64,
+    seed_ctr: u32,
+    max_batch: usize,
+}
+
+impl SchedulerCore {
+    fn new(
+        ring: Arc<RingBuffer>,
+        executor: Executor,
+        manifest: ModelManifest,
+        config: SchedulerConfig,
+        stats: Arc<SchedulerStats>,
+    ) -> SchedulerCore {
+        let cache = cache_from_manifest(&manifest);
+        let kv = KvManager::new(KvConfig {
+            block_size: manifest.block_size,
+            num_blocks: manifest.num_blocks,
+            max_blocks_per_seq: manifest.max_blocks_per_seq,
+        });
+        let orchestrator = match &config.placement {
+            Placement::GpuResident => None,
+            Placement::CpuResident { scratch_mb, touches_per_step } => {
+                Some(HostOrchestrator::new(*scratch_mb, *touches_per_step))
+            }
+        };
+        let max_batch = cache.max_decode_batch();
+        let max_lanes = max_batch.max(cache.max_prefill_batch());
+        SchedulerCore {
+            ring,
+            executor,
+            manifest,
+            cache,
+            config,
+            stats,
+            window: LaunchWindow::new(LaunchLatencies::default(), false),
+            kv,
+            lanes: Vec::with_capacity(max_batch),
+            orchestrator,
+            completion: Arc::new(CompletionBuffer::new(max_lanes.max(16))),
+            completion_epoch: 0,
+            seed_ctr: 1,
+            max_batch,
+        }
+    }
+
+    fn is_gpu_resident(&self) -> bool {
+        matches!(self.config.placement, Placement::GpuResident)
+    }
+
+    fn run(&mut self, stop: &AtomicBool, drain: &AtomicBool) {
+        let mut idle_spins = 0u64;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            let draining = drain.load(Ordering::Acquire);
+            if draining && self.lanes.is_empty() && self.ring.pending_hint() == 0 {
+                break;
+            }
+
+            // Admission (when not draining): scan + claim + inline prefill.
+            if !draining && self.lanes.len() < self.max_batch {
+                let candidates = self.scan(true);
+                if !candidates.is_empty() {
+                    if !self.lanes.is_empty() {
+                        // Continuous batching: pausing in-flight decode to
+                        // run an inline prefill (the decode loop resumes on
+                        // the next iteration — state is in `self.lanes`).
+                        self.stats.pauses.fetch_add(1, Ordering::Relaxed);
+                        self.pause_lanes();
+                    }
+                    self.admit_and_prefill(candidates);
+                    self.resume_lanes();
+                }
+            }
+
+            if self.lanes.is_empty() {
+                idle_spins += 1;
+                if idle_spins > 64 {
+                    // Persistent kernels spin; on a shared test machine we
+                    // yield so idle schedulers don't starve the world.
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+                if self.config.exit_when_idle && idle_spins > 10_000 {
+                    break;
+                }
+                continue;
+            }
+            idle_spins = 0;
+
+            self.decode_step(draining);
+        }
+    }
+
+    /// Timed ring scan (the paper's 1–5 µs full-ring sweep).
+    fn scan(&self, only_if_hinted: bool) -> Vec<usize> {
+        if only_if_hinted && self.ring.pending_hint() == 0 {
+            return vec![];
+        }
+        let t = Instant::now();
+        let pending = self.ring.scan_pending(self.config.scan_lanes);
+        self.stats.record_scan(t.elapsed().as_nanos() as u64);
+        pending
+    }
+
+    fn pause_lanes(&self) {
+        for l in &self.lanes {
+            self.ring.slot(l.slot).set_state(SlotState::DecodePaused);
+        }
+    }
+
+    fn resume_lanes(&self) {
+        for l in &self.lanes {
+            let s = self.ring.slot(l.slot);
+            // Lanes admitted during the pause are already DECODE_PROCESSING.
+            if s.state() == SlotState::DecodePaused {
+                s.set_state(SlotState::DecodeProcessing);
+            }
+        }
+    }
+
+    /// The three admission conditions (paper §4.2 "Continuous batching"):
+    /// (i) pending prefills detected, (ii) free batch-slot capacity,
+    /// (iii) launch-window headroom for prefill + resumed decode.
+    fn admit_and_prefill(&mut self, candidates: Vec<usize>) {
+        let mut admitted: Vec<(usize, SeqCache, Vec<i32>, u32, usize)> = vec![]; // slot, cache, prompt, max_new, padded
+        for slot_idx in candidates {
+            if self.lanes.len() + admitted.len() >= self.max_batch {
+                self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                break; // leave pending in the ring: backpressure
+            }
+            let slot = self.ring.slot(slot_idx);
+            if slot.state() != SlotState::PrefillPending {
+                continue; // raced with... nothing today, but benign
+            }
+            let prompt_len = slot.prompt_len.load(Ordering::Acquire) as usize;
+            let max_new = slot.max_new_tokens.load(Ordering::Relaxed).max(1);
+            let max_seq = self.cache.max_prefill_seq();
+            if prompt_len == 0 || prompt_len > max_seq {
+                // Invalid request: claim it and fail it.
+                if self.ring.claim_pending(slot_idx) {
+                    self.fail_slot(slot_idx);
+                }
+                continue;
+            }
+            let padded = padded_seq(&self.cache, prompt_len);
+            let max_new = max_new.min((self.manifest.max_context() - prompt_len) as u32);
+            if !self.kv.can_admit(padded, prompt_len, max_new as usize) {
+                // Condition (ii)/KV backpressure: leave it pending.
+                self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            // Condition (iii): headroom for this prefill + one decode.
+            if self.window.headroom() < 2 {
+                self.window.tail_relaunch();
+            }
+            if !self.ring.claim_pending(slot_idx) {
+                continue;
+            }
+            let cache = self
+                .kv
+                .admit(padded, prompt_len, max_new as usize)
+                .expect("can_admit checked above");
+            let prompt: Vec<i32> =
+                self.ring.read_prompt(slot_idx).into_iter().map(|t| t as i32).collect();
+            admitted.push((slot_idx, cache, prompt, max_new, padded));
+        }
+        if admitted.is_empty() {
+            return;
+        }
+
+        // Group by padded length, chunk to the prefill batch grid.
+        admitted.sort_by_key(|a| a.4);
+        let max_pb = self.cache.max_prefill_batch();
+        let mut i = 0;
+        while i < admitted.len() {
+            let pad = admitted[i].4;
+            let mut j = i + 1;
+            while j < admitted.len() && admitted[j].4 == pad && j - i < max_pb {
+                j += 1;
+            }
+            let group: Vec<_> = admitted.drain(i..j).collect();
+            self.launch_prefill(group, pad);
+            // drain() shifts the tail down; keep i in place.
+        }
+    }
+
+    fn launch_prefill(&mut self, group: Vec<(usize, SeqCache, Vec<i32>, u32, usize)>, pad: usize) {
+        let b_actual = group.len();
+        let gid = self
+            .cache
+            .select_prefill(b_actual, pad)
+            .expect("grid covers all padded sizes");
+        let spec = self.cache.spec(gid).clone();
+        let (gb, gs) = (spec.batch, spec.seq);
+        let mbs = self.manifest.max_blocks_per_seq;
+
+        let mut block_tables = Vec::with_capacity(gb * mbs);
+        let mut seq_lens = Vec::with_capacity(gb);
+        let mut tokens = Vec::with_capacity(gb * gs);
+        for (_, cache, prompt, _, _) in &group {
+            block_tables.extend(cache.table_row(mbs));
+            seq_lens.push(prompt.len() as i32);
+            tokens.extend(prompt);
+            tokens.extend(std::iter::repeat(0).take(gs - prompt.len()));
+        }
+        // Pad ghost lanes by replicating lane 0 (identical writes are
+        // benign; outputs ignored).
+        for _ in b_actual..gb {
+            block_tables.extend_from_slice(&group[0].1.table_row(mbs));
+            seq_lens.push(group[0].2.len() as i32);
+            let row0: Vec<i32> = tokens[..gs].to_vec();
+            tokens.extend(row0);
+        }
+
+        let seed = self.next_seed();
+        self.launch(LaunchCmd {
+            graph: gid,
+            block_tables,
+            seq_lens,
+            tokens,
+            seed,
+            completion: self.completion.clone(),
+            reset_kv: false,
+        });
+        let Some(first_tokens) = self.poll_completion(gb) else {
+            for (slot, cache, _, _, _) in group {
+                self.kv.release(cache);
+                self.fail_slot(slot);
+            }
+            return;
+        };
+
+        self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
+        for (lane_idx, (slot, mut cache, prompt, max_new, _)) in group.into_iter().enumerate() {
+            cache.cached_len = prompt.len();
+            let tok = first_tokens[lane_idx] as i32;
+            self.ring.slot(slot).set_state(SlotState::DecodeProcessing);
+            self.ring.publish_token(slot, tok as u32);
+            self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
+            self.stats.prefilled_requests.fetch_add(1, Ordering::Relaxed);
+            let done = max_new <= 1 || tok as u32 == self.manifest.eos_token;
+            if done {
+                self.finish_lane(Lane { slot, cache, generated: 1, max_new, last_token: tok });
+            } else {
+                self.lanes.push(Lane { slot, cache, generated: 1, max_new, last_token: tok });
+            }
+        }
+    }
+
+    fn decode_step(&mut self, draining: bool) {
+        let live = self.lanes.len();
+        debug_assert!(live > 0);
+        let gid = self.cache.select_decode(live).expect("decode grid covers batch sizes");
+        let spec = self.cache.spec(gid).clone();
+        let gb = spec.batch;
+        let mbs = self.manifest.max_blocks_per_seq;
+
+        // CPU-resident placement: the host reassembles the batch before
+        // every launch — interference-sensitive work on the host heap.
+        if let Some(orch) = self.orchestrator.as_mut() {
+            std::hint::black_box(orch.step_work());
+        }
+
+        let mut block_tables = Vec::with_capacity(gb * mbs);
+        let mut seq_lens = Vec::with_capacity(gb);
+        let mut tokens = Vec::with_capacity(gb);
+        for l in &self.lanes {
+            block_tables.extend(l.cache.table_row(mbs));
+            seq_lens.push(l.cache.cached_len as i32);
+            tokens.push(l.last_token);
+        }
+        for _ in live..gb {
+            block_tables.extend(self.lanes[0].cache.table_row(mbs));
+            seq_lens.push(self.lanes[0].cache.cached_len as i32);
+            tokens.push(self.lanes[0].last_token);
+        }
+
+        let seed = self.next_seed();
+        self.launch(LaunchCmd {
+            graph: gid,
+            block_tables,
+            seq_lens,
+            tokens,
+            seed,
+            completion: self.completion.clone(),
+            reset_kv: false,
+        });
+
+        // GPU-resident: the ring scan overlaps decode compute (its latency
+        // hides behind the graph execution). CPU-resident: no overlap —
+        // the host waits for the step, then scans on the critical path.
+        let overlapped_pending = if self.is_gpu_resident() && !draining {
+            self.scan(true)
+        } else {
+            vec![]
+        };
+
+        let Some(step_tokens) = self.poll_completion(gb) else {
+            let lanes = std::mem::take(&mut self.lanes);
+            for l in lanes {
+                self.kv.release(l.cache);
+                self.fail_slot(l.slot);
+            }
+            return;
+        };
+
+        self.stats.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats.batch_occupancy_sum.fetch_add(live as u64, Ordering::Relaxed);
+
+        // Apply results, retire finished lanes.
+        let mut finished: Vec<usize> = vec![];
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let tok = step_tokens[i] as i32;
+            lane.cache.cached_len += 1;
+            lane.generated += 1;
+            lane.last_token = tok;
+            self.ring.publish_token(lane.slot, tok as u32);
+            self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
+            if lane.generated >= lane.max_new || tok as u32 == self.manifest.eos_token {
+                finished.push(i);
+            }
+        }
+        for i in finished.into_iter().rev() {
+            let lane = self.lanes.swap_remove(i);
+            self.finish_lane(lane);
+        }
+
+        // Pause-and-resume admission using the overlapped scan results.
+        if !overlapped_pending.is_empty() && self.lanes.len() < self.max_batch && !draining {
+            self.stats.pauses.fetch_add(1, Ordering::Relaxed);
+            self.pause_lanes();
+            self.admit_and_prefill(overlapped_pending);
+            self.resume_lanes();
+        }
+    }
+
+    fn finish_lane(&mut self, lane: Lane) {
+        self.ring.complete(lane.slot);
+        self.kv.release(lane.cache);
+        self.stats.completed_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn fail_slot(&mut self, slot: usize) {
+        self.ring.slot(slot).set_state(SlotState::Failed);
+        self.stats.failed_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Launch a graph with placement-appropriate cost accounting.
+    fn launch(&mut self, cmd: LaunchCmd) {
+        if self.is_gpu_resident() {
+            if self.window.fnf_launch().is_err() {
+                self.window.tail_relaunch();
+                self.window.fnf_launch().expect("fresh window");
+            }
+            if self.config.apply_launch_delays {
+                crate::devsim::spin_us(LaunchLatencies::default().fnf_us);
+            }
+            self.stats.fnf_launches.store(self.window.fnf_launches, Ordering::Relaxed);
+            self.stats.tail_relaunches.store(self.window.tail_relaunches, Ordering::Relaxed);
+        } else if self.config.apply_launch_delays {
+            // Host-side launch: 11–17 µs (paper §4.2).
+            crate::devsim::spin_us(LaunchLatencies::default().host_us);
+        }
+        self.executor.launch(cmd);
+    }
+
+    fn poll_completion(&mut self, n: usize) -> Option<Vec<u32>> {
+        let res = self.completion.poll_wait(self.completion_epoch, n);
+        self.completion_epoch = self.completion.epoch();
+        res
+    }
+
+    fn next_seed(&mut self) -> u32 {
+        self.seed_ctr = self.seed_ctr.wrapping_mul(747796405).wrapping_add(2891336453);
+        self.seed_ctr
+    }
+}
+
+/// Smallest grid sequence length >= prompt_len.
+fn padded_seq(cache: &GraphCache, prompt_len: usize) -> usize {
+    let mut best = usize::MAX;
+    for s in cache.specs() {
+        if s.kind == GraphKind::Prefill && s.seq >= prompt_len && s.seq < best {
+            best = s.seq;
+        }
+    }
+    if best == usize::MAX {
+        prompt_len
+    } else {
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_cache() -> GraphCache {
+        cache_from_manifest(
+            &ModelManifest::parse(
+                "blink-manifest v1\nmodel t\nvocab_size 8\nd_model 4\nn_layers 1\nn_heads 1\n\
+                 n_kv_heads 1\nd_head 4\nd_ff 8\nblock_size 16\nnum_blocks 8\n\
+                 max_blocks_per_seq 4\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
+                 param p 4 f32\ngraph decode_b1 decode 1 0\ngraph prefill_b1_s16 prefill 1 16\n\
+                 graph prefill_b1_s32 prefill 1 32\ngraph prefill_b2_s64 prefill 2 64\n",
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn padded_seq_picks_grid() {
+        let c = toy_cache();
+        assert_eq!(padded_seq(&c, 10), 16);
+        assert_eq!(padded_seq(&c, 16), 16);
+        assert_eq!(padded_seq(&c, 17), 32);
+        assert_eq!(padded_seq(&c, 40), 64);
+    }
+}

@@ -1,0 +1,92 @@
+//! Scheduler telemetry, shared as atomics so the host plane can *observe*
+//! the device plane without participating in it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct SchedulerStats {
+    pub decode_steps: AtomicU64,
+    pub prefill_batches: AtomicU64,
+    pub prefilled_requests: AtomicU64,
+    pub completed_requests: AtomicU64,
+    pub failed_requests: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    /// Sum of live-lane counts over decode steps (occupancy = sum/steps).
+    pub batch_occupancy_sum: AtomicU64,
+    /// Continuous-batching pauses taken for inline prefill.
+    pub pauses: AtomicU64,
+    /// Ring-scan latency accounting, nanoseconds.
+    pub scan_count: AtomicU64,
+    pub scan_ns_sum: AtomicU64,
+    pub scan_ns_max: AtomicU64,
+    /// Launch-window telemetry mirrored out of the scheduler loop.
+    pub fnf_launches: AtomicU64,
+    pub tail_relaunches: AtomicU64,
+    /// Admission backpressure events (no KV blocks / no batch slot).
+    pub backpressure_events: AtomicU64,
+}
+
+impl SchedulerStats {
+    pub fn record_scan(&self, ns: u64) {
+        self.scan_count.fetch_add(1, Ordering::Relaxed);
+        self.scan_ns_sum.fetch_add(ns, Ordering::Relaxed);
+        self.scan_ns_max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn mean_scan_us(&self) -> f64 {
+        let n = self.scan_count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.scan_ns_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let n = self.decode_steps.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "decode_steps={} prefills={} completed={} failed={} tokens={} occupancy={:.2} \
+             pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} backpressure={}",
+            self.decode_steps.load(Ordering::Relaxed),
+            self.prefill_batches.load(Ordering::Relaxed),
+            self.completed_requests.load(Ordering::Relaxed),
+            self.failed_requests.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.pauses.load(Ordering::Relaxed),
+            self.mean_scan_us(),
+            self.scan_ns_max.load(Ordering::Relaxed) as f64 / 1000.0,
+            self.fnf_launches.load(Ordering::Relaxed),
+            self.tail_relaunches.load(Ordering::Relaxed),
+            self.backpressure_events.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_accounting() {
+        let s = SchedulerStats::default();
+        s.record_scan(1000);
+        s.record_scan(3000);
+        assert!((s.mean_scan_us() - 2.0).abs() < 1e-9);
+        assert_eq!(s.scan_ns_max.load(Ordering::Relaxed), 3000);
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let s = SchedulerStats::default();
+        s.decode_steps.store(4, Ordering::Relaxed);
+        s.batch_occupancy_sum.store(10, Ordering::Relaxed);
+        assert!((s.mean_batch_occupancy() - 2.5).abs() < 1e-9);
+    }
+}

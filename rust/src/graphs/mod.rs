@@ -1,0 +1,244 @@
+//! The graph cache (paper §4.2 "CUDA graph cache"): a dense grid of
+//! pre-compiled (batch, sequence-length) executables with O(1)
+//! tightest-fit selection via a precomputed lookup table, plus a
+//! maximum-shape fallback for anything off-grid.
+//!
+//! This module is pure metadata — `GraphId`s index into the runtime's
+//! compiled-executable arena (`crate::runtime`). Keeping selection
+//! separate from execution lets the scheduler (and tests, and the DES)
+//! reason about shape policy without touching PJRT.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    Prefill,
+    Decode,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub id: GraphId,
+    pub name: String,
+    pub kind: GraphKind,
+    pub batch: usize,
+    /// Padded sequence length (prefill only; 0 for decode).
+    pub seq: usize,
+}
+
+/// O(1) tightest-fit graph selection.
+///
+/// `prefill_lut[b-1][s-1]` and `decode_lut[b-1]` are fully materialized at
+/// construction (≤ max_batch × max_seq entries), so runtime selection is
+/// two array reads — the paper's "precomputed lookup table indexed by
+/// (batch, sequence length)".
+pub struct GraphCache {
+    specs: Vec<GraphSpec>,
+    max_batch: usize,
+    max_seq: usize,
+    prefill_lut: Vec<Vec<Option<GraphId>>>,
+    decode_lut: Vec<Option<GraphId>>,
+    /// Fallback: the maximum-shape prefill graph.
+    pub fallback_prefill: Option<GraphId>,
+    pub fallback_decode: Option<GraphId>,
+}
+
+impl GraphCache {
+    pub fn new(specs: Vec<GraphSpec>) -> GraphCache {
+        let max_batch = specs.iter().map(|s| s.batch).max().unwrap_or(0);
+        let max_seq =
+            specs.iter().filter(|s| s.kind == GraphKind::Prefill).map(|s| s.seq).max().unwrap_or(0);
+
+        // Tightest fit = minimize (batch, then seq) among graphs that fit.
+        let mut prefill_lut = vec![vec![None; max_seq]; max_batch];
+        for (bi, row) in prefill_lut.iter_mut().enumerate() {
+            let b = bi + 1;
+            for (si, cell) in row.iter_mut().enumerate() {
+                let s = si + 1;
+                *cell = specs
+                    .iter()
+                    .filter(|g| g.kind == GraphKind::Prefill && g.batch >= b && g.seq >= s)
+                    .min_by_key(|g| (g.batch, g.seq))
+                    .map(|g| g.id);
+            }
+        }
+        let mut decode_lut = vec![None; max_batch];
+        for (bi, cell) in decode_lut.iter_mut().enumerate() {
+            let b = bi + 1;
+            *cell = specs
+                .iter()
+                .filter(|g| g.kind == GraphKind::Decode && g.batch >= b)
+                .min_by_key(|g| g.batch)
+                .map(|g| g.id);
+        }
+        let fallback_prefill = specs
+            .iter()
+            .filter(|g| g.kind == GraphKind::Prefill)
+            .max_by_key(|g| (g.batch, g.seq))
+            .map(|g| g.id);
+        let fallback_decode = specs
+            .iter()
+            .filter(|g| g.kind == GraphKind::Decode)
+            .max_by_key(|g| g.batch)
+            .map(|g| g.id);
+        GraphCache {
+            specs,
+            max_batch,
+            max_seq,
+            prefill_lut,
+            decode_lut,
+            fallback_prefill,
+            fallback_decode,
+        }
+    }
+
+    pub fn specs(&self) -> &[GraphSpec] {
+        &self.specs
+    }
+
+    pub fn spec(&self, id: GraphId) -> &GraphSpec {
+        &self.specs[id.0]
+    }
+
+    /// Largest decode batch available (the scheduler's batch capacity).
+    pub fn max_decode_batch(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::Decode)
+            .map(|s| s.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn max_prefill_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn max_prefill_batch(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::Prefill)
+            .map(|s| s.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Tightest-fitting prefill graph for `batch` prompts padded to
+    /// `seq` tokens; falls back to the maximum shape when off-grid.
+    pub fn select_prefill(&self, batch: usize, seq: usize) -> Option<GraphId> {
+        if batch == 0 || seq == 0 {
+            return None;
+        }
+        if batch <= self.max_batch && seq <= self.max_seq {
+            if let Some(id) = self.prefill_lut[batch - 1][seq - 1] {
+                return Some(id);
+            }
+        }
+        if batch <= self.max_prefill_batch() && seq <= self.max_seq {
+            return self.fallback_prefill;
+        }
+        None
+    }
+
+    /// Tightest-fitting decode graph for a live batch of `batch` lanes.
+    pub fn select_decode(&self, batch: usize) -> Option<GraphId> {
+        if batch == 0 {
+            return None;
+        }
+        if batch <= self.max_batch {
+            if let Some(id) = self.decode_lut[batch - 1] {
+                return Some(id);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> GraphCache {
+        let mut specs = vec![];
+        let mut id = 0;
+        for b in [1usize, 2, 4] {
+            for s in [16usize, 32, 64, 128] {
+                specs.push(GraphSpec {
+                    id: GraphId(id),
+                    name: format!("prefill_b{b}_s{s}"),
+                    kind: GraphKind::Prefill,
+                    batch: b,
+                    seq: s,
+                });
+                id += 1;
+            }
+        }
+        for b in [1usize, 2, 4, 8] {
+            specs.push(GraphSpec {
+                id: GraphId(id),
+                name: format!("decode_b{b}"),
+                kind: GraphKind::Decode,
+                batch: b,
+                seq: 0,
+            });
+            id += 1;
+        }
+        GraphCache::new(specs)
+    }
+
+    #[test]
+    fn tightest_fit_exact() {
+        let c = cache();
+        let g = c.select_prefill(2, 32).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_b2_s32");
+    }
+
+    #[test]
+    fn tightest_fit_rounds_up() {
+        let c = cache();
+        let g = c.select_prefill(3, 33).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_b4_s64");
+        let d = c.select_decode(5).unwrap();
+        assert_eq!(c.spec(d).name, "decode_b8");
+    }
+
+    #[test]
+    fn decode_exact_sizes() {
+        let c = cache();
+        for (b, want) in [(1, "decode_b1"), (2, "decode_b2"), (3, "decode_b4"), (8, "decode_b8")] {
+            assert_eq!(c.spec(c.select_decode(b).unwrap()).name, want);
+        }
+    }
+
+    #[test]
+    fn off_grid_returns_none() {
+        let c = cache();
+        assert!(c.select_decode(9).is_none());
+        assert!(c.select_prefill(5, 16).is_none());
+        assert!(c.select_prefill(1, 1000).is_none());
+        assert!(c.select_prefill(0, 16).is_none());
+    }
+
+    #[test]
+    fn selection_is_consistent_with_linear_scan() {
+        // The O(1) LUT must agree with a brute-force tightest-fit scan.
+        let c = cache();
+        for b in 1..=4usize {
+            for s in 1..=128usize {
+                let lin = c
+                    .specs()
+                    .iter()
+                    .filter(|g| g.kind == GraphKind::Prefill && g.batch >= b && g.seq >= s)
+                    .min_by_key(|g| (g.batch, g.seq))
+                    .map(|g| g.id);
+                assert_eq!(c.select_prefill(b, s), lin, "b={b} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_decode_batch_reported() {
+        assert_eq!(cache().max_decode_batch(), 8);
+    }
+}

@@ -1,0 +1,172 @@
+//! The host plane and its fragility (paper §2–3).
+//!
+//! Two pieces:
+//!
+//! * [`HostOrchestrator`] — the per-step host work a CPU-resident serving
+//!   stack performs (batch reassembly, block-table bookkeeping, kernel
+//!   dispatch marshalling). Modeled as pointer-chasing updates over a
+//!   multi-MB scratch heap: genuinely memory-bound, so *live* colocated
+//!   interferers slow it through the same microarchitectural channels the
+//!   paper measures (LLC + TLB contention), no parameter tuning needed.
+//! * [`Interferer`] — the colocated noisy neighbor: worker threads doing
+//!   pbzip2-like block compression (stream reads + rolling-hash writes
+//!   over large buffers), evicting shared cache aggressively.
+//!
+//! The discrete-event simulator uses calibrated inflation factors instead
+//! (sim::interference); this module is for *live* end-to-end runs
+//! (examples/colocation.rs, Fig 3's baseline placement).
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Host-side orchestration work, interference-sensitive by construction.
+pub struct HostOrchestrator {
+    scratch: Vec<u64>,
+    cursor: u64,
+    /// Scratch touches per orchestration step (calibrates base cost).
+    touches_per_step: usize,
+}
+
+impl HostOrchestrator {
+    /// `scratch_mb` ~ the resident host working set of a serving engine's
+    /// scheduler (Python object soup, block tables, request dicts).
+    pub fn new(scratch_mb: usize, touches_per_step: usize) -> HostOrchestrator {
+        let words = scratch_mb * 1024 * 1024 / 8;
+        // Fill with a pseudo-random permutation walk so accesses defeat
+        // the prefetcher, like real pointer-heavy scheduler state.
+        let mut rng = Rng::new(0xD15EA5E);
+        let scratch = (0..words).map(|_| rng.next_u64()).collect();
+        HostOrchestrator { scratch, cursor: 1, touches_per_step }
+    }
+
+    /// One decode-iteration's worth of host work: dependent loads + RMW
+    /// over the scratch heap. Returns a checksum so the work can't be
+    /// optimized away.
+    pub fn step_work(&mut self) -> u64 {
+        let n = self.scratch.len() as u64;
+        let mut c = self.cursor;
+        let mut acc = 0u64;
+        for _ in 0..self.touches_per_step {
+            let idx = (c % n) as usize;
+            // Dependent chain: next index derives from loaded value.
+            let v = self.scratch[idx].wrapping_add(c);
+            self.scratch[idx] = v.rotate_left(7);
+            acc ^= v;
+            c = v | 1;
+        }
+        self.cursor = c;
+        acc
+    }
+
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch.len() * 8
+    }
+}
+
+/// Live CPU interferer: `threads` workers doing compression-like passes
+/// over private large buffers (the pbzip2/Ninja stand-in).
+pub struct Interferer {
+    stop: Arc<AtomicBool>,
+    pub work_units: Arc<AtomicU64>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Interferer {
+    pub fn spawn(threads: usize, buffer_mb_per_thread: usize) -> Interferer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let work_units = Arc::new(AtomicU64::new(0));
+        let mut handles = vec![];
+        for t in 0..threads {
+            let stop = stop.clone();
+            let work = work_units.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("interferer-{t}"))
+                    .spawn(move || {
+                        let words = buffer_mb_per_thread * 1024 * 1024 / 8;
+                        let mut buf: Vec<u64> =
+                            (0..words).map(|i| (i as u64).wrapping_mul(0x9E3779B9)).collect();
+                        let mut h = 0xCBF29CE484222325u64; // FNV offset
+                        while !stop.load(Ordering::Relaxed) {
+                            // "Compress" a block: stream read, hash, write back —
+                            // maximal cache-line turnover like bzip2 block sorting.
+                            for i in 0..words {
+                                h = (h ^ buf[i]).wrapping_mul(0x100000001B3);
+                                buf[i] = buf[i].rotate_left(13) ^ h;
+                            }
+                            work.fetch_add(1, Ordering::Relaxed);
+                        }
+                        std::hint::black_box(h);
+                    })
+                    .expect("spawn interferer"),
+            );
+        }
+        Interferer { stop, work_units, handles }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Interferer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn orchestrator_work_is_stateful() {
+        let mut h = HostOrchestrator::new(1, 100);
+        let a = h.step_work();
+        let b = h.step_work();
+        assert_ne!(a, b, "work must evolve state");
+        assert_eq!(h.scratch_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn interferer_spins_and_stops() {
+        let i = Interferer::spawn(2, 1);
+        let t = Instant::now();
+        while i.work_units.load(Ordering::Relaxed) == 0 && t.elapsed().as_secs() < 10 {
+            std::thread::yield_now();
+        }
+        assert!(i.work_units.load(Ordering::Relaxed) > 0);
+        i.stop();
+    }
+
+    #[test]
+    #[ignore] // timing-sensitive; run with --ignored on a quiet machine
+    fn interference_slows_orchestrator() {
+        let mut h = HostOrchestrator::new(8, 20_000);
+        let t0 = Instant::now();
+        for _ in 0..50 {
+            std::hint::black_box(h.step_work());
+        }
+        let baseline = t0.elapsed();
+        let inter = Interferer::spawn(std::thread::available_parallelism().unwrap().get(), 8);
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let t1 = Instant::now();
+        for _ in 0..50 {
+            std::hint::black_box(h.step_work());
+        }
+        let contended = t1.elapsed();
+        inter.stop();
+        assert!(
+            contended.as_nanos() > baseline.as_nanos(),
+            "contended {contended:?} <= baseline {baseline:?}"
+        );
+    }
+}

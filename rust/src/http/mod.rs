@@ -1,0 +1,269 @@
+//! Minimal HTTP/1.1 server with an OpenAI-compatible completions endpoint
+//! and Server-Sent-Events streaming (paper §4.1 goal (5): drop-in API
+//! compatibility). Hand-rolled on std::net — the request path stays inside
+//! the DPU plane (frontend threads), no host-side framework.
+//!
+//! Endpoints:
+//! * `POST /v1/completions` — body: `{"prompt": "...", "max_tokens": N,
+//!   "stream": true|false}`. Streaming responses use SSE `data:` frames
+//!   with OpenAI-style chunk objects, terminated by `data: [DONE]`.
+//! * `GET /health` — liveness.
+//! * `GET /metrics` — scheduler + frontend counters, text format.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::frontend::tracker::TokenEvent;
+use crate::frontend::DpuFrontend;
+use crate::gpu::SchedulerStats;
+use crate::tokenizer::Detokenizer;
+use crate::util::json::{parse, Json};
+
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub requests_served: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind + serve on a pool of acceptor->worker threads.
+    pub fn serve(
+        bind: &str,
+        frontend: Arc<DpuFrontend>,
+        stats: Arc<SchedulerStats>,
+    ) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests_served = Arc::new(AtomicU64::new(0));
+        let (stop2, served2) = (stop.clone(), requests_served.clone());
+        let handle = std::thread::Builder::new()
+            .name("http-acceptor".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let fe = frontend.clone();
+                            let st = stats.clone();
+                            let served = served2.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, fe, st, served);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr, stop, handle: Some(handle), requests_served })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(16 * 1024 * 1024)];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, body }))
+}
+
+fn respond(stream: &mut TcpStream, code: u16, content_type: &str, body: &str) -> std::io::Result<()> {
+    let status = match code {
+        200 => "200 OK",
+        400 => "400 Bad Request",
+        404 => "404 Not Found",
+        429 => "429 Too Many Requests",
+        _ => "500 Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    frontend: Arc<DpuFrontend>,
+    stats: Arc<SchedulerStats>,
+    served: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    let Some(req) = read_request(&mut stream)? else { return Ok(()) };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => respond(&mut stream, 200, "application/json", "{\"status\":\"ok\"}"),
+        ("GET", "/metrics") => {
+            let body = format!(
+                "# blink scheduler\n{}\n# frontend\nfree_slots {}\n",
+                stats.summary(),
+                frontend.approx_free_slots()
+            );
+            respond(&mut stream, 200, "text/plain", &body)
+        }
+        ("POST", "/v1/completions") => {
+            served.fetch_add(1, Ordering::Relaxed);
+            handle_completion(&mut stream, &frontend, &req.body)
+        }
+        _ => respond(&mut stream, 404, "application/json", "{\"error\":\"not found\"}"),
+    }
+}
+
+fn handle_completion(
+    stream: &mut TcpStream,
+    frontend: &DpuFrontend,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let parsed = std::str::from_utf8(body).ok().and_then(|s| parse(s).ok());
+    let Some(obj) = parsed else {
+        return respond(stream, 400, "application/json", "{\"error\":\"bad json\"}");
+    };
+    let Some(prompt) = obj.get("prompt").and_then(|p| p.as_str()) else {
+        return respond(stream, 400, "application/json", "{\"error\":\"missing prompt\"}");
+    };
+    let max_tokens = obj.get("max_tokens").and_then(|m| m.as_u64()).unwrap_or(16) as u32;
+    let stream_mode = obj.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
+
+    let handle = match frontend.submit_text(prompt, max_tokens) {
+        Ok(h) => h,
+        Err(e) => {
+            let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
+            return respond(stream, 429, "application/json", &msg);
+        }
+    };
+    let id = format!("cmpl-{}", handle.request_id);
+
+    if stream_mode {
+        write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )?;
+        let mut detok = Detokenizer::new();
+        loop {
+            match handle.rx.recv() {
+                Ok(TokenEvent::Token(t)) => {
+                    let text = detok.push(&frontend.vocab, t);
+                    if text.is_empty() {
+                        continue; // mid-codepoint
+                    }
+                    let chunk = Json::obj(vec![
+                        ("id", Json::Str(id.clone())),
+                        ("object", Json::Str("text_completion.chunk".into())),
+                        (
+                            "choices",
+                            Json::Arr(vec![Json::obj(vec![
+                                ("index", Json::Num(0.0)),
+                                ("text", Json::Str(text)),
+                            ])]),
+                        ),
+                    ]);
+                    write!(stream, "data: {}\n\n", chunk.to_string())?;
+                    stream.flush()?;
+                }
+                Ok(TokenEvent::Done) => {
+                    let tail = detok.finish();
+                    if !tail.is_empty() {
+                        let chunk = Json::obj(vec![
+                            ("id", Json::Str(id.clone())),
+                            (
+                                "choices",
+                                Json::Arr(vec![Json::obj(vec![
+                                    ("index", Json::Num(0.0)),
+                                    ("text", Json::Str(tail)),
+                                ])]),
+                            ),
+                        ]);
+                        write!(stream, "data: {}\n\n", chunk.to_string())?;
+                    }
+                    write!(stream, "data: [DONE]\n\n")?;
+                    return stream.flush();
+                }
+                Ok(TokenEvent::Failed) | Err(_) => {
+                    write!(stream, "data: {{\"error\":\"generation failed\"}}\n\n")?;
+                    write!(stream, "data: [DONE]\n\n")?;
+                    return stream.flush();
+                }
+            }
+        }
+    } else {
+        let prompt_tokens = handle.prompt_tokens;
+        match handle.collect() {
+            Ok(tokens) => {
+                let text = crate::tokenizer::decode(&frontend.vocab, &tokens);
+                let resp = Json::obj(vec![
+                    ("id", Json::Str(id)),
+                    ("object", Json::Str("text_completion".into())),
+                    ("model", Json::Str("blink-tiny".into())),
+                    (
+                        "choices",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("index", Json::Num(0.0)),
+                            ("text", Json::Str(text)),
+                            ("finish_reason", Json::Str("length".into())),
+                        ])]),
+                    ),
+                    (
+                        "usage",
+                        Json::obj(vec![
+                            ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                            ("completion_tokens", Json::Num(tokens.len() as f64)),
+                        ]),
+                    ),
+                ]);
+                respond(stream, 200, "application/json", &resp.to_string())
+            }
+            Err(e) => {
+                let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
+                respond(stream, 500, "application/json", &msg)
+            }
+        }
+    }
+}

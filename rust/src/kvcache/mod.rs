@@ -1,0 +1,209 @@
+//! Paged KV-cache management (paper §4.2), GPU-resident: the block pool
+//! itself is a device buffer owned by the executor; this module manages
+//! its *metadata* — the free list, per-request block tables, and the
+//! admission reservation — all living in "persistent GPU memory" (state
+//! owned by the scheduler thread, surviving graph re-instantiation).
+//!
+//! Admission policy: full reservation. A request is admitted only if
+//! `ceil(max(padded_prompt, prompt + max_new) / block_size)` blocks are
+//! free, so decode can never hit a mid-flight OOM (no preemption-by-OOM
+//! path; DECODE_PAUSED is reserved for continuous-batching pauses, as in
+//! the paper). The reservation covers padded prefill positions because
+//! the prefill graph writes K/V for every padded slot (see
+//! python/compile/model.py).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub max_blocks_per_seq: usize,
+}
+
+impl KvConfig {
+    pub fn blocks_needed(&self, padded_prompt: usize, prompt: usize, max_new: usize) -> usize {
+        let span = padded_prompt.max(prompt + max_new);
+        span.div_ceil(self.block_size)
+    }
+}
+
+/// Per-request cache state: the ordered blocks backing the sequence.
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub blocks: Vec<u32>,
+    /// Tokens currently cached (prompt after prefill, +1 per decode step).
+    pub cached_len: usize,
+}
+
+impl SeqCache {
+    /// The fixed-shape block-table row the AOT graphs take: `max_blocks`
+    /// entries, reserved blocks first, padded with block 0 (never touched
+    /// within the reservation span; the attention kernel masks by length).
+    pub fn table_row(&self, max_blocks: usize) -> Vec<i32> {
+        let mut row = vec![0i32; max_blocks];
+        for (i, b) in self.blocks.iter().take(max_blocks).enumerate() {
+            row[i] = *b as i32;
+        }
+        row
+    }
+}
+
+/// Block pool metadata manager.
+pub struct KvManager {
+    config: KvConfig,
+    free: Vec<u32>,
+    /// High-water mark of simultaneously allocated blocks (telemetry).
+    pub peak_in_use: usize,
+}
+
+impl KvManager {
+    pub fn new(config: KvConfig) -> KvManager {
+        // LIFO free list; block 0 is kept as the shared pad target and
+        // never handed out, matching the table_row padding convention.
+        let free: Vec<u32> = (1..config.num_blocks as u32).rev().collect();
+        KvManager { config, free, peak_in_use: 0 }
+    }
+
+    pub fn config(&self) -> KvConfig {
+        self.config
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        (self.config.num_blocks - 1) - self.free.len()
+    }
+
+    /// Can a request with these dimensions be admitted right now?
+    pub fn can_admit(&self, padded_prompt: usize, prompt: usize, max_new: usize) -> bool {
+        let need = self.config.blocks_needed(padded_prompt, prompt, max_new);
+        need <= self.config.max_blocks_per_seq && need <= self.free.len()
+    }
+
+    /// Reserve the full block span for a request. Returns None if the
+    /// pool cannot satisfy it (caller applies backpressure).
+    pub fn admit(&mut self, padded_prompt: usize, prompt: usize, max_new: usize) -> Option<SeqCache> {
+        if !self.can_admit(padded_prompt, prompt, max_new) {
+            return None;
+        }
+        let need = self.config.blocks_needed(padded_prompt, prompt, max_new);
+        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Some(SeqCache { blocks, cached_len: 0 })
+    }
+
+    /// Return a finished request's blocks to the pool.
+    pub fn release(&mut self, cache: SeqCache) {
+        for b in cache.blocks {
+            debug_assert!(!self.free.contains(&b), "double free of block {b}");
+            self.free.push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> KvConfig {
+        KvConfig { block_size: 16, num_blocks: 64, max_blocks_per_seq: 8 }
+    }
+
+    #[test]
+    fn blocks_needed_covers_padding() {
+        let c = cfg();
+        // prompt 17 padded to 32, 2 new tokens: span = max(32, 19) = 32 -> 2
+        assert_eq!(c.blocks_needed(32, 17, 2), 2);
+        // long generation dominates: max(32, 17+100)=117 -> 8
+        assert_eq!(c.blocks_needed(32, 17, 100), 8);
+        assert_eq!(c.blocks_needed(16, 16, 0), 1);
+        assert_eq!(c.blocks_needed(16, 16, 1), 2);
+    }
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut m = KvManager::new(cfg());
+        let before = m.free_blocks();
+        let c = m.admit(32, 20, 40).unwrap(); // span 60 -> 4 blocks
+        assert_eq!(c.blocks.len(), 4);
+        assert_eq!(m.free_blocks(), before - 4);
+        m.release(c);
+        assert_eq!(m.free_blocks(), before);
+    }
+
+    #[test]
+    fn rejects_over_long_sequences() {
+        let mut m = KvManager::new(cfg());
+        // 9 blocks needed > max_blocks_per_seq 8
+        assert!(m.admit(16, 16, 128).is_none());
+    }
+
+    #[test]
+    fn backpressure_when_pool_exhausted() {
+        let mut m = KvManager::new(cfg());
+        let mut held = vec![];
+        // 63 usable blocks; each request takes 8.
+        for _ in 0..7 {
+            held.push(m.admit(128, 128, 0).unwrap());
+        }
+        assert_eq!(m.free_blocks(), 63 - 56);
+        assert!(m.admit(128, 128, 0).is_none(), "must refuse, 7 < 8 free");
+        m.release(held.pop().unwrap());
+        assert!(m.admit(128, 128, 0).is_some());
+    }
+
+    #[test]
+    fn table_row_pads_with_zero() {
+        let c = SeqCache { blocks: vec![5, 9], cached_len: 20 };
+        assert_eq!(c.table_row(4), vec![5, 9, 0, 0]);
+    }
+
+    #[test]
+    fn block_zero_never_allocated() {
+        // Drain the whole pool; block 0 (the pad target) must never be
+        // handed out and no block may be handed out twice.
+        let mut m = KvManager::new(cfg());
+        let mut seen = std::collections::HashSet::new();
+        while let Some(c) = m.admit(16, 16, 0) {
+            for b in &c.blocks {
+                assert_ne!(*b, 0);
+                assert!(seen.insert(*b), "block {b} handed out twice");
+            }
+        }
+        assert_eq!(seen.len(), 63);
+    }
+
+    #[test]
+    fn prop_alloc_free_never_double_allocates() {
+        run_prop("kv-alloc-unique", 0xBEEF, 200, |rng: &mut Rng| {
+            let mut m = KvManager::new(cfg());
+            let mut live: Vec<SeqCache> = vec![];
+            let mut owned = std::collections::HashSet::new();
+            for _ in 0..100 {
+                if rng.f64() < 0.6 {
+                    let prompt = rng.range(1, 100) as usize;
+                    let max_new = rng.range(0, 40) as usize;
+                    let padded = prompt.next_power_of_two().min(128);
+                    if let Some(c) = m.admit(padded, prompt, max_new) {
+                        for b in &c.blocks {
+                            assert!(owned.insert(*b), "double allocation of {b}");
+                        }
+                        live.push(c);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let c = live.swap_remove(i);
+                    for b in &c.blocks {
+                        owned.remove(b);
+                    }
+                    m.release(c);
+                }
+                // Conservation: free + owned == usable pool.
+                assert_eq!(m.free_blocks() + owned.len(), 63);
+            }
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Blink: CPU-free LLM inference — rust coordinator (paper reproduction).
+//!
+//! See DESIGN.md for the system inventory and the paper→module map.
+
+pub mod devsim;
+pub mod eval;
+pub mod frontend;
+pub mod http;
+pub mod server;
+pub mod gpu;
+pub mod hostsim;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+pub mod graphs;
+pub mod kvcache;
+pub mod rdma;
+pub mod ringbuf;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,171 @@
+//! blink — CLI for the Blink reproduction.
+//!
+//! Subcommands:
+//!   serve   [--model M] [--bind ADDR] [--cpu-resident]  start a live server
+//!   eval    <all|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!           [--out DIR] [--window S] [--threads N]
+//!   info    print manifest + graph grid for a model
+
+use blink::eval;
+use blink::gpu::Placement;
+use blink::http::HttpServer;
+use blink::server::{BlinkServer, ServerConfig};
+use blink::sim::costmodel::PAPER_MODELS;
+use blink::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("eval") => eval_cmd(&args),
+        Some("info") => info(&args),
+        _ => {
+            eprintln!(
+                "usage: blink <serve|eval|info> [...]\n\
+                 serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident]\n\
+                 eval <all|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                      [--out results/] [--window 60] [--threads N]\n\
+                 info [--model blink-tiny]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let model = args.get_or("model", "blink-tiny").to_string();
+    let bind = args.get_or("bind", "127.0.0.1:8089").to_string();
+    let placement = if args.has_flag("cpu-resident") {
+        Placement::CpuResident { scratch_mb: 16, touches_per_step: 400_000 }
+    } else {
+        Placement::GpuResident
+    };
+    eprintln!("[serve] loading {model} (compiling AOT graphs, ~30s) ...");
+    let server = BlinkServer::start(ServerConfig { model, placement, ..Default::default() })
+        .expect("server start");
+    let http = HttpServer::serve(&bind, server.frontend.clone(), server.scheduler.stats.clone())
+        .expect("bind");
+    eprintln!("[serve] listening on http://{}", http.addr);
+    eprintln!(
+        "[serve] try: curl -s http://{}/v1/completions -d '{{\"prompt\": \"the quick brown\", \"max_tokens\": 16}}'",
+        http.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn eval_cmd(args: &Args) {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let out = args.get("out").map(std::path::PathBuf::from);
+    let out_ref = out.as_deref();
+    let window = args.get_f64("window", 60.0);
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8),
+    );
+
+    // Live experiments don't need the sweep.
+    match what {
+        "fig3" => return eval::live::fig3(out_ref),
+        "fig4" => return eval::live::fig4(out_ref),
+        "table5" => return eval::table5(),
+        _ => {}
+    }
+
+    let ctx = eval::EvalCtx::new(window, threads, out_ref);
+    let all_models: Vec<&str> = PAPER_MODELS.iter().map(|m| m.name).collect();
+    match what {
+        "all" => {
+            eval::fig1(&ctx);
+            eval::table1(&ctx);
+            eval::table2(&ctx);
+            eval::table3(&ctx);
+            eval::table4(&ctx);
+            eval::table5();
+            eval::table6(&ctx, false);
+            eval::table6(&ctx, true);
+            eval::latency_figure(&ctx, "Fig 5 TTFT", "ttft", "p999", &["qwen3-32b"]);
+            eval::latency_figure(&ctx, "Fig 5 TPOT", "tpot", "p999", &["qwen3-32b"]);
+            eval::latency_figure(&ctx, "Fig 6 TTFT", "ttft", "p99", &all_models);
+            eval::latency_figure(&ctx, "Fig 6 TPOT", "tpot", "p99", &all_models);
+            eval::fig7(&ctx);
+            eval::fig8(&ctx);
+            eval::table_b1(&ctx);
+            eval::table_b2(&ctx);
+            eval::fig_c1(&ctx);
+            for (fig, pct) in
+                [("Fig D.1", "p999"), ("Fig D.2", "p95"), ("Fig D.3", "p50"), ("Fig D.4", "mean")]
+            {
+                eval::latency_figure(&ctx, &format!("{fig} TTFT"), "ttft", pct, &all_models);
+                eval::latency_figure(&ctx, &format!("{fig} TPOT"), "tpot", pct, &all_models);
+                if pct == "p50" || pct == "mean" {
+                    eval::latency_figure(&ctx, &format!("{fig} ITL"), "itl", pct, &all_models);
+                }
+            }
+            eval::fig_e1(&ctx);
+            // Live experiments last (they need artifacts + ~2 min).
+            eval::live::fig4(out_ref);
+            eval::live::fig3(out_ref);
+        }
+        "fig1" => eval::fig1(&ctx),
+        "table1" => eval::table1(&ctx),
+        "table2" => eval::table2(&ctx),
+        "table3" => eval::table3(&ctx),
+        "table4" => eval::table4(&ctx),
+        "table6" => eval::table6(&ctx, false),
+        "table7" => eval::table6(&ctx, true),
+        "fig5" => {
+            eval::latency_figure(&ctx, "Fig 5 TTFT", "ttft", "p999", &["qwen3-32b"]);
+            eval::latency_figure(&ctx, "Fig 5 TPOT", "tpot", "p999", &["qwen3-32b"]);
+        }
+        "fig6" => {
+            eval::latency_figure(&ctx, "Fig 6 TTFT", "ttft", "p99", &all_models);
+            eval::latency_figure(&ctx, "Fig 6 TPOT", "tpot", "p99", &all_models);
+        }
+        "fig7" => eval::fig7(&ctx),
+        "fig8" => eval::fig8(&ctx),
+        "tableB1" => eval::table_b1(&ctx),
+        "tableB2" => eval::table_b2(&ctx),
+        "figC1" => eval::fig_c1(&ctx),
+        "figD" => {
+            for (fig, pct) in
+                [("Fig D.1", "p999"), ("Fig D.2", "p95"), ("Fig D.3", "p50"), ("Fig D.4", "mean")]
+            {
+                eval::latency_figure(&ctx, &format!("{fig} TTFT"), "ttft", pct, &all_models);
+                eval::latency_figure(&ctx, &format!("{fig} TPOT"), "tpot", pct, &all_models);
+            }
+        }
+        "figE1" => eval::fig_e1(&ctx),
+        other => {
+            eprintln!("unknown eval target: {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(args: &Args) {
+    let model = args.get_or("model", "blink-tiny");
+    let dir = blink::runtime::artifacts_dir().join(model);
+    match blink::runtime::ModelManifest::load(&dir.join("manifest.txt")) {
+        Ok(m) => {
+            println!("model {} (moe={})", m.model, m.moe);
+            println!(
+                "geometry: vocab={} d_model={} layers={} heads={}/{} d_ff={}",
+                m.vocab_size, m.d_model, m.n_layers, m.n_heads, m.n_kv_heads, m.d_ff
+            );
+            println!(
+                "kv: block_size={} num_blocks={} max_blocks/seq={} (max context {})",
+                m.block_size, m.num_blocks, m.max_blocks_per_seq, m.max_context()
+            );
+            println!("graphs ({}):", m.graphs.len());
+            for g in &m.graphs {
+                println!("  {} kind={} batch={} seq={}", g.name, g.kind, g.batch, g.seq);
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot load manifest: {e:#} (run `make artifacts`)");
+            std::process::exit(1);
+        }
+    }
+}

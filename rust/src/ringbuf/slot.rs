@@ -1,0 +1,167 @@
+//! Ring-buffer slot: per-request metadata + the lifecycle state machine.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Slot lifecycle states (paper §4.2). `FrontendWriting` is the transient
+/// ownership state between the frontend's claim of an EMPTY slot and its
+/// PREFILL_PENDING publish (the paper folds this into the RDMA write; we
+/// make it explicit so the claim race is CAS-clean).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum SlotState {
+    Empty = 0,
+    FrontendWriting = 1,
+    PrefillPending = 2,
+    PrefillProcessing = 3,
+    DecodeProcessing = 4,
+    DecodePaused = 5,
+    DecodeCompleted = 6,
+    /// Terminal error (bad request, OOM); frontend reports and releases.
+    Failed = 7,
+}
+
+impl SlotState {
+    pub fn from_u32(v: u32) -> SlotState {
+        match v {
+            0 => SlotState::Empty,
+            1 => SlotState::FrontendWriting,
+            2 => SlotState::PrefillPending,
+            3 => SlotState::PrefillProcessing,
+            4 => SlotState::DecodeProcessing,
+            5 => SlotState::DecodePaused,
+            6 => SlotState::DecodeCompleted,
+            _ => SlotState::Failed,
+        }
+    }
+
+    /// Legal FSM successors (used by debug assertions + property tests).
+    pub fn can_transition_to(self, next: SlotState) -> bool {
+        use SlotState::*;
+        matches!(
+            (self, next),
+            (Empty, FrontendWriting)
+                | (FrontendWriting, PrefillPending)
+                | (FrontendWriting, Empty) // frontend abort
+                | (PrefillPending, PrefillProcessing)
+                | (PrefillProcessing, DecodeProcessing)
+                | (PrefillProcessing, Failed)
+                | (DecodeProcessing, DecodePaused)
+                | (DecodePaused, DecodeProcessing)
+                | (DecodeProcessing, DecodeCompleted)
+                | (DecodePaused, DecodeCompleted) // early exit while paused
+                | (DecodeProcessing, Failed)
+                | (DecodeCompleted, Empty)
+                | (Failed, Empty)
+        )
+    }
+}
+
+/// One slot. All fields atomic: the slot is concurrently visible to the
+/// DPU plane (RDMA) and the GPU plane (persistent scheduler).
+#[derive(Debug)]
+pub struct Slot {
+    state: AtomicU32,
+    pub request_id: AtomicU64,
+    pub ticket: AtomicU64,
+    pub prompt_len: AtomicU32,
+    pub max_new_tokens: AtomicU32,
+    pub seed: AtomicU32,
+    /// Number of generated tokens published to the output arena.
+    pub generated: AtomicU32,
+    /// Frontend-local progress (tokens already streamed to the client).
+    pub read_cursor: AtomicU32,
+    pub submit_time_us: AtomicU64,
+    pub first_token_time_us: AtomicU64,
+    pub finish_time_us: AtomicU64,
+}
+
+impl Slot {
+    pub fn new() -> Slot {
+        Slot {
+            state: AtomicU32::new(SlotState::Empty as u32),
+            request_id: AtomicU64::new(0),
+            ticket: AtomicU64::new(0),
+            prompt_len: AtomicU32::new(0),
+            max_new_tokens: AtomicU32::new(0),
+            seed: AtomicU32::new(0),
+            generated: AtomicU32::new(0),
+            read_cursor: AtomicU32::new(0),
+            submit_time_us: AtomicU64::new(0),
+            first_token_time_us: AtomicU64::new(0),
+            finish_time_us: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn state(&self) -> SlotState {
+        SlotState::from_u32(self.state.load(Ordering::Acquire))
+    }
+
+    /// Relaxed state peek for bulk scans: the scan only *selects*
+    /// candidates — the subsequent claim CAS (AcqRel) provides the
+    /// synchronization, so the scan itself needs no ordering. This is
+    /// what the 256-thread GPU scan does with plain loads + a fence at
+    /// the claim.
+    #[inline]
+    pub fn state_relaxed(&self) -> SlotState {
+        SlotState::from_u32(self.state.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn set_state(&self, next: SlotState) {
+        debug_assert!(
+            self.state().can_transition_to(next),
+            "illegal transition {:?} -> {:?}",
+            self.state(),
+            next
+        );
+        self.state.store(next as u32, Ordering::Release);
+    }
+
+    /// CAS transition; returns true on success. Legality is checked in
+    /// debug builds only (the release hot path is a bare CAS, as on GPU).
+    #[inline]
+    pub fn cas_state(&self, from: SlotState, to: SlotState) -> bool {
+        debug_assert!(from.can_transition_to(to), "illegal transition {from:?} -> {to:?}");
+        self.state
+            .compare_exchange(from as u32, to as u32, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_legality() {
+        use SlotState::*;
+        assert!(Empty.can_transition_to(FrontendWriting));
+        assert!(!Empty.can_transition_to(DecodeProcessing));
+        assert!(DecodeProcessing.can_transition_to(DecodePaused));
+        assert!(DecodePaused.can_transition_to(DecodeProcessing));
+        assert!(!DecodeCompleted.can_transition_to(DecodeProcessing));
+        assert!(Failed.can_transition_to(Empty));
+    }
+
+    #[test]
+    fn cas_only_from_expected() {
+        let s = Slot::new();
+        assert!(s.cas_state(SlotState::Empty, SlotState::FrontendWriting));
+        assert!(!s.cas_state(SlotState::Empty, SlotState::FrontendWriting));
+        assert_eq!(s.state(), SlotState::FrontendWriting);
+    }
+
+    #[test]
+    fn roundtrip_u32() {
+        for v in 0..8u32 {
+            assert_eq!(SlotState::from_u32(v) as u32, v);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Parser for `artifacts/<model>/manifest.txt` (written by
+//! python/compile/aot.py). Line-based format; see aot.py for the schema.
+//! The manifest is the single source of truth for model geometry shared
+//! between the AOT graphs and the rust coordinator.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphEntry {
+    pub name: String,
+    pub kind: String, // "decode" | "prefill"
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub model: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub max_blocks_per_seq: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub eos_token: u32,
+    pub moe: bool,
+    pub temperature: f64,
+    pub top_p: f64,
+    pub rope_theta: f64,
+    /// (name, dims) in graph-argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub graphs: Vec<GraphEntry>,
+}
+
+impl ModelManifest {
+    pub fn load(path: &Path) -> Result<ModelManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelManifest> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("blink-manifest v1") => {}
+            other => bail!("bad manifest header: {other:?}"),
+        }
+        let mut m = ModelManifest {
+            model: String::new(),
+            vocab_size: 0,
+            d_model: 0,
+            n_layers: 0,
+            n_heads: 0,
+            n_kv_heads: 0,
+            d_head: 0,
+            d_ff: 0,
+            block_size: 0,
+            num_blocks: 0,
+            max_blocks_per_seq: 0,
+            n_experts: 0,
+            top_k: 0,
+            eos_token: 0,
+            moe: false,
+            temperature: 0.8,
+            top_p: 0.95,
+            rope_theta: 10000.0,
+            params: vec![],
+            graphs: vec![],
+        };
+        for line in lines {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            let mut val = || -> Result<&str> {
+                it.next().context("missing value").with_context(|| format!("line: {line}"))
+            };
+            match key {
+                "model" => m.model = val()?.to_string(),
+                "vocab_size" => m.vocab_size = val()?.parse()?,
+                "d_model" => m.d_model = val()?.parse()?,
+                "n_layers" => m.n_layers = val()?.parse()?,
+                "n_heads" => m.n_heads = val()?.parse()?,
+                "n_kv_heads" => m.n_kv_heads = val()?.parse()?,
+                "d_head" => m.d_head = val()?.parse()?,
+                "d_ff" => m.d_ff = val()?.parse()?,
+                "block_size" => m.block_size = val()?.parse()?,
+                "num_blocks" => m.num_blocks = val()?.parse()?,
+                "max_blocks_per_seq" => m.max_blocks_per_seq = val()?.parse()?,
+                "n_experts" => m.n_experts = val()?.parse()?,
+                "top_k" => m.top_k = val()?.parse()?,
+                "eos_token" => m.eos_token = val()?.parse()?,
+                "moe" => m.moe = val()? == "1",
+                "temperature" => m.temperature = val()?.parse()?,
+                "top_p" => m.top_p = val()?.parse()?,
+                "rope_theta" => m.rope_theta = val()?.parse()?,
+                "param" => {
+                    let name = val()?.to_string();
+                    let dims: Vec<usize> = val()?
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()?;
+                    m.params.push((name, dims));
+                }
+                "graph" => {
+                    let name = val()?.to_string();
+                    let kind = val()?.to_string();
+                    let batch = val()?.parse()?;
+                    let seq = val()?.parse()?;
+                    m.graphs.push(GraphEntry { name, kind, batch, seq });
+                }
+                _ => {} // forward-compatible: ignore unknown keys
+            }
+        }
+        if m.model.is_empty() || m.params.is_empty() || m.graphs.is_empty() {
+            bail!("incomplete manifest");
+        }
+        if m.vocab_size == 0 || m.block_size == 0 || m.num_blocks == 0 {
+            bail!("missing geometry in manifest");
+        }
+        Ok(m)
+    }
+
+    /// Max context = block span of one sequence.
+    pub fn max_context(&self) -> usize {
+        self.block_size * self.max_blocks_per_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+blink-manifest v1
+model blink-tiny
+vocab_size 2048
+d_model 256
+n_layers 4
+n_heads 8
+n_kv_heads 4
+d_head 32
+d_ff 704
+block_size 16
+num_blocks 512
+max_blocks_per_seq 32
+n_experts 4
+top_k 2
+eos_token 0
+moe 0
+temperature 0.8
+top_p 0.95
+rope_theta 10000.0
+param tok_embed 2048x256 f32
+param final_norm 256 f32
+graph decode_b1 decode 1 0
+graph prefill_b2_s32 prefill 2 32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "blink-tiny");
+        assert_eq!(m.vocab_size, 2048);
+        assert!(!m.moe);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0], ("tok_embed".to_string(), vec![2048, 256]));
+        assert_eq!(m.graphs.len(), 2);
+        assert_eq!(
+            m.graphs[1],
+            GraphEntry { name: "prefill_b2_s32".into(), kind: "prefill".into(), batch: 2, seq: 32 }
+        );
+        assert_eq!(m.max_context(), 512);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(ModelManifest::parse("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(ModelManifest::parse("blink-manifest v1\nmodel x\n").is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/<model>/`), compile every
+//! HLO-text graph once at startup (the paper's host-assisted
+//! *initialization* phase), and execute graphs from the device plane with
+//! the KV pool held device-resident across steps.
+//!
+//! Thread model: `Engine` is intentionally `!Send` (PJRT handles are raw
+//! pointers). The device plane (`crate::gpu::executor`) owns the one
+//! `Engine`; after initialization the host thread never touches it —
+//! which is precisely Blink's "host exits the inference path" property,
+//! enforced here by the type system.
+
+pub mod manifest;
+
+pub use manifest::{GraphEntry, ModelManifest};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::FromRawBytes;
+use std::path::{Path, PathBuf};
+
+use crate::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
+
+/// Compiled model: weights on device, one executable per (batch, seq)
+/// graph, the graph-cache selection structure, and the device-resident KV
+/// pool.
+pub struct Engine {
+    pub manifest: ModelManifest,
+    pub cache: GraphCache,
+    client: xla::PjRtClient,
+    /// Device-resident weights, in manifest parameter order.
+    params: Vec<xla::PjRtBuffer>,
+    /// One compiled executable per `GraphId` (same order as cache specs).
+    executables: Vec<xla::PjRtLoadedExecutable>,
+    /// The KV block pool, replaced by each graph execution's output.
+    kv: xla::PjRtBuffer,
+    /// Executions since start (telemetry).
+    pub steps: u64,
+}
+
+impl Engine {
+    /// Load manifest + weights + all graphs for `model` under `artifacts`.
+    pub fn load(artifacts: &Path, model: &str) -> Result<Engine> {
+        let dir = artifacts.join(model);
+        let manifest = ModelManifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest for {model}"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+
+        // Weights: npz straight to device buffers.
+        let names: Vec<&str> = manifest.params.iter().map(|p| p.0.as_str()).collect();
+        let params = xla::PjRtBuffer::read_npz_by_name(dir.join("params.npz"), &client, &names)
+            .map_err(wrap_xla)?;
+
+        // Compile every graph in the manifest grid.
+        let mut specs = Vec::new();
+        let mut executables = Vec::new();
+        for (i, g) in manifest.graphs.iter().enumerate() {
+            let path = dir.join(format!("{}.hlo.txt", g.name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap_xla)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
+            executables.push(exe);
+            specs.push(GraphSpec {
+                id: GraphId(i),
+                name: g.name.clone(),
+                kind: if g.kind == "decode" { GraphKind::Decode } else { GraphKind::Prefill },
+                batch: g.batch,
+                seq: g.seq,
+            });
+        }
+        let cache = GraphCache::new(specs);
+
+        // Zero-initialized KV pool on device.
+        let kv = Self::fresh_kv(&client, &manifest)?;
+        Ok(Engine { manifest, cache, client, params, executables, kv, steps: 0 })
+    }
+
+    fn fresh_kv(client: &xla::PjRtClient, m: &ModelManifest) -> Result<xla::PjRtBuffer> {
+        let dims = [
+            m.n_layers,
+            m.num_blocks,
+            2,
+            m.n_kv_heads,
+            m.block_size,
+            m.d_head,
+        ];
+        let n: usize = dims.iter().product();
+        let zeros = vec![0f32; n];
+        let dims_u: Vec<usize> = dims.to_vec();
+        client
+            .buffer_from_host_buffer(&zeros, &dims_u, None)
+            .map_err(wrap_xla)
+    }
+
+    /// Drop all KV state (between benchmark phases).
+    pub fn reset_kv(&mut self) -> Result<()> {
+        self.kv = Self::fresh_kv(&self.client, &self.manifest)?;
+        Ok(())
+    }
+
+    /// Execute one graph. `tokens` is `[B]` for decode or `[B*S]`
+    /// row-major for prefill; `block_tables` is `[B * max_blocks_per_seq]`
+    /// row-major; `seq_lens` is `[B]`. Returns the sampled tokens `[B]`.
+    ///
+    /// The KV pool is passed as a device buffer and swapped for the
+    /// output's pool element — no host copy of cache state, the analogue
+    /// of the paper's persistent GPU memory surviving each graph launch.
+    pub fn execute(
+        &mut self,
+        id: GraphId,
+        block_tables: &[i32],
+        seq_lens: &[i32],
+        tokens: &[i32],
+        seed: u32,
+    ) -> Result<Vec<i32>> {
+        let spec = self.cache.spec(id).clone();
+        let b = spec.batch;
+        let m = self.manifest.max_blocks_per_seq;
+        if block_tables.len() != b * m {
+            bail!("block_tables len {} != {}x{}", block_tables.len(), b, m);
+        }
+        if seq_lens.len() != b {
+            bail!("seq_lens len {} != batch {}", seq_lens.len(), b);
+        }
+        let expected_tok = match spec.kind {
+            GraphKind::Decode => b,
+            GraphKind::Prefill => b * spec.seq,
+        };
+        if tokens.len() != expected_tok {
+            bail!("tokens len {} != {}", tokens.len(), expected_tok);
+        }
+
+        let c = &self.client;
+        let bt = c
+            .buffer_from_host_buffer(block_tables, &[b, m], None)
+            .map_err(wrap_xla)?;
+        let sl = c.buffer_from_host_buffer(seq_lens, &[b], None).map_err(wrap_xla)?;
+        let tok = match spec.kind {
+            GraphKind::Decode => c.buffer_from_host_buffer(tokens, &[b], None),
+            GraphKind::Prefill => c.buffer_from_host_buffer(tokens, &[b, spec.seq], None),
+        }
+        .map_err(wrap_xla)?;
+        let seed_b = c
+            .buffer_from_host_buffer(&[seed], &[] as &[usize], None)
+            .map_err(wrap_xla)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&self.kv);
+        args.push(&bt);
+        args.push(&sl);
+        args.push(&tok);
+        args.push(&seed_b);
+
+        let mut out = self.executables[id.0].execute_b_untupled(&args).map_err(wrap_xla)?;
+        let replica = out.pop().ok_or_else(|| anyhow!("no replica outputs"))?;
+        let mut it = replica.into_iter();
+        let (next_tokens_buf, kv_out) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => bail!("expected 2 outputs (tokens, kv)"),
+        };
+        // Swap in the new pool; the old buffer drops (freed on device).
+        self.kv = kv_out;
+        self.steps += 1;
+
+        let lit = next_tokens_buf.to_literal_sync().map_err(wrap_xla)?;
+        let toks: Vec<i32> = lit.to_vec().map_err(wrap_xla)?;
+        Ok(toks)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Locate the artifacts directory: $BLINK_ARTIFACTS, ./artifacts, or the
+/// crate-root artifacts dir (tests run from the workspace root).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("BLINK_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need artifacts live in rust/tests/ (integration);
+    // here we only test pure helpers.
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(!d.as_os_str().is_empty());
+    }
+}

@@ -1,0 +1,110 @@
+//! Top-level assembly: one Blink serving instance (Fig 2's whole picture).
+//!
+//! `BlinkServer::start` is the host's *provisioning plane* role: it loads
+//! the model (executor thread compiles the AOT graphs), allocates the
+//! GPU-resident ring buffer, spawns the RDMA engine, the persistent
+//! scheduler and the DPU frontend — then the host thread is done; the
+//! steady-state request path is frontend(DPU) → RDMA → ring buffer →
+//! scheduler(GPU) → executor(GPU) and back.
+
+use std::sync::Arc;
+
+use crate::frontend::token_reader::ReaderConfig;
+use crate::frontend::{DpuFrontend, FrontendConfig, RequestHandle};
+use crate::gpu::{Executor, Placement, Scheduler, SchedulerConfig};
+use crate::rdma::{RdmaConfig, RdmaEngine};
+use crate::ringbuf::{RingBuffer, RingConfig};
+use crate::runtime::{artifacts_dir, ModelManifest};
+use crate::tokenizer::Vocab;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub model: String,
+    pub ring_slots: usize,
+    pub placement: Placement,
+    pub rdma: RdmaConfig,
+    pub apply_launch_delays: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            model: "blink-tiny".into(),
+            // Scaled-down ring (the paper uses 4096 on a 96 GB H100): the
+            // tiny model's KV pool bounds concurrency well below this.
+            ring_slots: 256,
+            placement: Placement::GpuResident,
+            rdma: RdmaConfig::default(),
+            apply_launch_delays: true,
+        }
+    }
+}
+
+pub struct BlinkServer {
+    pub ring: Arc<RingBuffer>,
+    pub rdma: Arc<RdmaEngine>,
+    pub frontend: Arc<DpuFrontend>,
+    pub scheduler: Scheduler,
+    pub manifest: ModelManifest,
+}
+
+impl BlinkServer {
+    pub fn start(config: ServerConfig) -> anyhow::Result<BlinkServer> {
+        let artifacts = artifacts_dir();
+        let manifest = ModelManifest::load(&artifacts.join(&config.model).join("manifest.txt"))?;
+        let vocab = Arc::new(
+            Vocab::load(&artifacts.join("vocab.blink"))
+                .map_err(|e| anyhow::anyhow!("vocab: {e}"))?,
+        );
+
+        let max_ctx = manifest.max_context();
+        let ring = Arc::new(RingBuffer::new(RingConfig {
+            num_slots: config.ring_slots,
+            max_prompt: max_ctx.min(crate::ringbuf::RingConfig::default().max_prompt),
+            max_output: max_ctx.min(crate::ringbuf::RingConfig::default().max_output),
+        }));
+        let rdma = RdmaEngine::spawn(ring.clone(), config.rdma);
+
+        // Host-assisted initialization: compile graphs, load weights.
+        let executor = Executor::spawn(artifacts.clone(), config.model.clone())?;
+
+        let scheduler = Scheduler::spawn(
+            ring.clone(),
+            executor,
+            manifest.clone(),
+            SchedulerConfig {
+                placement: config.placement.clone(),
+                apply_launch_delays: config.apply_launch_delays,
+                ..Default::default()
+            },
+        );
+
+        let frontend = Arc::new(DpuFrontend::new(
+            rdma.clone(),
+            vocab,
+            FrontendConfig {
+                num_slots: config.ring_slots,
+                max_prompt: ring.config.max_prompt,
+                max_output: ring.config.max_output,
+                reader: ReaderConfig::default(),
+            },
+        ));
+
+        Ok(BlinkServer { ring, rdma, frontend, scheduler, manifest })
+    }
+
+    /// Convenience passthroughs.
+    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, String> {
+        self.frontend.submit_text(text, max_new)
+    }
+
+    pub fn submit_tokens(&self, toks: &[u32], max_new: u32) -> Result<RequestHandle, String> {
+        self.frontend.submit_tokens(toks, max_new)
+    }
+
+    /// Drain in-flight work and stop the scheduler (host is allowed back
+    /// on the path only to tear the instance down).
+    pub fn shutdown(mut self) {
+        self.scheduler.drain_and_stop();
+    }
+}

@@ -1,0 +1,282 @@
+//! Discrete-event serving simulator: the paper's evaluation harness for
+//! the four (unrunnable-here) testbed models. One `simulate` call = one
+//! (system, model, load, interference) point of the sweep: Poisson
+//! arrivals, FCFS continuous batching with whole-prompt prefill (chunked
+//! prefill disabled, as in the paper's controlled setup), roofline GPU
+//! step costs, system-specific host coupling, and the time-varying
+//! interference process applied to *host-side* work only.
+//!
+//! The simulation is step-granular (one event per decode iteration /
+//! prefill batch), which preserves exactly the quantities the paper
+//! reports: TTFT (admission + queue + prefill), TPOT (steady decode
+//! cadence), ITL (per-token gaps incl. prefill pauses — the §3.1 "jitter"
+//! gap between ITL and TPOT), throughput and saturation behaviour.
+
+use crate::sim::costmodel::{CostModel, PaperModel};
+use crate::sim::energy::PowerModel;
+use crate::sim::interference::InterferenceProcess;
+use crate::sim::systems::System;
+use crate::util::rng::Rng;
+use crate::workload::{LengthModel, RequestMetrics, TraceGen, TraceRequest, WindowMetrics};
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub system: System,
+    pub model: PaperModel,
+    pub interference: bool,
+    pub rate: f64,
+    pub window_s: f64,
+    pub seed: u64,
+    pub lengths: LengthModel,
+    /// Upper bound on concurrent sequences (engine max_num_seqs).
+    pub max_num_seqs: usize,
+    /// Max prompts admitted per prefill batch.
+    pub max_prefill_batch: usize,
+}
+
+impl SimConfig {
+    pub fn new(system: System, model: PaperModel, rate: f64, interference: bool) -> SimConfig {
+        SimConfig {
+            system,
+            model,
+            interference,
+            rate,
+            window_s: 60.0,
+            seed: 0xB11AC << 8 | (rate as u64),
+            lengths: LengthModel::sharegpt(),
+            max_num_seqs: 64,
+            max_prefill_batch: 8,
+        }
+    }
+}
+
+struct Run {
+    req: TraceRequest,
+    produced: usize,
+    ctx: usize,
+    first_token_s: f64,
+    last_token_s: f64,
+    itl_s: Vec<f64>,
+}
+
+pub fn simulate(cfg: &SimConfig) -> WindowMetrics {
+    let sens =
+        if cfg.interference { cfg.system.interference_sensitivity() } else { 1.0 };
+    simulate_with_sensitivity(cfg, sens)
+}
+
+/// Like [`simulate`] but with an explicit mean inflation multiplier for
+/// host-side work — used by the §3 ablations (partial interferers, core
+/// pinning, CAT) where the effective pressure differs from the full
+/// colocation scenario.
+pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMetrics {
+    // Interference runs use an independent seed even for immune systems:
+    // the paper reports Blink's interference numbers as "within
+    // experimental variance" of isolation, i.e. a different run, not a
+    // bit-identical replay.
+    let iseed = if cfg.interference { cfg.seed.rotate_left(17) ^ 0xC010C } else { cfg.seed };
+    let mut rng = Rng::new(iseed ^ sys_tag(cfg.system));
+    let cm = CostModel::new(cfg.model);
+    let gen = TraceGen::new(cfg.lengths, 8192, 4096);
+    let trace = gen.generate(&mut rng.fork(1), cfg.rate, cfg.window_s);
+
+    let interference = if sensitivity > 1.0 {
+        InterferenceProcess::new(sensitivity, &mut rng)
+    } else {
+        InterferenceProcess::none()
+    };
+
+    // Requests become schedulable after the system's admission path
+    // (HTTP + tokenize + enqueue), which inflates under interference for
+    // host-coupled systems.
+    let mut ready: Vec<(f64, TraceRequest)> = trace
+        .iter()
+        .map(|r| {
+            let adm = cfg.system.admission_s() * interference.sample(r.arrival_s, &mut rng);
+            (r.arrival_s + adm, *r)
+        })
+        .collect();
+    ready.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mean_footprint = mean_tokens(&trace).max(64.0);
+    let max_batch = cm.max_batch(mean_footprint).min(cfg.max_num_seqs);
+
+    let mut t = 0.0f64;
+    let mut next_ready = 0usize;
+    let mut running: Vec<Run> = vec![];
+    let mut done: Vec<RequestMetrics> = vec![];
+    let mut gpu_busy_s = 0.0f64;
+    let drain_deadline = cfg.window_s * 4.0 + 120.0;
+
+    while (next_ready < ready.len() || !running.is_empty()) && t < drain_deadline {
+        // Admit (FCFS) while capacity allows; prefill in batches.
+        let mut admitted: Vec<TraceRequest> = vec![];
+        while next_ready < ready.len()
+            && ready[next_ready].0 <= t
+            && running.len() + admitted.len() < max_batch
+            && admitted.len() < cfg.max_prefill_batch
+        {
+            admitted.push(ready[next_ready].1);
+            next_ready += 1;
+        }
+        if !admitted.is_empty() {
+            // Pause decode, run one prefill batch (paper policy), resume.
+            let prefill_tokens: usize = admitted.iter().map(|r| r.input_tokens).sum();
+            let host = cfg.system.step_overhead_moe_s(running.len() + admitted.len(), cfg.model.moe)
+                * interference.sample(t, &mut rng);
+            let dur = cm.prefill_s(prefill_tokens) + host;
+            gpu_busy_s += cm.prefill_s(prefill_tokens);
+            t += dur;
+            for r in admitted {
+                running.push(Run {
+                    req: r,
+                    produced: 1, // prefill emits the first token
+                    ctx: r.input_tokens + 1,
+                    first_token_s: t,
+                    last_token_s: t,
+                    itl_s: vec![],
+                });
+            }
+            // Single-token requests finish at prefill.
+            retire(&mut running, &mut done);
+            continue;
+        }
+
+        if running.is_empty() {
+            // Idle: jump to the next ready request.
+            if next_ready < ready.len() {
+                t = t.max(ready[next_ready].0);
+            }
+            continue;
+        }
+
+        // One decode iteration for the whole batch.
+        let b = running.len();
+        let mean_ctx = running.iter().map(|r| r.ctx as f64).sum::<f64>() / b as f64;
+        let gpu = cm.decode_step_s(b, mean_ctx);
+        let host =
+            cfg.system.step_overhead_moe_s(b, cfg.model.moe) * interference.sample(t, &mut rng);
+        t += gpu + host;
+        gpu_busy_s += gpu;
+        for r in running.iter_mut() {
+            r.produced += 1;
+            r.ctx += 1;
+            r.itl_s.push(t - r.last_token_s);
+            r.last_token_s = t;
+        }
+        retire(&mut running, &mut done);
+    }
+
+    let mut wm = WindowMetrics::from_requests(cfg.rate, cfg.window_s, &done);
+    // Energy: GPU utilization over the *active* span.
+    let active = t.min(cfg.window_s).max(1e-9);
+    let gpu_util = (gpu_busy_s.min(active) / active).clamp(0.0, 1.0);
+    let tok_s = wm.decode_tok_s + wm.prefill_tok_s * 0.0; // paper: per generated token
+    wm.energy_mj_per_tok = PowerModel::default().mj_per_token(
+        cfg.system,
+        gpu_util,
+        cfg.interference,
+        tok_s.max(1e-9),
+    );
+    wm
+}
+
+fn retire(running: &mut Vec<Run>, done: &mut Vec<RequestMetrics>) {
+    let mut i = 0;
+    while i < running.len() {
+        if running[i].produced >= running[i].req.output_tokens {
+            let r = running.swap_remove(i);
+            done.push(RequestMetrics {
+                id: r.req.id,
+                arrival_s: r.req.arrival_s,
+                first_token_s: r.first_token_s,
+                finish_s: r.last_token_s,
+                input_tokens: r.req.input_tokens,
+                output_tokens: r.req.output_tokens,
+                itl_s: r.itl_s,
+            });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn mean_tokens(trace: &[TraceRequest]) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    trace.iter().map(|r| (r.input_tokens + r.output_tokens) as f64).sum::<f64>()
+        / trace.len() as f64
+}
+
+fn sys_tag(s: System) -> u64 {
+    match s {
+        System::Blink => 0x11,
+        System::TrtLlm => 0x22,
+        System::Vllm => 0x33,
+        System::Sglang => 0x44,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{LLAMA3_8B, QWEN3_30B_A3B};
+
+    #[test]
+    fn low_load_all_complete() {
+        for sys in crate::sim::systems::ALL_SYSTEMS {
+            let cfg = SimConfig::new(sys, LLAMA3_8B, 2.0, false);
+            let wm = simulate(&cfg);
+            assert!(wm.completed as f64 >= 0.8 * 2.0 * 50.0, "{sys:?}: {}", wm.completed);
+            assert!(wm.ttft.p99 > 0.0 && wm.tpot.p99 > 0.0);
+        }
+    }
+
+    #[test]
+    fn blink_beats_baselines_pre_saturation() {
+        let b = simulate(&SimConfig::new(System::Blink, LLAMA3_8B, 8.0, false));
+        let v = simulate(&SimConfig::new(System::Vllm, LLAMA3_8B, 8.0, false));
+        let s = simulate(&SimConfig::new(System::Sglang, LLAMA3_8B, 8.0, false));
+        assert!(b.ttft.p99 < v.ttft.p99, "blink {} vs vllm {}", b.ttft.p99, v.ttft.p99);
+        assert!(b.tpot.p99 < v.tpot.p99);
+        assert!(v.ttft.p99 < s.ttft.p99, "vllm {} vs sglang {}", v.ttft.p99, s.ttft.p99);
+    }
+
+    #[test]
+    fn interference_collapses_baselines_not_blink() {
+        let iso = simulate(&SimConfig::new(System::Blink, LLAMA3_8B, 8.0, false));
+        let int = simulate(&SimConfig::new(System::Blink, LLAMA3_8B, 8.0, true));
+        let ratio = int.req_throughput / iso.req_throughput;
+        assert!(ratio > 0.9, "blink retention {ratio}");
+
+        let viso = simulate(&SimConfig::new(System::Vllm, LLAMA3_8B, 8.0, false));
+        let vint = simulate(&SimConfig::new(System::Vllm, LLAMA3_8B, 8.0, true));
+        let vratio = vint.req_throughput / viso.req_throughput;
+        assert!(vratio < 0.7, "vllm retention {vratio}");
+        assert!(vint.tpot.p99 > 2.0 * viso.tpot.p99, "vllm TPOT must inflate");
+    }
+
+    #[test]
+    fn moe_amplifies_blink_advantage() {
+        // §6.2: host expert-routing tax makes the MoE *throughput* gap at
+        // saturating load larger than the dense gap (paper: 37 % vs 9 %).
+        let bm = simulate(&SimConfig::new(System::Blink, QWEN3_30B_A3B, 8.0, false));
+        let vm = simulate(&SimConfig::new(System::Vllm, QWEN3_30B_A3B, 8.0, false));
+        let bd = simulate(&SimConfig::new(System::Blink, LLAMA3_8B, 16.0, false));
+        let vd = simulate(&SimConfig::new(System::Vllm, LLAMA3_8B, 16.0, false));
+        let moe_gap = bm.req_throughput / vm.req_throughput;
+        let dense_gap = bd.req_throughput / vd.req_throughput;
+        assert!(moe_gap > dense_gap, "moe {moe_gap} dense {dense_gap}");
+        assert!(moe_gap > 1.2, "moe gap should be large: {moe_gap}");
+    }
+
+    #[test]
+    fn determinism() {
+        let cfg = SimConfig::new(System::Vllm, LLAMA3_8B, 6.0, true);
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.ttft.p99, b.ttft.p99);
+    }
+}

@@ -1,0 +1,231 @@
+//! Interference process + microarchitectural counter model (paper §2.2,
+//! §3, Appendix A).
+//!
+//! Live interference (crate::hostsim) perturbs this machine, not an H100
+//! testbed; the DES instead applies a *calibrated* inflation process to
+//! host-side work:
+//!
+//! * a slow phase component — the interferers (pbzip2 I/O vs. compress
+//!   phases, Ninja preprocess/compile/link cycles) traverse distinct
+//!   execution phases over the sweep, which the paper notes produces
+//!   non-monotonic baseline curves (Appendix A);
+//! * a heavy-tailed per-step lognormal — LLC/TLB contention jitter.
+//!
+//! The counter model maps an interference intensity (and, for Table 4, a
+//! CAT way allocation) to the hardware counters the paper reports,
+//! reproducing the two-stage amplification mechanism of §3.1: TLB misses
+//! rise mildly, but each miss's page walk lands in a polluted LLC, so
+//! walk_active and LLC stalls blow up together.
+
+use crate::util::rng::Rng;
+
+/// Time-varying inflation multiplier applied to host-side costs.
+#[derive(Debug, Clone)]
+pub struct InterferenceProcess {
+    /// Mean multiplier at full intensity (system-specific sensitivity).
+    pub mean: f64,
+    /// Lognormal shape of per-step jitter (heavier ⇒ fatter P99.9).
+    pub sigma: f64,
+    /// Phase modulation depth (0..1) and period (s) — Appendix A.
+    pub phase_depth: f64,
+    pub phase_period_s: f64,
+    phase_offset: f64,
+}
+
+impl InterferenceProcess {
+    pub fn new(mean: f64, rng: &mut Rng) -> InterferenceProcess {
+        InterferenceProcess {
+            mean,
+            sigma: 0.55,
+            phase_depth: 0.45,
+            phase_period_s: 37.0,
+            phase_offset: rng.f64() * std::f64::consts::TAU,
+        }
+    }
+
+    pub fn none() -> InterferenceProcess {
+        InterferenceProcess {
+            mean: 1.0,
+            sigma: 0.0,
+            phase_depth: 0.0,
+            phase_period_s: 1.0,
+            phase_offset: 0.0,
+        }
+    }
+
+    /// Multiplier at simulation time `t` (≥ 1.0).
+    pub fn sample(&self, t_s: f64, rng: &mut Rng) -> f64 {
+        if self.mean <= 1.0 {
+            return 1.0;
+        }
+        let phase = 1.0
+            + self.phase_depth
+                * (std::f64::consts::TAU * t_s / self.phase_period_s + self.phase_offset).sin();
+        let jitter = if self.sigma > 0.0 {
+            // Lognormal with unit mean: exp(sigma*z - sigma^2/2).
+            (self.sigma * rng.normal() - self.sigma * self.sigma / 2.0).exp()
+        } else {
+            1.0
+        };
+        (self.mean * phase * jitter).max(1.0)
+    }
+}
+
+/// Hardware-counter model: reproduces the §3.1 amplification mechanism.
+/// `intensity` 0.0 = isolated, 1.0 = the paper's 24× interferer;
+/// `cat_ways` = Some(w) models Intel CAT with `w` LLC ways dedicated to
+/// the victim (Table 4); None = no partitioning (Tables 1–2).
+#[derive(Debug, Clone, Copy)]
+pub struct CounterModel {
+    pub intensity: f64,
+    pub cat_ways: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Counters {
+    pub ipc: f64,
+    pub llc_miss_pct: f64,
+    pub llc_stall_cycles_m: f64,
+    pub dtlb_load_misses_m: f64,
+    pub walk_active_m: f64,
+    pub cpu_migrations: u64,
+}
+
+impl CounterModel {
+    pub fn isolated() -> CounterModel {
+        CounterModel { intensity: 0.0, cat_ways: None }
+    }
+
+    pub fn interference(intensity: f64) -> CounterModel {
+        CounterModel { intensity, cat_ways: None }
+    }
+
+    pub fn with_ways(intensity: f64, ways: f64) -> CounterModel {
+        CounterModel { intensity, cat_ways: Some(ways) }
+    }
+
+    /// Fraction of the victim's hot working set (incl. page-table entries)
+    /// the interferer can evict: 1.0 with no CAT protection, dropping to
+    /// ~0 once ≥7 of 12 ways are dedicated (the Table 4 knee).
+    fn pollution(&self) -> f64 {
+        if self.intensity <= 0.0 {
+            return 0.0;
+        }
+        match self.cat_ways {
+            None => self.intensity.min(1.0),
+            Some(w) => {
+                let knee = 7.0;
+                if w >= knee {
+                    0.0
+                } else {
+                    self.intensity.min(1.0) * ((knee - w) / knee).powi(2) / 0.7347
+                    // normalized so 1 way ≈ the fitted 0.78 eviction level
+                }
+            }
+        }
+    }
+
+    pub fn counters(&self) -> Counters {
+        let i = self.intensity;
+        let pol = self.pollution();
+        // LLC miss: 7 % baseline → ~72 % fully polluted (Table 1, 24×);
+        // CAT ways claw it back (Table 4: 7 ways ⇒ 7.0 %).
+        let llc_miss_pct = 7.0 + 65.0 * pol;
+        // TLB misses rise mildly (1.6× at 24×): unmap churn invalidates
+        // entries; CAT does not partition the TLB (constant across ways).
+        let dtlb = 6.0 * (1.0 + 0.66 * i);
+        // Page walks: each miss costs more when page-table entries fall
+        // out of the LLC — the two-stage amplification. Protected ways
+        // keep PTEs resident even under full interference.
+        let walk = 383.0 * (1.0 + 2.8 * i * pol.max(0.045 * i));
+        // LLC stall cycles: 450 M baseline; data misses escalate sharply
+        // with pollution (11.2× at 24× with no CAT; Table 4: 3169 M at
+        // 1 way → 442 M at 12 ways).
+        let stall = 450.0 * (1.0 + 10.2 * pol);
+        // IPC collapses as stalls mount: 1.53 → 0.72 at 24× (no CAT);
+        // 1.16 → 1.55 across the CAT sweep.
+        let ipc = match self.cat_ways {
+            None => 1.53 / (1.0 + 1.15 * pol),
+            Some(_) => 1.53 / (1.0 + 0.42 * pol),
+        };
+        Counters {
+            ipc,
+            llc_miss_pct,
+            llc_stall_cycles_m: stall,
+            dtlb_load_misses_m: dtlb,
+            walk_active_m: walk,
+            cpu_migrations: (6.0 + 21.0 * i) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_interference_is_identity() {
+        let p = InterferenceProcess::none();
+        let mut rng = Rng::new(1);
+        for t in 0..100 {
+            assert_eq!(p.sample(t as f64, &mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn mean_multiplier_near_target() {
+        let mut rng = Rng::new(2);
+        let p = InterferenceProcess::new(10.0, &mut rng);
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|i| p.sample(i as f64 * 0.01, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / 10.0 - 1.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        let mut rng = Rng::new(3);
+        let p = InterferenceProcess::new(10.0, &mut rng);
+        let mut xs: Vec<f64> = (0..100_000).map(|i| p.sample(i as f64 * 0.001, &mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = xs[(xs.len() as f64 * 0.99) as usize];
+        let p50 = xs[xs.len() / 2];
+        assert!(p99 / p50 > 2.0, "p99/p50 {}", p99 / p50);
+    }
+
+    #[test]
+    fn counters_match_table1_shape() {
+        // Isolated ≈ Table 1 baseline column.
+        let base = CounterModel::isolated().counters();
+        assert!((base.ipc - 1.53).abs() < 0.05);
+        assert!((base.llc_miss_pct - 7.0).abs() < 0.5);
+        // Full interference ≈ the 24× column (no CAT).
+        let c = CounterModel::interference(1.0).counters();
+        assert!(c.ipc < 0.85, "ipc {}", c.ipc);
+        assert!(c.llc_miss_pct > 60.0, "llc {}", c.llc_miss_pct);
+        assert!(c.llc_stall_cycles_m > 4000.0, "stall {}", c.llc_stall_cycles_m);
+        assert!(c.walk_active_m > 1200.0, "walk {}", c.walk_active_m);
+        // Mechanism: TLB misses rise mildly (<2×) while stalls rise >10×.
+        assert!(c.dtlb_load_misses_m / base.dtlb_load_misses_m < 2.0);
+        assert!(c.llc_stall_cycles_m / base.llc_stall_cycles_m > 10.0);
+    }
+
+    #[test]
+    fn cat_sweep_matches_table4_shape() {
+        let one = CounterModel::with_ways(1.0, 1.0).counters();
+        let three = CounterModel::with_ways(1.0, 3.0).counters();
+        let seven = CounterModel::with_ways(1.0, 7.0).counters();
+        let twelve = CounterModel::with_ways(1.0, 12.0).counters();
+        // Table 4 row shapes: 57.6 / 26.6 / 7.0 / 6.8 % miss.
+        assert!(one.llc_miss_pct > 45.0, "1 way {}", one.llc_miss_pct);
+        assert!(three.llc_miss_pct < one.llc_miss_pct);
+        assert!(seven.llc_miss_pct < 10.0, "7 ways {}", seven.llc_miss_pct);
+        assert!(twelve.llc_miss_pct <= seven.llc_miss_pct + 1.0);
+        // IPC recovers: 1.16 → 1.55.
+        assert!(one.ipc < 1.25 && twelve.ipc > 1.45);
+        // dTLB count unaffected by CAT (Table 4 row ≈ constant).
+        assert!((one.dtlb_load_misses_m - twelve.dtlb_load_misses_m).abs() < 0.5);
+        // Stalls collapse 3169 → ~450.
+        assert!(one.llc_stall_cycles_m > 2500.0 && twelve.llc_stall_cycles_m < 600.0);
+    }
+}

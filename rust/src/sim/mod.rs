@@ -1,0 +1,11 @@
+//! Discrete-event simulation of the paper's H100 testbed (DESIGN.md §2's
+//! substitution for unavailable hardware): cost models, per-system host
+//! coupling, interference process + counter model, energy model, the DES
+//! core, and the full evaluation sweep.
+
+pub mod costmodel;
+pub mod des;
+pub mod energy;
+pub mod interference;
+pub mod sweep;
+pub mod systems;

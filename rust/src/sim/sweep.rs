@@ -1,0 +1,158 @@
+//! The full evaluation sweep (paper §6.1): 13 offered-load levels from 1
+//! to 32 req/s × 4 systems × 4 models × {isolated, interference}, 60 s
+//! per level — the dataset behind Tables 6/7, Figs 1/5/6/7/8 and every
+//! appendix table/figure. Points are independent, so the sweep shards
+//! across threads.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::sim::costmodel::{PaperModel, PAPER_MODELS};
+use crate::sim::des::{simulate, SimConfig};
+use crate::sim::systems::{System, ALL_SYSTEMS};
+use crate::util::stats::{geomean, saturation_index};
+use crate::workload::WindowMetrics;
+
+/// guidellm-style sweep levels (13 levels, 1..32 req/s).
+pub fn load_levels() -> Vec<f64> {
+    vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0, 16.0, 20.0, 24.0, 32.0]
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PointKey {
+    pub system: System,
+    pub model: &'static str,
+    pub interference: bool,
+    /// Load level index into `load_levels()`.
+    pub level: usize,
+}
+
+pub struct SweepResults {
+    pub levels: Vec<f64>,
+    pub points: HashMap<PointKey, WindowMetrics>,
+}
+
+impl SweepResults {
+    pub fn get(&self, system: System, model: &str, interference: bool, level: usize) -> &WindowMetrics {
+        let model = PAPER_MODELS.iter().find(|m| m.name == model).expect("model").name;
+        self.points
+            .get(&PointKey { system, model, interference, level })
+            .expect("sweep point")
+    }
+
+    /// Throughput curve (req/s completed) across levels.
+    pub fn tput_curve(&self, system: System, model: &str, interference: bool) -> Vec<f64> {
+        (0..self.levels.len())
+            .map(|l| self.get(system, model, interference, l).req_throughput)
+            .collect()
+    }
+
+    /// Latency curve for a metric ("ttft"|"tpot"|"itl") at a percentile.
+    pub fn latency_curve(
+        &self,
+        system: System,
+        model: &str,
+        interference: bool,
+        metric: &str,
+        pct: &str,
+    ) -> Vec<f64> {
+        (0..self.levels.len())
+            .map(|l| {
+                let wm = self.get(system, model, interference, l);
+                match metric {
+                    "ttft" => wm.ttft.get(pct),
+                    "tpot" => wm.tpot.get(pct),
+                    _ => wm.itl.get(pct),
+                }
+            })
+            .collect()
+    }
+
+    /// Blink's saturation level index for a model (isolated curve, two-
+    /// segment fit — §6.2's "operating range" λ ≤ levels[idx]). The fit is
+    /// capped at the last level still serving ≥85 % of the offered load,
+    /// so the "operating range" never includes deep-queueing levels (the
+    /// paper's ranges sit just below the knee as well).
+    pub fn blink_saturation_level(&self, model: &str) -> usize {
+        let curve = self.tput_curve(System::Blink, model, false);
+        let k = saturation_index(&self.levels, &curve);
+        let mut served = 0;
+        for (i, (l, g)) in self.levels.iter().zip(&curve).enumerate() {
+            if *g >= 0.85 * *l {
+                served = i;
+            }
+        }
+        k.min(served).max(1)
+    }
+
+    /// Geometric mean of a latency metric over Blink's operating range.
+    pub fn geomean_over_range(
+        &self,
+        system: System,
+        model: &str,
+        interference: bool,
+        metric: &str,
+        pct: &str,
+        sat_level: usize,
+    ) -> f64 {
+        let curve = self.latency_curve(system, model, interference, metric, pct);
+        geomean(&curve[..=sat_level])
+    }
+}
+
+/// Run the sweep. `models` defaults to all four paper models; sharded
+/// across `threads` OS threads (points are independent sims).
+pub fn run_sweep(models: &[PaperModel], window_s: f64, threads: usize) -> SweepResults {
+    let levels = load_levels();
+    let mut work: Vec<(PointKey, SimConfig)> = vec![];
+    for model in models {
+        for system in ALL_SYSTEMS {
+            for interference in [false, true] {
+                for (level, rate) in levels.iter().enumerate() {
+                    let mut cfg = SimConfig::new(system, *model, *rate, interference);
+                    cfg.window_s = window_s;
+                    work.push((PointKey { system, model: model.name, interference, level }, cfg));
+                }
+            }
+        }
+    }
+    let results: Mutex<HashMap<PointKey, WindowMetrics>> = Mutex::new(HashMap::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (key, cfg) = &work[i];
+                let wm = simulate(cfg);
+                results.lock().unwrap().insert(*key, wm);
+            });
+        }
+    });
+    SweepResults { levels, points: results.into_inner().unwrap() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::LLAMA3_8B;
+
+    #[test]
+    fn small_sweep_has_expected_structure() {
+        let r = run_sweep(&[LLAMA3_8B], 25.0, 4);
+        assert_eq!(r.points.len(), 4 * 2 * 13);
+        let sat = r.blink_saturation_level("llama3-8b");
+        assert!(sat >= 3, "blink should absorb >= 4 req/s, sat level {sat}");
+        // Blink throughput curve is monotone-ish up to saturation.
+        let curve = r.tput_curve(System::Blink, "llama3-8b", false);
+        assert!(curve[3] > curve[0]);
+        // Interference: baselines retain less than blink at mid-load.
+        let b_ret = r.get(System::Blink, "llama3-8b", true, 5).req_throughput
+            / r.get(System::Blink, "llama3-8b", false, 5).req_throughput.max(1e-9);
+        let v_ret = r.get(System::Vllm, "llama3-8b", true, 5).req_throughput
+            / r.get(System::Vllm, "llama3-8b", false, 5).req_throughput.max(1e-9);
+        assert!(b_ret > v_ret, "blink {b_ret} vllm {v_ret}");
+    }
+}

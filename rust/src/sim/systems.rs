@@ -1,0 +1,163 @@
+//! Per-system host-coupling models (paper §6.1 baselines).
+//!
+//! All four systems run the *same* FCFS continuous-batching policy in the
+//! DES (as in the paper, which disables chunked prefill / prefix caching
+//! for controlled comparison); they differ in where control lives:
+//!
+//! * per-decode-step host overhead (scheduler iteration, batch
+//!   reassembly, kernel dispatch) — zero-ish for Blink (GPU-resident scan
+//!   + device launch), milliseconds for host-driven stacks;
+//! * per-request admission cost (HTTP, tokenization, scheduler enqueue on
+//!   the host vs. DPU);
+//! * interference sensitivity: how much CPU contention inflates the two
+//!   costs above (Blink's costs live on DPU/GPU and do not inflate).
+//!
+//! Constants are calibrated against the paper's own measurements
+//! (Tables 6/7/B.1/B.2); see EXPERIMENTS.md for the per-table comparison.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum System {
+    Blink,
+    TrtLlm,
+    Vllm,
+    Sglang,
+}
+
+pub const ALL_SYSTEMS: [System; 4] = [System::Blink, System::TrtLlm, System::Vllm, System::Sglang];
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::Blink => "BLINK",
+            System::TrtLlm => "TRT-LLM",
+            System::Vllm => "vLLM",
+            System::Sglang => "SGLang",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<System> {
+        match s.to_ascii_lowercase().as_str() {
+            "blink" => Some(System::Blink),
+            "trt" | "trt-llm" | "trtllm" => Some(System::TrtLlm),
+            "vllm" => Some(System::Vllm),
+            "sglang" => Some(System::Sglang),
+            _ => None,
+        }
+    }
+
+    /// Host (or device) control overhead added to every decode iteration,
+    /// seconds, in isolation: a fixed dispatch cost plus a per-sequence
+    /// bookkeeping term (batch reassembly, block-table updates, sampler
+    /// state — O(batch) on the host for CPU-coupled stacks, parallel
+    /// across scheduler threads and therefore ~flat for Blink).
+    pub fn step_overhead_s(&self, batch: usize) -> f64 {
+        self.step_overhead_moe_s(batch, false)
+    }
+
+    /// MoE variant: host-coupled stacks pay a per-step expert-routing
+    /// orchestration tax (gather router outputs, marshal expert dispatch,
+    /// rebuild expert batches — §6.2: "CPU-mediated baselines still
+    /// interpose host-side scheduling on every decode step"). Blink's
+    /// device-side graph launch interprets router outputs on-GPU, so its
+    /// cost is unchanged. Multipliers calibrated to the paper's MoE
+    /// plateau retentions (TRT 3.61 / vLLM 2.91 / SGLang 2.62 vs 5.07).
+    pub fn step_overhead_moe_s(&self, batch: usize, moe: bool) -> f64 {
+        let moe_mult = if moe {
+            match self {
+                System::Blink => 1.0,
+                System::TrtLlm => 5.5,
+                System::Vllm => 6.0,
+                System::Sglang => 5.0,
+            }
+        } else {
+            1.0
+        };
+        let (base, per_seq) = match self {
+            // Ring scan (1–5 µs) + device FnF launch (2 µs) + amortized
+            // tail launch: all on-device, batch handled by parallel lanes.
+            System::Blink => (7e-6, 0.0),
+            // TRT-LLM's C++ runtime is the leanest host loop.
+            System::TrtLlm => (0.3e-3, 15e-6),
+            // vLLM v0.13 engine-core iteration (V1 overlap hides part).
+            System::Vllm => (0.6e-3, 45e-6),
+            // SGLang's Python scheduler w/ overlapped scheduling.
+            System::Sglang => (1.0e-3, 60e-6),
+        };
+        (base + per_seq * batch as f64) * moe_mult
+    }
+
+    /// Per-request admission latency (transport + tokenize + enqueue until
+    /// first schedulable), seconds, in isolation.
+    pub fn admission_s(&self) -> f64 {
+        match self {
+            // DPU tokenizer + RDMA write + one ring-scan interval.
+            System::Blink => 0.3e-3,
+            System::TrtLlm => 28e-3,
+            System::Vllm => 65e-3,
+            System::Sglang => 190e-3,
+        }
+    }
+
+    /// Mean multiplier interference applies to the two host costs above
+    /// (paper §6.3: TRT-LLM degrades hardest, Blink not at all). The
+    /// time-varying process around this mean lives in `interference.rs`.
+    pub fn interference_sensitivity(&self) -> f64 {
+        match self {
+            System::Blink => 1.0,
+            System::TrtLlm => 24.0,
+            System::Vllm => 10.0,
+            System::Sglang => 7.0,
+        }
+    }
+
+    /// Host CPU active fraction attributable to serving (energy model).
+    pub fn host_util(&self) -> f64 {
+        match self {
+            System::Blink => 0.02,
+            System::TrtLlm => 0.25,
+            System::Vllm => 0.40,
+            System::Sglang => 0.45,
+        }
+    }
+
+    /// Blink carries a BlueField-3 DPU (+~75 W, §6.4 accounting).
+    pub fn dpu_power_w(&self) -> f64 {
+        match self {
+            System::Blink => 75.0,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blink_is_orders_cheaper_per_step() {
+        for s in [System::TrtLlm, System::Vllm, System::Sglang] {
+            assert!(s.step_overhead_s(16) / System::Blink.step_overhead_s(16) > 50.0);
+        }
+    }
+
+    #[test]
+    fn host_overhead_scales_with_batch_except_blink() {
+        assert_eq!(System::Blink.step_overhead_s(64), System::Blink.step_overhead_s(1));
+        assert!(System::Vllm.step_overhead_s(64) > 2.0 * System::Vllm.step_overhead_s(1));
+    }
+
+    #[test]
+    fn blink_immune_to_interference() {
+        assert_eq!(System::Blink.interference_sensitivity(), 1.0);
+        for s in [System::TrtLlm, System::Vllm, System::Sglang] {
+            assert!(s.interference_sensitivity() > 1.0);
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in ALL_SYSTEMS {
+            assert_eq!(System::by_name(s.name()), Some(s));
+        }
+    }
+}

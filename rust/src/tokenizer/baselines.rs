@@ -1,0 +1,245 @@
+//! Baseline tokenizers for Fig 4 — same vocabulary, same greedy
+//! lowest-rank BPE, different data structures.
+//!
+//! The paper compares against HuggingFace's tokenizer (used by vLLM and
+//! SGLang) and llama.cpp's. Neither is available offline, so we build
+//! stand-ins that reproduce each design's *data-structure class* (the
+//! property Fig 4 actually measures — see DESIGN.md §2):
+//!
+//! * [`NaiveTokenizer`]: SipHash `std::collections::HashMap` for merges,
+//!   heap-allocated symbol nodes behind pointers, fresh buffers per call —
+//!   the allocation-and-indirection profile of a Python/Rust-binding
+//!   tokenizer.
+//! * [`HeapliteTokenizer`]: llama.cpp's shape — a bigram `BinaryHeap`
+//!   keyed by merge rank with lazy invalidation, std HashMap lookups.
+
+use super::{pretokenize, Piece, Tokenizer, Vocab};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// HF stand-in: pointer-chasing node list + SipHash map + per-call allocs.
+pub struct NaiveTokenizer {
+    merges: HashMap<(u32, u32), (u32, u32)>,
+}
+
+#[allow(clippy::vec_box)] // the boxing *is* the point: pointer-chasing baseline
+struct NaiveNode {
+    sym: u32,
+    alive: bool,
+}
+
+impl NaiveTokenizer {
+    pub fn new(vocab: &Vocab) -> NaiveTokenizer {
+        let merges = vocab
+            .merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b, n))| ((a, b), (n, rank as u32)))
+            .collect();
+        NaiveTokenizer { merges }
+    }
+
+    fn encode_word(&self, word: &[u8], attach_space: bool, out: &mut Vec<u32>) {
+        // Fresh heap allocations per word, nodes behind Box.
+        let mut nodes: Vec<Box<NaiveNode>> = Vec::new();
+        if attach_space {
+            nodes.push(Box::new(NaiveNode { sym: b' ' as u32, alive: true }));
+        }
+        for &b in word {
+            nodes.push(Box::new(NaiveNode { sym: b as u32, alive: true }));
+        }
+        loop {
+            let mut best: Option<(u32, usize, usize, u32)> = None; // rank, i, j, new
+            let live: Vec<usize> =
+                (0..nodes.len()).filter(|&i| nodes[i].alive).collect();
+            for w in live.windows(2) {
+                let (i, j) = (w[0], w[1]);
+                if let Some(&(new_id, rank)) = self.merges.get(&(nodes[i].sym, nodes[j].sym)) {
+                    if best.map_or(true, |(r, ..)| rank < r) {
+                        best = Some((rank, i, j, new_id));
+                    }
+                }
+            }
+            match best {
+                Some((_, i, j, new_id)) => {
+                    nodes[i].sym = new_id;
+                    nodes[j].alive = false;
+                }
+                None => break,
+            }
+        }
+        out.extend(nodes.iter().filter(|n| n.alive).map(|n| n.sym));
+    }
+}
+
+impl Tokenizer for NaiveTokenizer {
+    fn encode(&self, text: &str, out: &mut Vec<u32>) {
+        pretokenize(text.as_bytes(), |p| match p {
+            Piece::Ws(b) => out.push(b as u32),
+            Piece::Word(w, sp) => self.encode_word(w, sp, out),
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-hf"
+    }
+}
+
+/// llama.cpp stand-in: bigram priority queue with lazy invalidation.
+pub struct HeapliteTokenizer {
+    merges: HashMap<(u32, u32), (u32, u32)>,
+}
+
+#[derive(PartialEq, Eq)]
+struct Bigram {
+    rank: u32,
+    left: usize,
+    new_id: u32,
+    /// Snapshot of the pair for lazy invalidation after merges.
+    pair: (u32, u32),
+}
+
+impl Ord for Bigram {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap by (rank, position) via Reverse at push sites.
+        (self.rank, self.left).cmp(&(other.rank, other.left))
+    }
+}
+
+impl PartialOrd for Bigram {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl HeapliteTokenizer {
+    pub fn new(vocab: &Vocab) -> HeapliteTokenizer {
+        let merges = vocab
+            .merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b, n))| ((a, b), (n, rank as u32)))
+            .collect();
+        HeapliteTokenizer { merges }
+    }
+
+    fn encode_word(&self, word: &[u8], attach_space: bool, out: &mut Vec<u32>) {
+        let mut syms: Vec<u32> = Vec::with_capacity(word.len() + 1);
+        if attach_space {
+            syms.push(b' ' as u32);
+        }
+        syms.extend(word.iter().map(|&b| b as u32));
+        let n = syms.len();
+        if n == 0 {
+            return;
+        }
+        let mut next: Vec<i32> = (0..n).map(|i| if i + 1 < n { i as i32 + 1 } else { -1 }).collect();
+        let mut prev: Vec<i32> = (0..n).map(|i| i as i32 - 1).collect();
+        let mut heap: BinaryHeap<Reverse<Bigram>> = BinaryHeap::new();
+        let push = |heap: &mut BinaryHeap<Reverse<Bigram>>, syms: &[u32], i: usize, j: usize, merges: &HashMap<(u32, u32), (u32, u32)>| {
+            if let Some(&(new_id, rank)) = merges.get(&(syms[i], syms[j])) {
+                heap.push(Reverse(Bigram { rank, left: i, new_id, pair: (syms[i], syms[j]) }));
+            }
+        };
+        for i in 0..n.saturating_sub(1) {
+            push(&mut heap, &syms, i, i + 1, &self.merges);
+        }
+        while let Some(Reverse(bg)) = heap.pop() {
+            let i = bg.left;
+            let j = next[i];
+            // Lazy invalidation: stale if the pair changed under us.
+            if j < 0 || (syms[i], syms[j as usize]) != bg.pair {
+                continue;
+            }
+            let j = j as usize;
+            syms[i] = bg.new_id;
+            let jj = next[j];
+            next[i] = jj;
+            if jj >= 0 {
+                prev[jj as usize] = i as i32;
+            }
+            // Mark j dead by clearing its links.
+            next[j] = -2;
+            if prev[i] >= 0 {
+                push(&mut heap, &syms, prev[i] as usize, i, &self.merges);
+            }
+            if jj >= 0 {
+                push(&mut heap, &syms, i, jj as usize, &self.merges);
+            }
+        }
+        let mut i = 0i32;
+        while i >= 0 {
+            out.push(syms[i as usize]);
+            i = next[i as usize];
+        }
+    }
+}
+
+impl Tokenizer for HeapliteTokenizer {
+    fn encode(&self, text: &str, out: &mut Vec<u32>) {
+        pretokenize(text.as_bytes(), |p| match p {
+            Piece::Ws(b) => out.push(b as u32),
+            Piece::Word(w, sp) => self.encode_word(w, sp, out),
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "heaplite-llamacpp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::blink::BlinkTokenizer;
+    use super::super::tests::tiny_vocab;
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn all_three_agree_on_simple_text() {
+        let v = tiny_vocab();
+        let blink = BlinkTokenizer::new(&v);
+        let naive = NaiveTokenizer::new(&v);
+        let heap = HeapliteTokenizer::new(&v);
+        for text in ["the the", " the", "x y z", "", "the\n\nthe", "  double"] {
+            let (mut a, mut b, mut c) = (vec![], vec![], vec![]);
+            blink.encode(text, &mut a);
+            naive.encode(text, &mut b);
+            heap.encode(text, &mut c);
+            assert_eq!(a, b, "blink vs naive on {text:?}");
+            assert_eq!(a, c, "blink vs heaplite on {text:?}");
+        }
+    }
+
+    #[test]
+    fn prop_agreement_on_random_ascii() {
+        let v = tiny_vocab();
+        let blink = BlinkTokenizer::new(&v);
+        let naive = NaiveTokenizer::new(&v);
+        let heap = HeapliteTokenizer::new(&v);
+        run_prop("tokenizer-agreement", 0x70C1, 200, |rng| {
+            let len = rng.below(60) as usize;
+            let text: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(6);
+                    match c {
+                        0 => ' ',
+                        1 => 't',
+                        2 => 'h',
+                        3 => 'e',
+                        4 => '\n',
+                        _ => (b'a' + rng.below(26) as u8) as char,
+                    }
+                })
+                .collect();
+            let (mut a, mut b, mut c) = (vec![], vec![], vec![]);
+            blink.encode(&text, &mut a);
+            naive.encode(&text, &mut b);
+            heap.encode(&text, &mut c);
+            assert_eq!(a, b, "text {text:?}");
+            assert_eq!(a, c, "text {text:?}");
+            // And the roundtrip is lossless.
+            assert_eq!(super::super::decode(&v, &a), text);
+        });
+    }
+}

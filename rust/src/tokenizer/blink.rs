@@ -1,0 +1,361 @@
+//! Blink's tokenizer (paper §4.4 "Tokenizer"):
+//!
+//! * merge rules in a **64-byte-aligned flat hash table** packing four
+//!   key-value pairs per L1D cache line (open addressing, bucket-linear
+//!   probing) — one cache line per probe step instead of SipHash + bucket
+//!   pointer chasing;
+//! * **SWAR byte classification** for pre-tokenization, the portable
+//!   analogue of the BlueField A78 NEON path (classifies 8 bytes per
+//!   step with branch-free zero-byte tricks);
+//! * **pre-allocated thread-local buffers** for all per-request state —
+//!   zero heap allocation on the request path.
+
+use super::{pretokenize, Tokenizer, Vocab};
+use std::cell::RefCell;
+
+const EMPTY_KEY: u64 = u64::MAX;
+
+/// One cache line: 4 keys + 4 values = 64 bytes.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Bucket {
+    keys: [u64; 4],
+    vals: [u64; 4],
+}
+
+impl Bucket {
+    const fn empty() -> Bucket {
+        Bucket { keys: [EMPTY_KEY; 4], vals: [0; 4] }
+    }
+}
+
+/// Flat hash table over merge pairs: key = (left<<32)|right, value =
+/// (new_id<<32)|rank.
+pub struct FlatMergeTable {
+    buckets: Vec<Bucket>,
+    mask: usize,
+    pub entries: usize,
+}
+
+impl FlatMergeTable {
+    pub fn build(merges: &[(u32, u32, u32)]) -> FlatMergeTable {
+        // Load factor <= 0.5 over entries; buckets hold 4 entries each.
+        let min_buckets = (merges.len() * 2).div_ceil(4).max(4);
+        let nbuckets = min_buckets.next_power_of_two();
+        let mut t = FlatMergeTable {
+            buckets: vec![Bucket::empty(); nbuckets],
+            mask: nbuckets - 1,
+            entries: 0,
+        };
+        for (rank, &(a, b, n)) in merges.iter().enumerate() {
+            t.insert(pair_key(a, b), ((n as u64) << 32) | rank as u64);
+        }
+        t
+    }
+
+    #[inline]
+    fn hash(key: u64) -> u64 {
+        // splitmix-style finalizer — 2 multiplies, good avalanche.
+        let mut z = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z ^= z >> 29;
+        z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^ (z >> 32)
+    }
+
+    fn insert(&mut self, key: u64, val: u64) {
+        let mut b = (Self::hash(key) as usize) & self.mask;
+        loop {
+            let bucket = &mut self.buckets[b];
+            for i in 0..4 {
+                if bucket.keys[i] == EMPTY_KEY {
+                    bucket.keys[i] = key;
+                    bucket.vals[i] = val;
+                    self.entries += 1;
+                    return;
+                }
+            }
+            b = (b + 1) & self.mask;
+        }
+    }
+
+    /// Lookup (new_id, rank) for an adjacent pair. The hot path: one hash,
+    /// then whole-cache-line scans.
+    #[inline]
+    pub fn get(&self, left: u32, right: u32) -> Option<(u32, u32)> {
+        let key = pair_key(left, right);
+        let mut b = (Self::hash(key) as usize) & self.mask;
+        loop {
+            let bucket = &self.buckets[b];
+            for i in 0..4 {
+                let k = bucket.keys[i];
+                if k == key {
+                    let v = bucket.vals[i];
+                    return Some(((v >> 32) as u32, v as u32));
+                }
+                if k == EMPTY_KEY {
+                    return None;
+                }
+            }
+            b = (b + 1) & self.mask;
+        }
+    }
+
+    pub fn table_bytes(&self) -> usize {
+        self.buckets.len() * std::mem::size_of::<Bucket>()
+    }
+}
+
+#[inline]
+fn pair_key(a: u32, b: u32) -> u64 {
+    ((a as u64) << 32) | b as u64
+}
+
+// --- SWAR whitespace classification ---------------------------------------
+// Branch-free detection of {' ', '\t', '\n', '\r'} 8 bytes at a time: for
+// each candidate byte c, `x ^ splat(c)` has a zero byte exactly where the
+// input equals c. Zero bytes are detected with the *carry-free exact*
+// formulation `~(((v & 0x7f..) + 0x7f..) | v | 0x7f..)` — the cheaper
+// `(v - 0x01..) & ~v & 0x80..` variant has false positives above a true
+// zero byte (borrow propagation), which would corrupt `find_nonws`.
+// OR the four masks and scan with trailing_zeros.
+
+const LO: u64 = 0x0101_0101_0101_0101;
+const HI: u64 = 0x8080_8080_8080_8080;
+
+#[inline]
+fn zero_bytes(v: u64) -> u64 {
+    !(((v & !HI).wrapping_add(!HI)) | v | !HI) & HI
+}
+
+#[inline]
+fn ws_mask8(chunk: u64) -> u64 {
+    zero_bytes(chunk ^ (LO * b' ' as u64))
+        | zero_bytes(chunk ^ (LO * b'\t' as u64))
+        | zero_bytes(chunk ^ (LO * b'\n' as u64))
+        | zero_bytes(chunk ^ (LO * b'\r' as u64))
+}
+
+/// Index of the first whitespace byte at or after `i` (SWAR main loop).
+pub fn find_ws(text: &[u8], mut i: usize) -> usize {
+    while i + 8 <= text.len() {
+        let chunk = u64::from_le_bytes(text[i..i + 8].try_into().unwrap());
+        let m = ws_mask8(chunk);
+        if m != 0 {
+            return i + (m.trailing_zeros() / 8) as usize;
+        }
+        i += 8;
+    }
+    while i < text.len() && !super::is_ws(text[i]) {
+        i += 1;
+    }
+    i
+}
+
+/// Index of the first non-whitespace byte at or after `i`.
+pub fn find_nonws(text: &[u8], mut i: usize) -> usize {
+    while i + 8 <= text.len() {
+        let chunk = u64::from_le_bytes(text[i..i + 8].try_into().unwrap());
+        let m = !ws_mask8(chunk) & HI;
+        if m != 0 {
+            return i + (m.trailing_zeros() / 8) as usize;
+        }
+        i += 8;
+    }
+    while i < text.len() && super::is_ws(text[i]) {
+        i += 1;
+    }
+    i
+}
+
+// --- thread-local per-request state ----------------------------------------
+
+struct Scratch {
+    /// Symbol ids of the current word (with attached leading space).
+    syms: Vec<u32>,
+    /// Linked-list next/prev indices for in-place merging.
+    next: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch {
+        syms: Vec::with_capacity(4096),
+        next: Vec::with_capacity(4096),
+        prev: Vec::with_capacity(4096),
+    });
+}
+
+pub struct BlinkTokenizer {
+    table: FlatMergeTable,
+}
+
+impl BlinkTokenizer {
+    pub fn new(vocab: &Vocab) -> BlinkTokenizer {
+        BlinkTokenizer { table: FlatMergeTable::build(&vocab.merges) }
+    }
+
+    pub fn table(&self) -> &FlatMergeTable {
+        &self.table
+    }
+
+    /// Greedy lowest-rank BPE over one word, in the thread-local arena.
+    fn encode_word(&self, word: &[u8], attach_space: bool, out: &mut Vec<u32>) {
+        SCRATCH.with(|s| {
+            let s = &mut *s.borrow_mut();
+            s.syms.clear();
+            s.next.clear();
+            s.prev.clear();
+            if attach_space {
+                s.syms.push(b' ' as u32);
+            }
+            s.syms.extend(word.iter().map(|&b| b as u32));
+            let n = s.syms.len();
+            if n == 0 {
+                return;
+            }
+            for i in 0..n {
+                s.next.push(if i + 1 < n { i as i32 + 1 } else { -1 });
+                s.prev.push(i as i32 - 1);
+            }
+            loop {
+                // Scan the live list for the lowest-rank adjacent pair.
+                let mut best_rank = u32::MAX;
+                let mut best_i = -1i32;
+                let mut best_new = 0u32;
+                let mut i = 0i32;
+                while i >= 0 {
+                    let j = s.next[i as usize];
+                    if j < 0 {
+                        break;
+                    }
+                    if let Some((new_id, rank)) =
+                        self.table.get(s.syms[i as usize], s.syms[j as usize])
+                    {
+                        if rank < best_rank {
+                            best_rank = rank;
+                            best_i = i;
+                            best_new = new_id;
+                        }
+                    }
+                    i = j;
+                }
+                if best_i < 0 {
+                    break;
+                }
+                // Merge (best_i, next[best_i]) -> best_new in place.
+                let i = best_i as usize;
+                let j = s.next[i] as usize;
+                s.syms[i] = best_new;
+                let jj = s.next[j];
+                s.next[i] = jj;
+                if jj >= 0 {
+                    s.prev[jj as usize] = i as i32;
+                }
+            }
+            let mut i = 0i32;
+            while i >= 0 {
+                out.push(s.syms[i as usize]);
+                i = s.next[i as usize];
+            }
+        });
+    }
+}
+
+impl Tokenizer for BlinkTokenizer {
+    fn encode(&self, text: &str, out: &mut Vec<u32>) {
+        // SWAR-driven pre-tokenization loop (same segmentation contract as
+        // `super::pretokenize`, asserted by property tests).
+        let bytes = text.as_bytes();
+        let n = bytes.len();
+        let mut i = 0;
+        while i < n {
+            if super::is_ws(bytes[i]) {
+                let end = find_nonws(bytes, i);
+                if end < n && bytes[end - 1] == b' ' {
+                    for &b in &bytes[i..end - 1] {
+                        out.push(b as u32);
+                    }
+                    let wend = find_ws(bytes, end);
+                    self.encode_word(&bytes[end..wend], true, out);
+                    i = wend;
+                } else {
+                    for &b in &bytes[i..end] {
+                        out.push(b as u32);
+                    }
+                    i = end;
+                }
+            } else {
+                let wend = find_ws(bytes, i);
+                self.encode_word(&bytes[i..wend], false, out);
+                i = wend;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "blink"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::tiny_vocab;
+    use super::*;
+
+    #[test]
+    fn flat_table_finds_all_merges() {
+        let v = tiny_vocab();
+        let t = FlatMergeTable::build(&v.merges);
+        assert_eq!(t.get(b' ' as u32, b't' as u32), Some((256, 0)));
+        assert_eq!(t.get(256, b'h' as u32), Some((257, 1)));
+        assert_eq!(t.get(257, b'e' as u32), Some((258, 2)));
+        assert_eq!(t.get(1, 2), None);
+    }
+
+    #[test]
+    fn bucket_is_one_cache_line() {
+        assert_eq!(std::mem::size_of::<Bucket>(), 64);
+        assert_eq!(std::mem::align_of::<Bucket>(), 64);
+    }
+
+    #[test]
+    fn swar_finds_boundaries() {
+        let text = b"hello world\tand more__________padding";
+        assert_eq!(find_ws(text, 0), 5);
+        assert_eq!(find_nonws(text, 5), 6);
+        assert_eq!(find_ws(text, 6), 11);
+        assert_eq!(find_nonws(text, 11), 12);
+        // no whitespace until end
+        assert_eq!(find_ws(text, 21), text.len());
+    }
+
+    #[test]
+    fn swar_matches_scalar_on_all_bytes() {
+        for b in 0u8..=255 {
+            let arr = [b; 8];
+            let m = ws_mask8(u64::from_le_bytes(arr));
+            let expect = super::super::is_ws(b);
+            assert_eq!(m != 0, expect, "byte {b:#x}");
+        }
+    }
+
+    #[test]
+    fn encode_applies_merges_in_rank_order() {
+        let v = tiny_vocab();
+        let t = BlinkTokenizer::new(&v);
+        let mut out = vec![];
+        t.encode("x the", &mut out);
+        // "x" -> [120]; " the" -> [258]
+        assert_eq!(out, vec![b'x' as u32, 258]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = tiny_vocab();
+        let t = BlinkTokenizer::new(&v);
+        let text = "the theme  thesis\n\tthe end";
+        let mut out = vec![];
+        t.encode(text, &mut out);
+        assert_eq!(super::super::decode(&v, &out), text);
+    }
+}

@@ -1,0 +1,289 @@
+//! Tokenization on the DPU (paper §4.4, Fig 4).
+//!
+//! Three byte-level BPE implementations share one trained vocabulary
+//! (``artifacts/vocab.blink``, built by python/compile/tokenizer_train.py)
+//! and one greedy lowest-rank merge algorithm, differing only in data
+//! structures — the axis Fig 4 measures:
+//!
+//! * [`blink::BlinkTokenizer`] — the paper's design: merge rules in a
+//!   64-byte-aligned flat hash table packing four key-value pairs per L1D
+//!   cache line, SWAR byte classification for pre-tokenization (the NEON
+//!   analogue), and pre-allocated thread-local buffers so the request
+//!   path never heap-allocates.
+//! * [`baselines::NaiveTokenizer`] — the HuggingFace stand-in: SipHash
+//!   std HashMap, per-node heap allocation, fresh buffers per request.
+//! * [`baselines::HeapliteTokenizer`] — the llama.cpp stand-in: bigram
+//!   priority queue (BinaryHeap) + std HashMap merge lookup.
+//!
+//! All three must produce *identical* token streams (asserted by tests
+//! and property sweeps); only their latency differs.
+
+pub mod baselines;
+pub mod blink;
+
+use std::path::Path;
+
+/// The trained vocabulary: ids 0..256 are raw bytes; merged tokens follow.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    /// id -> byte string.
+    pub tokens: Vec<Vec<u8>>,
+    /// (left, right, new_id); index in this list is the merge rank.
+    pub merges: Vec<(u32, u32, u32)>,
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> Result<Vocab, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Vocab, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty vocab file")?;
+        if header != "blink-vocab v1" {
+            return Err(format!("bad vocab header: {header}"));
+        }
+        let mut vocab_size = 0usize;
+        let mut tokens: Vec<Vec<u8>> = Vec::new();
+        let mut merges = Vec::new();
+        for line in lines {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("vocab_size") => {
+                    vocab_size = it.next().and_then(|s| s.parse().ok()).ok_or("bad vocab_size")?;
+                    tokens = vec![Vec::new(); vocab_size];
+                }
+                Some("merges") => {}
+                Some("TOKEN") => {
+                    let id: usize =
+                        it.next().and_then(|s| s.parse().ok()).ok_or("bad TOKEN id")?;
+                    let hex = it.next().ok_or("bad TOKEN hex")?;
+                    if id >= tokens.len() {
+                        return Err(format!("TOKEN id {id} out of range"));
+                    }
+                    tokens[id] = hex_decode(hex)?;
+                }
+                Some("MERGE") => {
+                    let a: u32 = it.next().and_then(|s| s.parse().ok()).ok_or("bad MERGE")?;
+                    let b: u32 = it.next().and_then(|s| s.parse().ok()).ok_or("bad MERGE")?;
+                    let n: u32 = it.next().and_then(|s| s.parse().ok()).ok_or("bad MERGE")?;
+                    merges.push((a, b, n));
+                }
+                _ => {}
+            }
+        }
+        if tokens.len() != vocab_size || tokens.iter().take(256).any(|t| t.len() != 1) {
+            return Err("malformed vocab".into());
+        }
+        Ok(Vocab { tokens, merges })
+    }
+
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err("odd hex".into());
+    }
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).map_err(|e| e.to_string()))
+        .collect()
+}
+
+/// Common interface: encode appends ids to `out` (no allocation mandated);
+/// all implementations are `Sync` so DPU worker threads share one instance.
+pub trait Tokenizer: Send + Sync {
+    fn encode(&self, text: &str, out: &mut Vec<u32>);
+    fn name(&self) -> &'static str;
+}
+
+/// A pre-tokenized piece: a raw whitespace byte, or a word (with a flag
+/// for whether a single leading space attaches to it).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Piece<'a> {
+    Ws(u8),
+    Word(&'a [u8], bool),
+}
+
+/// Shared pre-tokenization used by all three implementations, guaranteeing
+/// identical segmentation: each word is encoded with its single preceding
+/// space attached (the trainer's leading-space convention); any *other*
+/// whitespace byte is emitted as a raw byte token, which makes
+/// encode→decode lossless for arbitrary text.
+pub fn pretokenize<'a>(text: &'a [u8], mut emit: impl FnMut(Piece<'a>)) {
+    let mut i = 0;
+    let n = text.len();
+    while i < n {
+        if is_ws(text[i]) {
+            // Find the end of the whitespace run (SWAR-accelerated in the
+            // blink path; scalar here keeps the shared code simple).
+            let start = i;
+            while i < n && is_ws(text[i]) {
+                i += 1;
+            }
+            let ws = &text[start..i];
+            if i < n && *ws.last().unwrap() == b' ' {
+                // Last space attaches to the following word.
+                for &b in &ws[..ws.len() - 1] {
+                    emit(Piece::Ws(b));
+                }
+                let wstart = i;
+                while i < n && !is_ws(text[i]) {
+                    i += 1;
+                }
+                emit(Piece::Word(&text[wstart..i], true));
+            } else {
+                for &b in ws {
+                    emit(Piece::Ws(b));
+                }
+            }
+        } else {
+            let wstart = i;
+            while i < n && !is_ws(text[i]) {
+                i += 1;
+            }
+            emit(Piece::Word(&text[wstart..i], false));
+        }
+    }
+}
+
+#[inline]
+pub fn is_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\n' | b'\r')
+}
+
+/// Streaming detokenizer: accumulates token bytes and flushes the maximal
+/// valid UTF-8 prefix (SSE streams strings; tokens may split code points).
+#[derive(Default)]
+pub struct Detokenizer {
+    buf: Vec<u8>,
+}
+
+impl Detokenizer {
+    pub fn new() -> Detokenizer {
+        Detokenizer { buf: Vec::with_capacity(64) }
+    }
+
+    pub fn push(&mut self, vocab: &Vocab, token: u32) -> String {
+        if let Some(bytes) = vocab.tokens.get(token as usize) {
+            self.buf.extend_from_slice(bytes);
+        }
+        self.flush_valid()
+    }
+
+    fn flush_valid(&mut self) -> String {
+        match std::str::from_utf8(&self.buf) {
+            Ok(s) => {
+                let out = s.to_string();
+                self.buf.clear();
+                out
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                let out = String::from_utf8_lossy(&self.buf[..valid]).into_owned();
+                self.buf.drain(..valid);
+                out
+            }
+        }
+    }
+
+    /// End of stream: emit whatever remains (lossy if truncated mid-char).
+    pub fn finish(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        out
+    }
+}
+
+/// Decode a whole token sequence (non-streaming helper).
+pub fn decode(vocab: &Vocab, tokens: &[u32]) -> String {
+    let mut bytes = Vec::new();
+    for &t in tokens {
+        if let Some(b) = vocab.tokens.get(t as usize) {
+            bytes.extend_from_slice(b);
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_vocab() -> Vocab {
+        // bytes 0..256 + merges building " th", " the"
+        let mut tokens: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = vec![];
+        // id 256 = " t"
+        tokens.push(vec![b' ', b't']);
+        merges.push((b' ' as u32, b't' as u32, 256));
+        // id 257 = " th"
+        tokens.push(vec![b' ', b't', b'h']);
+        merges.push((256, b'h' as u32, 257));
+        // id 258 = " the"
+        tokens.push(vec![b' ', b't', b'h', b'e']);
+        merges.push((257, b'e' as u32, 258));
+        Vocab { tokens, merges }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let v = tiny_vocab();
+        let mut text = String::from("blink-vocab v1\n");
+        text.push_str(&format!("vocab_size {}\n", v.tokens.len()));
+        text.push_str(&format!("merges {}\n", v.merges.len()));
+        for (i, t) in v.tokens.iter().enumerate() {
+            text.push_str(&format!(
+                "TOKEN {i} {}\n",
+                t.iter().map(|b| format!("{b:02x}")).collect::<String>()
+            ));
+        }
+        for (r, (a, b, n)) in v.merges.iter().enumerate() {
+            text.push_str(&format!("MERGE {a} {b} {n} {r}\n"));
+        }
+        let parsed = Vocab::parse(&text).unwrap();
+        assert_eq!(parsed.tokens, v.tokens);
+        assert_eq!(parsed.merges, v.merges);
+    }
+
+    #[test]
+    fn pretokenize_lossless_segmentation() {
+        let text = b"ab  cd\ne f";
+        let mut pieces: Vec<(Vec<u8>, bool)> = vec![];
+        let mut ws: Vec<u8> = vec![];
+        pretokenize(text, |p| match p {
+            Piece::Ws(b) => ws.push(b),
+            Piece::Word(w, sp) => pieces.push((w.to_vec(), sp)),
+        });
+        // "ab", one raw space, " cd" (space attached), newline raw, "e", " f"
+        assert_eq!(ws, vec![b' ', b'\n']);
+        assert_eq!(
+            pieces,
+            vec![
+                (b"ab".to_vec(), false),
+                (b"cd".to_vec(), true),
+                (b"e".to_vec(), false),
+                (b"f".to_vec(), true)
+            ]
+        );
+    }
+
+    #[test]
+    fn detokenizer_streams_utf8_safely() {
+        let v = tiny_vocab();
+        // 'é' = bytes 0xC3 0xA9: byte-level ids are the bytes themselves.
+        let mut d = Detokenizer::new();
+        assert_eq!(d.push(&v, 0xC3), "");
+        assert_eq!(d.push(&v, 0xA9), "é");
+        assert_eq!(d.finish(), "");
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Vocab::parse("nope v9\n").is_err());
+    }
+}

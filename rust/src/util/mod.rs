@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The offline registry only carries the `xla` crate's dependency closure,
+//! so JSON, CLI parsing, RNG, statistics and the property-testing harness
+//! are implemented here instead of pulling serde/clap/criterion/proptest
+//! (see DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

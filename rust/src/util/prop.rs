@@ -1,0 +1,55 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `run_prop(seed, cases, |rng| ...)` runs `cases` randomized cases; on
+//! panic it re-raises with the failing case index + per-case seed so the
+//! case is reproducible with `case_rng(seed, i)`. Shrinking is replaced by
+//! printing the deterministic case seed — adequate for the coordinator
+//! invariants we check (routing, batching, slot state machine, allocator).
+
+use crate::util::rng::Rng;
+
+pub fn case_rng(seed: u64, case: u64) -> Rng {
+    Rng::new(seed ^ case.wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+pub fn run_prop<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: u64, mut f: F) {
+    for i in 0..cases {
+        let mut rng = case_rng(seed, i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {i}/{cases} (reproduce with case_rng({seed}, {i}))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector helper.
+pub fn vec_u32(rng: &mut Rng, max_len: usize, max_val: u32) -> Vec<u32> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.below(max_val as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_run_and_are_deterministic() {
+        let mut seen = vec![];
+        run_prop("collect", 9, 5, |rng| seen.push(rng.next_u64()));
+        let mut seen2 = vec![];
+        run_prop("collect", 9, 5, |rng| seen2.push(rng.next_u64()));
+        assert_eq!(seen, seen2);
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        run_prop("fail", 1, 10, |rng| {
+            assert!(rng.f64() < 0.5, "intentional");
+        });
+    }
+}

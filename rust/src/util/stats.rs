@@ -1,0 +1,179 @@
+//! Latency/throughput statistics used across the evaluation: percentiles,
+//! geometric means (the paper aggregates pre-saturation curves by geomean,
+//! §6.2), and the two-segment saturation fit of Fig 7.
+
+/// Percentile by linear interpolation on a *sorted* slice. `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; ignores non-positive entries (latencies are positive).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let v: Vec<f64> = xs.iter().copied().filter(|x| *x > 0.0).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+/// Summary of a latency sample.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub count: usize,
+}
+
+impl LatencySummary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            mean: mean(&s),
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
+            p999: percentile_sorted(&s, 99.9),
+            count: s.len(),
+        }
+    }
+
+    pub fn get(&self, which: &str) -> f64 {
+        match which {
+            "mean" => self.mean,
+            "p50" => self.p50,
+            "p95" => self.p95,
+            "p99" => self.p99,
+            "p999" => self.p999,
+            _ => f64::NAN,
+        }
+    }
+}
+
+/// Saturation-point detection via the paper's two-segment fit (§6.2):
+/// throughput grows ~linearly with offered load then plateaus. Returns the
+/// index of the last offered-load level in the linear (pre-saturation)
+/// regime. `loads` and `tputs` are parallel, sorted by load.
+pub fn saturation_index(loads: &[f64], tputs: &[f64]) -> usize {
+    assert_eq!(loads.len(), tputs.len());
+    let n = loads.len();
+    if n < 3 {
+        return n.saturating_sub(1);
+    }
+    // Try every breakpoint k: segment A = linear through origin fit on
+    // [0..=k], segment B = constant (plateau) on [k..n]. Pick min SSE.
+    let mut best_k = n - 1;
+    let mut best_sse = f64::INFINITY;
+    for k in 1..n - 1 {
+        // slope via least squares through origin on the first segment
+        let (mut num, mut den) = (0.0, 0.0);
+        for i in 0..=k {
+            num += loads[i] * tputs[i];
+            den += loads[i] * loads[i];
+        }
+        let slope = if den > 0.0 { num / den } else { 0.0 };
+        let plateau = mean(&tputs[k..]);
+        let mut sse = 0.0;
+        for i in 0..=k {
+            let e = tputs[i] - slope * loads[i];
+            sse += e * e;
+        }
+        for i in k..n {
+            let e = tputs[i] - plateau;
+            sse += e * e;
+        }
+        if sse < best_sse {
+            best_sse = sse;
+            best_k = k;
+        }
+    }
+    best_k
+}
+
+/// Highest offered load with goodput >= retention * offered (Fig C.1's
+/// "serviceable load", retention = 0.95).
+pub fn serviceable_load(loads: &[f64], goodputs: &[f64], retention: f64) -> f64 {
+    let mut best = 0.0;
+    for (l, g) in loads.iter().zip(goodputs) {
+        if *g >= retention * *l && *l > best {
+            best = *l;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile_sorted(&[5.0], 99.0), 5.0);
+    }
+
+    #[test]
+    fn geomean_matches_hand() {
+        let g = geomean(&[1.0, 100.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_ignores_nonpositive() {
+        let g = geomean(&[0.0, -1.0, 4.0, 9.0]);
+        assert!((g - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = LatencySummary::from_samples(&xs);
+        assert!(s.p50 < s.p95 && s.p95 < s.p99 && s.p99 < s.p999);
+        assert_eq!(s.count, 1000);
+    }
+
+    #[test]
+    fn saturation_detects_knee() {
+        // linear to 8, plateau after
+        let loads: Vec<f64> = (1..=13).map(|i| i as f64).collect();
+        let tputs: Vec<f64> =
+            loads.iter().map(|l| if *l <= 8.0 { *l } else { 8.0 }).collect();
+        let k = saturation_index(&loads, &tputs);
+        assert!((7..=8).contains(&k), "k={k}");
+    }
+
+    #[test]
+    fn serviceable_load_threshold() {
+        let loads = [1.0, 2.0, 4.0, 8.0];
+        let good = [1.0, 2.0, 3.9, 5.0];
+        let s = serviceable_load(&loads, &good, 0.95);
+        assert_eq!(s, 4.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Wall-clock helpers + the hand-rolled bench harness used by
+//! `rust/benches/*` (criterion is unavailable offline). The harness does
+//! warmup, then timed iterations, and reports mean/p50/p99 per iteration.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic microseconds since an arbitrary epoch (process start).
+pub fn now_us() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_micros() as u64
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}   min {:>12}",
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until
+/// `budget` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let min_iters = 10;
+    while samples.len() < min_iters || start.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        iters: samples.len(),
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_ns: crate::util::stats::percentile_sorted(&samples, 50.0),
+        p99_ns: crate::util::stats::percentile_sorted(&samples, 99.0),
+        min_ns: samples[0],
+    };
+    res.report(name);
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_us_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let r = bench("noop", 2, Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+    }
+}

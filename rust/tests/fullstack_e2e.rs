@@ -1,0 +1,107 @@
+//! Whole-system integration: DPU frontend -> RDMA -> ring buffer ->
+//! persistent scheduler -> executor -> token reader -> SSE-ready events,
+//! plus the HTTP/OpenAI surface. Requires `make artifacts`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use blink::http::HttpServer;
+use blink::server::{BlinkServer, ServerConfig};
+
+fn server_or_skip() -> Option<BlinkServer> {
+    if !blink::runtime::artifacts_dir().join("blink-tiny/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(BlinkServer::start(ServerConfig::default()).expect("server start"))
+}
+
+#[test]
+fn full_stack_generate_and_stream() {
+    let Some(server) = server_or_skip() else { return };
+
+    // Several concurrent requests through the DPU plane.
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            server
+                .submit_text(
+                    &format!("the quick brown fox {i} jumps over the lazy dog"),
+                    12,
+                )
+                .expect("submit")
+        })
+        .collect();
+    for h in handles {
+        let slot = h.slot;
+        let toks = h.collect().expect("generation");
+        assert!(!toks.is_empty() && toks.len() <= 12, "slot {slot}: {} tokens", toks.len());
+        assert!(toks.iter().all(|&t| t < server.manifest.vocab_size as u32));
+    }
+
+    // RDMA engine really carried the traffic.
+    let (ops, bytes) = server.rdma.stats();
+    assert!(ops > 8, "rdma ops {ops}");
+    assert!(bytes > 0);
+    server.shutdown();
+}
+
+#[test]
+fn http_api_completion_and_sse() {
+    let Some(server) = server_or_skip() else { return };
+    let http = HttpServer::serve(
+        "127.0.0.1:0",
+        server.frontend.clone(),
+        server.scheduler.stats.clone(),
+    )
+    .expect("http bind");
+    let addr = http.addr;
+
+    // Non-streaming completion.
+    let body = r#"{"prompt": "hello world from the ring buffer", "max_tokens": 8}"#;
+    let resp = http_post(addr, "/v1/completions", body);
+    assert!(resp.starts_with("HTTP/1.1 200"), "resp: {resp}");
+    assert!(resp.contains("text_completion"), "resp: {resp}");
+    assert!(resp.contains("completion_tokens"), "resp: {resp}");
+
+    // Streaming (SSE) completion.
+    let body = r#"{"prompt": "stream me", "max_tokens": 5, "stream": true}"#;
+    let resp = http_post(addr, "/v1/completions", body);
+    assert!(resp.contains("text/event-stream"), "resp: {resp}");
+    assert!(resp.contains("data: "), "resp: {resp}");
+    assert!(resp.trim_end().ends_with("data: [DONE]"), "resp: {resp}");
+
+    // Health + metrics.
+    let h = http_get(addr, "/health");
+    assert!(h.contains("\"ok\""));
+    let m = http_get(addr, "/metrics");
+    assert!(m.contains("decode_steps="), "metrics: {m}");
+
+    // Bad request handling.
+    let bad = http_post(addr, "/v1/completions", "{not json");
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+
+    drop(http);
+    server.shutdown();
+}
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}

@@ -1,0 +1,68 @@
+//! Candidate-selection cost of the four admission policies at paper ring
+//! scale (4096 slots): scan → snapshot → policy order, the per-iteration
+//! work the staged pipeline adds over a raw FCFS scan. No artifacts
+//! needed.
+
+use blink::gpu::policy::{
+    AdmissionPolicy, Candidate, Fcfs, PriorityAged, ShortestPromptFirst, SloAware,
+};
+use blink::ringbuf::{RingBuffer, RingConfig, SubmitMeta};
+use blink::util::rng::Rng;
+use blink::util::timer::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let rb = RingBuffer::new(RingConfig::default()); // 4096 slots
+
+    // Live-traffic pattern: ~10% of the ring pending, mixed classes.
+    let mut rng = Rng::new(0xBE7C);
+    for i in (0..4096).step_by(10) {
+        rb.claim_for_write(i);
+        rb.write_prompt(i, &[1]);
+        rb.submit_with_meta(
+            i,
+            &SubmitMeta {
+                request_id: i as u64,
+                prompt_len: 1 + rng.below(512) as u32,
+                max_new: 16,
+                seed: 0,
+                priority: rng.below(8) as u32,
+                ttft_budget_us: if rng.below(2) == 0 { 0 } else { 1_000 + rng.below(1 << 20) },
+            },
+        );
+    }
+    let pending = rb.scan_pending(256);
+    println!("pending slots: {}", pending.len());
+
+    bench("policy/scan+snapshot (4096 slots)", 100, budget, || {
+        let pending = rb.scan_pending(256);
+        std::hint::black_box(Candidate::collect(&rb, &pending));
+    });
+
+    let base = Candidate::collect(&rb, &pending);
+    let now = blink::util::timer::now_us();
+    let policies: [(&str, Box<dyn AdmissionPolicy>); 4] = [
+        ("fcfs", Box::new(Fcfs)),
+        ("priority-aged", Box::new(PriorityAged::default())),
+        ("sjf", Box::new(ShortestPromptFirst)),
+        ("slo", Box::new(SloAware::default())),
+    ];
+    for (name, policy) in &policies {
+        bench(&format!("policy/order {name} ({} cands)", base.len()), 100, budget, || {
+            let mut cands = base.clone();
+            policy.order(&mut cands, now);
+            std::hint::black_box(&cands);
+        });
+    }
+
+    // End-to-end selection: scan + snapshot + order, per policy.
+    for (name, policy) in &policies {
+        bench(&format!("policy/scan+order {name} (4096 slots)"), 100, budget, || {
+            let pending = rb.scan_pending(256);
+            let mut cands = Candidate::collect(&rb, &pending);
+            policy.order(&mut cands, now);
+            std::hint::black_box(&cands);
+        });
+    }
+}

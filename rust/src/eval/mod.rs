@@ -13,10 +13,11 @@ pub mod live;
 use std::io::Write;
 use std::path::Path;
 
-use crate::sim::costmodel::{PaperModel, PAPER_MODELS};
+use crate::gpu::policy::PolicyKind;
+use crate::sim::costmodel::{PaperModel, LLAMA3_8B, PAPER_MODELS};
 use crate::sim::des::{simulate, SimConfig};
 use crate::sim::interference::CounterModel;
-use crate::sim::sweep::{run_sweep, SweepResults};
+use crate::sim::sweep::{run_policy_sweep, run_sweep, SweepResults};
 use crate::sim::systems::{System, ALL_SYSTEMS};
 use crate::util::stats::serviceable_load;
 
@@ -478,6 +479,120 @@ pub fn fig_e1(ctx: &EvalCtx) {
         }
     }
     ctx.write_csv("figE1.csv", &csv);
+}
+
+// ---------------------------------------------------------------------------
+// Policy comparison — per-priority-class P99 TTFT across admission
+// policies under the mixed interactive/batch load (not a paper figure:
+// the scheduling-dimension extension enabled by the staged pipeline).
+// ---------------------------------------------------------------------------
+
+pub fn policy_comparison(
+    out: Option<&Path>,
+    window_s: f64,
+    threads: usize,
+    only: Option<PolicyKind>,
+) {
+    eprintln!("[eval] running policy sweep ({} s windows, {} threads) ...", window_s, threads);
+    let t = std::time::Instant::now();
+    let r = run_policy_sweep(LLAMA3_8B, window_s, threads, only);
+    eprintln!("[eval] policy sweep done in {:.1}s", t.elapsed().as_secs_f64());
+
+    // Report against the mix the sweep actually simulated.
+    let total_weight: f64 = r.mix.classes.iter().map(|c| c.weight).sum();
+    let mix_desc: Vec<String> = r
+        .mix
+        .classes
+        .iter()
+        .map(|c| {
+            format!(
+                "{:.0}% {} (prio {}{})",
+                100.0 * c.weight / total_weight,
+                c.name,
+                c.priority,
+                if c.ttft_budget_ms > 0.0 {
+                    format!(", {:.0} ms TTFT SLO", c.ttft_budget_ms)
+                } else {
+                    String::new()
+                }
+            )
+        })
+        .collect();
+    println!("\n== Policy comparison: {} on Blink, {} ==", r.model.name, mix_desc.join(" + "));
+    let inter_prio =
+        r.mix.classes.iter().map(|c| c.priority).max().unwrap_or(0);
+    let batch_prio =
+        r.mix.classes.iter().map(|c| c.priority).min().unwrap_or(0);
+
+    println!(
+        "{:<14} {:>7} {:>16} {:>16} {:>10} {:>10}",
+        "policy", "load", "inter P99 TTFT", "batch P99 TTFT", "inter SLO", "completed"
+    );
+    let mut csv = String::from(
+        "policy,load_rps,interactive_p99_ttft_ms,batch_p99_ttft_ms,interactive_slo_attainment,completed\n",
+    );
+    for &p in &r.policies {
+        for (level, rate) in r.levels.iter().enumerate() {
+            let wm = r.get(p, level);
+            let inter = wm.class(inter_prio);
+            let batch = wm.class(batch_prio);
+            let it = inter.map(|c| c.ttft.p99).unwrap_or(f64::NAN);
+            let bt = batch.map(|c| c.ttft.p99).unwrap_or(f64::NAN);
+            let slo = inter.map(|c| c.slo_attainment).unwrap_or(f64::NAN);
+            println!(
+                "{:<14} {:>7} {:>13.0} ms {:>13.0} ms {:>9.0}% {:>10}",
+                p.name(),
+                rate,
+                it,
+                bt,
+                slo * 100.0,
+                wm.completed
+            );
+            csv.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.3},{}\n",
+                p.name(),
+                rate,
+                it,
+                bt,
+                slo,
+                wm.completed
+            ));
+        }
+    }
+
+    // The headline: at the saturating end of the sweep, FCFS starves the
+    // interactive class while the class-aware policies hold its P99 TTFT.
+    if only.is_none() {
+        let sat = r.levels.len() - 1;
+        let p99 = |p: PolicyKind| {
+            r.get(p, sat).class(inter_prio).map(|c| c.ttft.p99).unwrap_or(f64::INFINITY)
+        };
+        let fcfs = p99(PolicyKind::Fcfs);
+        let aged = p99(PolicyKind::PriorityAged);
+        let slo = p99(PolicyKind::SloAware);
+        println!(
+            "\nat {} req/s (saturating): interactive P99 TTFT — fcfs {:.0} ms, \
+             priority-aged {:.0} ms ({:.1}x better), slo {:.0} ms ({:.1}x better)",
+            r.levels[sat],
+            fcfs,
+            aged,
+            fcfs / aged.max(1e-9),
+            slo,
+            fcfs / slo.max(1e-9),
+        );
+    }
+
+    if let Some(dir) = out {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("[eval] cannot create {}: {e}", dir.display());
+            return;
+        }
+        let path = dir.join("policy_comparison.csv");
+        match std::fs::write(&path, csv) {
+            Ok(()) => eprintln!("[eval] wrote {}", path.display()),
+            Err(e) => eprintln!("[eval] failed to write {}: {e}", path.display()),
+        }
+    }
 }
 
 fn f0(x: f64) -> String {

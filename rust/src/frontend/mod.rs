@@ -36,6 +36,24 @@ pub struct FrontendConfig {
     pub reader: ReaderConfig,
 }
 
+/// Request class carried from the HTTP body to the scheduler's admission
+/// policy: a base priority (higher = more important) and an optional
+/// TTFT budget. The default — priority 0, no budget — reproduces the
+/// paper's single-class FCFS behavior exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestClass {
+    /// Higher = more important; 0 = batch/default.
+    pub priority: u32,
+    /// Relative TTFT budget in µs; 0 = no deadline.
+    pub ttft_budget_us: u64,
+}
+
+impl RequestClass {
+    pub fn interactive(ttft_budget_us: u64) -> RequestClass {
+        RequestClass { priority: 4, ttft_budget_us }
+    }
+}
+
 /// A submitted request: stream of token events + ids for bookkeeping.
 pub struct RequestHandle {
     pub request_id: u64,
@@ -111,15 +129,37 @@ impl DpuFrontend {
         }
     }
 
-    /// Tokenize on the DPU and submit (the paper's step ②③④⑤).
+    /// Tokenize on the DPU and submit (the paper's step ②③④⑤),
+    /// default (batch) request class.
     pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, String> {
-        let mut toks = Vec::with_capacity(text.len() / 3 + 4);
-        self.tokenizer.encode(text, &mut toks);
-        self.submit_tokens(&toks, max_new)
+        self.submit_text_class(text, max_new, RequestClass::default())
     }
 
-    /// Submit pre-tokenized input (workload generators / benches).
+    /// Tokenize and submit with an explicit request class.
+    pub fn submit_text_class(
+        &self,
+        text: &str,
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, String> {
+        let mut toks = Vec::with_capacity(text.len() / 3 + 4);
+        self.tokenizer.encode(text, &mut toks);
+        self.submit_tokens_class(&toks, max_new, class)
+    }
+
+    /// Submit pre-tokenized input (workload generators / benches),
+    /// default (batch) request class.
     pub fn submit_tokens(&self, tokens: &[u32], max_new: u32) -> Result<RequestHandle, String> {
+        self.submit_tokens_class(tokens, max_new, RequestClass::default())
+    }
+
+    /// Submit pre-tokenized input with an explicit request class.
+    pub fn submit_tokens_class(
+        &self,
+        tokens: &[u32],
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, String> {
         if tokens.is_empty() {
             return Err("empty prompt".into());
         }
@@ -178,6 +218,8 @@ impl DpuFrontend {
             prompt_len: tokens.len() as u32,
             max_new,
             seed,
+            priority: class.priority,
+            ttft_budget_us: class.ttft_budget_us,
         });
         qp.wait(wr);
 

@@ -1,0 +1,91 @@
+//! Launch + completion: the last two pipeline stages. [`Launcher`] wraps
+//! the executor doorbell with placement-appropriate cost accounting (the
+//! fire-and-forget launch-window protocol for GPU-resident placement,
+//! host-launch latency for the CPU-resident baseline); [`Completions`]
+//! wraps the polled completion buffer with epoch bookkeeping.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::devsim::{CompletionBuffer, LaunchLatencies, LaunchWindow};
+use crate::gpu::executor::{Executor, LaunchCmd};
+use crate::gpu::stats::SchedulerStats;
+
+pub struct Launcher {
+    executor: Executor,
+    window: LaunchWindow,
+    gpu_resident: bool,
+    apply_delays: bool,
+    stats: Arc<SchedulerStats>,
+}
+
+impl Launcher {
+    pub fn new(
+        executor: Executor,
+        gpu_resident: bool,
+        apply_delays: bool,
+        stats: Arc<SchedulerStats>,
+    ) -> Launcher {
+        Launcher {
+            executor,
+            window: LaunchWindow::new(LaunchLatencies::default(), false),
+            gpu_resident,
+            apply_delays,
+            stats,
+        }
+    }
+
+    /// Remaining fire-and-forget launches before a tail relaunch is due.
+    pub fn headroom(&self) -> u32 {
+        self.window.headroom()
+    }
+
+    /// Replenish the launch window (the tail-relaunch half of the
+    /// fire-and-forget protocol).
+    pub fn tail_relaunch(&mut self) {
+        self.window.tail_relaunch();
+    }
+
+    /// Launch a graph with placement-appropriate cost accounting.
+    pub fn launch(&mut self, cmd: LaunchCmd) {
+        if self.gpu_resident {
+            if self.window.fnf_launch().is_err() {
+                self.window.tail_relaunch();
+                self.window.fnf_launch().expect("fresh window");
+            }
+            if self.apply_delays {
+                crate::devsim::spin_us(LaunchLatencies::default().fnf_us);
+            }
+            self.stats.fnf_launches.store(self.window.fnf_launches, Ordering::Relaxed);
+            self.stats.tail_relaunches.store(self.window.tail_relaunches, Ordering::Relaxed);
+        } else if self.apply_delays {
+            // Host-side launch: 11–17 µs (paper §4.2).
+            crate::devsim::spin_us(LaunchLatencies::default().host_us);
+        }
+        self.executor.launch(cmd);
+    }
+}
+
+/// Completion polling with epoch tracking (one consumer: the scheduler).
+pub struct Completions {
+    buffer: Arc<CompletionBuffer>,
+    epoch: u64,
+}
+
+impl Completions {
+    pub fn new(buffer: Arc<CompletionBuffer>) -> Completions {
+        Completions { buffer, epoch: 0 }
+    }
+
+    /// The buffer handle to pass inside each `LaunchCmd`.
+    pub fn buffer(&self) -> Arc<CompletionBuffer> {
+        self.buffer.clone()
+    }
+
+    /// Block until the next epoch's `n` tokens arrive (None = failed).
+    pub fn poll(&mut self, n: usize) -> Option<Vec<u32>> {
+        let res = self.buffer.poll_wait(self.epoch, n);
+        self.epoch = self.buffer.epoch();
+        res
+    }
+}

@@ -23,9 +23,13 @@
 //! orchestrator.
 
 pub mod executor;
+pub mod launcher;
+pub mod planner;
+pub mod policy;
 pub mod scheduler;
 pub mod stats;
 
 pub use executor::{Executor, LaunchCmd};
+pub use policy::{AdmissionPolicy, Candidate, PolicyKind};
 pub use scheduler::{Placement, Scheduler, SchedulerConfig};
 pub use stats::SchedulerStats;

@@ -1,0 +1,196 @@
+//! Batch planning: the pipeline stage between policy-ordered admission
+//! and the launcher. Turns admitted sequences into prefill groups that
+//! fit the AOT graph grid, and live decode lanes into decode launch
+//! inputs — the pure data-marshalling logic that used to be inlined in
+//! `SchedulerCore::admit_and_prefill` / `decode_step`. Pure functions of
+//! their inputs: no ring, no executor, no clock — which is what makes
+//! this stage unit-testable without artifacts.
+
+use crate::kvcache::SeqCache;
+
+/// One decode lane: a request that finished prefill and is generating.
+pub struct Lane {
+    pub slot: usize,
+    pub cache: SeqCache,
+    pub generated: u32,
+    pub max_new: u32,
+    pub last_token: i32,
+}
+
+/// One admitted sequence awaiting prefill.
+pub struct PrefillSeq {
+    pub slot: usize,
+    pub cache: SeqCache,
+    pub prompt: Vec<i32>,
+    pub max_new: u32,
+    /// Prompt length padded up to the graph grid.
+    pub padded: usize,
+}
+
+/// A group of same-padded-length sequences forming one prefill launch.
+pub struct PrefillGroup {
+    pub padded: usize,
+    pub seqs: Vec<PrefillSeq>,
+}
+
+/// Device-shaped launch inputs (what `LaunchCmd` carries).
+pub struct LaunchInputs {
+    pub block_tables: Vec<i32>,
+    pub seq_lens: Vec<i32>,
+    pub tokens: Vec<i32>,
+}
+
+pub struct BatchPlanner {
+    /// Widest prefill graph in the grid.
+    pub max_prefill_batch: usize,
+    /// Manifest `max_blocks_per_seq` (block-table row width).
+    pub max_blocks_per_seq: usize,
+}
+
+impl BatchPlanner {
+    pub fn new(max_prefill_batch: usize, max_blocks_per_seq: usize) -> BatchPlanner {
+        BatchPlanner { max_prefill_batch, max_blocks_per_seq }
+    }
+
+    /// Group admitted sequences by padded length, chunked to the prefill
+    /// batch grid. Admission order is preserved within each group.
+    pub fn group_prefills(&self, mut admitted: Vec<PrefillSeq>) -> Vec<PrefillGroup> {
+        admitted.sort_by_key(|a| a.padded);
+        let mut groups = Vec::new();
+        let mut i = 0;
+        while i < admitted.len() {
+            let pad = admitted[i].padded;
+            let mut j = i + 1;
+            while j < admitted.len() && admitted[j].padded == pad && j - i < self.max_prefill_batch
+            {
+                j += 1;
+            }
+            let seqs: Vec<PrefillSeq> = admitted.drain(i..j).collect();
+            groups.push(PrefillGroup { padded: pad, seqs });
+            // drain() shifts the tail down; keep i in place.
+        }
+        groups
+    }
+
+    /// Marshal one prefill group for a `(grid_batch, grid_seq)` graph.
+    /// Ghost lanes (grid wider than the group) replicate lane 0 —
+    /// identical writes are benign, outputs ignored.
+    pub fn prefill_inputs(
+        &self,
+        group: &PrefillGroup,
+        grid_batch: usize,
+        grid_seq: usize,
+    ) -> LaunchInputs {
+        let mbs = self.max_blocks_per_seq;
+        let b_actual = group.seqs.len();
+        debug_assert!(b_actual > 0 && b_actual <= grid_batch);
+        let mut block_tables = Vec::with_capacity(grid_batch * mbs);
+        let mut seq_lens = Vec::with_capacity(grid_batch);
+        let mut tokens = Vec::with_capacity(grid_batch * grid_seq);
+        for s in &group.seqs {
+            block_tables.extend(s.cache.table_row(mbs));
+            seq_lens.push(s.prompt.len() as i32);
+            tokens.extend(&s.prompt);
+            tokens.extend(std::iter::repeat(0).take(grid_seq - s.prompt.len()));
+        }
+        for _ in b_actual..grid_batch {
+            block_tables.extend_from_slice(&group.seqs[0].cache.table_row(mbs));
+            seq_lens.push(group.seqs[0].prompt.len() as i32);
+            let row0: Vec<i32> = tokens[..grid_seq].to_vec();
+            tokens.extend(row0);
+        }
+        LaunchInputs { block_tables, seq_lens, tokens }
+    }
+
+    /// Marshal the live decode lanes for a `grid_batch`-wide decode
+    /// graph, ghost lanes replicating lane 0.
+    pub fn decode_inputs(&self, lanes: &[Lane], grid_batch: usize) -> LaunchInputs {
+        let mbs = self.max_blocks_per_seq;
+        debug_assert!(!lanes.is_empty() && lanes.len() <= grid_batch);
+        let mut block_tables = Vec::with_capacity(grid_batch * mbs);
+        let mut seq_lens = Vec::with_capacity(grid_batch);
+        let mut tokens = Vec::with_capacity(grid_batch);
+        for l in lanes {
+            block_tables.extend(l.cache.table_row(mbs));
+            seq_lens.push(l.cache.cached_len as i32);
+            tokens.push(l.last_token);
+        }
+        for _ in lanes.len()..grid_batch {
+            block_tables.extend(lanes[0].cache.table_row(mbs));
+            seq_lens.push(lanes[0].cache.cached_len as i32);
+            tokens.push(lanes[0].last_token);
+        }
+        LaunchInputs { block_tables, seq_lens, tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(slot: usize, prompt_len: usize, padded: usize) -> PrefillSeq {
+        PrefillSeq {
+            slot,
+            cache: SeqCache { blocks: vec![1, 2], cached_len: 0 },
+            prompt: (0..prompt_len as i32).collect(),
+            max_new: 4,
+            padded,
+        }
+    }
+
+    #[test]
+    fn groups_by_padded_len_and_chunks_to_grid() {
+        let p = BatchPlanner::new(2, 4);
+        let groups = p.group_prefills(vec![
+            seq(0, 10, 16),
+            seq(1, 30, 32),
+            seq(2, 12, 16),
+            seq(3, 15, 16),
+        ]);
+        // 16-padded: [0, 2] then [3] (max batch 2); 32-padded: [1].
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].padded, 16);
+        assert_eq!(groups[0].seqs.iter().map(|s| s.slot).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(groups[1].padded, 16);
+        assert_eq!(groups[1].seqs[0].slot, 3);
+        assert_eq!(groups[2].padded, 32);
+        assert_eq!(groups[2].seqs[0].slot, 1);
+    }
+
+    #[test]
+    fn prefill_inputs_pad_ghost_lanes() {
+        let p = BatchPlanner::new(4, 4);
+        let group = PrefillGroup { padded: 16, seqs: vec![seq(5, 10, 16)] };
+        let li = p.prefill_inputs(&group, 2, 16);
+        assert_eq!(li.seq_lens, vec![10, 10], "ghost lane replicates lane 0");
+        assert_eq!(li.block_tables.len(), 2 * 4);
+        assert_eq!(li.tokens.len(), 2 * 16);
+        assert_eq!(&li.tokens[..10], &li.tokens[16..26], "ghost row replicated");
+        assert_eq!(&li.tokens[10..16], &[0i32; 6][..], "prompt padded with zeros");
+    }
+
+    #[test]
+    fn decode_inputs_shapes() {
+        let p = BatchPlanner::new(4, 4);
+        let lanes = vec![
+            Lane {
+                slot: 0,
+                cache: SeqCache { blocks: vec![1], cached_len: 7 },
+                generated: 1,
+                max_new: 8,
+                last_token: 42,
+            },
+            Lane {
+                slot: 1,
+                cache: SeqCache { blocks: vec![2], cached_len: 9 },
+                generated: 1,
+                max_new: 8,
+                last_token: 43,
+            },
+        ];
+        let li = p.decode_inputs(&lanes, 4);
+        assert_eq!(li.tokens, vec![42, 43, 42, 42]);
+        assert_eq!(li.seq_lens, vec![7, 9, 7, 7]);
+        assert_eq!(li.block_tables.len(), 4 * 4);
+    }
+}

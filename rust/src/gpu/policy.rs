@@ -1,0 +1,427 @@
+//! Pluggable admission policies for the persistent scheduler.
+//!
+//! The staged pipeline (see DESIGN.md §5) separates *detecting* pending
+//! work (ring scan) from *choosing* which pending requests to admit. The
+//! scan produces [`Candidate`] snapshots; an [`AdmissionPolicy`] orders
+//! them; the batch planner then admits in that order until capacity or
+//! KV backpressure stops it. The paper's scheduler is pure FCFS (§4.2);
+//! the other three policies explore the scheduling dimension that
+//! dominates tail latency under mixed interactive/batch loads:
+//!
+//! * [`Fcfs`] — ticket order; the paper's behavior, and the default.
+//! * [`PriorityAged`] — base priority plus an age boost, with a hard
+//!   starvation cap: any request waiting longer than the cap jumps the
+//!   queue regardless of priority (the loopr/taskdaemon model).
+//! * [`ShortestPromptFirst`] — SJF on prompt length, minimizing mean
+//!   TTFT at the cost of long-prompt fairness.
+//! * [`SloAware`] — earliest-deadline-first on each request's TTFT
+//!   budget; requests without a budget get a default, which reduces to
+//!   FCFS among budget-less requests.
+//!
+//! Policies are consulted with *relaxed* snapshots (same rationale as the
+//! relaxed ring scan): ordering is a heuristic, the claim CAS is the
+//! synchronization point.
+
+use std::sync::atomic::Ordering;
+
+use crate::ringbuf::{RingBuffer, Slot};
+
+/// Snapshot of one PREFILL_PENDING slot, taken at scan time and ranked by
+/// an [`AdmissionPolicy`]. In the sim (`crate::sim::des`) `slot` indexes
+/// the pending queue instead of the ring; everything else is identical,
+/// which is what lets the live scheduler and the DES share policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub slot: usize,
+    /// Monotone submission ticket (FCFS order).
+    pub ticket: u64,
+    /// Base priority class; higher = more important. 0 = batch/default.
+    pub priority: u32,
+    pub prompt_len: u32,
+    /// Submission timestamp, µs since process epoch.
+    pub submit_time_us: u64,
+    /// Absolute TTFT deadline, µs since process epoch; 0 = no deadline.
+    pub ttft_deadline_us: u64,
+}
+
+impl Candidate {
+    /// Snapshot a ring slot (relaxed loads; see module docs).
+    pub fn from_slot(slot_idx: usize, s: &Slot) -> Candidate {
+        Candidate {
+            slot: slot_idx,
+            ticket: s.ticket.load(Ordering::Relaxed),
+            priority: s.priority.load(Ordering::Relaxed),
+            prompt_len: s.prompt_len.load(Ordering::Relaxed),
+            submit_time_us: s.submit_time_us.load(Ordering::Relaxed),
+            ttft_deadline_us: s.ttft_deadline_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot every slot in `indices` from the ring.
+    pub fn collect(ring: &RingBuffer, indices: &[usize]) -> Vec<Candidate> {
+        indices.iter().map(|&i| Candidate::from_slot(i, ring.slot(i))).collect()
+    }
+
+    pub fn age_us(&self, now_us: u64) -> u64 {
+        now_us.saturating_sub(self.submit_time_us)
+    }
+}
+
+/// An admission-ordering policy. `key` maps a candidate to a sort key —
+/// lower keys are admitted first; the second component breaks ties in
+/// ticket (FCFS) order so every policy is deterministic and total.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    fn key(&self, c: &Candidate, now_us: u64) -> (i64, u64);
+
+    /// Order candidates for admission (first = admitted first).
+    fn order(&self, candidates: &mut [Candidate], now_us: u64) {
+        if candidates.len() > 1 {
+            candidates.sort_by_key(|c| self.key(c, now_us));
+        }
+    }
+}
+
+/// Ticket order — the paper's policy and the default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl AdmissionPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn key(&self, c: &Candidate, _now_us: u64) -> (i64, u64) {
+        (0, c.ticket)
+    }
+}
+
+/// Base priority + age boost with a hard starvation cap.
+///
+/// Effective priority is `base * PRIORITY_SCALE + age_boost`, where the
+/// boost grows by one per `age_boost_interval_us` of queueing, capped at
+/// `max_age_boost` (so aging can overtake at most
+/// `max_age_boost / PRIORITY_SCALE` priority levels). Independently, any
+/// candidate older than `starvation_cap_us` is hoisted ahead of every
+/// non-starved candidate — the anti-starvation guarantee the property
+/// test in this module pins down.
+#[derive(Debug, Clone, Copy)]
+pub struct PriorityAged {
+    pub age_boost_interval_us: u64,
+    pub max_age_boost: i64,
+    pub starvation_cap_us: u64,
+}
+
+/// One priority level in effective-priority units.
+pub const PRIORITY_SCALE: i64 = 1_000;
+
+impl Default for PriorityAged {
+    fn default() -> Self {
+        PriorityAged {
+            // +1 per ms of queueing, capped at two priority levels — so
+            // aging can overtake nearby classes but interactive traffic
+            // keeps outranking fresh batch work even under pressure.
+            age_boost_interval_us: 1_000,
+            max_age_boost: 2 * PRIORITY_SCALE,
+            // After 10 s in the queue, jump it regardless of class. Kept
+            // well above interactive TTFT budgets: a tight cap would
+            // hoist the entire batch backlog under saturation and
+            // degenerate the policy to FCFS exactly when class
+            // separation matters most.
+            starvation_cap_us: 10_000_000,
+        }
+    }
+}
+
+impl AdmissionPolicy for PriorityAged {
+    fn name(&self) -> &'static str {
+        "priority-aged"
+    }
+
+    fn key(&self, c: &Candidate, now_us: u64) -> (i64, u64) {
+        let age = c.age_us(now_us);
+        if age >= self.starvation_cap_us {
+            // Starved: ahead of everything, FCFS among the starved.
+            return (i64::MIN, c.ticket);
+        }
+        let boost = ((age / self.age_boost_interval_us.max(1)) as i64).min(self.max_age_boost);
+        let effective = c.priority as i64 * PRIORITY_SCALE + boost;
+        // Higher effective priority sorts first.
+        (-effective, c.ticket)
+    }
+}
+
+/// Shortest-prompt-first (SJF on the only job-size signal the slot
+/// metadata carries). Minimizes mean TTFT; unfair to long prompts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestPromptFirst;
+
+impl AdmissionPolicy for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn key(&self, c: &Candidate, _now_us: u64) -> (i64, u64) {
+        (c.prompt_len as i64, c.ticket)
+    }
+}
+
+/// Earliest-deadline-first on the TTFT budget. Requests without a
+/// deadline are treated as `submit + default_ttft_budget_us`, so they
+/// degrade to FCFS among themselves and never block an urgent deadline.
+#[derive(Debug, Clone, Copy)]
+pub struct SloAware {
+    pub default_ttft_budget_us: u64,
+}
+
+impl Default for SloAware {
+    fn default() -> Self {
+        SloAware { default_ttft_budget_us: 10_000_000 }
+    }
+}
+
+impl AdmissionPolicy for SloAware {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn key(&self, c: &Candidate, now_us: u64) -> (i64, u64) {
+        let deadline = if c.ttft_deadline_us != 0 {
+            c.ttft_deadline_us as i64
+        } else {
+            c.submit_time_us as i64 + self.default_ttft_budget_us as i64
+        };
+        (deadline - now_us as i64, c.ticket)
+    }
+}
+
+/// Selector threaded through `SchedulerConfig`, `ServerConfig`,
+/// `SimConfig` and the `--policy` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Fcfs,
+    PriorityAged,
+    ShortestPromptFirst,
+    SloAware,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::Fcfs,
+        PolicyKind::PriorityAged,
+        PolicyKind::ShortestPromptFirst,
+        PolicyKind::SloAware,
+    ];
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(PolicyKind::Fcfs),
+            "priority" | "priority-aged" | "aged" => Some(PolicyKind::PriorityAged),
+            "sjf" | "shortest" | "shortest-prompt-first" => Some(PolicyKind::ShortestPromptFirst),
+            "slo" | "slo-aware" | "edf" => Some(PolicyKind::SloAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::PriorityAged => "priority-aged",
+            PolicyKind::ShortestPromptFirst => "sjf",
+            PolicyKind::SloAware => "slo",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            PolicyKind::Fcfs => Box::new(Fcfs),
+            PolicyKind::PriorityAged => Box::new(PriorityAged::default()),
+            PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
+            PolicyKind::SloAware => Box::new(SloAware::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn cand(
+        slot: usize,
+        ticket: u64,
+        priority: u32,
+        prompt_len: u32,
+        submit_time_us: u64,
+        ttft_deadline_us: u64,
+    ) -> Candidate {
+        Candidate { slot, ticket, priority, prompt_len, submit_time_us, ttft_deadline_us }
+    }
+
+    #[test]
+    fn fcfs_orders_by_ticket() {
+        let mut cs = vec![
+            cand(0, 9, 7, 1, 0, 0),
+            cand(1, 2, 0, 500, 0, 0),
+            cand(2, 5, 3, 10, 0, 0),
+        ];
+        Fcfs.order(&mut cs, 1_000_000);
+        let tickets: Vec<u64> = cs.iter().map(|c| c.ticket).collect();
+        assert_eq!(tickets, vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn priority_beats_ticket_before_aging() {
+        let mut cs = vec![
+            cand(0, 1, 0, 10, 1_000, 0), // older, low priority
+            cand(1, 2, 4, 10, 1_500, 0), // newer, high priority
+        ];
+        PriorityAged::default().order(&mut cs, 2_000);
+        assert_eq!(cs[0].slot, 1, "high priority admitted first");
+    }
+
+    #[test]
+    fn age_boost_overtakes_one_priority_level() {
+        let p = PriorityAged::default();
+        // Priority 0 aged past one level's worth of boost (but well short
+        // of the starvation cap) beats a brand-new priority-1 request.
+        let now = 2_000_000u64;
+        let old = cand(0, 1, 0, 10, 0, 0); // age 2 s → boost maxed at 2000
+        let fresh = cand(1, 2, 1, 10, now, 0); // effective 1000
+        assert!(old.age_us(now) < p.starvation_cap_us, "boost, not starvation, decides");
+        let mut cs = vec![fresh, old];
+        p.order(&mut cs, now);
+        assert_eq!(cs[0].slot, 0);
+        // But the boost cap holds: a fresh priority-4 request still wins
+        // against the same aged batch request.
+        let urgent = cand(2, 3, 4, 10, now, 0);
+        let mut cs = vec![old, urgent];
+        p.order(&mut cs, now);
+        assert_eq!(cs[0].slot, 2, "boost is capped below high-priority classes");
+    }
+
+    #[test]
+    fn sjf_orders_by_prompt_len() {
+        let mut cs = vec![
+            cand(0, 1, 0, 300, 0, 0),
+            cand(1, 2, 0, 12, 0, 0),
+            cand(2, 3, 0, 12, 0, 0),
+        ];
+        ShortestPromptFirst.order(&mut cs, 0);
+        assert_eq!(cs[0].slot, 1, "shortest first, ticket tie-break");
+        assert_eq!(cs[1].slot, 2);
+        assert_eq!(cs[2].slot, 0);
+    }
+
+    #[test]
+    fn slo_orders_by_slack_and_defaults_to_fcfs() {
+        let p = SloAware::default();
+        let mut cs = vec![
+            cand(0, 1, 0, 10, 100, 0),         // no deadline (default budget)
+            cand(1, 2, 0, 10, 200, 900_000),   // tight deadline
+            cand(2, 3, 0, 10, 300, 5_000_000), // loose deadline
+        ];
+        p.order(&mut cs, 800_000);
+        assert_eq!(cs[0].slot, 1, "tightest slack first");
+        assert_eq!(cs[1].slot, 2);
+        assert_eq!(cs[2].slot, 0);
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(PolicyKind::parse("priority"), Some(PolicyKind::PriorityAged));
+        assert_eq!(PolicyKind::parse("edf"), Some(PolicyKind::SloAware));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    /// The anti-starvation guarantee: under PriorityAged, every candidate
+    /// older than the starvation cap precedes every younger candidate, no
+    /// matter how the priorities, prompt lengths and deadlines fall; and
+    /// the starved prefix is FCFS (ticket-ordered) among itself.
+    #[test]
+    fn prop_priority_aged_never_starves_past_cap() {
+        let p = PriorityAged::default();
+        run_prop("priority_aged_starvation_cap", 0xA6E, 500, |rng| {
+            let now_us: u64 = 100_000_000 + rng.below(1 << 30);
+            let n = 2 + rng.below(30) as usize;
+            let mut cs: Vec<Candidate> = (0..n)
+                .map(|i| {
+                    // Ages straddle the cap: 0..2× starvation_cap.
+                    let age = rng.below(2 * PriorityAged::default().starvation_cap_us);
+                    let submit = now_us - age;
+                    let deadline =
+                        if rng.below(2) == 0 { 0 } else { submit + 1_000 + rng.below(1 << 20) };
+                    cand(
+                        i,
+                        rng.below(1 << 20),
+                        rng.below(8) as u32,
+                        1 + rng.below(512) as u32,
+                        submit,
+                        deadline,
+                    )
+                })
+                .collect();
+            p.order(&mut cs, now_us);
+            let starved: Vec<&Candidate> =
+                cs.iter().filter(|c| c.age_us(now_us) >= p.starvation_cap_us).collect();
+            // (a) starved candidates form a prefix of the ordering;
+            for (i, c) in cs.iter().enumerate() {
+                let is_starved = c.age_us(now_us) >= p.starvation_cap_us;
+                assert_eq!(
+                    is_starved,
+                    i < starved.len(),
+                    "starved candidate not in prefix at position {i}"
+                );
+            }
+            // (b) the starved prefix is ticket-ordered (FCFS).
+            for w in cs[..starved.len()].windows(2) {
+                assert!(w[0].ticket <= w[1].ticket, "starved prefix must be FCFS");
+            }
+        });
+    }
+
+    /// Aged queue simulation: with a continuous stream of high-priority
+    /// arrivals and one admission per round, a low-priority request is
+    /// still admitted within the rounds implied by the starvation cap.
+    #[test]
+    fn aged_queue_drains_low_priority_within_cap() {
+        // Small cap so the simulated queue trips it within a few rounds.
+        let p = PriorityAged {
+            age_boost_interval_us: 1_000,
+            max_age_boost: 2 * PRIORITY_SCALE,
+            starvation_cap_us: 500_000,
+        };
+        let round_us = 50_000; // 50 ms between admission opportunities
+        let mut queue: Vec<Candidate> = vec![cand(0, 0, 0, 64, 0, 0)];
+        let mut next_ticket = 1u64;
+        let mut now = 0u64;
+        let mut admitted_old_at = None;
+        for round in 0..64u64 {
+            now += round_us;
+            // Two fresh high-priority arrivals per round: offered load
+            // exceeds the single admission slot, so pure priority order
+            // would starve the old request forever.
+            for _ in 0..2 {
+                queue.push(cand(next_ticket as usize, next_ticket, 7, 64, now, 0));
+                next_ticket += 1;
+            }
+            p.order(&mut queue, now);
+            let head = queue.remove(0);
+            if head.ticket == 0 {
+                admitted_old_at = Some(round);
+                break;
+            }
+        }
+        let round = admitted_old_at.expect("low-priority request starved");
+        let cap_rounds = p.starvation_cap_us / round_us;
+        assert!(
+            round <= cap_rounds + 1,
+            "admitted at round {round}, cap implies <= {cap_rounds}"
+        );
+    }
+}

@@ -1,28 +1,45 @@
-//! The persistent scheduler (paper §4.2): an infinite control loop that
-//! (1) scans the ring buffer for newly submitted prompts, (2) claims them
-//! via CAS, (3) selects and launches the tightest-fitting pre-compiled
-//! graph for prefill or decode, (4) polls device-resident completion
-//! buffers, and (5) publishes generated tokens and status updates back to
-//! the ring buffer — with continuous batching via pause-and-resume inline
-//! prefill and the fire-and-forget launch window protocol.
+//! The persistent scheduler (paper §4.2), structured as a staged
+//! pipeline run by an infinite control loop:
 //!
-//! The same policy runs under two *placements* (Fig 3's controlled
-//! comparison): `GpuResident` — the Blink design, overlapped ring scan
-//! hidden behind decode compute, 2 µs device launches, zero host work —
-//! and `CpuResident` — each step pays a host round trip: orchestration
-//! work on the interference-sensitive host heap plus host-launch latency,
-//! with the ring scan serialized after completion instead of overlapped.
+//! ```text
+//! ring scan → admission policy → batch planner → launcher → completion
+//!   (scan)      (policy.rs)       (planner.rs)   (launcher.rs)  (poll)
+//! ```
+//!
+//! * **ring scan** — detect PREFILL_PENDING slots, snapshot them as
+//!   [`Candidate`]s (overlapped behind decode compute when GPU-resident);
+//! * **admission policy** — a pluggable [`AdmissionPolicy`] orders the
+//!   candidates (FCFS by default; see `SchedulerConfig::policy`);
+//! * **batch planner** — admit in policy order under the three admission
+//!   conditions (pending work, batch-slot capacity, launch-window
+//!   headroom) plus KV backpressure, claim via CAS, group prefills to the
+//!   graph grid and marshal decode batches ([`BatchPlanner`]);
+//! * **launcher** — fire-and-forget device launches with the launch
+//!   window protocol, or host-latency launches for the CPU baseline;
+//! * **completion** — poll device-resident completion buffers, publish
+//!   generated tokens and status updates back to the ring.
+//!
+//! Continuous batching is pause-and-resume inline prefill, exactly as
+//! before the decomposition. The same pipeline runs under two
+//! *placements* (Fig 3's controlled comparison): `GpuResident` — the
+//! Blink design, overlapped ring scan hidden behind decode compute, 2 µs
+//! device launches, zero host work — and `CpuResident` — each step pays
+//! a host round trip on the interference-sensitive host heap, with the
+//! ring scan serialized after completion instead of overlapped.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::devsim::{CompletionBuffer, LaunchLatencies, LaunchWindow};
+use crate::devsim::CompletionBuffer;
 use crate::gpu::executor::{Executor, LaunchCmd};
+use crate::gpu::launcher::{Completions, Launcher};
+use crate::gpu::planner::{BatchPlanner, Lane, PrefillGroup, PrefillSeq};
+use crate::gpu::policy::{AdmissionPolicy, Candidate, PolicyKind};
 use crate::gpu::stats::SchedulerStats;
 use crate::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
 use crate::hostsim::HostOrchestrator;
-use crate::kvcache::{KvConfig, KvManager, SeqCache};
+use crate::kvcache::{KvConfig, KvManager};
 use crate::ringbuf::{RingBuffer, SlotState};
 use crate::runtime::ModelManifest;
 
@@ -43,6 +60,8 @@ pub struct SchedulerConfig {
     pub apply_launch_delays: bool,
     /// Stop automatically once idle (used by batch benchmarks).
     pub exit_when_idle: bool,
+    /// Admission policy (pipeline stage 2). FCFS reproduces the paper.
+    pub policy: PolicyKind,
 }
 
 impl Default for SchedulerConfig {
@@ -52,16 +71,9 @@ impl Default for SchedulerConfig {
             scan_lanes: 256,
             apply_launch_delays: true,
             exit_when_idle: false,
+            policy: PolicyKind::Fcfs,
         }
     }
-}
-
-struct Lane {
-    slot: usize,
-    cache: SeqCache,
-    generated: u32,
-    max_new: u32,
-    last_token: i32,
 }
 
 /// Handle to the running scheduler thread.
@@ -142,19 +154,22 @@ pub fn cache_from_manifest(m: &ModelManifest) -> GraphCache {
 
 struct SchedulerCore {
     ring: Arc<RingBuffer>,
-    executor: Executor,
     manifest: ModelManifest,
     cache: GraphCache,
     config: SchedulerConfig,
     stats: Arc<SchedulerStats>,
-    window: LaunchWindow,
     kv: KvManager,
     lanes: Vec<Lane>,
     orchestrator: Option<HostOrchestrator>,
-    completion: Arc<CompletionBuffer>,
-    completion_epoch: u64,
+    // Pipeline stages (see module docs).
+    policy: Box<dyn AdmissionPolicy>,
+    planner: BatchPlanner,
+    launcher: Launcher,
+    completions: Completions,
     seed_ctr: u32,
     max_batch: usize,
+    /// Ticket of the most recently admitted request (out-of-order stat).
+    last_admitted_ticket: Option<u64>,
 }
 
 impl SchedulerCore {
@@ -177,23 +192,30 @@ impl SchedulerCore {
                 Some(HostOrchestrator::new(*scratch_mb, *touches_per_step))
             }
         };
+        let gpu_resident = matches!(config.placement, Placement::GpuResident);
         let max_batch = cache.max_decode_batch();
         let max_lanes = max_batch.max(cache.max_prefill_batch());
+        let policy = config.policy.build();
+        let planner = BatchPlanner::new(cache.max_prefill_batch(), manifest.max_blocks_per_seq);
+        let launcher =
+            Launcher::new(executor, gpu_resident, config.apply_launch_delays, stats.clone());
+        let completions = Completions::new(Arc::new(CompletionBuffer::new(max_lanes.max(16))));
         SchedulerCore {
             ring,
-            executor,
             manifest,
             cache,
             config,
             stats,
-            window: LaunchWindow::new(LaunchLatencies::default(), false),
             kv,
             lanes: Vec::with_capacity(max_batch),
             orchestrator,
-            completion: Arc::new(CompletionBuffer::new(max_lanes.max(16))),
-            completion_epoch: 0,
+            policy,
+            planner,
+            launcher,
+            completions,
             seed_ctr: 1,
             max_batch,
+            last_admitted_ticket: None,
         }
     }
 
@@ -212,7 +234,8 @@ impl SchedulerCore {
                 break;
             }
 
-            // Admission (when not draining): scan + claim + inline prefill.
+            // Admission (when not draining): scan + policy + claim +
+            // inline prefill.
             if !draining && self.lanes.len() < self.max_batch {
                 let candidates = self.scan(true);
                 if !candidates.is_empty() {
@@ -248,15 +271,19 @@ impl SchedulerCore {
         }
     }
 
-    /// Timed ring scan (the paper's 1–5 µs full-ring sweep).
-    fn scan(&self, only_if_hinted: bool) -> Vec<usize> {
+    /// Pipeline stage 1 — timed ring scan (the paper's 1–5 µs full-ring
+    /// sweep), snapshotting pending slots as policy candidates.
+    fn scan(&self, only_if_hinted: bool) -> Vec<Candidate> {
         if only_if_hinted && self.ring.pending_hint() == 0 {
             return vec![];
         }
         let t = Instant::now();
         let pending = self.ring.scan_pending(self.config.scan_lanes);
+        // The timed region covers only the sweep itself, so scan_mean/max
+        // stay comparable to the paper envelope; the candidate snapshot
+        // is policy-stage work.
         self.stats.record_scan(t.elapsed().as_nanos() as u64);
-        pending
+        Candidate::collect(&self.ring, &pending)
     }
 
     fn pause_lanes(&self) {
@@ -275,16 +302,24 @@ impl SchedulerCore {
         }
     }
 
-    /// The three admission conditions (paper §4.2 "Continuous batching"):
-    /// (i) pending prefills detected, (ii) free batch-slot capacity,
-    /// (iii) launch-window headroom for prefill + resumed decode.
-    fn admit_and_prefill(&mut self, candidates: Vec<usize>) {
-        let mut admitted: Vec<(usize, SeqCache, Vec<i32>, u32, usize)> = vec![]; // slot, cache, prompt, max_new, padded
-        for slot_idx in candidates {
+    /// Pipeline stages 2+3 — order candidates by the admission policy,
+    /// admit under the three admission conditions (paper §4.2
+    /// "Continuous batching": (i) pending prefills detected, (ii) free
+    /// batch-slot capacity, (iii) launch-window headroom) plus KV
+    /// backpressure, then group and launch the prefills.
+    fn admit_and_prefill(&mut self, mut candidates: Vec<Candidate>) {
+        // Stage 2: policy ordering (FCFS = ticket order, the paper).
+        let now_us = crate::util::timer::now_us();
+        self.policy.order(&mut candidates, now_us);
+
+        // Stage 3a: admission checks + CAS claims, in policy order.
+        let mut admitted: Vec<PrefillSeq> = vec![];
+        for cand in candidates {
             if self.lanes.len() + admitted.len() >= self.max_batch {
                 self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 break; // leave pending in the ring: backpressure
             }
+            let slot_idx = cand.slot;
             let slot = self.ring.slot(slot_idx);
             if slot.state() != SlotState::PrefillPending {
                 continue; // raced with... nothing today, but benign
@@ -302,97 +337,86 @@ impl SchedulerCore {
             let padded = padded_seq(&self.cache, prompt_len);
             let max_new = max_new.min((self.manifest.max_context() - prompt_len) as u32);
             if !self.kv.can_admit(padded, prompt_len, max_new as usize) {
-                // Condition (ii)/KV backpressure: leave it pending.
+                // Condition (ii)/KV backpressure: leave it pending. Stop
+                // admitting so a later (lower-ranked) candidate cannot
+                // leapfrog the policy's head-of-queue choice.
                 self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 break;
             }
             // Condition (iii): headroom for this prefill + one decode.
-            if self.window.headroom() < 2 {
-                self.window.tail_relaunch();
+            if self.launcher.headroom() < 2 {
+                self.launcher.tail_relaunch();
             }
             if !self.ring.claim_pending(slot_idx) {
                 continue;
             }
+            self.note_admission_order(cand.ticket);
             let cache = self
                 .kv
                 .admit(padded, prompt_len, max_new as usize)
                 .expect("can_admit checked above");
             let prompt: Vec<i32> =
                 self.ring.read_prompt(slot_idx).into_iter().map(|t| t as i32).collect();
-            admitted.push((slot_idx, cache, prompt, max_new, padded));
+            admitted.push(PrefillSeq { slot: slot_idx, cache, prompt, max_new, padded });
         }
         if admitted.is_empty() {
             return;
         }
 
-        // Group by padded length, chunk to the prefill batch grid.
-        admitted.sort_by_key(|a| a.4);
-        let max_pb = self.cache.max_prefill_batch();
-        let mut i = 0;
-        while i < admitted.len() {
-            let pad = admitted[i].4;
-            let mut j = i + 1;
-            while j < admitted.len() && admitted[j].4 == pad && j - i < max_pb {
-                j += 1;
-            }
-            let group: Vec<_> = admitted.drain(i..j).collect();
-            self.launch_prefill(group, pad);
-            // drain() shifts the tail down; keep i in place.
+        // Stage 3b: group to the prefill graph grid and launch each group.
+        for group in self.planner.group_prefills(admitted) {
+            self.launch_prefill(group);
         }
     }
 
-    fn launch_prefill(&mut self, group: Vec<(usize, SeqCache, Vec<i32>, u32, usize)>, pad: usize) {
-        let b_actual = group.len();
+    /// Out-of-ticket-order admissions (non-FCFS policies at work); FCFS
+    /// keeps this at zero, which the integration tests pin down.
+    fn note_admission_order(&mut self, ticket: u64) {
+        match self.last_admitted_ticket {
+            Some(last) if ticket < last => {
+                self.stats.admitted_out_of_order.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => self.last_admitted_ticket = Some(ticket),
+        }
+    }
+
+    /// Pipeline stages 4+5 for one prefill group: marshal, launch, poll,
+    /// publish first tokens.
+    fn launch_prefill(&mut self, group: PrefillGroup) {
+        let b_actual = group.seqs.len();
         let gid = self
             .cache
-            .select_prefill(b_actual, pad)
+            .select_prefill(b_actual, group.padded)
             .expect("grid covers all padded sizes");
         let spec = self.cache.spec(gid).clone();
-        let (gb, gs) = (spec.batch, spec.seq);
-        let mbs = self.manifest.max_blocks_per_seq;
-
-        let mut block_tables = Vec::with_capacity(gb * mbs);
-        let mut seq_lens = Vec::with_capacity(gb);
-        let mut tokens = Vec::with_capacity(gb * gs);
-        for (_, cache, prompt, _, _) in &group {
-            block_tables.extend(cache.table_row(mbs));
-            seq_lens.push(prompt.len() as i32);
-            tokens.extend(prompt);
-            tokens.extend(std::iter::repeat(0).take(gs - prompt.len()));
-        }
-        // Pad ghost lanes by replicating lane 0 (identical writes are
-        // benign; outputs ignored).
-        for _ in b_actual..gb {
-            block_tables.extend_from_slice(&group[0].1.table_row(mbs));
-            seq_lens.push(group[0].2.len() as i32);
-            let row0: Vec<i32> = tokens[..gs].to_vec();
-            tokens.extend(row0);
-        }
+        let inputs = self.planner.prefill_inputs(&group, spec.batch, spec.seq);
 
         let seed = self.next_seed();
-        self.launch(LaunchCmd {
+        self.launcher.launch(LaunchCmd {
             graph: gid,
-            block_tables,
-            seq_lens,
-            tokens,
+            block_tables: inputs.block_tables,
+            seq_lens: inputs.seq_lens,
+            tokens: inputs.tokens,
             seed,
-            completion: self.completion.clone(),
+            completion: self.completions.buffer(),
             reset_kv: false,
         });
-        let Some(first_tokens) = self.poll_completion(gb) else {
-            for (slot, cache, _, _, _) in group {
-                self.kv.release(cache);
-                self.fail_slot(slot);
+        let Some(first_tokens) = self.completions.poll(spec.batch) else {
+            for s in group.seqs {
+                self.kv.release(s.cache);
+                self.fail_slot(s.slot);
             }
             return;
         };
 
         self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
-        for (lane_idx, (slot, mut cache, prompt, max_new, _)) in group.into_iter().enumerate() {
+        for (lane_idx, seq) in group.seqs.into_iter().enumerate() {
+            let PrefillSeq { slot, mut cache, prompt, max_new, .. } = seq;
             cache.cached_len = prompt.len();
             let tok = first_tokens[lane_idx] as i32;
             self.ring.slot(slot).set_state(SlotState::DecodeProcessing);
             self.ring.publish_token(slot, tok as u32);
+            self.note_ttft_deadline(slot);
             self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
             self.stats.prefilled_requests.fetch_add(1, Ordering::Relaxed);
             let done = max_new <= 1 || tok as u32 == self.manifest.eos_token;
@@ -404,13 +428,20 @@ impl SchedulerCore {
         }
     }
 
+    /// TTFT-deadline attainment accounting (SLO-aware observability).
+    fn note_ttft_deadline(&self, slot: usize) {
+        let s = self.ring.slot(slot);
+        let deadline = s.ttft_deadline_us.load(Ordering::Relaxed);
+        if deadline != 0 && s.first_token_time_us.load(Ordering::Relaxed) > deadline {
+            self.stats.ttft_deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     fn decode_step(&mut self, draining: bool) {
         let live = self.lanes.len();
         debug_assert!(live > 0);
         let gid = self.cache.select_decode(live).expect("decode grid covers batch sizes");
         let spec = self.cache.spec(gid).clone();
-        let gb = spec.batch;
-        let mbs = self.manifest.max_blocks_per_seq;
 
         // CPU-resident placement: the host reassembles the batch before
         // every launch — interference-sensitive work on the host heap.
@@ -418,28 +449,15 @@ impl SchedulerCore {
             std::hint::black_box(orch.step_work());
         }
 
-        let mut block_tables = Vec::with_capacity(gb * mbs);
-        let mut seq_lens = Vec::with_capacity(gb);
-        let mut tokens = Vec::with_capacity(gb);
-        for l in &self.lanes {
-            block_tables.extend(l.cache.table_row(mbs));
-            seq_lens.push(l.cache.cached_len as i32);
-            tokens.push(l.last_token);
-        }
-        for _ in live..gb {
-            block_tables.extend(self.lanes[0].cache.table_row(mbs));
-            seq_lens.push(self.lanes[0].cache.cached_len as i32);
-            tokens.push(self.lanes[0].last_token);
-        }
-
+        let inputs = self.planner.decode_inputs(&self.lanes, spec.batch);
         let seed = self.next_seed();
-        self.launch(LaunchCmd {
+        self.launcher.launch(LaunchCmd {
             graph: gid,
-            block_tables,
-            seq_lens,
-            tokens,
+            block_tables: inputs.block_tables,
+            seq_lens: inputs.seq_lens,
+            tokens: inputs.tokens,
             seed,
-            completion: self.completion.clone(),
+            completion: self.completions.buffer(),
             reset_kv: false,
         });
 
@@ -452,7 +470,7 @@ impl SchedulerCore {
             vec![]
         };
 
-        let Some(step_tokens) = self.poll_completion(gb) else {
+        let Some(step_tokens) = self.completions.poll(spec.batch) else {
             let lanes = std::mem::take(&mut self.lanes);
             for l in lanes {
                 self.kv.release(l.cache);
@@ -502,31 +520,6 @@ impl SchedulerCore {
         self.stats.failed_requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Launch a graph with placement-appropriate cost accounting.
-    fn launch(&mut self, cmd: LaunchCmd) {
-        if self.is_gpu_resident() {
-            if self.window.fnf_launch().is_err() {
-                self.window.tail_relaunch();
-                self.window.fnf_launch().expect("fresh window");
-            }
-            if self.config.apply_launch_delays {
-                crate::devsim::spin_us(LaunchLatencies::default().fnf_us);
-            }
-            self.stats.fnf_launches.store(self.window.fnf_launches, Ordering::Relaxed);
-            self.stats.tail_relaunches.store(self.window.tail_relaunches, Ordering::Relaxed);
-        } else if self.config.apply_launch_delays {
-            // Host-side launch: 11–17 µs (paper §4.2).
-            crate::devsim::spin_us(LaunchLatencies::default().host_us);
-        }
-        self.executor.launch(cmd);
-    }
-
-    fn poll_completion(&mut self, n: usize) -> Option<Vec<u32>> {
-        let res = self.completion.poll_wait(self.completion_epoch, n);
-        self.completion_epoch = self.completion.epoch();
-        res
-    }
-
     fn next_seed(&mut self) -> u32 {
         self.seed_ctr = self.seed_ctr.wrapping_mul(747796405).wrapping_add(2891336453);
         self.seed_ctr
@@ -572,5 +565,10 @@ mod tests {
         assert_eq!(padded_seq(&c, 16), 16);
         assert_eq!(padded_seq(&c, 17), 32);
         assert_eq!(padded_seq(&c, 40), 64);
+    }
+
+    #[test]
+    fn default_config_is_paper_fcfs() {
+        assert_eq!(SchedulerConfig::default().policy, PolicyKind::Fcfs);
     }
 }

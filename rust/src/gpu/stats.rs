@@ -24,6 +24,12 @@ pub struct SchedulerStats {
     pub tail_relaunches: AtomicU64,
     /// Admission backpressure events (no KV blocks / no batch slot).
     pub backpressure_events: AtomicU64,
+    /// Admissions whose ticket was lower than an earlier admission's —
+    /// zero under FCFS, positive when a policy reorders the queue.
+    pub admitted_out_of_order: AtomicU64,
+    /// Requests whose first token was published after their TTFT
+    /// deadline (only counted for requests that carry a deadline).
+    pub ttft_deadline_misses: AtomicU64,
 }
 
 impl SchedulerStats {
@@ -52,7 +58,8 @@ impl SchedulerStats {
     pub fn summary(&self) -> String {
         format!(
             "decode_steps={} prefills={} completed={} failed={} tokens={} occupancy={:.2} \
-             pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} backpressure={}",
+             pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} backpressure={} \
+             reordered={} ttft_misses={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.completed_requests.load(Ordering::Relaxed),
@@ -65,6 +72,8 @@ impl SchedulerStats {
             self.fnf_launches.load(Ordering::Relaxed),
             self.tail_relaunches.load(Ordering::Relaxed),
             self.backpressure_events.load(Ordering::Relaxed),
+            self.admitted_out_of_order.load(Ordering::Relaxed),
+            self.ttft_deadline_misses.load(Ordering::Relaxed),
         )
     }
 }

@@ -7,6 +7,11 @@
 //! * `POST /v1/completions` — body: `{"prompt": "...", "max_tokens": N,
 //!   "stream": true|false}`. Streaming responses use SSE `data:` frames
 //!   with OpenAI-style chunk objects, terminated by `data: [DONE]`.
+//!   Scheduling extensions (all optional, threaded to the scheduler's
+//!   admission policy): `"priority"`: 0–7 (higher = more important, or
+//!   `"class": "interactive"|"batch"` as a shorthand) and
+//!   `"ttft_deadline_ms"`: a TTFT budget enforced by the SLO-aware
+//!   policy and reported per class by the eval.
 //! * `GET /health` — liveness.
 //! * `GET /metrics` — scheduler + frontend counters, text format.
 
@@ -16,7 +21,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::frontend::tracker::TokenEvent;
-use crate::frontend::DpuFrontend;
+use crate::frontend::{DpuFrontend, RequestClass};
 use crate::gpu::SchedulerStats;
 use crate::tokenizer::Detokenizer;
 use crate::util::json::{parse, Json};
@@ -157,6 +162,44 @@ fn handle_conn(
     }
 }
 
+/// Request-class fields from the completion body (see module docs).
+/// Unknown `"class"` values are an error — silently downgrading a typo'd
+/// "interactive" to batch would drop its scheduling preference with a
+/// 200 response.
+fn parse_request_class(obj: &Json) -> Result<RequestClass, String> {
+    let mut class = match obj.get("class") {
+        None => RequestClass::default(),
+        Some(c) => match c.as_str() {
+            // The shorthand implies the canonical interactive SLO (300 ms),
+            // overridable by an explicit ttft_deadline_ms below.
+            Some(s) if s.eq_ignore_ascii_case("interactive") => {
+                RequestClass::interactive(300_000)
+            }
+            Some(s) if s.eq_ignore_ascii_case("batch") => RequestClass::default(),
+            Some(other) => return Err(format!("unknown class {other:?} (interactive|batch)")),
+            None => return Err("class must be a string (interactive|batch)".into()),
+        },
+    };
+    if let Some(p) = obj.get("priority") {
+        match p.as_u64() {
+            Some(v) => class.priority = v.min(7) as u32,
+            None => return Err("priority must be an integer 0-7".into()),
+        }
+    }
+    if let Some(m) = obj.get("ttft_deadline_ms") {
+        match m.as_f64() {
+            // Clamp to an hour: beyond that a deadline is meaningless and
+            // unclamped client values risk µs-conversion overflow.
+            Some(ms) if ms > 0.0 => {
+                class.ttft_budget_us = (ms.min(3_600_000.0) * 1_000.0) as u64
+            }
+            Some(_) => {} // 0 or negative: no deadline
+            None => return Err("ttft_deadline_ms must be a number".into()),
+        }
+    }
+    Ok(class)
+}
+
 fn handle_completion(
     stream: &mut TcpStream,
     frontend: &DpuFrontend,
@@ -171,8 +214,15 @@ fn handle_completion(
     };
     let max_tokens = obj.get("max_tokens").and_then(|m| m.as_u64()).unwrap_or(16) as u32;
     let stream_mode = obj.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
+    let class = match parse_request_class(&obj) {
+        Ok(c) => c,
+        Err(e) => {
+            let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
+            return respond(stream, 400, "application/json", &msg);
+        }
+    };
 
-    let handle = match frontend.submit_text(prompt, max_tokens) {
+    let handle = match frontend.submit_text_class(prompt, max_tokens, class) {
         Ok(h) => h,
         Err(e) => {
             let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();

@@ -1,13 +1,14 @@
 //! blink — CLI for the Blink reproduction.
 //!
 //! Subcommands:
-//!   serve   [--model M] [--bind ADDR] [--cpu-resident]  start a live server
-//!   eval    <all|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!   serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
+//!           start a live server (P: fcfs|priority|sjf|slo)
+//!   eval    <all|policies|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
 //!           [--out DIR] [--window S] [--threads N]
 //!   info    print manifest + graph grid for a model
 
 use blink::eval;
-use blink::gpu::Placement;
+use blink::gpu::{Placement, PolicyKind};
 use blink::http::HttpServer;
 use blink::server::{BlinkServer, ServerConfig};
 use blink::sim::costmodel::PAPER_MODELS;
@@ -22,9 +23,10 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: blink <serve|eval|info> [...]\n\
-                 serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident]\n\
-                 eval <all|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
-                      [--out results/] [--window 60] [--threads N]\n\
+                 serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
+                       [--policy fcfs|priority|sjf|slo]\n\
+                 eval <all|policies|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                      [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)]\n\
                  info [--model blink-tiny]"
             );
             std::process::exit(2);
@@ -40,9 +42,11 @@ fn serve(args: &Args) {
     } else {
         Placement::GpuResident
     };
-    eprintln!("[serve] loading {model} (compiling AOT graphs, ~30s) ...");
-    let server = BlinkServer::start(ServerConfig { model, placement, ..Default::default() })
-        .expect("server start");
+    let policy = parse_policy_flag(args).unwrap_or(PolicyKind::Fcfs);
+    eprintln!("[serve] loading {model} (compiling AOT graphs, ~30s), policy={} ...", policy.name());
+    let server =
+        BlinkServer::start(ServerConfig { model, placement, policy, ..Default::default() })
+            .expect("server start");
     let http = HttpServer::serve(&bind, server.frontend.clone(), server.scheduler.stats.clone())
         .expect("bind");
     eprintln!("[serve] listening on http://{}", http.addr);
@@ -65,11 +69,14 @@ fn eval_cmd(args: &Args) {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8),
     );
 
-    // Live experiments don't need the sweep.
+    // Live experiments and the policy comparison don't need the sweep.
     match what {
         "fig3" => return eval::live::fig3(out_ref),
         "fig4" => return eval::live::fig4(out_ref),
         "table5" => return eval::table5(),
+        "policies" => {
+            return eval::policy_comparison(out_ref, window, threads, parse_policy_flag(args));
+        }
         _ => {}
     }
 
@@ -142,6 +149,16 @@ fn eval_cmd(args: &Args) {
             std::process::exit(2);
         }
     }
+}
+
+/// `--policy` if present; exits with a usage error on unknown values.
+fn parse_policy_flag(args: &Args) -> Option<PolicyKind> {
+    args.get("policy").map(|raw| {
+        PolicyKind::parse(raw).unwrap_or_else(|| {
+            eprintln!("unknown policy {raw} (fcfs|priority|sjf|slo)");
+            std::process::exit(2);
+        })
+    })
 }
 
 fn info(args: &Args) {

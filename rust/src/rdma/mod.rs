@@ -23,7 +23,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::ringbuf::{RingBuffer, SlotState};
+use crate::ringbuf::{RingBuffer, SlotState, SubmitMeta};
 
 /// Link + verb cost model. Defaults follow the paper's testbed: 200 Gbps
 /// link, ~2 µs one-way op latency. `zero_cost()` disables the delays for
@@ -62,7 +62,19 @@ pub enum RdmaOp {
     /// RDMA WRITE of prompt tokens into the slot's input-arena region.
     WritePrompt { slot: usize, tokens: Vec<u32> },
     /// RDMA WRITE of slot metadata + state flip to PREFILL_PENDING.
-    Submit { slot: usize, request_id: u64, prompt_len: u32, max_new: u32, seed: u32 },
+    /// `priority` / `ttft_budget_us` are the request-class fields the
+    /// scheduler's admission policy ranks by (0/0 = batch class, FCFS
+    /// behavior); they ride in the same metadata write, so the class
+    /// costs no extra verb.
+    Submit {
+        slot: usize,
+        request_id: u64,
+        prompt_len: u32,
+        max_new: u32,
+        seed: u32,
+        priority: u32,
+        ttft_budget_us: u64,
+    },
     /// Bulk RDMA READ of (state, generated) for a contiguous slot range —
     /// the token reader's per-cycle 64 KB metadata refresh.
     ReadMeta { first_slot: usize, count: usize },
@@ -78,7 +90,7 @@ impl RdmaOp {
         match self {
             RdmaOp::ClaimSlot { .. } | RdmaOp::ReleaseSlot { .. } => 8,
             RdmaOp::WritePrompt { tokens, .. } => tokens.len() * 4,
-            RdmaOp::Submit { .. } => 32,
+            RdmaOp::Submit { .. } => 48,
             RdmaOp::ReadMeta { count, .. } => count * 16,
             RdmaOp::ReadTokens { from, to, .. } => ((to - from) as usize) * 4,
         }
@@ -230,8 +242,18 @@ impl RdmaEngine {
                 ring.write_prompt(*slot, tokens);
                 Payload::None
             }
-            RdmaOp::Submit { slot, request_id, prompt_len, max_new, seed } => {
-                ring.submit(*slot, *request_id, *prompt_len, *max_new, *seed);
+            RdmaOp::Submit { slot, request_id, prompt_len, max_new, seed, priority, ttft_budget_us } => {
+                ring.submit_with_meta(
+                    *slot,
+                    &SubmitMeta {
+                        request_id: *request_id,
+                        prompt_len: *prompt_len,
+                        max_new: *max_new,
+                        seed: *seed,
+                        priority: *priority,
+                        ttft_budget_us: *ttft_budget_us,
+                    },
+                );
                 Payload::None
             }
             RdmaOp::ReadMeta { first_slot, count } => {
@@ -357,9 +379,24 @@ mod tests {
         assert!(matches!(qp.exec(RdmaOp::ClaimSlot { slot: 2 }), Payload::Cas(true)));
         assert!(matches!(qp.exec(RdmaOp::ClaimSlot { slot: 2 }), Payload::Cas(false)));
         qp.exec(RdmaOp::WritePrompt { slot: 2, tokens: vec![5, 6, 7] });
-        qp.exec(RdmaOp::Submit { slot: 2, request_id: 9, prompt_len: 3, max_new: 4, seed: 1 });
+        qp.exec(RdmaOp::Submit {
+            slot: 2,
+            request_id: 9,
+            prompt_len: 3,
+            max_new: 4,
+            seed: 1,
+            priority: 3,
+            ttft_budget_us: 100_000,
+        });
         assert_eq!(ring.slot(2).state(), SlotState::PrefillPending);
         assert_eq!(ring.read_prompt(2), vec![5, 6, 7]);
+        // The request class travels in the same metadata write.
+        assert_eq!(ring.slot(2).priority.load(Ordering::Relaxed), 3);
+        let s = ring.slot(2);
+        assert_eq!(
+            s.ttft_deadline_us.load(Ordering::Relaxed),
+            s.submit_time_us.load(Ordering::Relaxed) + 100_000
+        );
     }
 
     #[test]
@@ -368,7 +405,15 @@ mod tests {
         let mut qp = QueuePair::new(engine);
         qp.exec(RdmaOp::ClaimSlot { slot: 0 });
         qp.exec(RdmaOp::WritePrompt { slot: 0, tokens: vec![1] });
-        qp.exec(RdmaOp::Submit { slot: 0, request_id: 4, prompt_len: 1, max_new: 2, seed: 0 });
+        qp.exec(RdmaOp::Submit {
+            slot: 0,
+            request_id: 4,
+            prompt_len: 1,
+            max_new: 2,
+            seed: 0,
+            priority: 0,
+            ttft_budget_us: 0,
+        });
         ring.claim_pending(0);
         ring.slot(0).set_state(SlotState::DecodeProcessing);
         ring.publish_token(0, 42);
@@ -389,7 +434,15 @@ mod tests {
         let mut qp = QueuePair::new(engine);
         qp.exec(RdmaOp::ClaimSlot { slot: 1 });
         qp.exec(RdmaOp::WritePrompt { slot: 1, tokens: vec![1] });
-        qp.exec(RdmaOp::Submit { slot: 1, request_id: 1, prompt_len: 1, max_new: 8, seed: 0 });
+        qp.exec(RdmaOp::Submit {
+            slot: 1,
+            request_id: 1,
+            prompt_len: 1,
+            max_new: 8,
+            seed: 0,
+            priority: 0,
+            ttft_budget_us: 0,
+        });
         ring.claim_pending(1);
         ring.slot(1).set_state(SlotState::DecodeProcessing);
         for t in 0..5 {
@@ -435,7 +488,15 @@ mod tests {
         let mut qp = QueuePair::new(engine);
         qp.exec(RdmaOp::ClaimSlot { slot: 3 });
         qp.exec(RdmaOp::WritePrompt { slot: 3, tokens: vec![1] });
-        qp.exec(RdmaOp::Submit { slot: 3, request_id: 2, prompt_len: 1, max_new: 1, seed: 0 });
+        qp.exec(RdmaOp::Submit {
+            slot: 3,
+            request_id: 2,
+            prompt_len: 1,
+            max_new: 1,
+            seed: 0,
+            priority: 0,
+            ttft_budget_us: 0,
+        });
         ring.claim_pending(3);
         ring.slot(3).set_state(SlotState::DecodeProcessing);
         ring.publish_token(3, 7);

@@ -47,6 +47,22 @@ impl Default for RingConfig {
     }
 }
 
+/// Everything the frontend publishes alongside a prompt. `priority` and
+/// `ttft_budget_us` are the request-class fields threaded end-to-end
+/// (HTTP body → frontend → RDMA `Submit` → slot → admission policy →
+/// per-class eval percentiles).
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitMeta {
+    pub request_id: u64,
+    pub prompt_len: u32,
+    pub max_new: u32,
+    pub seed: u32,
+    /// Higher = more important; 0 = batch/default.
+    pub priority: u32,
+    /// Relative TTFT budget in µs; 0 = no deadline.
+    pub ttft_budget_us: u64,
+}
+
 /// The shared ring buffer. `Sync`: every field is atomic; the access
 /// protocol (FSM above) provides the logical exclusion.
 pub struct RingBuffer {
@@ -96,19 +112,39 @@ impl RingBuffer {
 
     /// Frontend half: publish a fully written prompt, arming the slot for
     /// the scheduler (FRONTEND_WRITING → PREFILL_PENDING, release).
-    /// Returns the FCFS ticket assigned to the request.
+    /// Returns the FCFS ticket assigned to the request. Default class:
+    /// priority 0, no TTFT deadline (see [`RingBuffer::submit_with_meta`]).
     pub fn submit(&self, i: usize, request_id: u64, prompt_len: u32, max_new: u32, seed: u32) -> u64 {
+        self.submit_with_meta(
+            i,
+            &SubmitMeta { request_id, prompt_len, max_new, seed, priority: 0, ttft_budget_us: 0 },
+        )
+    }
+
+    /// Full submission path: metadata including the request class the
+    /// admission policies rank by. The relative TTFT budget becomes an
+    /// absolute deadline stamped against the same clock as
+    /// `submit_time_us`, so policy slack math needs no clock exchange
+    /// with the frontend.
+    pub fn submit_with_meta(&self, i: usize, meta: &SubmitMeta) -> u64 {
         let s = &self.slots[i];
         debug_assert_eq!(s.state(), SlotState::FrontendWriting);
         let ticket = self.ticket.fetch_add(1, Ordering::AcqRel);
-        s.request_id.store(request_id, Ordering::Relaxed);
-        s.prompt_len.store(prompt_len, Ordering::Relaxed);
-        s.max_new_tokens.store(max_new, Ordering::Relaxed);
-        s.seed.store(seed, Ordering::Relaxed);
+        let now = crate::util::timer::now_us();
+        s.request_id.store(meta.request_id, Ordering::Relaxed);
+        s.prompt_len.store(meta.prompt_len, Ordering::Relaxed);
+        s.max_new_tokens.store(meta.max_new, Ordering::Relaxed);
+        s.seed.store(meta.seed, Ordering::Relaxed);
+        s.priority.store(meta.priority, Ordering::Relaxed);
+        // Saturating: the budget is client-controlled (HTTP body) and a
+        // huge value must mean "far future", not a wrapped-tiny deadline.
+        let deadline =
+            if meta.ttft_budget_us > 0 { now.saturating_add(meta.ttft_budget_us) } else { 0 };
+        s.ttft_deadline_us.store(deadline, Ordering::Relaxed);
         s.generated.store(0, Ordering::Relaxed);
         s.read_cursor.store(0, Ordering::Relaxed);
         s.ticket.store(ticket, Ordering::Relaxed);
-        s.submit_time_us.store(crate::util::timer::now_us(), Ordering::Relaxed);
+        s.submit_time_us.store(now, Ordering::Relaxed);
         s.set_state(SlotState::PrefillPending); // release: metadata above is visible
         self.pending_hint.fetch_add(1, Ordering::AcqRel);
         ticket
@@ -303,6 +339,59 @@ mod tests {
         }
         let claimed = rb.scan_and_claim(4, 10);
         assert_eq!(claimed, vec![5, 1, 7], "ticket order, not slot order");
+    }
+
+    #[test]
+    fn scan_ignores_priority_metadata_ticket_order_holds() {
+        // The ring itself stays FCFS: class metadata rides along for the
+        // scheduler's admission policy but never reorders the scan.
+        let rb = small();
+        for (n, &i) in [6usize, 0, 4, 2].iter().enumerate() {
+            assert!(rb.claim_for_write(i));
+            rb.write_prompt(i, &[1]);
+            let ticket = rb.submit_with_meta(
+                i,
+                &SubmitMeta {
+                    request_id: i as u64,
+                    prompt_len: 1,
+                    max_new: 4,
+                    seed: 0,
+                    priority: (3 - n as u32) * 2, // descending, disagrees with tickets
+                    ttft_budget_us: if n % 2 == 0 { 50_000 } else { 0 },
+                },
+            );
+            assert_eq!(ticket, n as u64);
+            assert_eq!(rb.slot(i).priority.load(Ordering::Relaxed), (3 - n as u32) * 2);
+        }
+        assert_eq!(rb.scan_pending(4), vec![6, 0, 4, 2], "ticket order, not priority order");
+        assert_eq!(rb.scan_and_claim(4, 10), vec![6, 0, 4, 2]);
+    }
+
+    #[test]
+    fn submit_meta_stamps_deadline_from_budget() {
+        let rb = small();
+        assert!(rb.claim_for_write(1));
+        rb.write_prompt(1, &[9]);
+        rb.submit_with_meta(
+            1,
+            &SubmitMeta {
+                request_id: 7,
+                prompt_len: 1,
+                max_new: 2,
+                seed: 0,
+                priority: 5,
+                ttft_budget_us: 250_000,
+            },
+        );
+        let s = rb.slot(1);
+        let submit = s.submit_time_us.load(Ordering::Relaxed);
+        let deadline = s.ttft_deadline_us.load(Ordering::Relaxed);
+        assert_eq!(deadline, submit + 250_000);
+        // Budget 0 ⇒ deadline 0 (no deadline), via the plain submit path.
+        assert!(rb.claim_for_write(2));
+        rb.write_prompt(2, &[9]);
+        rb.submit(2, 8, 1, 2, 0);
+        assert_eq!(rb.slot(2).ttft_deadline_us.load(Ordering::Relaxed), 0);
     }
 
     #[test]

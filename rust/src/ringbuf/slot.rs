@@ -66,6 +66,13 @@ pub struct Slot {
     pub prompt_len: AtomicU32,
     pub max_new_tokens: AtomicU32,
     pub seed: AtomicU32,
+    /// Request class: higher = more important; 0 = batch/default. Read by
+    /// the scheduler's admission policy (paper's scheduler is FCFS-only;
+    /// this field is what the pluggable policies rank by).
+    pub priority: AtomicU32,
+    /// Absolute TTFT deadline (µs since process epoch); 0 = no deadline.
+    /// Derived from the submitted TTFT budget at publish time.
+    pub ttft_deadline_us: AtomicU64,
     /// Number of generated tokens published to the output arena.
     pub generated: AtomicU32,
     /// Frontend-local progress (tokens already streamed to the client).
@@ -84,6 +91,8 @@ impl Slot {
             prompt_len: AtomicU32::new(0),
             max_new_tokens: AtomicU32::new(0),
             seed: AtomicU32::new(0),
+            priority: AtomicU32::new(0),
+            ttft_deadline_us: AtomicU64::new(0),
             generated: AtomicU32::new(0),
             read_cursor: AtomicU32::new(0),
             submit_time_us: AtomicU64::new(0),

@@ -10,8 +10,8 @@
 use std::sync::Arc;
 
 use crate::frontend::token_reader::ReaderConfig;
-use crate::frontend::{DpuFrontend, FrontendConfig, RequestHandle};
-use crate::gpu::{Executor, Placement, Scheduler, SchedulerConfig};
+use crate::frontend::{DpuFrontend, FrontendConfig, RequestClass, RequestHandle};
+use crate::gpu::{Executor, Placement, PolicyKind, Scheduler, SchedulerConfig};
 use crate::rdma::{RdmaConfig, RdmaEngine};
 use crate::ringbuf::{RingBuffer, RingConfig};
 use crate::runtime::{artifacts_dir, ModelManifest};
@@ -24,6 +24,9 @@ pub struct ServerConfig {
     pub placement: Placement,
     pub rdma: RdmaConfig,
     pub apply_launch_delays: bool,
+    /// Admission policy for the persistent scheduler (`--policy` on the
+    /// CLI). FCFS reproduces the paper.
+    pub policy: PolicyKind,
 }
 
 impl Default for ServerConfig {
@@ -36,6 +39,7 @@ impl Default for ServerConfig {
             placement: Placement::GpuResident,
             rdma: RdmaConfig::default(),
             apply_launch_delays: true,
+            policy: PolicyKind::Fcfs,
         }
     }
 }
@@ -75,6 +79,7 @@ impl BlinkServer {
             SchedulerConfig {
                 placement: config.placement.clone(),
                 apply_launch_delays: config.apply_launch_delays,
+                policy: config.policy,
                 ..Default::default()
             },
         );
@@ -100,6 +105,15 @@ impl BlinkServer {
 
     pub fn submit_tokens(&self, toks: &[u32], max_new: u32) -> Result<RequestHandle, String> {
         self.frontend.submit_tokens(toks, max_new)
+    }
+
+    pub fn submit_tokens_class(
+        &self,
+        toks: &[u32],
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, String> {
+        self.frontend.submit_tokens_class(toks, max_new, class)
     }
 
     /// Drain in-flight work and stop the scheduler (host is allowed back

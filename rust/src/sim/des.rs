@@ -12,12 +12,13 @@
 //! cadence), ITL (per-token gaps incl. prefill pauses — the §3.1 "jitter"
 //! gap between ITL and TPOT), throughput and saturation behaviour.
 
+use crate::gpu::policy::{Candidate, PolicyKind};
 use crate::sim::costmodel::{CostModel, PaperModel};
 use crate::sim::energy::PowerModel;
 use crate::sim::interference::InterferenceProcess;
 use crate::sim::systems::System;
 use crate::util::rng::Rng;
-use crate::workload::{LengthModel, RequestMetrics, TraceGen, TraceRequest, WindowMetrics};
+use crate::workload::{ClassMix, LengthModel, RequestMetrics, TraceGen, TraceRequest, WindowMetrics};
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -32,6 +33,12 @@ pub struct SimConfig {
     pub max_num_seqs: usize,
     /// Max prompts admitted per prefill batch.
     pub max_prefill_batch: usize,
+    /// Admission policy over the schedulable queue — the *same*
+    /// `AdmissionPolicy` implementations the live scheduler runs, so the
+    /// DES exercises the real ranking code. FCFS reproduces the paper.
+    pub policy: PolicyKind,
+    /// Mixed-priority workload; `None` = the single-class `lengths` model.
+    pub classes: Option<ClassMix>,
 }
 
 impl SimConfig {
@@ -46,6 +53,8 @@ impl SimConfig {
             lengths: LengthModel::sharegpt(),
             max_num_seqs: 64,
             max_prefill_batch: 8,
+            policy: PolicyKind::Fcfs,
+            classes: None,
         }
     }
 }
@@ -77,8 +86,13 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let iseed = if cfg.interference { cfg.seed.rotate_left(17) ^ 0xC010C } else { cfg.seed };
     let mut rng = Rng::new(iseed ^ sys_tag(cfg.system));
     let cm = CostModel::new(cfg.model);
-    let gen = TraceGen::new(cfg.lengths, 8192, 4096);
-    let trace = gen.generate(&mut rng.fork(1), cfg.rate, cfg.window_s);
+    let trace = match &cfg.classes {
+        Some(mix) => mix.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096),
+        None => {
+            TraceGen::new(cfg.lengths, 8192, 4096).generate(&mut rng.fork(1), cfg.rate, cfg.window_s)
+        }
+    };
+    let policy = cfg.policy.build();
 
     let interference = if sensitivity > 1.0 {
         InterferenceProcess::new(sensitivity, &mut rng)
@@ -103,21 +117,57 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
 
     let mut t = 0.0f64;
     let mut next_ready = 0usize;
+    // Schedulable queue: (ready_s, request, submission ticket). The
+    // admission policy re-ranks it at every admission opportunity, so
+    // aging and deadline slack are evaluated against the current clock.
+    let mut pending: Vec<(f64, TraceRequest, u64)> = vec![];
+    let mut ticket_ctr = 0u64;
     let mut running: Vec<Run> = vec![];
     let mut done: Vec<RequestMetrics> = vec![];
     let mut gpu_busy_s = 0.0f64;
     let drain_deadline = cfg.window_s * 4.0 + 120.0;
 
-    while (next_ready < ready.len() || !running.is_empty()) && t < drain_deadline {
-        // Admit (FCFS) while capacity allows; prefill in batches.
-        let mut admitted: Vec<TraceRequest> = vec![];
-        while next_ready < ready.len()
-            && ready[next_ready].0 <= t
-            && running.len() + admitted.len() < max_batch
-            && admitted.len() < cfg.max_prefill_batch
-        {
-            admitted.push(ready[next_ready].1);
+    while (next_ready < ready.len() || !pending.is_empty() || !running.is_empty())
+        && t < drain_deadline
+    {
+        // Requests whose admission path finished become schedulable.
+        while next_ready < ready.len() && ready[next_ready].0 <= t {
+            pending.push((ready[next_ready].0, ready[next_ready].1, ticket_ctr));
+            ticket_ctr += 1;
             next_ready += 1;
+        }
+
+        // Admit in policy order while capacity allows; prefill in batches.
+        let free = max_batch.saturating_sub(running.len()).min(cfg.max_prefill_batch);
+        let mut admitted: Vec<TraceRequest> = vec![];
+        if free > 0 && !pending.is_empty() {
+            let now_us = (t * 1e6) as u64;
+            let mut cands: Vec<Candidate> = pending
+                .iter()
+                .enumerate()
+                .map(|(i, (ready_s, r, ticket))| Candidate {
+                    slot: i,
+                    ticket: *ticket,
+                    priority: r.priority,
+                    prompt_len: r.input_tokens as u32,
+                    submit_time_us: (ready_s * 1e6) as u64,
+                    ttft_deadline_us: if r.ttft_budget_s > 0.0 {
+                        ((ready_s + r.ttft_budget_s) * 1e6) as u64
+                    } else {
+                        0
+                    },
+                })
+                .collect();
+            policy.order(&mut cands, now_us);
+            let chosen: Vec<usize> = cands.iter().take(free).map(|c| c.slot).collect();
+            for &i in &chosen {
+                admitted.push(pending[i].1);
+            }
+            let mut remove_idx = chosen;
+            remove_idx.sort_unstable();
+            for i in remove_idx.into_iter().rev() {
+                pending.remove(i);
+            }
         }
         if !admitted.is_empty() {
             // Pause decode, run one prefill batch (paper policy), resume.
@@ -194,6 +244,8 @@ fn retire(running: &mut Vec<Run>, done: &mut Vec<RequestMetrics>) {
                 input_tokens: r.req.input_tokens,
                 output_tokens: r.req.output_tokens,
                 itl_s: r.itl_s,
+                priority: r.req.priority,
+                ttft_budget_s: r.req.ttft_budget_s,
             });
         } else {
             i += 1;

@@ -7,11 +7,12 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::gpu::policy::PolicyKind;
 use crate::sim::costmodel::{PaperModel, PAPER_MODELS};
 use crate::sim::des::{simulate, SimConfig};
 use crate::sim::systems::{System, ALL_SYSTEMS};
 use crate::util::stats::{geomean, saturation_index};
-use crate::workload::WindowMetrics;
+use crate::workload::{ClassMix, WindowMetrics};
 
 /// guidellm-style sweep levels (13 levels, 1..32 req/s).
 pub fn load_levels() -> Vec<f64> {
@@ -134,6 +135,93 @@ pub fn run_sweep(models: &[PaperModel], window_s: f64, threads: usize) -> SweepR
     SweepResults { levels, points: results.into_inner().unwrap() }
 }
 
+// ---------------------------------------------------------------------------
+// Policy-comparison sweep: Blink under the mixed interactive/batch load,
+// one curve per admission policy.
+// ---------------------------------------------------------------------------
+
+/// Load levels for the policy comparison: from comfortable to clearly
+/// saturating for Blink on the dense 8B model (~16 req/s knee under the
+/// mixed load).
+pub fn policy_load_levels() -> Vec<f64> {
+    vec![4.0, 8.0, 12.0, 16.0, 20.0, 24.0]
+}
+
+pub struct PolicySweepResults {
+    pub model: PaperModel,
+    pub levels: Vec<f64>,
+    /// Exactly the mix the sweep simulated (threaded into every config).
+    pub mix: ClassMix,
+    /// Exactly the policies the sweep ran, in run order.
+    pub policies: Vec<PolicyKind>,
+    pub points: HashMap<(PolicyKind, usize), WindowMetrics>,
+}
+
+impl PolicySweepResults {
+    pub fn get(&self, policy: PolicyKind, level: usize) -> &WindowMetrics {
+        self.points.get(&(policy, level)).expect("policy sweep point")
+    }
+}
+
+/// Build the SimConfig for one policy-comparison point (shared by the
+/// sweep and the targeted regression test below).
+pub fn policy_point_config(
+    model: PaperModel,
+    policy: PolicyKind,
+    rate: f64,
+    window_s: f64,
+    mix: &ClassMix,
+) -> SimConfig {
+    let mut cfg = SimConfig::new(System::Blink, model, rate, false);
+    cfg.window_s = window_s;
+    cfg.policy = policy;
+    cfg.classes = Some(mix.clone());
+    cfg
+}
+
+/// Run the policy comparison: Blink × the mixed interactive/batch
+/// workload × all four admission policies (or one, via `only`) × the
+/// policy load levels. Points are independent sims, sharded across
+/// threads like the main sweep.
+pub fn run_policy_sweep(
+    model: PaperModel,
+    window_s: f64,
+    threads: usize,
+    only: Option<PolicyKind>,
+) -> PolicySweepResults {
+    let levels = policy_load_levels();
+    let mix = ClassMix::interactive_batch();
+    let policies: Vec<PolicyKind> = match only {
+        Some(p) => vec![p],
+        None => PolicyKind::ALL.to_vec(),
+    };
+    let mut work: Vec<((PolicyKind, usize), SimConfig)> = vec![];
+    for &policy in &policies {
+        for (level, rate) in levels.iter().enumerate() {
+            work.push((
+                (policy, level),
+                policy_point_config(model, policy, *rate, window_s, &mix),
+            ));
+        }
+    }
+    let results: Mutex<HashMap<(PolicyKind, usize), WindowMetrics>> = Mutex::new(HashMap::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (key, cfg) = &work[i];
+                let wm = simulate(cfg);
+                results.lock().unwrap().insert(*key, wm);
+            });
+        }
+    });
+    PolicySweepResults { model, levels, mix, policies, points: results.into_inner().unwrap() }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +242,45 @@ mod tests {
         let v_ret = r.get(System::Vllm, "llama3-8b", true, 5).req_throughput
             / r.get(System::Vllm, "llama3-8b", false, 5).req_throughput.max(1e-9);
         assert!(b_ret > v_ret, "blink {b_ret} vllm {v_ret}");
+    }
+
+    /// The acceptance criterion of the staged-pipeline refactor: under a
+    /// saturating mixed workload, the aging-priority policy holds the
+    /// interactive class's P99 TTFT far below FCFS (which queues
+    /// interactive requests behind the batch backlog indiscriminately).
+    #[test]
+    fn priority_aged_beats_fcfs_for_interactive_class_under_saturation() {
+        let window = 25.0;
+        let rate = 24.0; // well past the ~16 req/s knee for llama3-8b
+        let mix = ClassMix::interactive_batch();
+        let fcfs =
+            simulate(&policy_point_config(LLAMA3_8B, PolicyKind::Fcfs, rate, window, &mix));
+        let aged = simulate(&policy_point_config(
+            LLAMA3_8B,
+            PolicyKind::PriorityAged,
+            rate,
+            window,
+            &mix,
+        ));
+        let fi = fcfs.class(4).expect("interactive completed under fcfs").ttft.p99;
+        let ai = aged.class(4).expect("interactive completed under priority-aged").ttft.p99;
+        assert!(
+            ai < 0.8 * fi,
+            "priority-aged interactive P99 TTFT {ai:.0} ms must beat fcfs {fi:.0} ms"
+        );
+        // FCFS treats the classes identically, so its interactive class
+        // must be saturating too (sanity that the load is actually mixed
+        // *and* saturating, not that priority-aged won by luck).
+        assert!(fi > 1_000.0, "fcfs interactive P99 {fi:.0} ms should show queueing");
+    }
+
+    #[test]
+    fn policy_sweep_structure_and_slo_policy() {
+        // One level, two policies, small window: structural smoke test.
+        let r = run_policy_sweep(LLAMA3_8B, 10.0, 4, Some(PolicyKind::SloAware));
+        assert_eq!(r.points.len(), policy_load_levels().len());
+        let wm = r.get(PolicyKind::SloAware, 0);
+        assert!(wm.completed > 0);
+        assert!(wm.class(4).is_some() && wm.class(0).is_some(), "both classes reported");
     }
 }

@@ -54,6 +54,10 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub input_tokens: usize,
     pub output_tokens: usize,
+    /// Request class: higher = more important; 0 = batch/default.
+    pub priority: u32,
+    /// Relative TTFT budget in seconds; 0 = no deadline.
+    pub ttft_budget_s: f64,
 }
 
 pub struct TraceGen {
@@ -69,19 +73,118 @@ impl TraceGen {
 
     /// Poisson arrivals at `rate` req/s over `window_s` seconds.
     pub fn generate(&self, rng: &mut Rng, rate: f64, window_s: f64) -> Vec<TraceRequest> {
-        let mut out = vec![];
-        let mut t = 0.0;
-        let mut id = 0;
-        loop {
-            t += rng.exp(rate);
-            if t >= window_s {
-                break;
-            }
+        poisson_trace(rng, rate, window_s, |rng| {
             let (i, o) = self.lengths.sample(rng, self.max_in, self.max_out);
-            out.push(TraceRequest { id, arrival_s: t, input_tokens: i, output_tokens: o });
-            id += 1;
+            (i, o, 0, 0.0)
+        })
+    }
+}
+
+/// The one Poisson arrival loop shared by the single-class and mixed
+/// generators: `sample` draws `(input, output, priority, ttft_budget_s)`
+/// per arrival.
+fn poisson_trace<F>(rng: &mut Rng, rate: f64, window_s: f64, mut sample: F) -> Vec<TraceRequest>
+where
+    F: FnMut(&mut Rng) -> (usize, usize, u32, f64),
+{
+    let mut out = vec![];
+    let mut t = 0.0;
+    let mut id = 0;
+    loop {
+        t += rng.exp(rate);
+        if t >= window_s {
+            break;
         }
-        out
+        let (i, o, priority, ttft_budget_s) = sample(rng);
+        out.push(TraceRequest {
+            id,
+            arrival_s: t,
+            input_tokens: i,
+            output_tokens: o,
+            priority,
+            ttft_budget_s,
+        });
+        id += 1;
+    }
+    out
+}
+
+/// One priority class of a mixed workload.
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    pub name: &'static str,
+    /// Base priority (higher = more important).
+    pub priority: u32,
+    /// TTFT budget in ms; 0 = no deadline.
+    pub ttft_budget_ms: f64,
+    /// Relative arrival weight (normalized over the mix).
+    pub weight: f64,
+    pub lengths: LengthModel,
+}
+
+/// Mixed-priority workload generator: Poisson arrivals whose class is
+/// drawn per request by weight — the interactive-vs-batch colocation
+/// scenario the policy comparison sweep runs (the scheduling dimension
+/// "Serving Hybrid LLM Loads with SLO Guarantees" shows dominates tail
+/// latency under mixed loads).
+#[derive(Debug, Clone)]
+pub struct ClassMix {
+    pub classes: Vec<ClassSpec>,
+}
+
+impl ClassMix {
+    /// The canonical hybrid load: 30 % interactive (short chat-style
+    /// prompts, priority 4, 300 ms TTFT budget) + 70 % batch (full
+    /// ShareGPT lengths, priority 0, no deadline).
+    pub fn interactive_batch() -> ClassMix {
+        ClassMix {
+            classes: vec![
+                ClassSpec {
+                    name: "interactive",
+                    priority: 4,
+                    ttft_budget_ms: 300.0,
+                    weight: 0.3,
+                    lengths: LengthModel::ShareGpt { in_mean: 128.0, out_mean: 96.0, cv: 0.8 },
+                },
+                ClassSpec {
+                    name: "batch",
+                    priority: 0,
+                    ttft_budget_ms: 0.0,
+                    weight: 0.7,
+                    lengths: LengthModel::sharegpt(),
+                },
+            ],
+        }
+    }
+
+    fn sample_class(&self, rng: &mut Rng) -> &ClassSpec {
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut x = rng.f64() * total;
+        for c in &self.classes {
+            if x < c.weight {
+                return c;
+            }
+            x -= c.weight;
+        }
+        self.classes.last().expect("non-empty mix")
+    }
+
+    /// Poisson arrivals at `rate` req/s over `window_s`, class drawn per
+    /// request.
+    pub fn generate(
+        &self,
+        rng: &mut Rng,
+        rate: f64,
+        window_s: f64,
+        max_in: usize,
+        max_out: usize,
+    ) -> Vec<TraceRequest> {
+        assert!(!self.classes.is_empty(), "empty class mix");
+        poisson_trace(rng, rate, window_s, |rng| {
+            let class = self.sample_class(rng);
+            let (i, o) = class.lengths.sample(rng, max_in, max_out);
+            (i, o, class.priority, class.ttft_budget_ms / 1e3)
+        })
     }
 }
 
@@ -97,6 +200,9 @@ pub struct RequestMetrics {
     pub output_tokens: usize,
     /// Inter-token gaps (seconds); empty for single-token outputs.
     pub itl_s: Vec<f64>,
+    /// Request class (mirrors [`TraceRequest`]).
+    pub priority: u32,
+    pub ttft_budget_s: f64,
 }
 
 impl RequestMetrics {
@@ -110,6 +216,20 @@ impl RequestMetrics {
         }
         (self.finish_s - self.first_token_s) / (self.output_tokens - 1) as f64 * 1e3
     }
+}
+
+/// Per-priority-class TTFT summary (the policy comparison's unit of
+/// report: which class pays the queueing under each admission policy).
+#[derive(Debug, Clone, Default)]
+pub struct ClassTtft {
+    pub priority: u32,
+    /// Requests measured for this class — the full drained population,
+    /// not just window-completed ones (see `from_requests`).
+    pub measured: usize,
+    pub ttft: LatencySummary,
+    /// Fraction of completed requests carrying a TTFT budget that met
+    /// it; NaN when no request in the class has a budget.
+    pub slo_attainment: f64,
 }
 
 /// Aggregate over one measurement window.
@@ -126,6 +246,9 @@ pub struct WindowMetrics {
     pub prefill_tok_s: f64,
     /// Wall energy per generated token, mJ (filled by the energy model).
     pub energy_mj_per_tok: f64,
+    /// Per-priority-class TTFT, highest priority first (single-class
+    /// workloads produce one entry with priority 0).
+    pub ttft_by_class: Vec<ClassTtft>,
 }
 
 impl WindowMetrics {
@@ -148,6 +271,47 @@ impl WindowMetrics {
             done.iter().flat_map(|r| r.itl_s.iter().map(|s| s * 1e3)).collect();
         let out_tokens: usize = done.iter().map(|r| r.output_tokens).sum();
         let in_tokens: usize = done.iter().map(|r| r.input_tokens).sum();
+
+        // Per-priority-class TTFT, highest priority first. Unlike the
+        // throughput accounting above, class summaries cover *every*
+        // measured request (including ones finishing in the drain past
+        // the window): restricting to the window would censor exactly
+        // the starved requests the policy comparison is about, and
+        // overstate the starving policy's tail and SLO attainment.
+        let mut prios: Vec<u32> = reqs.iter().map(|r| r.priority).collect();
+        prios.sort_unstable();
+        prios.dedup();
+        let ttft_by_class: Vec<ClassTtft> = prios
+            .iter()
+            .rev()
+            .map(|&p| {
+                let samples: Vec<f64> =
+                    reqs.iter().filter(|r| r.priority == p).map(|r| r.ttft_ms()).collect();
+                let with_budget = reqs
+                    .iter()
+                    .filter(|r| r.priority == p && r.ttft_budget_s > 0.0)
+                    .count();
+                let met = reqs
+                    .iter()
+                    .filter(|r| {
+                        r.priority == p
+                            && r.ttft_budget_s > 0.0
+                            && r.ttft_ms() <= r.ttft_budget_s * 1e3
+                    })
+                    .count();
+                ClassTtft {
+                    priority: p,
+                    measured: samples.len(),
+                    ttft: LatencySummary::from_samples(&samples),
+                    slo_attainment: if with_budget == 0 {
+                        f64::NAN
+                    } else {
+                        met as f64 / with_budget as f64
+                    },
+                }
+            })
+            .collect();
+
         WindowMetrics {
             offered_rate,
             window_s,
@@ -159,7 +323,14 @@ impl WindowMetrics {
             decode_tok_s: out_tokens as f64 / window_s,
             prefill_tok_s: in_tokens as f64 / window_s,
             energy_mj_per_tok: 0.0,
+            ttft_by_class,
         }
+    }
+
+    /// The class summary for `priority`, if any request of that class
+    /// completed in the window.
+    pub fn class(&self, priority: u32) -> Option<&ClassTtft> {
+        self.ttft_by_class.iter().find(|c| c.priority == priority)
     }
 }
 
@@ -211,6 +382,8 @@ mod tests {
             input_tokens: 10,
             output_tokens: 11,
             itl_s: vec![0.1; 10],
+            priority: 0,
+            ttft_budget_s: 0.0,
         };
         assert!((r.ttft_ms() - 500.0).abs() < 1e-9);
         assert!((r.tpot_ms() - 100.0).abs() < 1e-9);
@@ -226,9 +399,58 @@ mod tests {
             input_tokens: 5,
             output_tokens: 2,
             itl_s: vec![0.01],
+            priority: 0,
+            ttft_budget_s: 0.0,
         };
         let w = WindowMetrics::from_requests(1.0, 10.0, &[mk(5.0), mk(20.0)]);
         assert_eq!(w.completed, 1);
         assert!((w.req_throughput - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_mix_weights_and_fields() {
+        let mix = ClassMix::interactive_batch();
+        let mut rng = Rng::new(7);
+        let reqs = mix.generate(&mut rng, 40.0, 500.0, 8192, 4096);
+        let inter: Vec<&TraceRequest> = reqs.iter().filter(|r| r.priority == 4).collect();
+        let batch: Vec<&TraceRequest> = reqs.iter().filter(|r| r.priority == 0).collect();
+        assert_eq!(inter.len() + batch.len(), reqs.len());
+        let frac = inter.len() as f64 / reqs.len() as f64;
+        assert!((frac - 0.3).abs() < 0.05, "interactive fraction {frac}");
+        assert!(inter.iter().all(|r| (r.ttft_budget_s - 0.3).abs() < 1e-12));
+        assert!(batch.iter().all(|r| r.ttft_budget_s == 0.0));
+        // Interactive prompts are much shorter on average.
+        let mi = inter.iter().map(|r| r.input_tokens as f64).sum::<f64>() / inter.len() as f64;
+        let mb = batch.iter().map(|r| r.input_tokens as f64).sum::<f64>() / batch.len() as f64;
+        assert!(mi * 3.0 < mb, "interactive mean {mi} vs batch mean {mb}");
+    }
+
+    #[test]
+    fn per_class_window_metrics() {
+        let mk = |prio: u32, ttft_s: f64, budget: f64| RequestMetrics {
+            id: 0,
+            arrival_s: 0.0,
+            first_token_s: ttft_s,
+            finish_s: ttft_s + 1.0,
+            input_tokens: 5,
+            output_tokens: 2,
+            itl_s: vec![0.01],
+            priority: prio,
+            ttft_budget_s: budget,
+        };
+        let w = WindowMetrics::from_requests(
+            1.0,
+            10.0,
+            &[mk(4, 0.1, 0.3), mk(4, 0.5, 0.3), mk(0, 2.0, 0.0)],
+        );
+        assert_eq!(w.ttft_by_class.len(), 2);
+        assert_eq!(w.ttft_by_class[0].priority, 4, "highest priority first");
+        let inter = w.class(4).unwrap();
+        assert_eq!(inter.measured, 2);
+        assert!((inter.slo_attainment - 0.5).abs() < 1e-12, "one of two met 300ms");
+        let batch = w.class(0).unwrap();
+        assert_eq!(batch.measured, 1);
+        assert!(batch.slo_attainment.is_nan(), "no budgets in batch class");
+        assert!((batch.ttft.p50 - 2000.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,149 @@
+//! Integration: ring buffer → candidate snapshot → admission policy,
+//! exercising the scheduler pipeline's first three stages against a real
+//! ring (no artifacts needed — the executor stages are covered by
+//! `scheduler_e2e.rs`). Extends `scan_claims_in_fcfs_ticket_order`: the
+//! ring scan stays FCFS no matter what class metadata rides along; the
+//! *policy* stage is where reordering happens, and only for the
+//! non-FCFS policies.
+
+use std::sync::atomic::Ordering;
+
+use blink::gpu::policy::{
+    AdmissionPolicy, Candidate, Fcfs, PriorityAged, ShortestPromptFirst, SloAware,
+};
+use blink::ringbuf::{RingBuffer, RingConfig, SubmitMeta};
+use blink::util::prop::run_prop;
+use blink::util::rng::Rng;
+
+fn ring() -> RingBuffer {
+    RingBuffer::new(RingConfig { num_slots: 64, max_prompt: 64, max_output: 16 })
+}
+
+fn submit(ring: &RingBuffer, slot: usize, prompt_len: u32, priority: u32, budget_us: u64) -> u64 {
+    assert!(ring.claim_for_write(slot));
+    let prompt: Vec<u32> = (0..prompt_len).collect();
+    ring.write_prompt(slot, &prompt);
+    ring.submit_with_meta(
+        slot,
+        &SubmitMeta {
+            request_id: slot as u64,
+            prompt_len,
+            max_new: 4,
+            seed: 0,
+            priority,
+            ttft_budget_us: budget_us,
+        },
+    )
+}
+
+/// Scrambled slot order + adversarial class metadata: FCFS admission
+/// must still follow submission tickets exactly.
+#[test]
+fn fcfs_preserves_ticket_order_under_scrambled_submission() {
+    let rb = ring();
+    let mut rng = Rng::new(0xF1F0);
+    let mut slots: Vec<usize> = (0..32).collect();
+    rng.shuffle(&mut slots);
+    let mut expected: Vec<(u64, usize)> = vec![];
+    for &s in &slots {
+        // Priorities and deadlines chosen to *disagree* with ticket order.
+        let ticket = submit(&rb, s, 1 + (s as u32 % 17), 7 - (s as u32 % 8).min(7), 1_000);
+        expected.push((ticket, s));
+    }
+    expected.sort_unstable();
+
+    let pending = rb.scan_pending(256);
+    let mut cands = Candidate::collect(&rb, &pending);
+    Fcfs.order(&mut cands, blink::util::timer::now_us());
+    let got: Vec<usize> = cands.iter().map(|c| c.slot).collect();
+    let want: Vec<usize> = expected.iter().map(|(_, s)| *s).collect();
+    assert_eq!(got, want, "fcfs must reproduce submission ticket order");
+
+    // And the claim path (scan_and_claim) agrees.
+    assert_eq!(rb.scan_and_claim(256, 64), want);
+}
+
+#[test]
+fn candidates_carry_class_metadata_from_the_ring() {
+    let rb = ring();
+    submit(&rb, 3, 17, 5, 250_000);
+    let cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    assert_eq!(cands.len(), 1);
+    let c = cands[0];
+    assert_eq!(c.slot, 3);
+    assert_eq!(c.priority, 5);
+    assert_eq!(c.prompt_len, 17);
+    let s = rb.slot(3);
+    assert_eq!(c.submit_time_us, s.submit_time_us.load(Ordering::Relaxed));
+    assert_eq!(c.ttft_deadline_us, c.submit_time_us + 250_000);
+}
+
+#[test]
+fn priority_aged_reorders_ring_candidates_by_class() {
+    let rb = ring();
+    // Submit low-priority first (earlier tickets), then high-priority.
+    for s in 0..4 {
+        submit(&rb, s, 8, 0, 0);
+    }
+    for s in 4..6 {
+        submit(&rb, s, 8, 6, 0);
+    }
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    PriorityAged::default().order(&mut cands, blink::util::timer::now_us());
+    let order: Vec<usize> = cands.iter().map(|c| c.slot).collect();
+    assert_eq!(&order[..2], &[4, 5], "high-priority submissions jump ahead");
+    assert_eq!(&order[2..], &[0, 1, 2, 3], "FCFS within the low-priority class");
+}
+
+#[test]
+fn sjf_and_slo_rank_ring_candidates_as_documented() {
+    let rb = ring();
+    submit(&rb, 0, 40, 0, 0); // long prompt, no deadline
+    submit(&rb, 1, 4, 0, 0); // short prompt, no deadline
+    submit(&rb, 2, 20, 0, 10_000); // tight deadline
+    let now = blink::util::timer::now_us();
+
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    ShortestPromptFirst.order(&mut cands, now);
+    assert_eq!(cands.iter().map(|c| c.slot).collect::<Vec<_>>(), vec![1, 2, 0]);
+
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    SloAware::default().order(&mut cands, now);
+    assert_eq!(cands[0].slot, 2, "tight deadline first under slo-aware");
+}
+
+/// Pipeline-level anti-starvation property (the policy-unit variant
+/// lives in `gpu::policy`): randomized submissions through the *ring*,
+/// ranked at a future clock — every candidate older than the starvation
+/// cap precedes every younger one.
+#[test]
+fn prop_ring_candidates_respect_starvation_cap() {
+    let p = PriorityAged::default();
+    run_prop("ring_starvation_cap", 0x51A7, 40, |rng| {
+        let rb = ring();
+        let n = 2 + rng.below(20) as usize;
+        for s in 0..n {
+            submit(
+                &rb,
+                s,
+                1 + rng.below(60) as u32,
+                rng.below(8) as u32,
+                if rng.below(2) == 0 { 0 } else { 1_000 + rng.below(1 << 20) },
+            );
+        }
+        let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+        // Evaluate at a virtual future clock so a random subset of the
+        // submissions has crossed the starvation cap.
+        let base = blink::util::timer::now_us();
+        let now = base + rng.below(2 * p.starvation_cap_us);
+        p.order(&mut cands, now);
+        let starved = cands.iter().filter(|c| c.age_us(now) >= p.starvation_cap_us).count();
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(
+                c.age_us(now) >= p.starvation_cap_us,
+                i < starved,
+                "starved candidates must form the admission prefix"
+            );
+        }
+    });
+}

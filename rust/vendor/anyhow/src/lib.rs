@@ -1,0 +1,171 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored so the
+//! workspace builds in offline environments (crates.io is unreachable in
+//! the reproduction container). Covers exactly what the blink crate uses:
+//! `Error`, `Result`, `anyhow!`, `bail!`, and the `Context` extension
+//! trait for `Result` and `Option`, including `{e}` / `{e:#}` formatting
+//! of context chains.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional chain of wrapped causes.
+/// Like the real `anyhow::Error`, this intentionally does NOT implement
+/// `std::error::Error`, which is what allows the blanket `From` below.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Outermost message (no chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full context chain, outermost first.
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs: Vec<String> = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, or from any `Display`
+/// value (`anyhow!(err)`), mirroring the real macro's arms.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    #[test]
+    fn chain_formatting() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: inner");
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing value");
+        assert_eq!(format!("{}", r.unwrap_err()), "missing value");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<i32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through {}", 7))
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "fell through 7");
+        // Expression arm: any Display value.
+        let owned = String::from("owned message");
+        assert_eq!(format!("{}", anyhow!(owned)), "owned message");
+    }
+}

@@ -1,0 +1,131 @@
+//! Stub of the `xla` (PJRT) bindings, vendored so the workspace builds
+//! without the native XLA/PJRT toolchain. The API surface matches what
+//! `blink::runtime` uses; every entry point reports a clear
+//! "PJRT unavailable" error at *runtime*, and `PjRtClient::cpu()` fails
+//! first, so `Engine::load` returns an error before any other stub method
+//! can be reached. Integration tests check for AOT artifacts before
+//! loading an engine and skip when absent, which keeps `cargo test` green
+//! on machines without the real bindings; swapping this path dependency
+//! for the real `xla` crate re-enables live execution with no source
+//! changes in `blink`.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime not linked (stub `xla` crate; vendor the real bindings to run live)"
+    ))
+}
+
+/// Marker trait mirrored from the real crate (used for npz loading).
+pub trait FromRawBytes: Sized {}
+
+impl FromRawBytes for f32 {}
+impl FromRawBytes for i32 {}
+impl FromRawBytes for u32 {}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn read_npz_by_name<P: AsRef<Path>>(
+        _path: P,
+        _client: &PjRtClient,
+        _names: &[&str],
+    ) -> Result<Vec<PjRtBuffer>> {
+        Err(unavailable("PjRtBuffer::read_npz_by_name"))
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b_untupled(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b_untupled"))
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+}

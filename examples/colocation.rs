@@ -30,7 +30,14 @@ fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
         ring.clone(),
         executor,
         manifest,
-        SchedulerConfig { placement, apply_launch_delays: true, ..Default::default() },
+        // prefix_reuse off: this example reproduces the paper's
+        // interference comparison, which runs without prefix caching.
+        SchedulerConfig {
+            placement,
+            apply_launch_delays: true,
+            prefix_reuse: false,
+            ..Default::default()
+        },
     );
 
     let interferer = if interfere {

@@ -1,0 +1,89 @@
+//! Longest-prefix-match cost of the KV prefix index at 10k cached
+//! blocks (200 conversations × 50 full blocks): the per-admission work
+//! the prefix-reuse path adds to the scheduler loop. Also times the
+//! admit/release cycle with sharing. No artifacts needed.
+
+use blink::kvcache::{KvConfig, KvManager};
+use blink::util::timer::bench;
+use std::time::Duration;
+
+const BS: usize = 16;
+const SESSIONS: u32 = 200;
+const BLOCKS_PER_SESSION: usize = 50;
+
+/// Deterministic per-session token stream, `n` tokens.
+fn session_tokens(session: u32, n: usize) -> Vec<u32> {
+    (0..n as u32).map(|i| session.wrapping_mul(1_000_003).wrapping_add(i)).collect()
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let cfg = KvConfig {
+        block_size: BS,
+        // Room for every session's full reservation plus slack, so the
+        // bench measures lookup cost, not eviction churn.
+        num_blocks: SESSIONS as usize * (BLOCKS_PER_SESSION + 2) + 64,
+        max_blocks_per_seq: BLOCKS_PER_SESSION + 2,
+    };
+    let mut m = KvManager::new(cfg);
+
+    // Populate: 200 sessions × 50 indexable blocks = 10_000 cached
+    // blocks, all parked (refcount 0) like a steady-state prefix cache.
+    let prompt_len = BS * BLOCKS_PER_SESSION + 1; // +1 keeps a suffix token
+    let mut held = vec![];
+    for s in 0..SESSIONS {
+        let toks = session_tokens(s, prompt_len);
+        let cache = m.admit_reuse(&toks, prompt_len, 4).expect("pool sized for the working set");
+        m.index_prompt(&cache, &toks); // prefill "succeeded": commit
+        held.push(cache);
+    }
+    for cache in held {
+        m.release(cache);
+    }
+    println!(
+        "indexed blocks: {} (evictable {}, free {})",
+        m.stats.indexed_blocks,
+        m.evictable_blocks(),
+        m.free_blocks()
+    );
+
+    // Full-depth hit: walks all 50 blocks of one session's chain.
+    let hit_prompt = session_tokens(SESSIONS / 2, prompt_len);
+    bench(
+        &format!("prefix/match hit ({BLOCKS_PER_SESSION} blocks @ 10k cached)"),
+        100,
+        budget,
+        || {
+            let pm = m.match_prefix(&hit_prompt);
+            assert_eq!(pm.blocks.len(), BLOCKS_PER_SESSION);
+            std::hint::black_box(pm);
+        },
+    );
+
+    // First-block miss: the cold-prompt fast path (one hash + probe).
+    let miss_prompt = session_tokens(SESSIONS + 7, prompt_len);
+    bench("prefix/match miss (cold prompt @ 10k cached)", 100, budget, || {
+        let pm = m.match_prefix(&miss_prompt);
+        assert_eq!(pm.blocks.len(), 0);
+        std::hint::black_box(pm);
+    });
+
+    // Mid-chain divergence: shared first half, forked second half.
+    let mut fork_prompt = session_tokens(SESSIONS / 2, prompt_len);
+    for t in fork_prompt.iter_mut().skip(BS * BLOCKS_PER_SESSION / 2) {
+        *t ^= 0x8000_0000;
+    }
+    bench("prefix/match fork (25/50 blocks @ 10k cached)", 100, budget, || {
+        let pm = m.match_prefix(&fork_prompt);
+        assert_eq!(pm.blocks.len(), BLOCKS_PER_SESSION / 2);
+        std::hint::black_box(pm);
+    });
+
+    // End-to-end admit(hit)+release cycle — the scheduler's actual
+    // per-admission reuse cost (match + refcount + tail reservation).
+    bench("prefix/admit+release hit cycle", 50, budget, || {
+        let cache = m.admit_reuse(&hit_prompt, BS, 4).expect("admit");
+        std::hint::black_box(&cache);
+        m.release(cache);
+    });
+}

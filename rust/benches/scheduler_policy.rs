@@ -29,6 +29,7 @@ fn main() {
                 seed: 0,
                 priority: rng.below(8) as u32,
                 ttft_budget_us: if rng.below(2) == 0 { 0 } else { 1_000 + rng.below(1 << 20) },
+                session_id: 0,
             },
         );
     }

@@ -35,7 +35,14 @@ fn run_makespan(model: &str, placement: Placement, n: usize, input: usize, outpu
         ring.clone(),
         executor,
         manifest,
-        SchedulerConfig { placement, apply_launch_delays: true, ..Default::default() },
+        // prefix_reuse off: Fig 3 is the paper's controlled placement
+        // comparison, which runs without prefix caching (DESIGN.md §7).
+        SchedulerConfig {
+            placement,
+            apply_launch_delays: true,
+            prefix_reuse: false,
+            ..Default::default()
+        },
     );
 
     let mut rng = Rng::new(42);

@@ -11,12 +11,18 @@
 //!   cycle, urgent-slot prioritization for TTFT, adaptive polling
 //!   ([`token_reader`]);
 //! * tokenizer — `crate::tokenizer::blink` (shared, zero-alloc request
-//!   path).
+//!   path);
+//! * session store — per-conversation token history kept on the DPU so a
+//!   multi-turn client resubmits only its *new* text each turn: the
+//!   frontend reuses the already-tokenized history (no re-tokenization)
+//!   and the GPU-side prefix index (DESIGN.md §7) turns the shared
+//!   history into a KV-cache hit.
 
 pub mod slot_tracker;
 pub mod token_reader;
 pub mod tracker;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
@@ -51,6 +57,21 @@ pub struct RequestClass {
 impl RequestClass {
     pub fn interactive(ttft_budget_us: u64) -> RequestClass {
         RequestClass { priority: 4, ttft_budget_us }
+    }
+}
+
+/// Stable non-zero tag for a client session id (FNV-1a; 0 is reserved
+/// for "no session" end-to-end, so a hash of 0 is nudged to 1).
+pub fn session_key(id: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in id.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    if h == 0 {
+        1
+    } else {
+        h
     }
 }
 
@@ -89,7 +110,57 @@ pub struct DpuFrontend {
     next_id: AtomicU64,
     config: FrontendConfig,
     seed_ctr: AtomicU32,
+    /// Per-session token history (prompt + generated tokens of previous
+    /// turns), keyed by the *client's session-id string* — not its hash,
+    /// so colliding ids can never merge (or leak) two conversations; the
+    /// [`session_key`] hash is only the GPU-plane telemetry tag. Lives
+    /// on the DPU plane, like the tokenizer: the backend only ever sees
+    /// full token sequences. Each entry carries a last-use tick; the
+    /// store is capped at [`MAX_SESSIONS`], reclaiming only idle
+    /// sessions.
+    sessions: Mutex<HashMap<String, SessionEntry>>,
+    session_tick: AtomicU64,
 }
+
+/// One conversation's DPU-side state.
+#[derive(Debug)]
+struct SessionEntry {
+    tokens: Vec<u32>,
+    /// Last-use tick for LRU ordering.
+    tick: u64,
+    /// Wall-clock last use, for the idle-eviction threshold.
+    last_use: std::time::Instant,
+    /// Set when the stored history stopped matching the real
+    /// conversation — a reply no longer fit the prompt arena, or a turn
+    /// failed after its text was recorded ([`DpuFrontend::poison_session`]).
+    /// Further turns are refused rather than served against a silently
+    /// wrong history.
+    overflowed: bool,
+}
+
+impl SessionEntry {
+    /// Append `tokens`, or mark the entry overflowed when they no
+    /// longer fit `max` (the prompt arena capacity).
+    fn append(&mut self, tokens: &[u32], max: usize) {
+        if self.tokens.len() + tokens.len() <= max {
+            self.tokens.extend_from_slice(tokens);
+        } else {
+            self.overflowed = true;
+        }
+    }
+}
+
+/// Upper bound on retained session histories. Worst case is
+/// `MAX_SESSIONS × max_prompt × 4` bytes of DPU memory — 8 MB for the
+/// tiny live model (512-token arena), 128 MB at the paper models'
+/// 8192-token contexts; BlueField-3 carries 32 GB. At capacity, only
+/// sessions idle for [`SESSION_IDLE_EVICT`] are reclaimed (LRU); new
+/// sessions are refused when nothing is idle, so an active
+/// conversation's context is never silently dropped.
+pub const MAX_SESSIONS: usize = 4096;
+
+/// Idle threshold before a session at capacity may be evicted.
+pub const SESSION_IDLE_EVICT: std::time::Duration = std::time::Duration::from_secs(600);
 
 impl DpuFrontend {
     pub fn new(
@@ -126,6 +197,8 @@ impl DpuFrontend {
             next_id: AtomicU64::new(1),
             config,
             seed_ctr: AtomicU32::new(0x5EED),
+            sessions: Mutex::new(HashMap::new()),
+            session_tick: AtomicU64::new(1),
         }
     }
 
@@ -153,9 +226,154 @@ impl DpuFrontend {
         self.submit_tokens_class(tokens, max_new, RequestClass::default())
     }
 
+    /// Tokenize and submit one turn of a multi-turn conversation. With a
+    /// session id, the stored token history of previous turns is
+    /// *prepended* (already tokenized — the DPU never re-tokenizes
+    /// history) and the new turn's tokens are appended to the store on
+    /// successful submission. Generated tokens are added by the caller
+    /// via [`DpuFrontend::record_session_reply`] once the turn finishes,
+    /// so the next turn's prompt covers the full conversation.
+    pub fn submit_text_session(
+        &self,
+        session: Option<&str>,
+        text: &str,
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, String> {
+        let mut new_toks = Vec::with_capacity(text.len() / 3 + 4);
+        self.tokenizer.encode(text, &mut new_toks);
+        let Some(sid) = session else {
+            return self.submit_tokens_full(0, &new_toks, max_new, class);
+        };
+        let key = session_key(sid);
+        let full: Vec<u32> = {
+            let mut sessions = self.sessions.lock().unwrap();
+            let tick = self.session_tick.fetch_add(1, Ordering::Relaxed);
+            if !sessions.contains_key(sid) && sessions.len() >= MAX_SESSIONS {
+                // New conversation at capacity: make room *before*
+                // submitting. Only idle sessions are reclaimed — an
+                // active conversation's context is never silently
+                // dropped; with nothing idle, the new session is
+                // refused instead.
+                let victim = sessions
+                    .iter()
+                    .filter(|(_, e)| e.last_use.elapsed() >= SESSION_IDLE_EVICT)
+                    .min_by_key(|(_, e)| e.tick)
+                    .map(|(k, _)| k.clone());
+                match victim {
+                    Some(v) => {
+                        sessions.remove(&v);
+                    }
+                    None => {
+                        return Err(format!(
+                            "session store full ({MAX_SESSIONS} active conversations); \
+                             retry later or omit session_id"
+                        ));
+                    }
+                }
+            }
+            let hist: &[u32] = match sessions.get_mut(sid) {
+                Some(e) if e.overflowed => {
+                    return Err("session history is no longer consistent (overflow or a \
+                                failed turn); start a new session"
+                        .into());
+                }
+                Some(e) => {
+                    e.tick = tick;
+                    e.last_use = std::time::Instant::now();
+                    e.tokens.as_slice()
+                }
+                None => &[],
+            };
+            let mut full = Vec::with_capacity(hist.len() + new_toks.len());
+            full.extend_from_slice(hist);
+            full.extend_from_slice(&new_toks);
+            full
+        };
+        let snapshot_len = full.len() - new_toks.len();
+        let handle = self.submit_tokens_full(key, &full, max_new, class)?;
+        // Only a successfully submitted turn becomes history. Turns of a
+        // session must be serialized by the client: if the stored
+        // history changed between our snapshot and this commit (a racing
+        // second turn, or a reply the client had not yet received), the
+        // submitted prompt no longer matches the conversation — poison
+        // rather than record a transcript the model never saw. An absent
+        // entry (first turn, or reclaimed mid-flight) stores the exact
+        // submitted prompt.
+        {
+            let tick = self.session_tick.fetch_add(1, Ordering::Relaxed);
+            let mut sessions = self.sessions.lock().unwrap();
+            match sessions.entry(sid.to_string()) {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    let e = o.get_mut();
+                    if e.tokens.len() == snapshot_len {
+                        e.append(&new_toks, self.config.max_prompt);
+                    } else {
+                        e.overflowed = true;
+                    }
+                    e.tick = tick;
+                    e.last_use = std::time::Instant::now();
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(SessionEntry {
+                        tokens: full,
+                        tick,
+                        last_use: std::time::Instant::now(),
+                        overflowed: false,
+                    });
+                }
+            }
+        }
+        Ok(handle)
+    }
+
+    /// Append a finished turn's generated tokens to the session history.
+    /// A reply that no longer fits the prompt arena marks the session
+    /// *overflowed*: its next turn is refused with an error instead of
+    /// being served against a silently-truncated conversation. Replies
+    /// never create an entry.
+    pub fn record_session_reply(&self, session: &str, tokens: &[u32]) {
+        let tick = self.session_tick.fetch_add(1, Ordering::Relaxed);
+        let mut sessions = self.sessions.lock().unwrap();
+        if let Some(e) = sessions.get_mut(session) {
+            e.append(tokens, self.config.max_prompt);
+            e.tick = tick;
+            e.last_use = std::time::Instant::now();
+        }
+    }
+
+    /// Mark a session inconsistent after a *failed* turn: the submitted
+    /// user text is already part of the stored history but the model
+    /// never answered it, so subsequent turns would replay a
+    /// conversation that did not happen. The next turn is refused with
+    /// an error instead.
+    pub fn poison_session(&self, session: &str) {
+        let mut sessions = self.sessions.lock().unwrap();
+        if let Some(e) = sessions.get_mut(session) {
+            e.overflowed = true;
+        }
+    }
+
+    /// Stored token-history length for a session (diagnostics / tests).
+    pub fn session_history_len(&self, session: &str) -> usize {
+        self.sessions.lock().unwrap().get(session).map_or(0, |e| e.tokens.len())
+    }
+
     /// Submit pre-tokenized input with an explicit request class.
     pub fn submit_tokens_class(
         &self,
+        tokens: &[u32],
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, String> {
+        self.submit_tokens_full(0, tokens, max_new, class)
+    }
+
+    /// Full submission path: pre-tokenized input, explicit class and
+    /// session tag (0 = no session).
+    pub fn submit_tokens_full(
+        &self,
+        session_id: u64,
         tokens: &[u32],
         max_new: u32,
         class: RequestClass,
@@ -220,6 +438,7 @@ impl DpuFrontend {
             seed,
             priority: class.priority,
             ttft_budget_us: class.ttft_budget_us,
+            session_id,
         });
         qp.wait(wr);
 
@@ -238,5 +457,109 @@ impl Drop for DpuFrontend {
         if let Some(h) = self.reader_handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::RdmaConfig;
+    use crate::ringbuf::{RingBuffer, RingConfig};
+
+    fn frontend() -> (Arc<crate::ringbuf::RingBuffer>, DpuFrontend) {
+        let ring = Arc::new(RingBuffer::new(RingConfig {
+            num_slots: 16,
+            max_prompt: 64,
+            max_output: 16,
+        }));
+        let engine = RdmaEngine::spawn(ring.clone(), RdmaConfig::zero_cost());
+        let vocab = Arc::new(crate::tokenizer::tests::tiny_vocab());
+        let fe = DpuFrontend::new(
+            engine,
+            vocab,
+            FrontendConfig {
+                num_slots: 16,
+                max_prompt: 64,
+                max_output: 16,
+                reader: token_reader::ReaderConfig::default(),
+            },
+        );
+        (ring, fe)
+    }
+
+    #[test]
+    fn session_key_stable_and_nonzero() {
+        assert_eq!(session_key("conv-1"), session_key("conv-1"));
+        assert_ne!(session_key("conv-1"), session_key("conv-2"));
+        assert_ne!(session_key(""), 0, "0 is reserved for no-session");
+    }
+
+    #[test]
+    fn session_history_prepends_and_grows() {
+        let (ring, fe) = frontend();
+        // Turn 1: seeds the history with its own tokens.
+        let h1 = fe.submit_text_session(Some("c"), "the quick", 4, RequestClass::default())
+            .expect("turn 1");
+        let hist1 = fe.session_history_len("c");
+        assert_eq!(hist1, h1.prompt_tokens, "history = turn 1 prompt");
+
+        // A generated reply joins the history.
+        fe.record_session_reply("c", &[1, 2, 3]);
+        assert_eq!(fe.session_history_len("c"), hist1 + 3);
+
+        // Turn 2 prepends the stored history to its new text.
+        let h2 = fe.submit_text_session(Some("c"), " the end", 4, RequestClass::default())
+            .expect("turn 2");
+        assert!(
+            h2.prompt_tokens > hist1 + 3,
+            "turn 2 prompt ({}) must carry the history ({})",
+            h2.prompt_tokens,
+            hist1 + 3
+        );
+        // The session tag rides the slot metadata for the GPU plane.
+        let s = ring.slot(h2.slot);
+        assert_eq!(
+            s.session_id.load(Ordering::Relaxed),
+            session_key("c"),
+            "slot carries the session tag"
+        );
+        // Sessionless submissions stamp the reserved 0 tag.
+        let h3 = fe.submit_text_session(None, "solo", 2, RequestClass::default()).unwrap();
+        assert_eq!(ring.slot(h3.slot).session_id.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn overlong_session_turn_is_rejected_and_history_preserved() {
+        let (_ring, fe) = frontend();
+        fe.submit_text_session(Some("s"), "the quick brown fox", 4, RequestClass::default())
+            .expect("turn 1");
+        let before = fe.session_history_len("s");
+        // A turn that would blow the 64-token arena: rejected, history
+        // unchanged (the failed turn must not poison the session).
+        let long = "word ".repeat(80);
+        assert!(fe
+            .submit_text_session(Some("s"), &long, 4, RequestClass::default())
+            .is_err());
+        assert_eq!(fe.session_history_len("s"), before);
+
+        // A reply that overflows the arena poisons the session: the
+        // history is not silently truncated — the next turn is refused.
+        let big_reply: Vec<u32> = vec![7; 64];
+        fe.record_session_reply("s", &big_reply);
+        assert_eq!(fe.session_history_len("s"), before, "overflowing reply not appended");
+        assert!(
+            fe.submit_text_session(Some("s"), "next", 2, RequestClass::default()).is_err(),
+            "poisoned session must refuse further turns"
+        );
+        // Other sessions are unaffected.
+        assert!(fe.submit_text_session(Some("s2"), "hi", 2, RequestClass::default()).is_ok());
+
+        // A failed turn poisons its session the same way: the stored
+        // history contains an unanswered user turn.
+        fe.poison_session("s2");
+        assert!(
+            fe.submit_text_session(Some("s2"), "more", 2, RequestClass::default()).is_err(),
+            "poisoned (failed-turn) session must refuse further turns"
+        );
     }
 }

@@ -15,7 +15,8 @@
 //! ```
 //!
 //! Scheduler ⇄ executor communicate only through the launch channel (a
-//! fire-and-forget doorbell) and the polled [`CompletionBuffer`] — no
+//! fire-and-forget doorbell) and the polled
+//! [`CompletionBuffer`](crate::devsim::CompletionBuffer) — no
 //! locks, no host involvement, exactly the paper's device-side launch +
 //! poll protocol. The same scheduler code also runs in *CPU-resident*
 //! placement (the Fig 3 baseline): identical policy, but each step pays a

@@ -23,7 +23,12 @@ pub struct PrefillSeq {
     pub cache: SeqCache,
     pub prompt: Vec<i32>,
     pub max_new: u32,
-    /// Prompt length padded up to the graph grid.
+    /// Leading prompt tokens already cached via prefix reuse (block-
+    /// aligned; 0 = cold). The prefill launch covers only the suffix.
+    pub cached_prefix: usize,
+    /// *Suffix* length (prompt − cached_prefix) padded up to the graph
+    /// grid — with no prefix hit this is the padded prompt length,
+    /// exactly as before.
     pub padded: usize,
 }
 
@@ -88,10 +93,15 @@ impl BatchPlanner {
         let mut seq_lens = Vec::with_capacity(grid_batch);
         let mut tokens = Vec::with_capacity(grid_batch * grid_seq);
         for s in &group.seqs {
+            // Prefix reuse: the launch carries only the uncached suffix;
+            // seq_lens stays the *full* length so attention masks and KV
+            // write offsets see the whole sequence.
+            let suffix = &s.prompt[s.cached_prefix.min(s.prompt.len())..];
+            debug_assert!(suffix.len() <= grid_seq, "suffix exceeds prefill grid");
             block_tables.extend(s.cache.table_row(mbs));
             seq_lens.push(s.prompt.len() as i32);
-            tokens.extend(&s.prompt);
-            tokens.extend(std::iter::repeat(0).take(grid_seq - s.prompt.len()));
+            tokens.extend(suffix);
+            tokens.extend(std::iter::repeat(0).take(grid_seq - suffix.len()));
         }
         for _ in b_actual..grid_batch {
             block_tables.extend_from_slice(&group.seqs[0].cache.table_row(mbs));
@@ -131,9 +141,10 @@ mod tests {
     fn seq(slot: usize, prompt_len: usize, padded: usize) -> PrefillSeq {
         PrefillSeq {
             slot,
-            cache: SeqCache { blocks: vec![1, 2], cached_len: 0 },
+            cache: SeqCache { blocks: vec![1, 2], cached_len: 0, prefix_len: 0 },
             prompt: (0..prompt_len as i32).collect(),
             max_new: 4,
+            cached_prefix: 0,
             padded,
         }
     }
@@ -170,19 +181,31 @@ mod tests {
     }
 
     #[test]
+    fn prefill_inputs_carry_only_uncached_suffix() {
+        let p = BatchPlanner::new(4, 4);
+        let mut s = seq(2, 40, 16);
+        s.cached_prefix = 32; // two 16-token blocks served from the index
+        let group = PrefillGroup { padded: 16, seqs: vec![s] };
+        let li = p.prefill_inputs(&group, 1, 16);
+        assert_eq!(li.seq_lens, vec![40], "seq_lens stays the full length");
+        assert_eq!(&li.tokens[..8], &(32..40).collect::<Vec<i32>>()[..], "suffix tokens only");
+        assert_eq!(&li.tokens[8..], &[0i32; 8][..], "suffix padded to the grid");
+    }
+
+    #[test]
     fn decode_inputs_shapes() {
         let p = BatchPlanner::new(4, 4);
         let lanes = vec![
             Lane {
                 slot: 0,
-                cache: SeqCache { blocks: vec![1], cached_len: 7 },
+                cache: SeqCache { blocks: vec![1], cached_len: 7, prefix_len: 0 },
                 generated: 1,
                 max_new: 8,
                 last_token: 42,
             },
             Lane {
                 slot: 1,
-                cache: SeqCache { blocks: vec![2], cached_len: 9 },
+                cache: SeqCache { blocks: vec![2], cached_len: 9, prefix_len: 0 },
                 generated: 1,
                 max_new: 8,
                 last_token: 43,

@@ -62,6 +62,16 @@ pub struct SchedulerConfig {
     pub exit_when_idle: bool,
     /// Admission policy (pipeline stage 2). FCFS reproduces the paper.
     pub policy: PolicyKind,
+    /// Prefix-aware KV reuse (DESIGN.md §7): match each prompt against
+    /// the block-hash prefix index and prefill only the uncached suffix.
+    /// Default `false` — the paper's behavior (every admission reserves
+    /// its full span, cold), and the only correct choice for *real* AOT
+    /// artifacts until the grid gains an offset prefill graph (a hit
+    /// prefills the suffix at position 0 otherwise; see DESIGN.md §7
+    /// known limitations). The DES models reuse independently
+    /// (`SimConfig::prefix_cache_tokens`), so `blink eval prefix` does
+    /// not depend on this flag.
+    pub prefix_reuse: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -72,6 +82,7 @@ impl Default for SchedulerConfig {
             apply_launch_delays: true,
             exit_when_idle: false,
             policy: PolicyKind::Fcfs,
+            prefix_reuse: false,
         }
     }
 }
@@ -334,14 +345,52 @@ impl SchedulerCore {
                 }
                 continue;
             }
-            let padded = padded_seq(&self.cache, prompt_len);
             let max_new = max_new.min((self.manifest.max_context() - prompt_len) as u32);
-            if !self.kv.can_admit(padded, prompt_len, max_new as usize) {
-                // Condition (ii)/KV backpressure: leave it pending. Stop
-                // admitting so a later (lower-ranked) candidate cannot
-                // leapfrog the policy's head-of-queue choice.
-                self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                break;
+            // Condition (ii)/KV admission. Cold path: the exact check is
+            // pure slot-metadata math, so a backpressured scan cycle
+            // costs nothing. Reuse path: first a metadata-only lower
+            // bound — the *best case* is a maximal prefix hit (every
+            // full block short of one token cached, none of it parked);
+            // if even that best-case tail cannot be reserved, reject
+            // before the O(prompt) arena read + hash. Only then read the
+            // prompt (side-effect free, pre-claim) and run the exact
+            // match-aware check. On rejection, stop admitting so a later
+            // (lower-ranked) candidate cannot leapfrog the policy's
+            // head-of-queue choice.
+            let bs = self.kv.config().block_size;
+            let prompt_u32: Option<Vec<u32>>;
+            let pm: Option<crate::kvcache::PrefixMatch>;
+            let padded;
+            if self.config.prefix_reuse {
+                let best_match = (prompt_len - 1) / bs * bs;
+                let best_padded = padded_seq(&self.cache, prompt_len - best_match);
+                let need_floor = self.kv.config().blocks_needed_with_prefix(
+                    best_match,
+                    best_padded,
+                    prompt_len,
+                    max_new as usize,
+                );
+                if need_floor - best_match / bs > self.kv.available_blocks() {
+                    self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                let p = self.ring.read_prompt(slot_idx);
+                let m = self.kv.match_prefix(&p);
+                padded = padded_seq(&self.cache, prompt_len - m.tokens);
+                if !self.kv.can_admit_reuse(&m, padded, prompt_len, max_new as usize) {
+                    self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                prompt_u32 = Some(p);
+                pm = Some(m);
+            } else {
+                padded = padded_seq(&self.cache, prompt_len);
+                if !self.kv.can_admit(padded, prompt_len, max_new as usize) {
+                    self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                prompt_u32 = None;
+                pm = None;
             }
             // Condition (iii): headroom for this prefill + one decode.
             if self.launcher.headroom() < 2 {
@@ -351,22 +400,58 @@ impl SchedulerCore {
                 continue;
             }
             self.note_admission_order(cand.ticket);
-            let cache = self
-                .kv
-                .admit(padded, prompt_len, max_new as usize)
-                .expect("can_admit checked above");
-            let prompt: Vec<i32> =
-                self.ring.read_prompt(slot_idx).into_iter().map(|t| t as i32).collect();
-            admitted.push(PrefillSeq { slot: slot_idx, cache, prompt, max_new, padded });
+            // Session attribution: the tag rides along the RDMA metadata
+            // write; non-zero means a multi-turn conversation turn.
+            if self.ring.slot(slot_idx).session_id.load(Ordering::Relaxed) != 0 {
+                self.stats.session_requests.fetch_add(1, Ordering::Relaxed);
+            }
+            // Cold path reads the prompt only now, after the claim.
+            let prompt_u32 =
+                prompt_u32.unwrap_or_else(|| self.ring.read_prompt(slot_idx));
+            let cache = match &pm {
+                // Reuse the match computed above — no second hash pass.
+                Some(m) => self
+                    .kv
+                    .admit_matched(m, prompt_len, padded, max_new as usize)
+                    .expect("can_admit_reuse checked above"),
+                None => self
+                    .kv
+                    .admit(padded, prompt_len, max_new as usize)
+                    .expect("can_admit checked above"),
+            };
+            let cached_prefix = cache.prefix_len;
+            let prompt: Vec<i32> = prompt_u32.into_iter().map(|t| t as i32).collect();
+            admitted
+                .push(PrefillSeq { slot: slot_idx, cache, prompt, max_new, cached_prefix, padded });
         }
         if admitted.is_empty() {
+            self.publish_kv_stats();
             return;
         }
 
         // Stage 3b: group to the prefill graph grid and launch each group.
+        // No intra-batch sharing hazard: index entries commit only after
+        // a group's prefill completed (each launch below is polled
+        // synchronously), so a match can only ever land on blocks whose
+        // K/V is already written.
         for group in self.planner.group_prefills(admitted) {
             self.launch_prefill(group);
         }
+        self.publish_kv_stats();
+    }
+
+    /// Mirror the KV manager's reuse counters into the shared atomics —
+    /// `kvcache::KvStats` is the single source of truth; the scheduler
+    /// only publishes it for `/metrics` readers.
+    fn publish_kv_stats(&self) {
+        let kv_stats = self.kv.stats;
+        self.stats.prefix_hits.store(kv_stats.prefix_hits, Ordering::Relaxed);
+        self.stats.prefix_hit_tokens.store(kv_stats.reused_tokens, Ordering::Relaxed);
+        self.stats.prefix_evicted_blocks.store(kv_stats.evicted_blocks, Ordering::Relaxed);
+        self.stats.prefix_indexed_blocks.store(
+            kv_stats.indexed_blocks.saturating_sub(kv_stats.evicted_blocks),
+            Ordering::Relaxed,
+        );
     }
 
     /// Out-of-ticket-order admissions (non-FCFS policies at work); FCFS
@@ -402,6 +487,9 @@ impl SchedulerCore {
             reset_kv: false,
         });
         let Some(first_tokens) = self.completions.poll(spec.batch) else {
+            // Failed prefill: plain release. Nothing was published to
+            // the prefix index (entries commit only on success below),
+            // so no later prompt can "hit" the unwritten K/V.
             for s in group.seqs {
                 self.kv.release(s.cache);
                 self.fail_slot(s.slot);
@@ -413,6 +501,12 @@ impl SchedulerCore {
         for (lane_idx, seq) in group.seqs.into_iter().enumerate() {
             let PrefillSeq { slot, mut cache, prompt, max_new, .. } = seq;
             cache.cached_len = prompt.len();
+            // The prefill wrote this prompt's K/V: commit its full
+            // blocks to the prefix index so later turns can share them.
+            if self.config.prefix_reuse {
+                let toks: Vec<u32> = prompt.iter().map(|&t| t as u32).collect();
+                self.kv.index_prompt(&cache, &toks);
+            }
             let tok = first_tokens[lane_idx] as i32;
             self.ring.slot(slot).set_state(SlotState::DecodeProcessing);
             self.ring.publish_token(slot, tok as u32);

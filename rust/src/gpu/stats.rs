@@ -30,6 +30,18 @@ pub struct SchedulerStats {
     /// Requests whose first token was published after their TTFT
     /// deadline (only counted for requests that carry a deadline).
     pub ttft_deadline_misses: AtomicU64,
+    /// Prefix-reuse telemetry (mirrors `kvcache::KvStats`): admissions
+    /// that reused at least one cached block, prompt tokens served from
+    /// the prefix index, and parked blocks reclaimed under pool pressure.
+    pub prefix_hits: AtomicU64,
+    pub prefix_hit_tokens: AtomicU64,
+    pub prefix_evicted_blocks: AtomicU64,
+    /// Blocks currently shared or parked in the prefix index (gauge).
+    pub prefix_indexed_blocks: AtomicU64,
+    /// Admissions carrying a session tag (multi-turn traffic) — read off
+    /// the slot's RDMA-written `session_id` by the GPU plane, so
+    /// `/metrics` distinguishes conversation turns from one-shot load.
+    pub session_requests: AtomicU64,
 }
 
 impl SchedulerStats {
@@ -59,7 +71,8 @@ impl SchedulerStats {
         format!(
             "decode_steps={} prefills={} completed={} failed={} tokens={} occupancy={:.2} \
              pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} backpressure={} \
-             reordered={} ttft_misses={}",
+             reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
+             prefix_evicted={} prefix_indexed={} session_requests={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.completed_requests.load(Ordering::Relaxed),
@@ -74,6 +87,11 @@ impl SchedulerStats {
             self.backpressure_events.load(Ordering::Relaxed),
             self.admitted_out_of_order.load(Ordering::Relaxed),
             self.ttft_deadline_misses.load(Ordering::Relaxed),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_hit_tokens.load(Ordering::Relaxed),
+            self.prefix_evicted_blocks.load(Ordering::Relaxed),
+            self.prefix_indexed_blocks.load(Ordering::Relaxed),
+            self.session_requests.load(Ordering::Relaxed),
         )
     }
 }

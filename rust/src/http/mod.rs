@@ -11,7 +11,11 @@
 //!   admission policy): `"priority"`: 0–7 (higher = more important, or
 //!   `"class": "interactive"|"batch"` as a shorthand) and
 //!   `"ttft_deadline_ms"`: a TTFT budget enforced by the SLO-aware
-//!   policy and reported per class by the eval.
+//!   policy and reported per class by the eval. Multi-turn extension:
+//!   `"session_id"`: an opaque string naming the conversation — the DPU
+//!   frontend prepends the session's tokenized history (prompt carries
+//!   only the *new* turn) and the scheduler's prefix index turns the
+//!   shared history into a KV-cache hit (DESIGN.md §7).
 //! * `GET /health` — liveness.
 //! * `GET /metrics` — scheduler + frontend counters, text format.
 
@@ -221,8 +225,23 @@ fn handle_completion(
             return respond(stream, 400, "application/json", &msg);
         }
     };
+    let session: Option<String> = match obj.get("session_id") {
+        None => None,
+        Some(s) => match s.as_str() {
+            Some(v) if !v.is_empty() => Some(v.to_string()),
+            _ => {
+                let msg = Json::obj(vec![(
+                    "error",
+                    Json::Str("session_id must be a non-empty string".into()),
+                )])
+                .to_string();
+                return respond(stream, 400, "application/json", &msg);
+            }
+        },
+    };
 
-    let handle = match frontend.submit_text_class(prompt, max_tokens, class) {
+    let handle = match frontend.submit_text_session(session.as_deref(), prompt, max_tokens, class)
+    {
         Ok(h) => h,
         Err(e) => {
             let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
@@ -232,61 +251,92 @@ fn handle_completion(
     let id = format!("cmpl-{}", handle.request_id);
 
     if stream_mode {
-        write!(
-            stream,
-            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
-        )?;
-        let mut detok = Detokenizer::new();
-        loop {
-            match handle.rx.recv() {
-                Ok(TokenEvent::Token(t)) => {
-                    let text = detok.push(&frontend.vocab, t);
-                    if text.is_empty() {
-                        continue; // mid-codepoint
-                    }
-                    let chunk = Json::obj(vec![
-                        ("id", Json::Str(id.clone())),
-                        ("object", Json::Str("text_completion.chunk".into())),
-                        (
-                            "choices",
-                            Json::Arr(vec![Json::obj(vec![
-                                ("index", Json::Num(0.0)),
-                                ("text", Json::Str(text)),
-                            ])]),
-                        ),
-                    ]);
-                    write!(stream, "data: {}\n\n", chunk.to_string())?;
-                    stream.flush()?;
-                }
-                Ok(TokenEvent::Done) => {
-                    let tail = detok.finish();
-                    if !tail.is_empty() {
+        // The streaming loop runs in a closure so a transport error
+        // (client disconnect mid-stream) can poison the session before
+        // propagating: the turn's text is in the history but the client
+        // never saw the full answer — the next turn must be refused, not
+        // served against a transcript the client doesn't have.
+        let streamed = (|| -> std::io::Result<()> {
+            write!(
+                stream,
+                "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+            )?;
+            let mut detok = Detokenizer::new();
+            let mut generated: Vec<u32> = Vec::new();
+            loop {
+                match handle.rx.recv() {
+                    Ok(TokenEvent::Token(t)) => {
+                        generated.push(t);
+                        let text = detok.push(&frontend.vocab, t);
+                        if text.is_empty() {
+                            continue; // mid-codepoint
+                        }
                         let chunk = Json::obj(vec![
                             ("id", Json::Str(id.clone())),
+                            ("object", Json::Str("text_completion.chunk".into())),
                             (
                                 "choices",
                                 Json::Arr(vec![Json::obj(vec![
                                     ("index", Json::Num(0.0)),
-                                    ("text", Json::Str(tail)),
+                                    ("text", Json::Str(text)),
                                 ])]),
                             ),
                         ]);
                         write!(stream, "data: {}\n\n", chunk.to_string())?;
+                        stream.flush()?;
                     }
-                    write!(stream, "data: [DONE]\n\n")?;
-                    return stream.flush();
-                }
-                Ok(TokenEvent::Failed) | Err(_) => {
-                    write!(stream, "data: {{\"error\":\"generation failed\"}}\n\n")?;
-                    write!(stream, "data: [DONE]\n\n")?;
-                    return stream.flush();
+                    Ok(TokenEvent::Done) => {
+                        if let Some(sid) = &session {
+                            frontend.record_session_reply(sid, &generated);
+                        }
+                        let tail = detok.finish();
+                        if !tail.is_empty() {
+                            let chunk = Json::obj(vec![
+                                ("id", Json::Str(id.clone())),
+                                (
+                                    "choices",
+                                    Json::Arr(vec![Json::obj(vec![
+                                        ("index", Json::Num(0.0)),
+                                        ("text", Json::Str(tail)),
+                                    ])]),
+                                ),
+                            ]);
+                            write!(stream, "data: {}\n\n", chunk.to_string())?;
+                        }
+                        write!(stream, "data: [DONE]\n\n")?;
+                        return stream.flush();
+                    }
+                    Ok(TokenEvent::Failed) | Err(_) => {
+                        // The turn's text is already in the session history
+                        // but was never answered: poison the session so the
+                        // next turn errors instead of replaying a
+                        // conversation that did not happen.
+                        if let Some(sid) = &session {
+                            frontend.poison_session(sid);
+                        }
+                        write!(stream, "data: {{\"error\":\"generation failed\"}}\n\n")?;
+                        write!(stream, "data: [DONE]\n\n")?;
+                        return stream.flush();
+                    }
                 }
             }
+        })();
+        if streamed.is_err() {
+            // Transport died mid-stream: refuse the session's next turn
+            // rather than serve it against an answer the client never
+            // fully received.
+            if let Some(sid) = &session {
+                frontend.poison_session(sid);
+            }
         }
+        streamed
     } else {
         let prompt_tokens = handle.prompt_tokens;
         match handle.collect() {
             Ok(tokens) => {
+                if let Some(sid) = &session {
+                    frontend.record_session_reply(sid, &tokens);
+                }
                 let text = crate::tokenizer::decode(&frontend.vocab, &tokens);
                 let resp = Json::obj(vec![
                     ("id", Json::Str(id)),
@@ -311,6 +361,11 @@ fn handle_completion(
                 respond(stream, 200, "application/json", &resp.to_string())
             }
             Err(e) => {
+                // See the SSE failure path: refuse further turns on a
+                // history that contains an unanswered user turn.
+                if let Some(sid) = &session {
+                    frontend.poison_session(sid);
+                }
                 let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
                 respond(stream, 500, "application/json", &msg)
             }

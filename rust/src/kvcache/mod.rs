@@ -1,16 +1,55 @@
 //! Paged KV-cache management (paper §4.2), GPU-resident: the block pool
 //! itself is a device buffer owned by the executor; this module manages
-//! its *metadata* — the free list, per-request block tables, and the
-//! admission reservation — all living in "persistent GPU memory" (state
-//! owned by the scheduler thread, surviving graph re-instantiation).
+//! its *metadata* — the free list, per-request block tables, refcounts,
+//! the prefix index and the admission reservation — all living in
+//! "persistent GPU memory" (state owned by the scheduler thread,
+//! surviving graph re-instantiation).
 //!
-//! Admission policy: full reservation. A request is admitted only if
-//! `ceil(max(padded_prompt, prompt + max_new) / block_size)` blocks are
-//! free, so decode can never hit a mid-flight OOM (no preemption-by-OOM
-//! path; DECODE_PAUSED is reserved for continuous-batching pauses, as in
-//! the paper). The reservation covers padded prefill positions because
-//! the prefill graph writes K/V for every padded slot (see
+//! Admission policy: full reservation. A request is admitted only if its
+//! uncached tail of `blocks_needed_with_prefix(..)` blocks is available,
+//! so decode can never hit a mid-flight OOM (no preemption-by-OOM path;
+//! DECODE_PAUSED is reserved for continuous-batching pauses, as in the
+//! paper). The reservation covers padded prefill positions because the
+//! prefill graph writes K/V for every padded slot (see
 //! python/compile/model.py).
+//!
+//! # Prefix-aware reuse (paper delta)
+//!
+//! Blink itself ships with prefix caching *disabled* (§6.1 runs every
+//! system without it, for a controlled comparison). This module adds it
+//! back as DESIGN.md §7 describes, because multi-turn conversations
+//! re-prefill their entire history every turn without it:
+//!
+//! * every block carries a **refcount**; blocks may back multiple live
+//!   sequences that share a common prompt prefix;
+//! * a **prefix index** maps chained token-block hashes to cached
+//!   blocks. The chain hash of block *i* mixes the chain hash of block
+//!   *i−1* with block *i*'s token content, so a lookup walks the prompt
+//!   block by block (radix-style over full blocks) and stops at the
+//!   first miss. Entries additionally store their parent hash *and*
+//!   their token content, and [`KvManager::match_prefix`] verifies both
+//!   — a hash collision can never alias differing token content;
+//! * [`KvManager::admit_reuse`] matches the longest indexed prefix,
+//!   bumps the matched blocks' refcounts and reserves only the uncached
+//!   tail; [`KvManager::index_prompt`] publishes a prompt's full blocks
+//!   into the index *after* its prefill completed;
+//! * [`KvManager::release`] decrements refcounts. An unreferenced block
+//!   that holds indexed prefix content is *parked* in an LRU evictable
+//!   set instead of being freed — it is reclaimed lazily, oldest first,
+//!   only under pool pressure, and never while referenced.
+//!
+//! Invariants (pinned by the property tests below):
+//! 1. a block is never freed or evicted while its refcount is > 0;
+//! 2. the evictable set contains exactly the unreferenced indexed
+//!    blocks — never a referenced or free one;
+//! 3. `free + evictable + referenced == num_blocks − 1` (block 0 is the
+//!    shared pad target and never leaves the manager);
+//! 4. a prefix match never spans differing token content;
+//! 5. the index never refers to K/V that was not written: entries are
+//!    committed only after a successful prefill, so a failed launch
+//!    releases having published nothing.
+
+use std::collections::{BTreeMap, HashMap};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvConfig {
@@ -24,6 +63,22 @@ impl KvConfig {
         let span = padded_prompt.max(prompt + max_new);
         span.div_ceil(self.block_size)
     }
+
+    /// Total blocks a sequence needs when its first `cached` prompt
+    /// tokens are served from the prefix index and only the suffix is
+    /// prefilled (padded to `padded_suffix` grid positions). The span
+    /// still covers the whole padded prefill write *and* the decode
+    /// budget, exactly like [`KvConfig::blocks_needed`].
+    pub fn blocks_needed_with_prefix(
+        &self,
+        cached: usize,
+        padded_suffix: usize,
+        prompt: usize,
+        max_new: usize,
+    ) -> usize {
+        let span = (cached + padded_suffix).max(prompt + max_new);
+        span.div_ceil(self.block_size)
+    }
 }
 
 /// Per-request cache state: the ordered blocks backing the sequence.
@@ -32,6 +87,10 @@ pub struct SeqCache {
     pub blocks: Vec<u32>,
     /// Tokens currently cached (prompt after prefill, +1 per decode step).
     pub cached_len: usize,
+    /// Leading prompt tokens served from the prefix index at admission
+    /// (block-aligned; 0 = cold). The prefill launch only has to cover
+    /// `prompt_len - prefix_len` suffix tokens.
+    pub prefix_len: usize,
 }
 
 impl SeqCache {
@@ -47,12 +106,90 @@ impl SeqCache {
     }
 }
 
+/// Longest indexed prefix of a prompt (see [`KvManager::match_prefix`]).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMatch {
+    /// Matched cached blocks, in sequence order.
+    pub blocks: Vec<u32>,
+    /// Matched tokens (`blocks.len() * block_size`).
+    pub tokens: usize,
+}
+
+/// Reuse/eviction counters (monotone over the manager's lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvStats {
+    /// Admissions that reused at least one cached block.
+    pub prefix_hits: u64,
+    /// Admissions that reused nothing (cold prompts).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from the prefix index.
+    pub reused_tokens: u64,
+    /// Block reservations avoided by sharing.
+    pub reused_blocks: u64,
+    /// Full prompt blocks inserted into the prefix index.
+    pub indexed_blocks: u64,
+    /// Parked blocks reclaimed under pool pressure.
+    pub evicted_blocks: u64,
+}
+
+/// One prefix-index entry: a cached full block of prompt tokens.
+#[derive(Debug)]
+struct PrefixEntry {
+    block: u32,
+    /// Chain hash of the preceding block (`CHAIN_SEED` for block 0).
+    parent: u64,
+    /// The block's token content — verified on every match so a hash
+    /// collision can never alias differing prompts.
+    tokens: Vec<u32>,
+    /// LRU tick while parked in the evictable set; `None` while any
+    /// sequence references the block.
+    evict_tick: Option<u64>,
+}
+
+/// Sentinel for "block holds no index entry" in the per-block map.
+const NO_ENTRY: u64 = 0;
+/// Root of every hash chain (also guards against `NO_ENTRY` aliasing: a
+/// chain hash is always the output of `mix`, never 0 in practice; we
+/// additionally skip indexing on the astronomically-unlikely 0 hash).
+const CHAIN_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Chain hash of one block given its parent's chain hash.
+fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    let mut h = mix(parent ^ CHAIN_SEED);
+    for &t in tokens {
+        h = mix(h ^ t as u64);
+    }
+    h
+}
+
 /// Block pool metadata manager.
 pub struct KvManager {
     config: KvConfig,
     free: Vec<u32>,
+    /// Per-block reference count (index 0 unused: the pad block).
+    refcount: Vec<u32>,
+    /// Prefix index: chain hash → cached block entry.
+    index: HashMap<u64, PrefixEntry>,
+    /// Per-block back-pointer into `index` (`NO_ENTRY` = not indexed).
+    block_entry: Vec<u64>,
+    /// Unreferenced indexed blocks, LRU order: tick → block.
+    evictable: BTreeMap<u64, u32>,
+    lru_tick: u64,
     /// High-water mark of simultaneously allocated blocks (telemetry).
     pub peak_in_use: usize,
+    pub stats: KvStats,
+    /// Debug-only O(1) membership mirror of `free`, replacing the old
+    /// O(free)-per-block `free.contains` double-free scan.
+    #[cfg(debug_assertions)]
+    free_bits: Vec<bool>,
 }
 
 impl KvManager {
@@ -60,7 +197,25 @@ impl KvManager {
         // LIFO free list; block 0 is kept as the shared pad target and
         // never handed out, matching the table_row padding convention.
         let free: Vec<u32> = (1..config.num_blocks as u32).rev().collect();
-        KvManager { config, free, peak_in_use: 0 }
+        #[cfg(debug_assertions)]
+        let free_bits = {
+            let mut bits = vec![true; config.num_blocks];
+            bits[0] = false;
+            bits
+        };
+        KvManager {
+            free,
+            refcount: vec![0; config.num_blocks],
+            index: HashMap::new(),
+            block_entry: vec![NO_ENTRY; config.num_blocks],
+            evictable: BTreeMap::new(),
+            lru_tick: 0,
+            config,
+            peak_in_use: 0,
+            stats: KvStats::default(),
+            #[cfg(debug_assertions)]
+            free_bits,
+        }
     }
 
     pub fn config(&self) -> KvConfig {
@@ -71,34 +226,273 @@ impl KvManager {
         self.free.len()
     }
 
+    /// Unreferenced blocks parked in the prefix cache (reclaimable).
+    pub fn evictable_blocks(&self) -> usize {
+        self.evictable.len()
+    }
+
+    /// Blocks the allocator can produce right now (free + reclaimable).
+    pub fn available_blocks(&self) -> usize {
+        self.free.len() + self.evictable.len()
+    }
+
+    /// Blocks referenced by at least one live sequence.
     pub fn in_use(&self) -> usize {
-        (self.config.num_blocks - 1) - self.free.len()
+        (self.config.num_blocks - 1) - self.free.len() - self.evictable.len()
     }
 
     /// Can a request with these dimensions be admitted right now?
     pub fn can_admit(&self, padded_prompt: usize, prompt: usize, max_new: usize) -> bool {
         let need = self.config.blocks_needed(padded_prompt, prompt, max_new);
-        need <= self.config.max_blocks_per_seq && need <= self.free.len()
+        need <= self.config.max_blocks_per_seq && need <= self.available_blocks()
     }
 
-    /// Reserve the full block span for a request. Returns None if the
-    /// pool cannot satisfy it (caller applies backpressure).
+    /// Can a request be admitted given this prefix match and a prefill
+    /// suffix padded to `padded_suffix`? Matched blocks that are
+    /// currently *parked* count against availability too: admitting
+    /// unparks them, so they can no longer be evicted to feed the tail
+    /// reservation.
+    pub fn can_admit_reuse(
+        &self,
+        m: &PrefixMatch,
+        padded_suffix: usize,
+        prompt: usize,
+        max_new: usize,
+    ) -> bool {
+        let need = self.config.blocks_needed_with_prefix(m.tokens, padded_suffix, prompt, max_new);
+        let tail = need.saturating_sub(m.blocks.len());
+        let parked =
+            m.blocks.iter().filter(|&&b| self.refcount[b as usize] == 0).count();
+        need <= self.config.max_blocks_per_seq && tail + parked <= self.available_blocks()
+    }
+
+    /// Longest indexed prefix of `tokens`, walking full blocks through
+    /// the hash chain. Verifies parent linkage *and* token content at
+    /// every step (invariant 4). Matching is capped so at least one
+    /// prompt token is always left to prefill — the suffix launch is
+    /// what produces the first output token's logits.
+    pub fn match_prefix(&self, tokens: &[u32]) -> PrefixMatch {
+        let bs = self.config.block_size;
+        let max_blocks = tokens.len().saturating_sub(1) / bs;
+        let mut h = CHAIN_SEED;
+        let mut blocks = Vec::new();
+        for b in 0..max_blocks {
+            let content = &tokens[b * bs..(b + 1) * bs];
+            let next = chain_hash(h, content);
+            match self.index.get(&next) {
+                Some(e) if e.parent == h && e.tokens == content => {
+                    blocks.push(e.block);
+                    h = next;
+                }
+                _ => break,
+            }
+        }
+        PrefixMatch { tokens: blocks.len() * bs, blocks }
+    }
+
+    /// Reserve the full block span for a request without consulting the
+    /// prefix index (the paper's behavior). Returns None if the pool
+    /// cannot satisfy it (caller applies backpressure).
     pub fn admit(&mut self, padded_prompt: usize, prompt: usize, max_new: usize) -> Option<SeqCache> {
         if !self.can_admit(padded_prompt, prompt, max_new) {
             return None;
         }
         let need = self.config.blocks_needed(padded_prompt, prompt, max_new);
-        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let blocks: Vec<u32> = (0..need).map(|_| self.alloc_block()).collect();
         self.peak_in_use = self.peak_in_use.max(self.in_use());
-        Some(SeqCache { blocks, cached_len: 0 })
+        Some(SeqCache { blocks, cached_len: 0, prefix_len: 0 })
     }
 
-    /// Return a finished request's blocks to the pool.
+    /// Prefix-aware admission: match the longest cached prefix of
+    /// `tokens`, share those blocks (refcount bump) and reserve only the
+    /// uncached tail. `padded_suffix` is the grid-padded length of the
+    /// uncached suffix the prefill launch will cover.
+    pub fn admit_reuse(
+        &mut self,
+        tokens: &[u32],
+        padded_suffix: usize,
+        max_new: usize,
+    ) -> Option<SeqCache> {
+        let m = self.match_prefix(tokens);
+        self.admit_matched(&m, tokens.len(), padded_suffix, max_new)
+    }
+
+    /// [`KvManager::admit_reuse`] with a pre-computed match — the
+    /// scheduler already ran [`KvManager::match_prefix`] to size the
+    /// padded suffix, so this avoids hashing the prompt a second time.
+    /// `m` must come from `match_prefix` on the current index state,
+    /// with no intervening mutation.
+    pub fn admit_matched(
+        &mut self,
+        m: &PrefixMatch,
+        prompt: usize,
+        padded_suffix: usize,
+        max_new: usize,
+    ) -> Option<SeqCache> {
+        if !self.can_admit_reuse(m, padded_suffix, prompt, max_new) {
+            return None;
+        }
+        let need =
+            self.config.blocks_needed_with_prefix(m.tokens, padded_suffix, prompt, max_new);
+        let matched = m.blocks.len();
+
+        // Share the matched prefix.
+        let mut blocks = Vec::with_capacity(need);
+        for &b in &m.blocks {
+            self.ref_block(b);
+            blocks.push(b);
+        }
+        // Reserve the uncached tail (evicting parked blocks LRU-first if
+        // the free list alone cannot cover it — capacity checked above).
+        for _ in matched..need {
+            blocks.push(self.alloc_block());
+        }
+
+        if m.tokens > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.reused_tokens += m.tokens as u64;
+            self.stats.reused_blocks += matched as u64;
+        } else {
+            self.stats.prefix_misses += 1;
+        }
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Some(SeqCache { blocks, cached_len: 0, prefix_len: m.tokens })
+    }
+
+    /// Publish a successfully prefilled prompt's *full* blocks into the
+    /// prefix index. Deliberately separate from [`KvManager::admit_reuse`]
+    /// and called only after the prefill launch completed: the index can
+    /// never refer to K/V that was not actually written (invariant 5) —
+    /// a failed prefill simply releases, having published nothing, and a
+    /// request admitted in the same batch as its twin can never match
+    /// the twin's still-unwritten blocks. Partial blocks (prompt tail,
+    /// decode region) are never indexed: their content is not a stable
+    /// full-block prefix.
+    pub fn index_prompt(&mut self, cache: &SeqCache, tokens: &[u32]) {
+        let bs = self.config.block_size;
+        let full = (tokens.len() / bs).min(cache.blocks.len());
+        // Rehashing from the seed (rather than resuming from the
+        // admission-time match) is deliberate: it runs once per
+        // *successful prefill* (sub-µs against a multi-ms launch) and
+        // keeps the commit independent of any state captured at
+        // admission.
+        let mut h = CHAIN_SEED;
+        for bi in 0..full {
+            let content = &tokens[bi * bs..(bi + 1) * bs];
+            let next = chain_hash(h, content);
+            // Existing entries (this sequence's own matched prefix, or a
+            // twin committed first) are kept — identical content either
+            // way.
+            if next != NO_ENTRY && !self.index.contains_key(&next) {
+                self.index.insert(
+                    next,
+                    PrefixEntry {
+                        block: cache.blocks[bi],
+                        parent: h,
+                        tokens: content.to_vec(),
+                        evict_tick: None,
+                    },
+                );
+                self.block_entry[cache.blocks[bi] as usize] = next;
+                self.stats.indexed_blocks += 1;
+            }
+            h = next;
+        }
+    }
+
+    /// Return a finished request's blocks: decrement refcounts; an
+    /// unreferenced block is parked (if indexed) or freed (if not).
     pub fn release(&mut self, cache: SeqCache) {
         for b in cache.blocks {
-            debug_assert!(!self.free.contains(&b), "double free of block {b}");
-            self.free.push(b);
+            let rc = &mut self.refcount[b as usize];
+            debug_assert!(*rc > 0, "release of unreferenced block {b}");
+            *rc -= 1;
+            if *rc > 0 {
+                continue; // still shared by another sequence
+            }
+            let h = self.block_entry[b as usize];
+            if h != NO_ENTRY {
+                // Park: reusable prefix content, reclaimed only under
+                // pool pressure (LRU), never while referenced.
+                self.lru_tick += 1;
+                if let Some(e) = self.index.get_mut(&h) {
+                    e.evict_tick = Some(self.lru_tick);
+                }
+                self.evictable.insert(self.lru_tick, b);
+            } else {
+                #[cfg(debug_assertions)]
+                {
+                    // O(1) double-free membership check (the old
+                    // `free.contains(&b)` scan was O(free) per block).
+                    debug_assert!(!self.free_bits[b as usize], "double free of block {b}");
+                    self.free_bits[b as usize] = true;
+                }
+                self.free.push(b);
+            }
         }
+    }
+
+    /// Take a reference on a cached block, unparking it if necessary.
+    fn ref_block(&mut self, b: u32) {
+        let rc = &mut self.refcount[b as usize];
+        if *rc == 0 {
+            let h = self.block_entry[b as usize];
+            debug_assert_ne!(h, NO_ENTRY, "unreferenced non-indexed block {b} outside free list");
+            if let Some(e) = self.index.get_mut(&h) {
+                if let Some(tick) = e.evict_tick.take() {
+                    let removed = self.evictable.remove(&tick);
+                    debug_assert_eq!(removed, Some(b));
+                }
+            }
+        }
+        *rc += 1;
+    }
+
+    /// Pop a free block, evicting the LRU parked block if the free list
+    /// is empty. Caller must have checked `available_blocks()`.
+    fn alloc_block(&mut self) -> u32 {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => self.evict_lru().expect("available_blocks checked by caller"),
+        };
+        #[cfg(debug_assertions)]
+        {
+            self.free_bits[b as usize] = false;
+        }
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
+        b
+    }
+
+    /// Drop the least-recently-used parked block from the prefix index.
+    fn evict_lru(&mut self) -> Option<u32> {
+        let (&tick, &b) = self.evictable.iter().next()?;
+        self.evictable.remove(&tick);
+        let h = self.block_entry[b as usize];
+        self.index.remove(&h);
+        self.block_entry[b as usize] = NO_ENTRY;
+        self.stats.evicted_blocks += 1;
+        Some(b)
+    }
+
+    /// Check the module invariants (used by the property tests; cheap
+    /// enough to call after every mutation in tests).
+    pub fn check_invariants(&self) {
+        let referenced = self.refcount.iter().filter(|&&r| r > 0).count();
+        assert_eq!(
+            self.free.len() + self.evictable.len() + referenced,
+            self.config.num_blocks - 1,
+            "conservation: free + evictable + referenced == usable pool"
+        );
+        for &b in self.evictable.values() {
+            assert_eq!(self.refcount[b as usize], 0, "evictable block {b} is referenced");
+            assert_ne!(self.block_entry[b as usize], NO_ENTRY, "evictable block {b} not indexed");
+        }
+        for &b in &self.free {
+            assert_eq!(self.refcount[b as usize], 0, "free block {b} is referenced");
+            assert_eq!(self.block_entry[b as usize], NO_ENTRY, "free block {b} still indexed");
+        }
+        assert_eq!(self.refcount[0], 0, "pad block 0 must never be referenced");
     }
 }
 
@@ -112,6 +506,11 @@ mod tests {
         KvConfig { block_size: 16, num_blocks: 64, max_blocks_per_seq: 8 }
     }
 
+    /// A deterministic prompt of `n` tokens from a stream tag.
+    fn prompt(tag: u32, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| tag.wrapping_mul(1_000_003).wrapping_add(i)).collect()
+    }
+
     #[test]
     fn blocks_needed_covers_padding() {
         let c = cfg();
@@ -121,6 +520,9 @@ mod tests {
         assert_eq!(c.blocks_needed(32, 17, 100), 8);
         assert_eq!(c.blocks_needed(16, 16, 0), 1);
         assert_eq!(c.blocks_needed(16, 16, 1), 2);
+        // 32 cached + 16-padded suffix, decode budget dominates.
+        assert_eq!(c.blocks_needed_with_prefix(32, 16, 40, 30), 5);
+        assert_eq!(c.blocks_needed_with_prefix(32, 16, 40, 1), 3);
     }
 
     #[test]
@@ -157,7 +559,7 @@ mod tests {
 
     #[test]
     fn table_row_pads_with_zero() {
-        let c = SeqCache { blocks: vec![5, 9], cached_len: 20 };
+        let c = SeqCache { blocks: vec![5, 9], cached_len: 20, prefix_len: 0 };
         assert_eq!(c.table_row(4), vec![5, 9, 0, 0]);
     }
 
@@ -174,6 +576,173 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 63);
+    }
+
+    #[test]
+    fn prefix_hit_reserves_only_tail() {
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(7, 64); // 4 full blocks
+        let a = m.admit_reuse(&toks, 64, 4).unwrap();
+        assert_eq!(a.prefix_len, 0, "cold admission");
+        m.index_prompt(&a, &toks); // prefill succeeded: commit
+        // All 4 full prompt blocks are indexed; matching is capped at 3
+        // so at least one token always prefills.
+        assert_eq!(m.stats.indexed_blocks, 4);
+        let free_before = m.free_blocks();
+
+        let b = m.admit_reuse(&toks, 16, 4).unwrap();
+        assert_eq!(b.prefix_len, 48, "3 blocks * 16 tokens reused");
+        assert_eq!(&b.blocks[..3], &a.blocks[..3], "prefix blocks shared");
+        // span = max(48+16, 64+4) = 68 -> 5 blocks, 3 shared -> 2 fresh.
+        assert_eq!(m.free_blocks(), free_before - 2);
+        assert_eq!(m.stats.prefix_hits, 1);
+        assert_eq!(m.stats.reused_tokens, 48);
+        m.check_invariants();
+        m.release(a);
+        m.release(b);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn release_parks_indexed_blocks_then_admit_hits_again() {
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(3, 64);
+        let a = m.admit_reuse(&toks, 64, 4).unwrap();
+        m.index_prompt(&a, &toks);
+        m.release(a);
+        // All 4 indexed blocks are parked, not freed: the pool holds.
+        assert_eq!(m.evictable_blocks(), 4);
+        assert_eq!(m.free_blocks() + m.evictable_blocks(), 63);
+        // A re-admission of the same prompt reuses the parked blocks
+        // (the 4th indexed block is beyond the match cap and stays
+        // parked — only matchable blocks unpark).
+        let b = m.admit_reuse(&toks, 16, 4).unwrap();
+        assert_eq!(b.prefix_len, 48);
+        assert_eq!(m.evictable_blocks(), 1, "hit unparks the 3 matched blocks");
+        m.release(b);
+        assert_eq!(m.free_blocks() + m.evictable_blocks(), 63);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn eviction_under_pressure_lru_first_never_referenced() {
+        let mut m = KvManager::new(cfg());
+        // Park two distinct 4-block prefixes (8 evictable), keep a third
+        // referenced.
+        let a = m.admit_reuse(&prompt(1, 64), 64, 4).unwrap();
+        m.index_prompt(&a, &prompt(1, 64));
+        m.release(a);
+        let b = m.admit_reuse(&prompt(2, 64), 64, 4).unwrap();
+        m.index_prompt(&b, &prompt(2, 64));
+        m.release(b);
+        let held = m.admit_reuse(&prompt(3, 64), 64, 4).unwrap();
+        m.index_prompt(&held, &prompt(3, 64));
+        assert_eq!(m.evictable_blocks(), 8);
+        let evictable_before = m.evictable_blocks();
+
+        // Drain the free list entirely, forcing evictions.
+        let mut drained = vec![];
+        while m.free_blocks() >= 8 {
+            drained.push(m.admit(128, 128, 0).unwrap());
+        }
+        while m.available_blocks() >= 2 {
+            drained.push(m.admit(16, 16, 8).unwrap()); // 2 blocks each
+        }
+        assert!(m.evictable_blocks() < evictable_before, "pressure evicted parked blocks");
+        assert!(m.stats.evicted_blocks > 0);
+        m.check_invariants();
+        // The referenced prefix survives: release everything and the
+        // held prompt must still fully hit.
+        for d in drained {
+            m.release(d);
+        }
+        m.release(held);
+        let again = m.admit_reuse(&prompt(3, 64), 16, 4).unwrap();
+        assert_eq!(again.prefix_len, 48, "referenced prefix was never evicted");
+        m.release(again);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn parked_matched_blocks_count_against_tail_availability() {
+        // Regression: a hit on *parked* blocks unparks them, shrinking
+        // the evictable pool the tail reservation would draw from — the
+        // admission check must refuse rather than let alloc_block panic.
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(4, 64);
+        let a = m.admit_reuse(&toks, 64, 4).unwrap(); // 5 blocks
+        m.index_prompt(&a, &toks); // 4 indexed
+        m.release(a); // 4 parked, 1 freed
+        assert_eq!((m.free_blocks(), m.evictable_blocks()), (59, 4));
+        // Drain the free list completely with 1-block requests.
+        let mut fillers = vec![];
+        while m.free_blocks() > 0 {
+            fillers.push(m.admit(16, 16, 0).unwrap());
+        }
+        // Re-admitting the prompt needs 3 (parked) + 2 tail, but only
+        // the 3 parked blocks are available: must refuse cleanly.
+        assert!(m.admit_reuse(&toks, 16, 4).is_none(), "tail cannot be satisfied");
+        m.check_invariants();
+        // Two freed blocks later, the same admission succeeds and the
+        // parked prefix is reused rather than evicted.
+        m.release(fillers.pop().unwrap());
+        m.release(fillers.pop().unwrap());
+        let b = m.admit_reuse(&toks, 16, 4).expect("2 free + 3 parked now suffice");
+        assert_eq!(b.prefix_len, 48);
+        assert_eq!(m.stats.evicted_blocks, 0, "reuse must not evict its own match");
+        m.release(b);
+        for f in fillers {
+            m.release(f);
+        }
+        m.check_invariants();
+    }
+
+    #[test]
+    fn index_commits_only_after_successful_prefill() {
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(5, 64);
+        // Admission alone publishes nothing: a twin admitted in the same
+        // batch (before any commit) matches nothing — it can never share
+        // blocks whose K/V is still unwritten.
+        let a = m.admit_reuse(&toks, 64, 4).unwrap();
+        assert_eq!(m.stats.indexed_blocks, 0);
+        assert_eq!(m.match_prefix(&toks).tokens, 0);
+        // Failed prefill: plain release; no phantom entries survive.
+        m.release(a);
+        assert_eq!(m.match_prefix(&toks).tokens, 0);
+        assert_eq!(m.free_blocks(), 63);
+        assert_eq!(m.evictable_blocks(), 0);
+        m.check_invariants();
+
+        // Successful prefill: commit publishes, later prompts hit, and
+        // the sharer's commit is a no-op (entries already present).
+        let b = m.admit_reuse(&toks, 64, 4).unwrap();
+        m.index_prompt(&b, &toks);
+        assert_eq!(m.stats.indexed_blocks, 4);
+        let c = m.admit_reuse(&toks, 16, 4).unwrap();
+        assert_eq!(c.prefix_len, 48);
+        m.index_prompt(&c, &toks);
+        assert_eq!(m.stats.indexed_blocks, 4, "sharer re-commit inserts nothing");
+        m.release(c);
+        m.release(b);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn match_never_crosses_differing_content() {
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(9, 64);
+        let a = m.admit_reuse(&toks, 64, 4).unwrap();
+        m.index_prompt(&a, &toks);
+        // Same first block, different second block: match stops at 1.
+        let mut forked = toks.clone();
+        forked[20] ^= 1;
+        assert_eq!(m.match_prefix(&forked).tokens, 16);
+        // Different first token: no match at all.
+        let mut cold = toks.clone();
+        cold[0] ^= 1;
+        assert_eq!(m.match_prefix(&cold).tokens, 0);
+        m.release(a);
     }
 
     #[test]
@@ -201,9 +770,118 @@ mod tests {
                     }
                     m.release(c);
                 }
-                // Conservation: free + owned == usable pool.
+                // Conservation: free + owned == usable pool (no prefix
+                // reuse on this path, so nothing is ever parked).
                 assert_eq!(m.free_blocks() + owned.len(), 63);
             }
+        });
+    }
+
+    /// Randomized admit_reuse/release/pressure interleavings: a block is
+    /// never freed or evicted while referenced, the evictable set never
+    /// holds a referenced block, and the pool conserves.
+    #[test]
+    fn prop_refcount_and_eviction_invariants() {
+        run_prop("kv-prefix-invariants", 0xCAFE, 150, |rng: &mut Rng| {
+            let mut m = KvManager::new(cfg());
+            let mut live: Vec<(Vec<u32>, SeqCache)> = vec![];
+            // A small universe of prompt streams so shares actually occur.
+            let tags: Vec<u32> = (0..4).map(|_| rng.below(1 << 20) as u32).collect();
+            for _ in 0..80 {
+                if rng.f64() < 0.55 {
+                    let tag = tags[rng.below(tags.len() as u64) as usize];
+                    let len = 1 + rng.below(120) as usize;
+                    let toks = super::tests::prompt(tag, len);
+                    let suffix = len - m.match_prefix(&toks).tokens;
+                    let padded = suffix.next_power_of_two().min(128);
+                    let max_new = rng.below(16) as usize;
+                    if let Some(c) = m.admit_reuse(&toks, padded, max_new) {
+                        // Every block this sequence holds is referenced.
+                        for b in &c.blocks {
+                            assert!(m.refcount[*b as usize] > 0);
+                        }
+                        // Most prefills succeed and commit their blocks
+                        // to the index; ~10% fail and publish nothing.
+                        if rng.f64() < 0.9 {
+                            m.index_prompt(&c, &toks);
+                        }
+                        live.push((toks, c));
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (_, c) = live.swap_remove(i);
+                    m.release(c);
+                }
+                m.check_invariants();
+                // No live sequence's block is in the free list or the
+                // evictable set (invariant 1 and 2, from the outside).
+                for (_, c) in &live {
+                    for b in &c.blocks {
+                        assert!(!m.free.contains(b), "live block {b} on the free list");
+                        assert!(
+                            !m.evictable.values().any(|e| e == b),
+                            "live block {b} in the evictable set"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Hash-chain lookups never match across differing token content,
+    /// for random shared-prefix/fork-point layouts.
+    #[test]
+    fn prop_match_respects_content() {
+        run_prop("kv-prefix-content", 0xD00D, 200, |rng: &mut Rng| {
+            let mut m = KvManager::new(cfg());
+            let len = 33 + rng.below(80) as usize; // >= 2 full blocks
+            let toks = super::tests::prompt(rng.below(1 << 16) as u32, len);
+            let c = m.admit_reuse(&toks, len.next_power_of_two().min(128), 2).unwrap();
+            m.index_prompt(&c, &toks);
+            // Fork at a random position: the match must stop at (or
+            // before) the block containing the first differing token.
+            let pos = rng.below(len as u64) as usize;
+            let mut forked = toks.clone();
+            forked[pos] = forked[pos].wrapping_add(1 + rng.below(1000) as u32);
+            let matched = m.match_prefix(&forked).tokens;
+            let bs = m.config().block_size;
+            assert!(
+                matched <= (pos / bs) * bs,
+                "match of {matched} tokens crosses the fork at {pos}"
+            );
+            // And the matched region is genuinely identical content.
+            assert_eq!(forked[..matched], toks[..matched]);
+            m.release(c);
+        });
+    }
+
+    /// Admit-with-hit + release roundtrips restore the pool exactly:
+    /// no block leaks into limbo, shares fully unwind.
+    #[test]
+    fn prop_hit_release_roundtrip_restores_pool() {
+        run_prop("kv-prefix-roundtrip", 0xF00D, 150, |rng: &mut Rng| {
+            let mut m = KvManager::new(cfg());
+            let toks = super::tests::prompt(rng.below(1 << 16) as u32, 32 + rng.below(90) as usize);
+            let a = m.admit_reuse(&toks, toks.len().next_power_of_two().min(128), 4).unwrap();
+            m.index_prompt(&a, &toks);
+            let total = |m: &KvManager| m.free_blocks() + m.evictable_blocks();
+            let baseline = total(&m); // pool minus a's referenced blocks
+            // Layer a random number of sharers on top, then unwind.
+            let n = 1 + rng.below(4) as usize;
+            let mut sharers = vec![];
+            for _ in 0..n {
+                let suffix = toks.len() - m.match_prefix(&toks).tokens;
+                if let Some(c) = m.admit_reuse(&toks, suffix.next_power_of_two().min(128), 4) {
+                    sharers.push(c);
+                }
+            }
+            for c in sharers {
+                m.release(c);
+            }
+            assert_eq!(total(&m), baseline, "sharer roundtrip must restore the pool");
+            m.release(a);
+            assert_eq!(total(&m), 63, "full release restores the whole pool");
+            m.check_invariants();
         });
     }
 }

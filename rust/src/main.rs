@@ -1,11 +1,15 @@
 //! blink — CLI for the Blink reproduction.
 //!
 //! Subcommands:
-//!   serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
-//!           start a live server (P: fcfs|priority|sjf|slo)
-//!   eval    <all|policies|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
-//!           [--out DIR] [--window S] [--threads N]
-//!   info    print manifest + graph grid for a model
+//!
+//! ```text
+//! serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
+//!         [--prefix-reuse]
+//!         start a live server (P: fcfs|priority|sjf|slo)
+//! eval    <all|policies|prefix|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         [--out DIR] [--window S] [--threads N]
+//! info    print manifest + graph grid for a model
+//! ```
 
 use blink::eval;
 use blink::gpu::{Placement, PolicyKind};
@@ -24,8 +28,8 @@ fn main() {
             eprintln!(
                 "usage: blink <serve|eval|info> [...]\n\
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
-                       [--policy fcfs|priority|sjf|slo]\n\
-                 eval <all|policies|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                       [--policy fcfs|priority|sjf|slo] [--prefix-reuse]\n\
+                 eval <all|policies|prefix|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
                       [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)]\n\
                  info [--model blink-tiny]"
             );
@@ -43,10 +47,22 @@ fn serve(args: &Args) {
         Placement::GpuResident
     };
     let policy = parse_policy_flag(args).unwrap_or(PolicyKind::Fcfs);
-    eprintln!("[serve] loading {model} (compiling AOT graphs, ~30s), policy={} ...", policy.name());
-    let server =
-        BlinkServer::start(ServerConfig { model, placement, policy, ..Default::default() })
-            .expect("server start");
+    // Opt-in: live prefix reuse needs the offset prefill graph the AOT
+    // grid doesn't have yet (DESIGN.md §7); fine on the modeled executor.
+    let prefix_reuse = args.has_flag("prefix-reuse");
+    eprintln!(
+        "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={} ...",
+        policy.name(),
+        prefix_reuse
+    );
+    let server = BlinkServer::start(ServerConfig {
+        model,
+        placement,
+        policy,
+        prefix_reuse,
+        ..Default::default()
+    })
+    .expect("server start");
     let http = HttpServer::serve(&bind, server.frontend.clone(), server.scheduler.stats.clone())
         .expect("bind");
     eprintln!("[serve] listening on http://{}", http.addr);
@@ -77,6 +93,7 @@ fn eval_cmd(args: &Args) {
         "policies" => {
             return eval::policy_comparison(out_ref, window, threads, parse_policy_flag(args));
         }
+        "prefix" => return eval::prefix_comparison(out_ref, window, threads),
         _ => {}
     }
 

@@ -5,11 +5,12 @@
 //! one-sided RDMA verbs (DOCA on BlueField-3, 200 Gbps link). We model
 //! that boundary faithfully at the *verb* level:
 //!
-//! * the frontend posts [`WorkRequest`]s on a [`QueuePair`] (doorbell),
+//! * the frontend posts work requests ([`RdmaOp`]s) on a [`QueuePair`]
+//!   (doorbell),
 //! * a dedicated engine thread — the "NIC" — executes each op against the
 //!   target memory after a modeled wire latency + serialization delay,
-//! * completions are delivered through a [`CompletionQueue`] the caller
-//!   polls, with payloads for READs,
+//! * completions are delivered through a completion queue the caller
+//!   polls ([`QueuePair::poll_cq`]), with payloads for READs,
 //! * CAS ops map to RDMA atomics (a real verbs feature), which is how the
 //!   frontend claims EMPTY slots without owning backend memory.
 //!
@@ -64,8 +65,9 @@ pub enum RdmaOp {
     /// RDMA WRITE of slot metadata + state flip to PREFILL_PENDING.
     /// `priority` / `ttft_budget_us` are the request-class fields the
     /// scheduler's admission policy ranks by (0/0 = batch class, FCFS
-    /// behavior); they ride in the same metadata write, so the class
-    /// costs no extra verb.
+    /// behavior); `session_id` tags multi-turn conversations for the
+    /// prefix-reuse path. All of it rides in the same metadata write, so
+    /// neither the class nor the session costs an extra verb.
     Submit {
         slot: usize,
         request_id: u64,
@@ -74,6 +76,7 @@ pub enum RdmaOp {
         seed: u32,
         priority: u32,
         ttft_budget_us: u64,
+        session_id: u64,
     },
     /// Bulk RDMA READ of (state, generated) for a contiguous slot range —
     /// the token reader's per-cycle 64 KB metadata refresh.
@@ -90,7 +93,7 @@ impl RdmaOp {
         match self {
             RdmaOp::ClaimSlot { .. } | RdmaOp::ReleaseSlot { .. } => 8,
             RdmaOp::WritePrompt { tokens, .. } => tokens.len() * 4,
-            RdmaOp::Submit { .. } => 48,
+            RdmaOp::Submit { .. } => 56,
             RdmaOp::ReadMeta { count, .. } => count * 16,
             RdmaOp::ReadTokens { from, to, .. } => ((to - from) as usize) * 4,
         }
@@ -242,7 +245,16 @@ impl RdmaEngine {
                 ring.write_prompt(*slot, tokens);
                 Payload::None
             }
-            RdmaOp::Submit { slot, request_id, prompt_len, max_new, seed, priority, ttft_budget_us } => {
+            RdmaOp::Submit {
+                slot,
+                request_id,
+                prompt_len,
+                max_new,
+                seed,
+                priority,
+                ttft_budget_us,
+                session_id,
+            } => {
                 ring.submit_with_meta(
                     *slot,
                     &SubmitMeta {
@@ -252,6 +264,7 @@ impl RdmaEngine {
                         seed: *seed,
                         priority: *priority,
                         ttft_budget_us: *ttft_budget_us,
+                        session_id: *session_id,
                     },
                 );
                 Payload::None
@@ -387,6 +400,7 @@ mod tests {
             seed: 1,
             priority: 3,
             ttft_budget_us: 100_000,
+            session_id: 0,
         });
         assert_eq!(ring.slot(2).state(), SlotState::PrefillPending);
         assert_eq!(ring.read_prompt(2), vec![5, 6, 7]);
@@ -413,6 +427,7 @@ mod tests {
             seed: 0,
             priority: 0,
             ttft_budget_us: 0,
+            session_id: 0,
         });
         ring.claim_pending(0);
         ring.slot(0).set_state(SlotState::DecodeProcessing);
@@ -442,6 +457,7 @@ mod tests {
             seed: 0,
             priority: 0,
             ttft_budget_us: 0,
+            session_id: 0,
         });
         ring.claim_pending(1);
         ring.slot(1).set_state(SlotState::DecodeProcessing);
@@ -496,6 +512,7 @@ mod tests {
             seed: 0,
             priority: 0,
             ttft_budget_us: 0,
+            session_id: 0,
         });
         ring.claim_pending(3);
         ring.slot(3).set_state(SlotState::DecodeProcessing);

@@ -50,7 +50,8 @@ impl Default for RingConfig {
 /// Everything the frontend publishes alongside a prompt. `priority` and
 /// `ttft_budget_us` are the request-class fields threaded end-to-end
 /// (HTTP body → frontend → RDMA `Submit` → slot → admission policy →
-/// per-class eval percentiles).
+/// per-class eval percentiles); `session_id` tags multi-turn
+/// conversations for the prefix-reuse path (DESIGN.md §7).
 #[derive(Debug, Clone, Copy)]
 pub struct SubmitMeta {
     pub request_id: u64,
@@ -61,6 +62,8 @@ pub struct SubmitMeta {
     pub priority: u32,
     /// Relative TTFT budget in µs; 0 = no deadline.
     pub ttft_budget_us: u64,
+    /// Conversation-session tag; 0 = no session.
+    pub session_id: u64,
 }
 
 /// The shared ring buffer. `Sync`: every field is atomic; the access
@@ -117,7 +120,15 @@ impl RingBuffer {
     pub fn submit(&self, i: usize, request_id: u64, prompt_len: u32, max_new: u32, seed: u32) -> u64 {
         self.submit_with_meta(
             i,
-            &SubmitMeta { request_id, prompt_len, max_new, seed, priority: 0, ttft_budget_us: 0 },
+            &SubmitMeta {
+                request_id,
+                prompt_len,
+                max_new,
+                seed,
+                priority: 0,
+                ttft_budget_us: 0,
+                session_id: 0,
+            },
         )
     }
 
@@ -136,6 +147,7 @@ impl RingBuffer {
         s.max_new_tokens.store(meta.max_new, Ordering::Relaxed);
         s.seed.store(meta.seed, Ordering::Relaxed);
         s.priority.store(meta.priority, Ordering::Relaxed);
+        s.session_id.store(meta.session_id, Ordering::Relaxed);
         // Saturating: the budget is client-controlled (HTTP body) and a
         // huge value must mean "far future", not a wrapped-tiny deadline.
         let deadline =
@@ -358,10 +370,12 @@ mod tests {
                     seed: 0,
                     priority: (3 - n as u32) * 2, // descending, disagrees with tickets
                     ttft_budget_us: if n % 2 == 0 { 50_000 } else { 0 },
+                    session_id: n as u64 + 10,
                 },
             );
             assert_eq!(ticket, n as u64);
             assert_eq!(rb.slot(i).priority.load(Ordering::Relaxed), (3 - n as u32) * 2);
+            assert_eq!(rb.slot(i).session_id.load(Ordering::Relaxed), n as u64 + 10);
         }
         assert_eq!(rb.scan_pending(4), vec![6, 0, 4, 2], "ticket order, not priority order");
         assert_eq!(rb.scan_and_claim(4, 10), vec![6, 0, 4, 2]);
@@ -381,6 +395,7 @@ mod tests {
                 seed: 0,
                 priority: 5,
                 ttft_budget_us: 250_000,
+                session_id: 0,
             },
         );
         let s = rb.slot(1);

@@ -73,6 +73,11 @@ pub struct Slot {
     /// Absolute TTFT deadline (µs since process epoch); 0 = no deadline.
     /// Derived from the submitted TTFT budget at publish time.
     pub ttft_deadline_us: AtomicU64,
+    /// Conversation-session tag (hash of the client session id); 0 = no
+    /// session. Rides the same metadata write so the GPU plane can
+    /// attribute multi-turn traffic (`SchedulerStats::session_requests`)
+    /// without any host coordination.
+    pub session_id: AtomicU64,
     /// Number of generated tokens published to the output arena.
     pub generated: AtomicU32,
     /// Frontend-local progress (tokens already streamed to the client).
@@ -93,6 +98,7 @@ impl Slot {
             seed: AtomicU32::new(0),
             priority: AtomicU32::new(0),
             ttft_deadline_us: AtomicU64::new(0),
+            session_id: AtomicU64::new(0),
             generated: AtomicU32::new(0),
             read_cursor: AtomicU32::new(0),
             submit_time_us: AtomicU64::new(0),

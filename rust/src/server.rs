@@ -27,6 +27,11 @@ pub struct ServerConfig {
     /// Admission policy for the persistent scheduler (`--policy` on the
     /// CLI). FCFS reproduces the paper.
     pub policy: PolicyKind,
+    /// Prefix-aware KV reuse (DESIGN.md §7). Off by default (the
+    /// paper's behavior, and required for real AOT artifacts until the
+    /// grid gains an offset prefill graph); `serve --prefix-reuse`
+    /// opts in on the modeled executor.
+    pub prefix_reuse: bool,
 }
 
 impl Default for ServerConfig {
@@ -40,6 +45,7 @@ impl Default for ServerConfig {
             rdma: RdmaConfig::default(),
             apply_launch_delays: true,
             policy: PolicyKind::Fcfs,
+            prefix_reuse: false,
         }
     }
 }
@@ -80,6 +86,7 @@ impl BlinkServer {
                 placement: config.placement.clone(),
                 apply_launch_delays: config.apply_launch_delays,
                 policy: config.policy,
+                prefix_reuse: config.prefix_reuse,
                 ..Default::default()
             },
         );

@@ -129,6 +129,14 @@ impl CostModel {
         (flops / self.hw.flops).max(min) + self.hw.graph_exec_overhead_s
     }
 
+    /// Prefill cost when the leading `cached` prompt tokens are served
+    /// from the prefix cache: only the uncached suffix pays the MXU
+    /// cost (at least one token always prefills — the suffix launch
+    /// produces the first output token's logits).
+    pub fn prefill_with_prefix_s(&self, tokens: usize, cached: usize) -> f64 {
+        self.prefill_s(tokens - cached.min(tokens.saturating_sub(1)))
+    }
+
     /// KV capacity in *tokens* given weights resident (fp16).
     pub fn kv_capacity_tokens(&self) -> f64 {
         let weights = self.model.total_params * 2.0;
@@ -179,6 +187,18 @@ mod tests {
         let t1k = cm.prefill_s(1024);
         let t4k = cm.prefill_s(4096);
         assert!(t4k > 3.0 * t1k && t4k < 5.0 * t1k);
+    }
+
+    #[test]
+    fn prefix_reuse_cuts_prefill_to_suffix_cost() {
+        let cm = CostModel::new(LLAMA3_8B);
+        let full = cm.prefill_s(2048);
+        let mostly_cached = cm.prefill_with_prefix_s(2048, 1920);
+        assert!(mostly_cached < 0.25 * full, "hit {mostly_cached} vs cold {full}");
+        // The floor holds: a fully-cached prompt still pays at least the
+        // short-prefill weight sweep (never zero).
+        assert!(cm.prefill_with_prefix_s(2048, 4096) >= cm.prefill_s(1));
+        assert_eq!(cm.prefill_with_prefix_s(2048, 0), full);
     }
 
     #[test]

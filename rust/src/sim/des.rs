@@ -12,13 +12,18 @@
 //! cadence), ITL (per-token gaps incl. prefill pauses — the §3.1 "jitter"
 //! gap between ITL and TPOT), throughput and saturation behaviour.
 
+use std::collections::HashMap;
+
 use crate::gpu::policy::{Candidate, PolicyKind};
 use crate::sim::costmodel::{CostModel, PaperModel};
 use crate::sim::energy::PowerModel;
 use crate::sim::interference::InterferenceProcess;
 use crate::sim::systems::System;
 use crate::util::rng::Rng;
-use crate::workload::{ClassMix, LengthModel, RequestMetrics, TraceGen, TraceRequest, WindowMetrics};
+use crate::workload::{
+    ClassMix, LengthModel, MultiTurnMix, PrefixStats, RequestMetrics, TraceGen, TraceRequest,
+    WindowMetrics,
+};
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -39,6 +44,15 @@ pub struct SimConfig {
     pub policy: PolicyKind,
     /// Mixed-priority workload; `None` = the single-class `lengths` model.
     pub classes: Option<ClassMix>,
+    /// Multi-turn conversation workload (`rate` = sessions/s); takes
+    /// precedence over `classes`/`lengths` when set.
+    pub multi_turn: Option<MultiTurnMix>,
+    /// Prefix-cache capacity in tokens; 0 disables reuse (the paper's
+    /// configuration). When enabled the DES mirrors the live KvManager's
+    /// behavior at token granularity: each admission charges prefill only
+    /// for the uncached suffix of its session history, and cached
+    /// sessions are evicted LRU under capacity pressure.
+    pub prefix_cache_tokens: usize,
 }
 
 impl SimConfig {
@@ -55,6 +69,99 @@ impl SimConfig {
             max_prefill_batch: 8,
             policy: PolicyKind::Fcfs,
             classes: None,
+            multi_turn: None,
+            prefix_cache_tokens: 0,
+        }
+    }
+}
+
+/// Token-granular stand-in for the live `kvcache` prefix index: cached
+/// history per session + a shared system-prompt prefix, LRU-evicted
+/// under a token budget. Block alignment mirrors the live manager's
+/// full-block-only matching.
+struct PrefixCacheSim {
+    budget: usize,
+    block: usize,
+    /// Cross-session shared prefix (the common system prompt), cacheable
+    /// once any session has warmed the index.
+    shared_base: usize,
+    warm: bool,
+    total: usize,
+    tick: u64,
+    /// session → (cached tokens, last-use tick).
+    sessions: HashMap<u64, (usize, u64)>,
+    stats: PrefixStats,
+}
+
+impl PrefixCacheSim {
+    fn new(budget: usize, shared_base: usize) -> PrefixCacheSim {
+        PrefixCacheSim {
+            budget,
+            block: 16,
+            shared_base,
+            warm: false,
+            total: 0,
+            tick: 0,
+            sessions: HashMap::new(),
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Cached-prefix tokens available to this request (block-aligned,
+    /// capped below the full prompt as the live manager does).
+    fn lookup(&mut self, r: &TraceRequest) -> usize {
+        self.stats.lookups += 1;
+        self.stats.input_tokens += r.input_tokens as u64;
+        self.tick += 1;
+        let cached = match self.sessions.get_mut(&r.session_id) {
+            Some(e) if r.session_id != 0 => {
+                e.1 = self.tick;
+                e.0
+            }
+            // Unseen session: only the cross-session shared prefix (the
+            // common system prompt) can hit, and only once warmed.
+            _ if self.warm => self.shared_base,
+            _ => 0,
+        };
+        let hit = cached.min(r.history_tokens).min(r.input_tokens.saturating_sub(1))
+            / self.block
+            * self.block;
+        if hit > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += hit as u64;
+        }
+        hit
+    }
+
+    /// Record a session's cached tokens (monotone per session), evicting
+    /// least-recently-used sessions over budget. `tokens` is aligned
+    /// *down* to a full block first, mirroring the live manager: only
+    /// full prompt blocks are ever indexed — in particular a turn's
+    /// generated reply is not matchable until the *next* turn's prompt
+    /// (which contains it) commits.
+    fn store(&mut self, session: u64, tokens: usize) {
+        if session == 0 {
+            return;
+        }
+        let tokens = tokens / self.block * self.block;
+        self.warm = true;
+        self.tick += 1;
+        let e = self.sessions.entry(session).or_insert((0, self.tick));
+        self.total += tokens.saturating_sub(e.0);
+        e.0 = e.0.max(tokens);
+        e.1 = self.tick;
+        while self.total > self.budget && self.sessions.len() > 1 {
+            let (&victim, &(toks, _)) = self
+                .sessions
+                .iter()
+                .min_by_key(|(_, (_, tick))| *tick)
+                .expect("non-empty");
+            if victim == session {
+                break; // never evict the entry just refreshed
+            }
+            self.sessions.remove(&victim);
+            self.total -= toks;
+            self.stats.evicted_tokens += toks as u64;
         }
     }
 }
@@ -86,13 +193,22 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let iseed = if cfg.interference { cfg.seed.rotate_left(17) ^ 0xC010C } else { cfg.seed };
     let mut rng = Rng::new(iseed ^ sys_tag(cfg.system));
     let cm = CostModel::new(cfg.model);
-    let trace = match &cfg.classes {
-        Some(mix) => mix.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096),
-        None => {
-            TraceGen::new(cfg.lengths, 8192, 4096).generate(&mut rng.fork(1), cfg.rate, cfg.window_s)
+    let trace = if let Some(mt) = &cfg.multi_turn {
+        mt.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096)
+    } else {
+        match &cfg.classes {
+            Some(mix) => mix.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096),
+            None => TraceGen::new(cfg.lengths, 8192, 4096)
+                .generate(&mut rng.fork(1), cfg.rate, cfg.window_s),
         }
     };
     let policy = cfg.policy.build();
+    let mut prefix: Option<PrefixCacheSim> = if cfg.prefix_cache_tokens > 0 {
+        let shared = cfg.multi_turn.as_ref().map_or(0, |m| m.system_prompt_tokens);
+        Some(PrefixCacheSim::new(cfg.prefix_cache_tokens, shared))
+    } else {
+        None
+    };
 
     let interference = if sensitivity > 1.0 {
         InterferenceProcess::new(sensitivity, &mut rng)
@@ -171,7 +287,25 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
         }
         if !admitted.is_empty() {
             // Pause decode, run one prefill batch (paper policy), resume.
-            let prefill_tokens: usize = admitted.iter().map(|r| r.input_tokens).sum();
+            // With prefix reuse, each request charges only its uncached
+            // suffix — the cached history's K/V is already resident.
+            let prefill_tokens: usize = admitted
+                .iter()
+                .map(|r| {
+                    let hit = prefix.as_mut().map_or(0, |p| p.lookup(r));
+                    r.input_tokens - hit
+                })
+                .sum();
+            // The admitted prompts themselves become cached history
+            // (full prompt blocks only — the live path's index_prompt
+            // commits exactly this after the prefill; replies become
+            // matchable only once a later prompt containing them
+            // commits).
+            if let Some(p) = prefix.as_mut() {
+                for r in &admitted {
+                    p.store(r.session_id, r.input_tokens);
+                }
+            }
             let host = cfg.system.step_overhead_moe_s(running.len() + admitted.len(), cfg.model.moe)
                 * interference.sample(t, &mut rng);
             let dur = cm.prefill_s(prefill_tokens) + host;
@@ -218,6 +352,9 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     }
 
     let mut wm = WindowMetrics::from_requests(cfg.rate, cfg.window_s, &done);
+    if let Some(p) = &prefix {
+        wm.prefix = p.stats;
+    }
     // Energy: GPU utilization over the *active* span.
     let active = t.min(cfg.window_s).max(1e-9);
     let gpu_util = (gpu_busy_s.min(active) / active).clamp(0.0, 1.0);

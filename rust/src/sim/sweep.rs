@@ -12,7 +12,7 @@ use crate::sim::costmodel::{PaperModel, PAPER_MODELS};
 use crate::sim::des::{simulate, SimConfig};
 use crate::sim::systems::{System, ALL_SYSTEMS};
 use crate::util::stats::{geomean, saturation_index};
-use crate::workload::{ClassMix, WindowMetrics};
+use crate::workload::{ClassMix, MultiTurnMix, WindowMetrics};
 
 /// guidellm-style sweep levels (13 levels, 1..32 req/s).
 pub fn load_levels() -> Vec<f64> {
@@ -222,6 +222,82 @@ pub fn run_policy_sweep(
     PolicySweepResults { model, levels, mix, policies, points: results.into_inner().unwrap() }
 }
 
+// ---------------------------------------------------------------------------
+// Prefix-reuse sweep: Blink on the multi-turn chat workload, prefix
+// cache on vs off (the `blink eval prefix` experiment).
+// ---------------------------------------------------------------------------
+
+/// Session-arrival levels for the prefix comparison (sessions/s; each
+/// session expands into ~3–5 turns, so the request rate is higher).
+pub fn prefix_load_levels() -> Vec<f64> {
+    vec![1.0, 2.0, 4.0, 6.0, 8.0, 12.0]
+}
+
+/// Prefix-cache token budget for the reuse condition — deliberately a
+/// small slice of the H100 pool so the high end of the session-rate
+/// sweep shows LRU eviction pressure, not just free hits.
+pub const PREFIX_CACHE_TOKENS: usize = 600_000;
+
+pub struct PrefixSweepResults {
+    pub model: PaperModel,
+    pub levels: Vec<f64>,
+    pub mix: MultiTurnMix,
+    /// (reuse_enabled, level) → window metrics.
+    pub points: HashMap<(bool, usize), WindowMetrics>,
+}
+
+impl PrefixSweepResults {
+    pub fn get(&self, reuse: bool, level: usize) -> &WindowMetrics {
+        self.points.get(&(reuse, level)).expect("prefix sweep point")
+    }
+}
+
+/// Build the SimConfig for one prefix-comparison point (shared by the
+/// sweep and the acceptance test below).
+pub fn prefix_point_config(
+    model: PaperModel,
+    reuse: bool,
+    session_rate: f64,
+    window_s: f64,
+    mix: &MultiTurnMix,
+) -> SimConfig {
+    let mut cfg = SimConfig::new(System::Blink, model, session_rate, false);
+    cfg.window_s = window_s;
+    cfg.multi_turn = Some(mix.clone());
+    cfg.prefix_cache_tokens = if reuse { PREFIX_CACHE_TOKENS } else { 0 };
+    cfg
+}
+
+/// Run the prefix comparison: Blink × the multi-turn chat workload ×
+/// {reuse, no-reuse} × the session-rate levels. Points are independent
+/// sims, sharded across threads like the main sweep.
+pub fn run_prefix_sweep(model: PaperModel, window_s: f64, threads: usize) -> PrefixSweepResults {
+    let levels = prefix_load_levels();
+    let mix = MultiTurnMix::chat();
+    let mut work: Vec<((bool, usize), SimConfig)> = vec![];
+    for reuse in [false, true] {
+        for (level, rate) in levels.iter().enumerate() {
+            work.push(((reuse, level), prefix_point_config(model, reuse, *rate, window_s, &mix)));
+        }
+    }
+    let results: Mutex<HashMap<(bool, usize), WindowMetrics>> = Mutex::new(HashMap::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (key, cfg) = &work[i];
+                let wm = simulate(cfg);
+                results.lock().unwrap().insert(*key, wm);
+            });
+        }
+    });
+    PrefixSweepResults { model, levels, mix, points: results.into_inner().unwrap() }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +348,43 @@ mod tests {
         // must be saturating too (sanity that the load is actually mixed
         // *and* saturating, not that priority-aged won by luck).
         assert!(fi > 1_000.0, "fcfs interactive P99 {fi:.0} ms should show queueing");
+    }
+
+    /// The acceptance criterion of the prefix-reuse feature: on the
+    /// multi-turn chat workload, enabling the prefix cache improves mean
+    /// TTFT by ≥2× at a ≥50 % token hit ratio versus the cold baseline.
+    #[test]
+    fn prefix_reuse_doubles_multi_turn_ttft_at_high_hit_ratio() {
+        let mix = MultiTurnMix::chat();
+        let window = 30.0;
+        let rate = 4.0; // sessions/s, comfortably inside Blink's range
+        let on = simulate(&prefix_point_config(LLAMA3_8B, true, rate, window, &mix));
+        let off = simulate(&prefix_point_config(LLAMA3_8B, false, rate, window, &mix));
+        assert!(on.completed > 50 && off.completed > 50, "both conditions must complete");
+        let ratio = on.prefix.hit_ratio();
+        assert!(ratio >= 0.5, "hit ratio {ratio:.2} must reach 0.5");
+        assert!(
+            off.ttft.mean >= 2.0 * on.ttft.mean,
+            "reuse mean TTFT {:.1} ms must be ≥2x better than cold {:.1} ms",
+            on.ttft.mean,
+            off.ttft.mean
+        );
+        // The cold condition reports no cache activity at all.
+        assert_eq!(off.prefix.lookups, 0);
+        assert!(on.prefix.hits > 0 && on.prefix.hit_tokens > 0);
+    }
+
+    #[test]
+    fn prefix_cache_evicts_under_session_pressure() {
+        // Enough sessions that their histories exceed the cache budget:
+        // the LRU must evict, and the hit ratio must survive it (recent
+        // sessions keep hitting).
+        let mix = MultiTurnMix::chat();
+        let mut cfg = prefix_point_config(LLAMA3_8B, true, 12.0, 40.0, &mix);
+        cfg.prefix_cache_tokens = 60_000; // deliberately tight
+        let wm = simulate(&cfg);
+        assert!(wm.prefix.evicted_tokens > 0, "tight budget must evict");
+        assert!(wm.prefix.hit_tokens > 0, "recent sessions still hit");
     }
 
     #[test]

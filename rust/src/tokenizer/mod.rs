@@ -210,8 +210,10 @@ pub fn decode(vocab: &Vocab, tokens: &[u32]) -> String {
     String::from_utf8_lossy(&bytes).into_owned()
 }
 
+// pub(crate): other modules' unit tests borrow `tiny_vocab` (e.g. the
+// frontend session tests); the module only exists under cfg(test).
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
 
     pub(crate) fn tiny_vocab() -> Vocab {

@@ -3,7 +3,20 @@
 //! The offline registry only carries the `xla` crate's dependency closure,
 //! so JSON, CLI parsing, RNG, statistics and the property-testing harness
 //! are implemented here instead of pulling serde/clap/criterion/proptest
-//! (see DESIGN.md §4).
+//! (see DESIGN.md §4). Per submodule:
+//!
+//! * [`cli`] — `subcommand [positional...] --key value --flag` argument
+//!   parsing for the `blink` binary (clap stand-in);
+//! * [`json`] — the minimal JSON parser/serializer behind the
+//!   OpenAI-compatible HTTP surface (serde stand-in);
+//! * [`prop`] — seeded property-testing harness with reproducible
+//!   per-case RNGs (proptest stand-in);
+//! * [`rng`] — deterministic SplitMix64 PRNG plus the exponential /
+//!   lognormal draws the workload generators need (rand stand-in);
+//! * [`stats`] — percentile/geomean/saturation-knee helpers shared by
+//!   the eval tables;
+//! * [`timer`] — monotonic µs clock + the warmup/percentile bench
+//!   harness every `rust/benches/*` target uses (criterion stand-in).
 
 pub mod cli;
 pub mod json;

@@ -58,6 +58,12 @@ pub struct TraceRequest {
     pub priority: u32,
     /// Relative TTFT budget in seconds; 0 = no deadline.
     pub ttft_budget_s: f64,
+    /// Conversation-session tag; 0 = single-turn request (no session).
+    pub session_id: u64,
+    /// Leading prompt tokens that repeat the session's earlier turns
+    /// (system prompt + prior user/assistant exchanges) — the part a
+    /// prefix cache can serve. Always < `input_tokens`; 0 for turn 1.
+    pub history_tokens: usize,
 }
 
 pub struct TraceGen {
@@ -103,6 +109,8 @@ where
             output_tokens: o,
             priority,
             ttft_budget_s,
+            session_id: 0,
+            history_tokens: 0,
         });
         id += 1;
     }
@@ -188,6 +196,134 @@ impl ClassMix {
     }
 }
 
+/// Multi-turn conversation workload ([`ClassMix`]-compatible: every turn
+/// carries the same priority/TTFT-budget class fields the policy sweep
+/// ranks by): sessions arrive Poisson at the offered rate; each session
+/// opens with a shared system prompt and then alternates user turns and
+/// assistant replies, every turn's prompt repeating the *entire* session
+/// history — the workload class where prefix caching dominates serving
+/// cost, because without it turn k re-prefills turns 1..k−1 verbatim.
+#[derive(Debug, Clone)]
+pub struct MultiTurnMix {
+    /// Tokens of the shared system prompt opening every session.
+    pub system_prompt_tokens: usize,
+    /// Probability a session continues after each turn (geometric length;
+    /// mean turns ≈ 1/(1−p), capped at `max_turns`).
+    pub continue_prob: f64,
+    pub max_turns: usize,
+    /// Per-turn lengths: `sample()`'s input is the user turn, its output
+    /// the assistant reply.
+    pub turn_lengths: LengthModel,
+    /// Mean client think time between turns, seconds (exponential).
+    pub think_time_s: f64,
+    /// Class fields stamped on every turn (ClassMix-compatible).
+    pub priority: u32,
+    pub ttft_budget_ms: f64,
+}
+
+impl MultiTurnMix {
+    /// The canonical chat workload: 512-token system prompt, ~4 turns per
+    /// session of ~96-token user turns and ~96-token replies, 1.5 s think
+    /// time. Turn-k prompts reach a few thousand tokens, ~70–80 % of
+    /// which is replayed history.
+    pub fn chat() -> MultiTurnMix {
+        MultiTurnMix {
+            system_prompt_tokens: 512,
+            continue_prob: 0.75,
+            max_turns: 6,
+            turn_lengths: LengthModel::ShareGpt { in_mean: 96.0, out_mean: 96.0, cv: 0.6 },
+            think_time_s: 1.5,
+            priority: 0,
+            ttft_budget_ms: 0.0,
+        }
+    }
+
+    /// Poisson *session* arrivals at `session_rate`/s over `window_s`;
+    /// turn k+1 arrives after turn k plus think time and a nominal
+    /// service estimate (the DES resolves actual completion times — a
+    /// turn arriving before its predecessor finished simply sees less
+    /// cached history, as a real impatient client would).
+    pub fn generate(
+        &self,
+        rng: &mut Rng,
+        session_rate: f64,
+        window_s: f64,
+        max_in: usize,
+        max_out: usize,
+    ) -> Vec<TraceRequest> {
+        let mut out: Vec<TraceRequest> = vec![];
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        let mut session = 1u64;
+        loop {
+            t += rng.exp(session_rate);
+            if t >= window_s {
+                break;
+            }
+            let mut arrival = t;
+            let mut history = self.system_prompt_tokens;
+            for turn in 0..self.max_turns {
+                let (user, reply) = self.turn_lengths.sample(rng, max_in, max_out);
+                let input = history + user;
+                if input > max_in {
+                    break; // context exhausted: the session ends
+                }
+                out.push(TraceRequest {
+                    id,
+                    arrival_s: arrival,
+                    input_tokens: input,
+                    output_tokens: reply,
+                    priority: self.priority,
+                    ttft_budget_s: self.ttft_budget_ms / 1e3,
+                    session_id: session,
+                    history_tokens: history,
+                });
+                id += 1;
+                history = input + reply;
+                if turn + 1 >= self.max_turns || rng.f64() >= self.continue_prob {
+                    break;
+                }
+                // Nominal pacing: think time + a rough service estimate
+                // (TTFT + decode at ~30 ms/token).
+                arrival += rng.exp(1.0 / self.think_time_s) + 0.2 + reply as f64 * 0.03;
+                if arrival >= window_s {
+                    break;
+                }
+            }
+            session += 1;
+        }
+        out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        out
+    }
+}
+
+/// Prefix-cache counters for one simulated window (filled by the DES
+/// when `SimConfig::prefix_cache_tokens` > 0; all-zero otherwise).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixStats {
+    /// Admissions that consulted the cache.
+    pub lookups: u64,
+    /// Admissions that reused at least one token.
+    pub hits: u64,
+    /// Prompt tokens served from the cache (prefill work avoided).
+    pub hit_tokens: u64,
+    /// Total prompt tokens of all admitted requests.
+    pub input_tokens: u64,
+    /// Cached tokens dropped under capacity pressure (LRU).
+    pub evicted_tokens: u64,
+}
+
+impl PrefixStats {
+    /// Fraction of admitted prompt tokens served from the cache.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.input_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.input_tokens as f64
+        }
+    }
+}
+
 /// Per-request measurements (seconds), aggregated into the paper's
 /// metrics: TTFT, TPOT = (last - first)/(out - 1), ITL samples.
 #[derive(Debug, Clone)]
@@ -246,6 +382,9 @@ pub struct WindowMetrics {
     pub prefill_tok_s: f64,
     /// Wall energy per generated token, mJ (filled by the energy model).
     pub energy_mj_per_tok: f64,
+    /// Prefix-cache hit/evict counters (filled by the DES when reuse is
+    /// enabled; all-zero otherwise).
+    pub prefix: PrefixStats,
     /// Per-priority-class TTFT, highest priority first (single-class
     /// workloads produce one entry with priority 0).
     pub ttft_by_class: Vec<ClassTtft>,
@@ -323,6 +462,7 @@ impl WindowMetrics {
             decode_tok_s: out_tokens as f64 / window_s,
             prefill_tok_s: in_tokens as f64 / window_s,
             energy_mj_per_tok: 0.0,
+            prefix: PrefixStats::default(),
             ttft_by_class,
         }
     }
@@ -423,6 +563,69 @@ mod tests {
         let mi = inter.iter().map(|r| r.input_tokens as f64).sum::<f64>() / inter.len() as f64;
         let mb = batch.iter().map(|r| r.input_tokens as f64).sum::<f64>() / batch.len() as f64;
         assert!(mi * 3.0 < mb, "interactive mean {mi} vs batch mean {mb}");
+    }
+
+    #[test]
+    fn multi_turn_histories_grow_and_stay_cacheable() {
+        let mix = MultiTurnMix::chat();
+        let mut rng = Rng::new(11);
+        let reqs = mix.generate(&mut rng, 6.0, 300.0, 8192, 4096);
+        assert!(!reqs.is_empty());
+        // Arrivals sorted; histories strictly below inputs.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let mut by_session: std::collections::HashMap<u64, Vec<&TraceRequest>> =
+            std::collections::HashMap::new();
+        for r in &reqs {
+            assert!(r.session_id != 0);
+            assert!(r.history_tokens < r.input_tokens, "history must leave a fresh suffix");
+            by_session.entry(r.session_id).or_default().push(r);
+        }
+        let mut multi = 0usize;
+        for turns in by_session.values_mut() {
+            turns.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            assert_eq!(
+                turns[0].history_tokens,
+                mix.system_prompt_tokens,
+                "turn 1 history is exactly the shared system prompt"
+            );
+            for w in turns.windows(2) {
+                // Turn k+1 replays turn k's prompt *and* its reply.
+                assert_eq!(
+                    w[1].history_tokens,
+                    w[0].input_tokens + w[0].output_tokens,
+                    "history grows by the previous turn's input + reply"
+                );
+            }
+            if turns.len() > 1 {
+                multi += 1;
+            }
+        }
+        // Geometric continuation at 0.75 → most sessions are multi-turn.
+        assert!(
+            multi * 2 > by_session.len(),
+            "most sessions should have >1 turn: {multi}/{}",
+            by_session.len()
+        );
+        // The cacheable fraction of the offered prompt tokens is large —
+        // this is the property the prefix cache exploits.
+        let input: usize = reqs.iter().map(|r| r.input_tokens).sum();
+        let hist: usize = reqs.iter().map(|r| r.history_tokens).sum();
+        assert!(
+            hist as f64 > 0.5 * input as f64,
+            "history fraction {:.2} should exceed 0.5",
+            hist as f64 / input as f64
+        );
+    }
+
+    #[test]
+    fn prefix_stats_hit_ratio() {
+        let mut p = PrefixStats::default();
+        assert_eq!(p.hit_ratio(), 0.0);
+        p.input_tokens = 1000;
+        p.hit_tokens = 650;
+        assert!((p.hit_ratio() - 0.65).abs() < 1e-12);
     }
 
     #[test]

@@ -85,6 +85,54 @@ fn http_api_completion_and_sse() {
     server.shutdown();
 }
 
+#[test]
+fn http_session_accumulates_multi_turn_history() {
+    let Some(server) = server_or_skip() else { return };
+    let http = HttpServer::serve(
+        "127.0.0.1:0",
+        server.frontend.clone(),
+        server.scheduler.stats.clone(),
+    )
+    .expect("http bind");
+    let addr = http.addr;
+
+    // Turn 1 opens the session; turn 2 submits only its new text.
+    let body = r#"{"prompt": "the quick brown fox", "max_tokens": 4, "session_id": "conv-1"}"#;
+    let resp = http_post(addr, "/v1/completions", body);
+    assert!(resp.starts_with("HTTP/1.1 200"), "resp: {resp}");
+    let after_turn1 = server.frontend.session_history_len("conv-1");
+    assert!(after_turn1 > 0, "turn 1 must seed the session history");
+
+    let body = r#"{"prompt": " jumps over", "max_tokens": 4, "session_id": "conv-1"}"#;
+    let resp = http_post(addr, "/v1/completions", body);
+    assert!(resp.starts_with("HTTP/1.1 200"), "resp: {resp}");
+    // Turn 2's prompt carried the full history: prompt_tokens in the
+    // usage block must exceed what " jumps over" alone tokenizes to.
+    let after_turn2 = server.frontend.session_history_len("conv-1");
+    assert!(
+        after_turn2 > after_turn1,
+        "history must grow across turns: {after_turn1} -> {after_turn2}"
+    );
+    // The GPU plane saw the session tag on both admissions.
+    let session_reqs = server
+        .scheduler
+        .stats
+        .session_requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(session_reqs >= 2, "scheduler must attribute session turns: {session_reqs}");
+
+    // An invalid session_id type is rejected, not silently dropped.
+    let bad = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "x", "max_tokens": 2, "session_id": 7}"#,
+    );
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+
+    drop(http);
+    server.shutdown();
+}
+
 fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
     let mut s = TcpStream::connect(addr).unwrap();
     write!(

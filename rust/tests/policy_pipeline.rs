@@ -32,6 +32,7 @@ fn submit(ring: &RingBuffer, slot: usize, prompt_len: u32, priority: u32, budget
             seed: 0,
             priority,
             ttft_budget_us: budget_us,
+            session_id: 0,
         },
     )
 }

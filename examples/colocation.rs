@@ -10,7 +10,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use blink::gpu::{Executor, Placement, Scheduler, SchedulerConfig};
+use blink::gpu::{Executor, Placement, PrefixReuse, Scheduler, SchedulerConfig};
 use blink::hostsim::Interferer;
 use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
 use blink::runtime::{artifacts_dir, ModelManifest};
@@ -35,7 +35,7 @@ fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
         SchedulerConfig {
             placement,
             apply_launch_delays: true,
-            prefix_reuse: false,
+            prefix_reuse: PrefixReuse::Off,
             ..Default::default()
         },
     );

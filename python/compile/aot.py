@@ -10,10 +10,14 @@ Outputs under ``artifacts/<model>/``:
     params.npz             weights (numpy savez; xla crate reads npz)
     decode_b{B}.hlo.txt    one decode graph per batch size in the grid
     prefill_b{B}_s{S}.hlo.txt
+    prefill_offset_b{B}_s{S}.hlo.txt   suffix prefill at runtime offsets
 
 This mirrors the paper's CUDA-graph cache (§4.2): a dense grid of
 (batch, seq) executables captured once at startup, selected at runtime by
-an O(1) tightest-fit lookup in rust/src/graphs/.
+an O(1) tightest-fit lookup in rust/src/graphs/. The offset variants
+(S = padded *suffix* length; per-lane block-aligned offsets are a runtime
+[B] int32 input) are what let live prefix-cache hits prefill only the
+uncached tail at the correct positions (DESIGN.md §7).
 
 Run once via ``make artifacts``; never on the request path.
 """
@@ -47,8 +51,10 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def _arg_specs(cfg: ModelConfig, batch: int, seq: int | None):
-    """ShapeDtypeStructs in manifest order for one graph."""
+def _arg_specs(cfg: ModelConfig, batch: int, seq: int | None, offset: bool = False):
+    """ShapeDtypeStructs in manifest order for one graph. Offset prefill
+    graphs take an extra [B] int32 `offsets` input between tokens and
+    seed (the per-lane block-aligned cached-prefix lengths)."""
     specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs()]
     kv = jax.ShapeDtypeStruct(
         (cfg.n_layers, cfg.num_blocks, 2, cfg.n_kv_heads, cfg.block_size, cfg.d_head),
@@ -61,7 +67,11 @@ def _arg_specs(cfg: ModelConfig, batch: int, seq: int | None):
     else:
         tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
     seed = jax.ShapeDtypeStruct((), jnp.uint32)
-    return specs + [kv, bt, sl, tok, seed]
+    out = specs + [kv, bt, sl, tok]
+    if offset:
+        out.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    out.append(seed)
+    return out
 
 
 def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> None:
@@ -75,7 +85,7 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
         **{k: np.asarray(v) for k, v in params.items()},
     )
 
-    decode_fn, prefill_fn = make_flat_fns(cfg, use_pallas=use_pallas)
+    decode_fn, prefill_fn, prefill_offset_fn = make_flat_fns(cfg, use_pallas=use_pallas)
     # Donate the KV pool (input -> output alias): the rust runtime swaps
     # the pool buffer each step anyway, and the alias lets XLA update it
     # in place instead of copying ~33 MB per decode step (§Perf: ~2x on
@@ -98,6 +108,18 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
         with open(os.path.join(out, f"{name}.hlo.txt"), "w") as f:
             f.write(to_hlo_text(lowered))
         graphs.append((name, "prefill", b, s))
+        print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
+    # Offset prefill variants share the prefill grid: S is the padded
+    # *suffix* length, and one graph serves every block-aligned hit
+    # length because offsets are a runtime input.
+    for b, s in prefill_grid:
+        name = f"prefill_offset_b{b}_s{s}"
+        lowered = jax.jit(prefill_offset_fn, donate_argnums=(kv_arg,)).lower(
+            *_arg_specs(cfg, b, s, offset=True)
+        )
+        with open(os.path.join(out, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        graphs.append((name, "prefill_offset", b, s))
         print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
 
     with open(os.path.join(out, "manifest.txt"), "w") as f:

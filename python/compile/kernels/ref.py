@@ -102,6 +102,51 @@ def paged_attention_ref(
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention_ref(
+    q: jax.Array,
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    offsets: jax.Array,
+) -> jax.Array:
+    """Suffix-prefill attention over the paged KV pool (offset graphs).
+
+    q: [B, S, Hq, Dh] — queries for the *suffix* positions
+        ``offsets[b] .. offsets[b] + S`` of each sequence.
+    kv_pool: [N, 2, Hkv, Bs, Dh] — global block pool; the suffix's own
+        K/V must already be written at its positions, and the cached
+        prefix's K/V at positions ``0 .. offsets[b]``.
+    block_tables: [B, M] int32 — block ids per sequence.
+    offsets: [B] int32 — cached-prefix length per sequence (0 = cold,
+        which reduces to ordinary causal prefill over the pool).
+    Returns [B, S, Hq, Dh].
+
+    Global causality: key position k is visible to suffix query i iff
+    ``k <= offsets + i``. Padded table entries (block 0) sit at key
+    positions beyond any valid query's horizon, so they are masked by
+    the same bound.
+    """
+    b, s, hq, dh = q.shape
+    n, _, hkv, bs, _ = kv_pool.shape
+    m = block_tables.shape[1]
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+
+    k = kv_pool[block_tables, 0]  # [B, M, Hkv, Bs, Dh]
+    v = kv_pool[block_tables, 1]
+    k = jnp.moveaxis(k, 3, 2).reshape(b, m * bs, hkv, dh)
+    v = jnp.moveaxis(v, 3, 2).reshape(b, m * bs, hkv, dh)
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    kpos = jnp.arange(m * bs)[None, None, :]  # [1, 1, K]
+    qpos = offsets[:, None, None] + jnp.arange(s)[None, :, None]  # [B, S, 1]
+    mask = kpos <= qpos  # [B, S, K]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def topp_sample_ref(
     logits: jax.Array,
     uniform: jax.Array,

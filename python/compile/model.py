@@ -1,8 +1,10 @@
 """L2: the JAX model — llama-style decoder (dense + MoE) with paged KV.
 
-This is the compute graph Blink's GPU-resident scheduler launches: two
-entry points, ``prefill`` and ``decode_step``, both *pure functions* of
-(params, kv_pool, control tensors, seed). They call the L1 Pallas kernels
+This is the compute graph Blink's GPU-resident scheduler launches: three
+entry points, ``prefill``, ``prefill_offset`` (suffix prefill at a runtime
+offset, behind live prefix-cache hits) and ``decode_step``, all *pure
+functions* of (params, kv_pool, control tensors, seed). They call the L1
+Pallas kernels
 (``use_pallas=True``, the AOT default) or the jnp oracles (``False``) —
 the A/B used by python/tests to validate kernels inside the full graph.
 
@@ -206,6 +208,24 @@ def _write_kv_prefill(pool_layer, k, v, block_tables, cfg):
     return pool_layer
 
 
+def _write_kv_prefill_offset(pool_layer, k, v, block_tables, offsets, cfg):
+    """Write a padded *suffix*'s K/V at positions offsets..offsets+S.
+
+    k/v: [B, S, Hkv, Dh]; offsets: [B] int32 (runtime, block-aligned
+    cached-prefix lengths). The block-table entries these positions map to
+    are owned by the sequence (the rust allocator reserves the full
+    cached+padded span), so padded writes are benign exactly as in
+    `_write_kv_prefill`."""
+    b, s = k.shape[0], k.shape[1]
+    bs = cfg.block_size
+    pos = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+    blk = block_tables[jnp.arange(b)[:, None], pos // bs]
+    slot = pos % bs
+    pool_layer = pool_layer.at[blk, 0, :, slot, :].set(k)
+    pool_layer = pool_layer.at[blk, 1, :, slot, :].set(v)
+    return pool_layer
+
+
 # ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
@@ -274,12 +294,15 @@ def prefill(
     seed: jax.Array,
     cfg: ModelConfig,
     use_pallas: bool = True,
+    return_logits: bool = False,
 ):
     """Prefill a padded batch of prompts and sample each first output token.
 
     tokens: [B, S] int32 (padded with any id); seq_lens: [B] true lengths.
     Writes K/V for all S positions (padded ones are masked in attention and
-    later overwritten by decode). Returns (first_tokens [B], kv_pool').
+    later overwritten by decode). Returns (first_tokens [B], kv_pool');
+    with `return_logits` (tests only, not exported) the last-position
+    logits [B, V] replace the sampled tokens.
     """
     b, s = tokens.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -321,6 +344,89 @@ def prefill(
     xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]  # [B, D]
     xl = _rmsnorm(xl, params["final_norm"], use_pallas)
     logits = xl @ params["tok_embed"].T
+    if return_logits:
+        return logits, kv_pool
+    uniform = jax.random.uniform(jax.random.PRNGKey(seed), (b,), jnp.float32)
+    first = _sample(logits, uniform, cfg, use_pallas)
+    return first.astype(jnp.int32), kv_pool
+
+
+def prefill_offset(
+    params: Dict[str, jax.Array],
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    tokens: jax.Array,
+    offsets: jax.Array,
+    seed: jax.Array,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+    return_logits: bool = False,
+):
+    """Prefill a padded batch of prompt *suffixes* at runtime offsets.
+
+    The offset-graph variant behind live prefix-cache hits (DESIGN.md §7):
+    the leading `offsets[b]` tokens of each prompt are already cached in
+    the paged pool (their K/V written by an earlier prefill of the shared
+    prefix), so this graph only processes the uncached suffix — rotary
+    embeddings and KV writes land at the true positions
+    ``offsets[b] .. offsets[b] + S`` and attention spans the whole cached
+    context via the pool (`paged_prefill_attention_ref`). ``offsets`` is a
+    runtime [B] int32 input, so one compiled (B, S) graph serves every
+    block-aligned hit length; a row with offset 0 degenerates to an
+    ordinary causal prefill over the pool.
+
+    tokens: [B, S] int32 suffix tokens (padded with any id);
+    offsets: [B] int32 block-aligned cached-prefix lengths;
+    seq_lens: [B] FULL true lengths (offset + true suffix length).
+    Returns (first_tokens [B], kv_pool'), or (logits [B, V], kv_pool')
+    with `return_logits` (tests only, not exported).
+    """
+    b, s = tokens.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+
+    x = params["tok_embed"][tokens]  # [B, S, D]
+
+    def layer(carry, li):
+        x, kv_pool = carry
+        h2d = _rmsnorm(x.reshape(b * s, -1), params["attn_norm"][li], use_pallas)
+        h = h2d.reshape(b, s, -1)
+        q = (h @ params["wq"][li]).reshape(b, s, hq, dh)
+        k = (h @ params["wk"][li]).reshape(b, s, hkv, dh)
+        v = (h @ params["wv"][li]).reshape(b, s, hkv, dh)
+        # rope at the *global* positions of the suffix rows.
+        posf = pos.reshape(b * s)
+        q = _rope(q.reshape(b * s, hq, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hq, dh
+        )
+        k = _rope(k.reshape(b * s, hkv, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hkv, dh
+        )
+        pool_layer = kv_pool[li]
+        pool_layer = _write_kv_prefill_offset(pool_layer, k, v, block_tables, offsets, cfg)
+        kv_pool = jax.lax.dynamic_update_index_in_dim(kv_pool, pool_layer, li, 0)
+        # Attention gathers cached prefix + fresh suffix K/V from the
+        # pool; the pure-jnp gather/einsum composition serves both the
+        # pallas and oracle builds (no dedicated Pallas kernel yet — the
+        # rope/rmsnorm/sampling hot-spots still switch on use_pallas).
+        o = ref.paged_prefill_attention_ref(q, pool_layer, block_tables, offsets)
+        x = x + o.reshape(b, s, hq * dh) @ params["wo"][li]
+        h2 = _rmsnorm(x.reshape(b * s, -1), params["mlp_norm"][li], use_pallas)
+        x = x + _mlp(h2, params, li, cfg, use_pallas).reshape(b, s, -1)
+        return (x, kv_pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(
+        layer, (x, kv_pool), jnp.arange(cfg.n_layers), length=cfg.n_layers
+    )
+
+    # Last valid *suffix* row per sequence -> first sampled token.
+    last_idx = jnp.clip(seq_lens - 1 - offsets, 0, s - 1)
+    xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]  # [B, D]
+    xl = _rmsnorm(xl, params["final_norm"], use_pallas)
+    logits = xl @ params["tok_embed"].T
+    if return_logits:
+        return logits, kv_pool
     uniform = jax.random.uniform(jax.random.PRNGKey(seed), (b,), jnp.float32)
     first = _sample(logits, uniform, cfg, use_pallas)
     return first.astype(jnp.int32), kv_pool
@@ -332,8 +438,10 @@ def prefill(
 
 
 def make_flat_fns(cfg: ModelConfig, use_pallas: bool = True):
-    """Return (decode_fn, prefill_fn) taking flat positional args in
-    manifest order: [*params, kv_pool, block_tables, seq_lens, tokens, seed].
+    """Return (decode_fn, prefill_fn, prefill_offset_fn) taking flat
+    positional args in manifest order:
+    [*params, kv_pool, block_tables, seq_lens, tokens, seed] — the offset
+    variant takes an extra [B] int32 `offsets` between tokens and seed.
     Outputs are (next_tokens, kv_pool) tuples."""
     names = [n for n, _ in cfg.param_specs()]
 
@@ -350,7 +458,11 @@ def make_flat_fns(cfg: ModelConfig, use_pallas: bool = True):
         params, (kv, bt, sl, tok, seed) = unflatten(args)
         return prefill(params, kv, bt, sl, tok, seed, cfg, use_pallas)
 
-    return decode_fn, prefill_fn
+    def prefill_offset_fn(*args):
+        params, (kv, bt, sl, tok, off, seed) = unflatten(args)
+        return prefill_offset(params, kv, bt, sl, tok, off, seed, cfg, use_pallas)
+
+    return decode_fn, prefill_fn, prefill_offset_fn
 
 
 def empty_kv_pool(cfg: ModelConfig) -> jax.Array:

@@ -14,7 +14,7 @@ CFG = dataclasses.replace(TINY, n_layers=1, num_blocks=8, max_blocks_per_seq=2)
 
 
 def test_decode_graph_lowers_to_hlo_text():
-    decode_fn, _ = make_flat_fns(CFG, use_pallas=True)
+    decode_fn, _, _ = make_flat_fns(CFG, use_pallas=True)
     lowered = jax.jit(decode_fn).lower(*_arg_specs(CFG, 2, None))
     text = to_hlo_text(lowered)
     assert text.startswith("HloModule")
@@ -23,11 +23,20 @@ def test_decode_graph_lowers_to_hlo_text():
     assert "s32[2]" in text
 
 def test_prefill_graph_lowers_to_hlo_text():
-    _, prefill_fn = make_flat_fns(CFG, use_pallas=True)
+    _, prefill_fn, _ = make_flat_fns(CFG, use_pallas=True)
     lowered = jax.jit(prefill_fn).lower(*_arg_specs(CFG, 1, 16))
     text = to_hlo_text(lowered)
     assert text.startswith("HloModule")
     assert "s32[1,16]" in text
+
+
+def test_offset_prefill_graph_lowers_to_hlo_text():
+    _, _, prefill_offset_fn = make_flat_fns(CFG, use_pallas=True)
+    lowered = jax.jit(prefill_offset_fn).lower(*_arg_specs(CFG, 1, 16, offset=True))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[1,16]" in text  # suffix tokens
+    assert "s32[1]" in text  # runtime offsets (and seq_lens)
 
 
 def test_arg_specs_match_manifest_order():
@@ -37,3 +46,13 @@ def test_arg_specs_match_manifest_order():
     kv = specs[n_params]
     assert kv.shape == (CFG.n_layers, CFG.num_blocks, 2, CFG.n_kv_heads, CFG.block_size, CFG.d_head)
     assert specs[-1].dtype == jnp.uint32
+
+
+def test_offset_arg_specs_insert_offsets_before_seed():
+    specs = _arg_specs(CFG, 2, 32, offset=True)
+    n_params = len(CFG.param_specs())
+    assert len(specs) == n_params + 6  # + offsets
+    off = specs[-2]
+    assert off.shape == (2,) and off.dtype == jnp.int32
+    assert specs[-1].dtype == jnp.uint32
+    assert specs[-3].shape == (2, 32)  # suffix tokens stay [B, S]

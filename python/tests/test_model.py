@@ -15,6 +15,7 @@ from compile.model import (
     init_params,
     make_flat_fns,
     prefill,
+    prefill_offset,
 )
 
 CFG = dataclasses.replace(TINY, n_layers=2, num_blocks=32, max_blocks_per_seq=4)
@@ -78,6 +79,141 @@ def test_prefill_respects_seq_len_padding(setup):
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
 
 
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_offset_prefill_matches_full_prefill(use_pallas):
+    """The offset-graph numerics contract (DESIGN.md §7): for a prompt
+    split at a block boundary, `prefill(prefix)` followed by
+    `prefill_offset(suffix, offset)` must produce the same last-position
+    logits as one full `prefill(prompt)` — rotary phases, KV write
+    positions and causal masking all line up at the runtime offset."""
+    params = init_params(CFG)
+    bs = CFG.block_size
+    rng = np.random.default_rng(7)
+    for case, split_blocks in enumerate([1, 2]):
+        length = 3 * bs  # 48 tokens over 3 blocks (max_blocks_per_seq = 4)
+        split = split_blocks * bs
+        prompt = jnp.asarray(
+            rng.integers(0, CFG.vocab_size, (1, length)), dtype=jnp.int32
+        )
+        bt = jnp.asarray([[1, 2, 3, 4]], dtype=jnp.int32)
+        seed = jnp.uint32(11 + case)
+
+        full_logits, full_kv = prefill(
+            params,
+            empty_kv_pool(CFG),
+            bt,
+            jnp.asarray([length], jnp.int32),
+            prompt,
+            seed,
+            CFG,
+            use_pallas=use_pallas,
+            return_logits=True,
+        )
+        # Turn 1: prefill the shared prefix alone (what indexed its blocks).
+        _, kv1 = prefill(
+            params,
+            empty_kv_pool(CFG),
+            bt,
+            jnp.asarray([split], jnp.int32),
+            prompt[:, :split],
+            seed,
+            CFG,
+            use_pallas=use_pallas,
+        )
+        # Turn 2: offset prefill of only the uncached suffix.
+        off_logits, off_kv = prefill_offset(
+            params,
+            kv1,
+            bt,
+            jnp.asarray([length], jnp.int32),
+            prompt[:, split:],
+            jnp.asarray([split], jnp.int32),
+            seed,
+            CFG,
+            use_pallas=use_pallas,
+            return_logits=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(off_logits),
+            np.asarray(full_logits),
+            rtol=2e-3,
+            atol=2e-3,
+            err_msg=f"split={split}",
+        )
+        # The K/V written for the valid span must match the full prefill's
+        # (blocks 1-3 hold positions 0..48; block 4 was never written).
+        blocks = np.asarray(bt[0, :3])
+        np.testing.assert_allclose(
+            np.asarray(off_kv)[:, blocks],
+            np.asarray(full_kv)[:, blocks],
+            rtol=2e-3,
+            atol=2e-3,
+            err_msg=f"kv split={split}",
+        )
+
+
+def test_offset_prefill_batch_with_mixed_offsets():
+    """One offset graph serves lanes with different (and zero) offsets:
+    per-lane runtime offsets are the whole point of the [B] input."""
+    params = init_params(CFG)
+    bs = CFG.block_size
+    rng = np.random.default_rng(3)
+    p0 = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, 48)), dtype=jnp.int32)
+    p1 = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, 48)), dtype=jnp.int32)
+    bt = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], dtype=jnp.int32)
+    seed = jnp.uint32(5)
+
+    # Lane 0: 2 cached blocks + 16-token suffix. Lane 1: cold (offset 0),
+    # its "suffix" is the first 16 tokens of its prompt.
+    _, kv1 = prefill(
+        params,
+        empty_kv_pool(CFG),
+        bt[:1],
+        jnp.asarray([2 * bs], jnp.int32),
+        p0[:, : 2 * bs],
+        seed,
+        CFG,
+        use_pallas=False,
+    )
+    toks = jnp.concatenate([p0[:, 2 * bs : 3 * bs], p1[:, :bs]], axis=0)
+    logits, _ = prefill_offset(
+        params,
+        kv1,
+        bt,
+        jnp.asarray([48, 16], jnp.int32),
+        toks,
+        jnp.asarray([2 * bs, 0], jnp.int32),
+        seed,
+        CFG,
+        use_pallas=False,
+        return_logits=True,
+    )
+    want0, _ = prefill(
+        params,
+        empty_kv_pool(CFG),
+        bt[:1],
+        jnp.asarray([48], jnp.int32),
+        p0,
+        seed,
+        CFG,
+        use_pallas=False,
+        return_logits=True,
+    )
+    want1, _ = prefill(
+        params,
+        empty_kv_pool(CFG),
+        bt[1:],
+        jnp.asarray([16], jnp.int32),
+        p1[:, :bs],
+        seed,
+        CFG,
+        use_pallas=False,
+        return_logits=True,
+    )
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(want0[0]), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(logits[1]), np.asarray(want1[0]), rtol=2e-3, atol=2e-3)
+
+
 def test_moe_model_runs_and_matches_oracle():
     params = init_params(CFG_MOE)
     kv = empty_kv_pool(CFG_MOE)
@@ -93,7 +229,7 @@ def test_moe_model_runs_and_matches_oracle():
 
 
 def test_flat_fns_arg_order_matches_param_specs():
-    decode_fn, prefill_fn = make_flat_fns(CFG, use_pallas=False)
+    decode_fn, prefill_fn, prefill_offset_fn = make_flat_fns(CFG, use_pallas=False)
     params = init_params(CFG)
     args = [params[n] for n, _ in CFG.param_specs()]
     kv = empty_kv_pool(CFG)
@@ -105,6 +241,9 @@ def test_flat_fns_arg_order_matches_param_specs():
     assert kv2.shape == kv.shape
     tokp = jnp.zeros((1, 16), jnp.int32)
     out, _ = prefill_fn(*args, kv, bt, sl, tokp, jnp.uint32(0))
+    assert out.shape == (1,)
+    off = jnp.zeros((1,), jnp.int32)
+    out, _ = prefill_offset_fn(*args, kv, bt, sl, tokp, off, jnp.uint32(0))
     assert out.shape == (1,)
 
 

@@ -23,7 +23,7 @@ fn main() {
     }
     let toks: Vec<i32> = (0..128).map(|i| i % 2048).collect();
     bench("engine/prefill_b2_s64", 3, budget, || {
-        std::hint::black_box(eng.execute(g, &bt, &[64, 64], &toks, 1).unwrap());
+        std::hint::black_box(eng.execute(g, &bt, &[64, 64], &toks, &[], 1).unwrap());
     });
 
     // Decode for batch 1 and 8.
@@ -38,7 +38,7 @@ fn main() {
         let sl = vec![40i32; b];
         let tk = vec![7i32; b];
         bench(&format!("engine/decode_b{b} (steady-state step)"), 3, budget, || {
-            std::hint::black_box(eng.execute(g, &bt, &sl, &tk, 2).unwrap());
+            std::hint::black_box(eng.execute(g, &bt, &sl, &tk, &[], 2).unwrap());
         });
     }
     println!("engine steps executed: {}", eng.steps);

@@ -8,7 +8,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::gpu::{Executor, Placement, Scheduler, SchedulerConfig};
+use crate::gpu::{Executor, ModeledCost, Placement, PrefixReuse, Scheduler, SchedulerConfig};
 use crate::ringbuf::{RingBuffer, RingConfig, SlotState};
 use crate::runtime::{artifacts_dir, ModelManifest};
 use crate::tokenizer::baselines::{HeapliteTokenizer, NaiveTokenizer};
@@ -40,7 +40,7 @@ fn run_makespan(model: &str, placement: Placement, n: usize, input: usize, outpu
         SchedulerConfig {
             placement,
             apply_launch_delays: true,
-            prefix_reuse: false,
+            prefix_reuse: PrefixReuse::Off,
             ..Default::default()
         },
     );
@@ -173,6 +173,140 @@ pub fn fig4(out: Option<&std::path::Path>) {
         csv.push_str(&format!("{},{b:.2},{n:.2},{h:.2}\n", check.len()));
     }
     write_out(out, "fig4.csv", &csv);
+}
+
+/// A modeled-executor manifest with the full graph grid, including the
+/// offset prefill variants (what `make artifacts` now emits for
+/// blink-tiny, minus the weights no modeled run needs).
+fn modeled_manifest() -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel modeled-tiny\nvocab_size 2048\nd_model 256\nn_layers 4\n\
+         n_heads 8\nn_kv_heads 4\nd_head 32\nd_ff 704\nblock_size 16\nnum_blocks 512\n\
+         max_blocks_per_seq 32\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
+         param tok_embed 2048x256 f32\n",
+    );
+    for b in [1usize, 2, 4, 8, 16] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0\n"));
+    }
+    for b in [1usize, 2, 4] {
+        for s in [16usize, 32, 64, 128, 256] {
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s}\n"));
+            text.push_str(&format!("graph prefill_offset_b{b}_s{s} prefill_offset {b} {s}\n"));
+        }
+    }
+    ModelManifest::parse(&text).expect("modeled manifest")
+}
+
+/// Prefix reuse, live: the real scheduler pipeline (ring scan →
+/// admission → prefix index → offset-graph launch → completion) on the
+/// *modeled* executor, so it runs without artifacts on any machine.
+/// Two-turn sessions: turn 2 replays turn 1's prompt plus new text, so
+/// with offset graphs in the grid each second turn should hit the index
+/// and launch a `prefill_offset` graph for its suffix only — the counters
+/// printed here are the same ones `/metrics` exports.
+pub fn prefix_live(out: Option<&std::path::Path>) {
+    println!("\n== Prefix reuse, live scheduler on the modeled executor ==");
+    println!("(two-turn sessions; turn 2 = turn 1's 64-token prompt + 32 new tokens)");
+    let manifest = modeled_manifest();
+    let sessions = 8usize;
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 64,
+        max_prompt: 256,
+        max_output: 64,
+    }));
+    // Visible per-token prefill cost so the suffix-only win shows up in
+    // the turn makespans, not just the counters.
+    let cost = ModeledCost { prefill_us_per_token: 50.0, decode_step_us: 200.0 };
+    let executor = Executor::spawn_modeled(&manifest, cost);
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest.clone(),
+        SchedulerConfig {
+            apply_launch_delays: false,
+            prefix_reuse: PrefixReuse::Auto,
+            ..Default::default()
+        },
+    );
+
+    let mut rng = Rng::new(99);
+    let firsts: Vec<Vec<u32>> = (0..sessions)
+        .map(|_| (0..64).map(|_| rng.below(2048) as u32).collect())
+        .collect();
+
+    let run_turn = |prompts: &[Vec<u32>], base_slot: usize| -> Duration {
+        let t0 = Instant::now();
+        for (i, p) in prompts.iter().enumerate() {
+            let slot = base_slot + i;
+            assert!(ring.claim_for_write(slot));
+            ring.write_prompt(slot, p);
+            // Non-zero session tag: the scheduler attributes both turns
+            // of conversation i to `session_requests` (reuse itself is
+            // content-addressed and does not read the tag).
+            ring.submit_with_meta(
+                slot,
+                &crate::ringbuf::SubmitMeta {
+                    request_id: slot as u64,
+                    prompt_len: p.len() as u32,
+                    max_new: 4,
+                    seed: i as u32,
+                    priority: 0,
+                    ttft_budget_us: 0,
+                    session_id: 1 + i as u64,
+                },
+            );
+        }
+        loop {
+            let done = (0..prompts.len()).all(|i| {
+                matches!(
+                    ring.slot(base_slot + i).state(),
+                    SlotState::DecodeCompleted | SlotState::Failed
+                )
+            });
+            if done {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        t0.elapsed()
+    };
+
+    let t1 = run_turn(&firsts, 0);
+    let seconds: Vec<Vec<u32>> = firsts
+        .iter()
+        .map(|f| {
+            let mut p = f.clone();
+            p.extend((0..32).map(|_| rng.below(2048) as u32));
+            p
+        })
+        .collect();
+    let t2 = run_turn(&seconds, sessions);
+    sched.drain_and_stop();
+
+    let st = &sched.stats;
+    let ld = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+    let (hits, hit_tokens) = (ld(&st.prefix_hits), ld(&st.prefix_hit_tokens));
+    let offset_batches = ld(&st.prefill_offset_batches);
+    println!("{:<22} {:>10} {:>10}", "", "turn 1", "turn 2");
+    println!(
+        "{:<22} {:>10.2} {:>10.2}",
+        "makespan (ms)",
+        t1.as_secs_f64() * 1e3,
+        t2.as_secs_f64() * 1e3
+    );
+    println!(
+        "offset-graph launches: {offset_batches}   prefix hits: {hits}   hit tokens: {hit_tokens}   \
+         fallbacks to full prefill: {}",
+        ld(&st.prefix_fallback_full)
+    );
+    println!("stats: {}", st.summary());
+    let csv = format!(
+        "turn,requests,makespan_ms,prefix_hits,hit_tokens,offset_prefill_batches\n\
+         1,{sessions},{:.3},0,0,0\n2,{sessions},{:.3},{hits},{hit_tokens},{offset_batches}\n",
+        t1.as_secs_f64() * 1e3,
+        t2.as_secs_f64() * 1e3,
+    );
+    write_out(out, "prefix_live.csv", &csv);
 }
 
 fn write_out(out: Option<&std::path::Path>, name: &str, content: &str) {

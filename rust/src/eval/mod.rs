@@ -601,6 +601,42 @@ pub fn policy_comparison(
 // itself runs every system with prefix caching disabled).
 // ---------------------------------------------------------------------------
 
+/// The `prefix_comparison.csv` content for a finished prefix sweep —
+/// separated from the printing so reproducibility is testable: a fixed
+/// seed must yield a *byte-identical* CSV across runs (the DES is
+/// deterministic and the sweep's thread sharding only races on point
+/// insertion order, never on point values; rows are emitted in level
+/// order here). Pinned by `prefix_eval_csv_is_deterministic`, the
+/// baseline for comparing live offset-graph numbers against the DES.
+pub fn prefix_csv(r: &crate::sim::sweep::PrefixSweepResults) -> String {
+    let mut csv = String::from(
+        "load_sessions_per_s,condition,mean_ttft_ms,p99_ttft_ms,req_throughput,completed,\
+         prefix_hits,prefix_lookups,hit_tokens,input_tokens,hit_ratio,evicted_tokens\n",
+    );
+    for (level, rate) in r.levels.iter().enumerate() {
+        let cold = r.get(false, level);
+        let hit = r.get(true, level);
+        for (cond, wm) in [("no-reuse", cold), ("reuse", hit)] {
+            csv.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{:.3},{}\n",
+                rate,
+                cond,
+                wm.ttft.mean,
+                wm.ttft.p99,
+                wm.req_throughput,
+                wm.completed,
+                wm.prefix.hits,
+                wm.prefix.lookups,
+                wm.prefix.hit_tokens,
+                wm.prefix.input_tokens,
+                wm.prefix.hit_ratio(),
+                wm.prefix.evicted_tokens,
+            ));
+        }
+    }
+    csv
+}
+
 pub fn prefix_comparison(out: Option<&Path>, window_s: f64, threads: usize) {
     eprintln!("[eval] running prefix sweep ({} s windows, {} threads) ...", window_s, threads);
     let t = std::time::Instant::now();
@@ -627,10 +663,7 @@ pub fn prefix_comparison(out: Option<&Path>, window_s: f64, threads: usize) {
         "hit ratio",
         "evict tok"
     );
-    let mut csv = String::from(
-        "load_sessions_per_s,condition,mean_ttft_ms,p99_ttft_ms,req_throughput,completed,\
-         prefix_hits,prefix_lookups,hit_tokens,input_tokens,hit_ratio,evicted_tokens\n",
-    );
+    let csv = prefix_csv(&r);
     for (level, rate) in r.levels.iter().enumerate() {
         let cold = r.get(false, level);
         let hit = r.get(true, level);
@@ -646,23 +679,6 @@ pub fn prefix_comparison(out: Option<&Path>, window_s: f64, threads: usize) {
             hit.prefix.hit_ratio() * 100.0,
             hit.prefix.evicted_tokens,
         );
-        for (cond, wm) in [("no-reuse", cold), ("reuse", hit)] {
-            csv.push_str(&format!(
-                "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{:.3},{}\n",
-                rate,
-                cond,
-                wm.ttft.mean,
-                wm.ttft.p99,
-                wm.req_throughput,
-                wm.completed,
-                wm.prefix.hits,
-                wm.prefix.lookups,
-                wm.prefix.hit_tokens,
-                wm.prefix.input_tokens,
-                wm.prefix.hit_ratio(),
-                wm.prefix.evicted_tokens,
-            ));
-        }
     }
 
     // Headline: the mid-sweep improvement (the acceptance criterion —
@@ -729,5 +745,24 @@ pub fn table5() {
         ("OS", "Linux 5.15 (Ubuntu 22.04)", std::env::consts::OS),
     ] {
         println!("{c:<12} {p:<44} {r}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Determinism golden test: `blink eval prefix` with a fixed seed
+    /// must produce a byte-identical CSV across two in-process runs —
+    /// the DES and the sharded sweep are fully reproducible, which is
+    /// the precondition for comparing live offset-graph numbers against
+    /// simulated ones.
+    #[test]
+    fn prefix_eval_csv_is_deterministic() {
+        let a = run_prefix_sweep(LLAMA3_8B, 6.0, 3);
+        let b = run_prefix_sweep(LLAMA3_8B, 6.0, 3);
+        let (ca, cb) = (prefix_csv(&a), prefix_csv(&b));
+        assert!(!ca.is_empty() && ca.lines().count() > a.levels.len());
+        assert_eq!(ca, cb, "prefix sweep CSV must be byte-identical across runs");
     }
 }

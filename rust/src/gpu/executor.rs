@@ -4,25 +4,65 @@
 //! scheduler and publishes sampled tokens into a polled
 //! [`CompletionBuffer`] — never a callback, matching the paper's
 //! completion-detection design.
+//!
+//! Two backends behind one doorbell:
+//!
+//! * [`Executor::spawn`] — the real PJRT engine (needs AOT artifacts and
+//!   the native bindings).
+//! * [`Executor::spawn_modeled`] — no PJRT, no artifacts: validates every
+//!   launch against the manifest graph grid exactly as the engine would,
+//!   charges a modeled per-launch cost (suffix-only for offset prefill
+//!   graphs — the graph's shape *is* the padded suffix, mirroring the
+//!   DES's `CostModel::prefill_with_prefix_s`), and publishes
+//!   deterministic non-EOS tokens. This is what lets scheduler-level
+//!   tests and `blink eval prefix-live` run the full pipeline on any
+//!   machine.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 use crate::devsim::CompletionBuffer;
-use crate::graphs::GraphId;
-use crate::runtime::Engine;
+use crate::graphs::{GraphCache, GraphId, GraphKind};
+use crate::runtime::{Engine, ModelManifest};
 
 /// One launch: everything the graph needs, plus the completion buffer the
-/// scheduler will poll. `reset_kv` supports benchmark phase boundaries.
+/// scheduler will poll. `offsets` is per-lane cached-prefix lengths for
+/// offset prefill graphs (empty for every other kind); `reset_kv`
+/// supports benchmark phase boundaries.
 pub struct LaunchCmd {
     pub graph: GraphId,
     pub block_tables: Vec<i32>,
     pub seq_lens: Vec<i32>,
     pub tokens: Vec<i32>,
+    pub offsets: Vec<i32>,
     pub seed: u32,
     pub completion: Arc<CompletionBuffer>,
     pub reset_kv: bool,
+}
+
+/// Cost profile for the modeled executor, in microseconds (charged by
+/// spinning, like the device plane's launch delays). The defaults keep
+/// tests fast while preserving the shape the DES models: prefill cost
+/// scales with *launched* tokens — so an offset graph covering only the
+/// uncached suffix is proportionally cheaper than a full prefill — and
+/// decode pays a flat per-step cost.
+#[derive(Debug, Clone, Copy)]
+pub struct ModeledCost {
+    pub prefill_us_per_token: f64,
+    pub decode_step_us: f64,
+}
+
+impl Default for ModeledCost {
+    fn default() -> Self {
+        ModeledCost { prefill_us_per_token: 0.2, decode_step_us: 2.0 }
+    }
+}
+
+impl ModeledCost {
+    pub fn zero() -> Self {
+        ModeledCost { prefill_us_per_token: 0.0, decode_step_us: 0.0 }
+    }
 }
 
 /// Handle to the executor thread.
@@ -74,6 +114,7 @@ impl Executor {
                         &cmd.block_tables,
                         &cmd.seq_lens,
                         &cmd.tokens,
+                        &cmd.offsets,
                         cmd.seed,
                     ) {
                         Ok(tokens) => {
@@ -94,6 +135,44 @@ impl Executor {
         }
     }
 
+    /// Spawn a *modeled* executor over the manifest's graph grid: the
+    /// same launch/poll protocol and the same shape validation as the
+    /// real engine, with deterministic token generation instead of PJRT
+    /// execution. Tokens never equal the manifest's EOS, so a lane always
+    /// runs to its `max_new` budget — which is what makes scheduler-level
+    /// assertions (batch counts, offset-graph launches) reproducible.
+    pub fn spawn_modeled(manifest: &ModelManifest, cost: ModeledCost) -> Executor {
+        let cache = crate::gpu::scheduler::cache_from_manifest(manifest);
+        let max_blocks = manifest.max_blocks_per_seq;
+        let vocab = manifest.vocab_size.max(2) as u32;
+        let eos = manifest.eos_token;
+        let (tx, rx) = channel::<LaunchCmd>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive2 = alive.clone();
+        let handle = std::thread::Builder::new()
+            .name("gpu-executor-modeled".into())
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    if !alive2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if cmd.reset_kv && cmd.tokens.is_empty() {
+                        cmd.completion.publish(&[]);
+                        continue;
+                    }
+                    match modeled_step(&cache, max_blocks, vocab, eos, cost, &cmd) {
+                        Ok(toks) => cmd.completion.publish(&toks),
+                        Err(e) => {
+                            eprintln!("modeled executor: {e}");
+                            cmd.completion.fail();
+                        }
+                    }
+                }
+            })
+            .expect("spawn modeled executor");
+        Executor { tx, alive, handle: Some(handle) }
+    }
+
     /// Fire-and-forget launch: returns immediately; the caller polls the
     /// completion buffer it passed in.
     pub fn launch(&self, cmd: LaunchCmd) {
@@ -105,6 +184,66 @@ impl Executor {
         // Unblock recv with a no-op command if needed: dropping tx suffices
         // when Executor drops; explicit shutdown just marks the flag.
     }
+}
+
+/// One modeled launch: validate shapes with the *same* checker
+/// `Engine::execute` applies (`GraphSpec::validate_launch_shapes` — one
+/// implementation, no drift), charge the modeled cost, emit one
+/// deterministic non-EOS token per lane.
+fn modeled_step(
+    cache: &GraphCache,
+    max_blocks: usize,
+    vocab: u32,
+    eos: u32,
+    cost: ModeledCost,
+    cmd: &LaunchCmd,
+) -> Result<Vec<u32>, String> {
+    let spec = cache.spec(cmd.graph);
+    let b = spec.batch;
+    spec.validate_launch_shapes(
+        max_blocks,
+        cmd.block_tables.len(),
+        cmd.seq_lens.len(),
+        cmd.tokens.len(),
+        cmd.offsets.len(),
+    )?;
+    if spec.kind == GraphKind::PrefillOffset {
+        // An offset beyond its lane's length would put the KV write
+        // window outside the sequence — a marshalling bug upstream.
+        for (i, (&off, &len)) in cmd.offsets.iter().zip(&cmd.seq_lens).enumerate() {
+            if off < 0 || off >= len {
+                return Err(format!("{}: lane {i} offset {off} not in 0..{len}", spec.name));
+            }
+        }
+    }
+
+    // Cost: suffix-only for offset graphs by construction — the launched
+    // token count *is* batch × padded-suffix.
+    let us = match spec.kind {
+        GraphKind::Decode => cost.decode_step_us,
+        GraphKind::Prefill | GraphKind::PrefillOffset => {
+            cost.prefill_us_per_token * (b * spec.seq) as f64
+        }
+    };
+    crate::devsim::spin_us(us);
+
+    let toks = (0..b)
+        .map(|lane| {
+            let h = mix64((cmd.seed as u64) ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let r = (h % (vocab as u64 - 1)) as u32;
+            // Skip EOS so modeled lanes always run their full budget.
+            if r >= eos { r + 1 } else { r }
+        })
+        .collect();
+    Ok(toks)
+}
+
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 impl Drop for Executor {

@@ -30,7 +30,7 @@ pub mod policy;
 pub mod scheduler;
 pub mod stats;
 
-pub use executor::{Executor, LaunchCmd};
+pub use executor::{Executor, LaunchCmd, ModeledCost};
 pub use policy::{AdmissionPolicy, Candidate, PolicyKind};
-pub use scheduler::{Placement, Scheduler, SchedulerConfig};
+pub use scheduler::{Placement, PrefixReuse, Scheduler, SchedulerConfig};
 pub use stats::SchedulerStats;

@@ -1,10 +1,13 @@
 //! Batch planning: the pipeline stage between policy-ordered admission
 //! and the launcher. Turns admitted sequences into prefill groups that
-//! fit the AOT graph grid, and live decode lanes into decode launch
-//! inputs — the pure data-marshalling logic that used to be inlined in
-//! `SchedulerCore::admit_and_prefill` / `decode_step`. Pure functions of
-//! their inputs: no ring, no executor, no clock — which is what makes
-//! this stage unit-testable without artifacts.
+//! fit the AOT graph grid (full or *offset* prefill — see
+//! [`PrefillGroup::offset`]), orders those groups so a prefix-sharing
+//! group never launches before the group that prefills its shared blocks
+//! (stage 3b's dependency order), and marshals live decode lanes into
+//! decode launch inputs — the pure data-marshalling logic that used to be
+//! inlined in `SchedulerCore::admit_and_prefill` / `decode_step`. Pure
+//! functions of their inputs: no ring, no executor, no clock — which is
+//! what makes this stage unit-testable without artifacts.
 
 use crate::kvcache::SeqCache;
 
@@ -35,51 +38,175 @@ pub struct PrefillSeq {
 /// A group of same-padded-length sequences forming one prefill launch.
 pub struct PrefillGroup {
     pub padded: usize,
+    /// True when this group must launch an offset prefill graph: every
+    /// member carries a cached prefix and its tokens are a suffix at a
+    /// per-lane runtime offset. Cold sequences are never mixed in — they
+    /// run the ordinary prefill graphs, whose grid may differ from the
+    /// offset grid.
+    pub offset: bool,
     pub seqs: Vec<PrefillSeq>,
 }
 
-/// Device-shaped launch inputs (what `LaunchCmd` carries).
+/// Device-shaped launch inputs (what `LaunchCmd` carries). `offsets` is
+/// populated only for offset groups (empty otherwise).
 pub struct LaunchInputs {
     pub block_tables: Vec<i32>,
     pub seq_lens: Vec<i32>,
     pub tokens: Vec<i32>,
+    pub offsets: Vec<i32>,
 }
 
 pub struct BatchPlanner {
-    /// Widest prefill graph in the grid.
+    /// Widest full-prefill graph in the grid.
     pub max_prefill_batch: usize,
+    /// Widest *offset* prefill graph (0 when the artifacts ship none —
+    /// admission never produces offset sequences in that case).
+    pub max_prefill_offset_batch: usize,
     /// Manifest `max_blocks_per_seq` (block-table row width).
     pub max_blocks_per_seq: usize,
+    /// Manifest `block_size` (maps a cached-prefix token count to the
+    /// shared block span for dependency ordering).
+    pub block_size: usize,
 }
 
 impl BatchPlanner {
-    pub fn new(max_prefill_batch: usize, max_blocks_per_seq: usize) -> BatchPlanner {
-        BatchPlanner { max_prefill_batch, max_blocks_per_seq }
+    pub fn new(
+        max_prefill_batch: usize,
+        max_prefill_offset_batch: usize,
+        max_blocks_per_seq: usize,
+        block_size: usize,
+    ) -> BatchPlanner {
+        BatchPlanner {
+            max_prefill_batch,
+            max_prefill_offset_batch,
+            max_blocks_per_seq,
+            block_size,
+        }
     }
 
-    /// Group admitted sequences by padded length, chunked to the prefill
-    /// batch grid. Admission order is preserved within each group.
-    pub fn group_prefills(&self, mut admitted: Vec<PrefillSeq>) -> Vec<PrefillGroup> {
-        admitted.sort_by_key(|a| a.padded);
-        let mut groups = Vec::new();
-        let mut i = 0;
-        while i < admitted.len() {
-            let pad = admitted[i].padded;
-            let mut j = i + 1;
-            while j < admitted.len() && admitted[j].padded == pad && j - i < self.max_prefill_batch
-            {
-                j += 1;
+    /// Group admitted sequences into prefill launches, in shared-block
+    /// dependency order (the stage-3b contract): a sequence never lands
+    /// in a group positioned at or before the group that prefills blocks
+    /// it consumes as a shared prefix.
+    ///
+    /// Sequences are first topologically ordered at *sequence*
+    /// granularity (consumer after the writer of its shared blocks —
+    /// Kahn, stable in admission order), then greedily packed into
+    /// groups keyed by (padded length, offset-ness) up to the matching
+    /// graph grid's batch width, with the constraint that a sequence may
+    /// only join a group positioned strictly after every group holding
+    /// one of its producers. Ordering at sequence rather than group
+    /// granularity matters: merging same-shape sequences first could
+    /// weld two mutually-dependent chains into a group-level cycle that
+    /// no launch order resolves.
+    ///
+    /// Hit sequences (cached_prefix > 0) form *offset* groups; cold
+    /// sequences form full-prefill groups — the two kinds never share a
+    /// launch, because their graph grids differ.
+    ///
+    /// Today the prefix index only ever matches blocks whose prefill
+    /// already *completed* (kvcache invariant 5), so intra-admission
+    /// edges cannot arise through the index — the order is enforced
+    /// unconditionally so the invariant is structural, not incidental:
+    /// any future source of intra-admission sharing (speculative
+    /// matches, async launch pipelining) inherits a correct launch order
+    /// instead of a latent use-before-write.
+    pub fn group_prefills(&self, admitted: Vec<PrefillSeq>) -> Vec<PrefillGroup> {
+        let n = admitted.len();
+        if n == 0 {
+            return vec![];
+        }
+        let bs = self.block_size.max(1);
+        // writer[block] = admitted index whose prefill writes it: every
+        // reserved block from the first uncached one onward (padded
+        // suffix plus decode span).
+        let mut writer: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        for (i, s) in admitted.iter().enumerate() {
+            for &b in s.cache.blocks.iter().skip(s.cached_prefix / bs) {
+                writer.entry(b).or_insert(i);
             }
-            let seqs: Vec<PrefillSeq> = admitted.drain(i..j).collect();
-            groups.push(PrefillGroup { padded: pad, seqs });
-            // drain() shifts the tail down; keep i in place.
+        }
+        // Edges: consumer -> producer for every shared-prefix block
+        // written by a *different* admitted sequence.
+        let mut deps: Vec<Vec<usize>> = vec![vec![]; n];
+        let mut rdeps: Vec<Vec<usize>> = vec![vec![]; n];
+        for (i, s) in admitted.iter().enumerate() {
+            for &b in s.cache.blocks.iter().take(s.cached_prefix / bs) {
+                if let Some(&w) = writer.get(&b) {
+                    if w != i && !deps[i].contains(&w) {
+                        deps[i].push(w);
+                        rdeps[w].push(i);
+                    }
+                }
+            }
+        }
+        // Stable topological order (Kahn): among ready sequences, the
+        // admission (policy) order is kept.
+        let mut indegree: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+        let mut topo: Vec<usize> = Vec::with_capacity(n);
+        let mut placed = vec![false; n];
+        while topo.len() < n {
+            match (0..n).find(|&i| !placed[i] && indegree[i] == 0) {
+                Some(i) => {
+                    placed[i] = true;
+                    topo.push(i);
+                    for &c in &rdeps[i] {
+                        indegree[c] -= 1;
+                    }
+                }
+                None => {
+                    // Defensive: cyclic input. Unreachable through the
+                    // prefix index (a consumed block's writer committed
+                    // strictly earlier); launch the rest in admission
+                    // order rather than dropping work.
+                    debug_assert!(false, "cycle in prefill dependencies");
+                    for i in 0..n {
+                        if !placed[i] {
+                            placed[i] = true;
+                            topo.push(i);
+                        }
+                    }
+                }
+            }
+        }
+        // Greedy packing in topo order: join the first compatible group
+        // positioned after all producers, else open a new one at the end.
+        let mut groups: Vec<PrefillGroup> = vec![];
+        let mut group_of: Vec<usize> = vec![usize::MAX; n];
+        let mut slots: Vec<Option<PrefillSeq>> = admitted.into_iter().map(Some).collect();
+        for i in topo {
+            let s = slots[i].take().expect("topo visits each seq once");
+            let offset = s.cached_prefix > 0;
+            let max_batch =
+                if offset { self.max_prefill_offset_batch } else { self.max_prefill_batch }.max(1);
+            let min_pos = deps[i]
+                .iter()
+                .filter_map(|&w| (group_of[w] != usize::MAX).then(|| group_of[w] + 1))
+                .max()
+                .unwrap_or(0);
+            let found = (min_pos..groups.len()).find(|&gi| {
+                let g = &groups[gi];
+                g.offset == offset && g.padded == s.padded && g.seqs.len() < max_batch
+            });
+            match found {
+                Some(gi) => {
+                    groups[gi].seqs.push(s);
+                    group_of[i] = gi;
+                }
+                None => {
+                    groups.push(PrefillGroup { padded: s.padded, offset, seqs: vec![s] });
+                    group_of[i] = groups.len() - 1;
+                }
+            }
         }
         groups
     }
 
     /// Marshal one prefill group for a `(grid_batch, grid_seq)` graph.
     /// Ghost lanes (grid wider than the group) replicate lane 0 —
-    /// identical writes are benign, outputs ignored.
+    /// identical writes are benign, outputs ignored. Offset groups also
+    /// carry per-lane runtime offsets (the block-aligned cached-prefix
+    /// lengths the graph shifts rope/masking/KV-writes by).
     pub fn prefill_inputs(
         &self,
         group: &PrefillGroup,
@@ -92,6 +219,7 @@ impl BatchPlanner {
         let mut block_tables = Vec::with_capacity(grid_batch * mbs);
         let mut seq_lens = Vec::with_capacity(grid_batch);
         let mut tokens = Vec::with_capacity(grid_batch * grid_seq);
+        let mut offsets = Vec::with_capacity(if group.offset { grid_batch } else { 0 });
         for s in &group.seqs {
             // Prefix reuse: the launch carries only the uncached suffix;
             // seq_lens stays the *full* length so attention masks and KV
@@ -102,14 +230,20 @@ impl BatchPlanner {
             seq_lens.push(s.prompt.len() as i32);
             tokens.extend(suffix);
             tokens.extend(std::iter::repeat(0).take(grid_seq - suffix.len()));
+            if group.offset {
+                offsets.push(s.cached_prefix as i32);
+            }
         }
         for _ in b_actual..grid_batch {
             block_tables.extend_from_slice(&group.seqs[0].cache.table_row(mbs));
             seq_lens.push(group.seqs[0].prompt.len() as i32);
             let row0: Vec<i32> = tokens[..grid_seq].to_vec();
             tokens.extend(row0);
+            if group.offset {
+                offsets.push(group.seqs[0].cached_prefix as i32);
+            }
         }
-        LaunchInputs { block_tables, seq_lens, tokens }
+        LaunchInputs { block_tables, seq_lens, tokens, offsets }
     }
 
     /// Marshal the live decode lanes for a `grid_batch`-wide decode
@@ -130,13 +264,19 @@ impl BatchPlanner {
             seq_lens.push(lanes[0].cache.cached_len as i32);
             tokens.push(lanes[0].last_token);
         }
-        LaunchInputs { block_tables, seq_lens, tokens }
+        LaunchInputs { block_tables, seq_lens, tokens, offsets: vec![] }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn planner() -> BatchPlanner {
+        BatchPlanner::new(2, 2, 4, 16)
+    }
 
     fn seq(slot: usize, prompt_len: usize, padded: usize) -> PrefillSeq {
         PrefillSeq {
@@ -151,50 +291,100 @@ mod tests {
 
     #[test]
     fn groups_by_padded_len_and_chunks_to_grid() {
-        let p = BatchPlanner::new(2, 4);
+        let p = planner();
         let groups = p.group_prefills(vec![
             seq(0, 10, 16),
             seq(1, 30, 32),
             seq(2, 12, 16),
             seq(3, 15, 16),
         ]);
-        // 16-padded: [0, 2] then [3] (max batch 2); 32-padded: [1].
+        // Admission order preserved: 16-padded [0, 2] (max batch 2),
+        // 32-padded [1], then the overflow 16-padded [3].
         assert_eq!(groups.len(), 3);
         assert_eq!(groups[0].padded, 16);
         assert_eq!(groups[0].seqs.iter().map(|s| s.slot).collect::<Vec<_>>(), vec![0, 2]);
-        assert_eq!(groups[1].padded, 16);
-        assert_eq!(groups[1].seqs[0].slot, 3);
-        assert_eq!(groups[2].padded, 32);
-        assert_eq!(groups[2].seqs[0].slot, 1);
+        assert_eq!(groups[1].padded, 32);
+        assert_eq!(groups[1].seqs[0].slot, 1);
+        assert_eq!(groups[2].padded, 16);
+        assert_eq!(groups[2].seqs[0].slot, 3);
+        assert!(groups.iter().all(|g| !g.offset));
+    }
+
+    #[test]
+    fn hit_and_cold_seqs_never_share_a_launch() {
+        let p = planner();
+        let mut hit = seq(7, 48, 16);
+        hit.cached_prefix = 32;
+        hit.cache.blocks = vec![5, 6, 7, 8];
+        let groups = p.group_prefills(vec![seq(0, 10, 16), hit, seq(2, 12, 16)]);
+        // Same padded length, but the hit runs its own offset-graph
+        // launch: [0, 2] (cold, full prefill) + [7] (offset).
+        assert_eq!(groups.len(), 2);
+        assert!(!groups[0].offset);
+        assert_eq!(groups[0].seqs.iter().map(|s| s.slot).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(groups[1].offset);
+        assert_eq!(groups[1].seqs[0].slot, 7);
+    }
+
+    #[test]
+    fn offset_groups_chunk_to_the_offset_grid() {
+        // Offset grid narrower than the full-prefill grid: 3 hits with
+        // the same padded suffix split 2 + 1.
+        let p = BatchPlanner::new(4, 2, 4, 16);
+        let mk = |slot| {
+            let mut s = seq(slot, 40, 16);
+            s.cached_prefix = 32;
+            s
+        };
+        let groups = p.group_prefills(vec![mk(0), mk(1), mk(2)]);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].seqs.len(), 2);
+        assert_eq!(groups[1].seqs.len(), 1);
+        assert!(groups.iter().all(|g| g.offset));
     }
 
     #[test]
     fn prefill_inputs_pad_ghost_lanes() {
-        let p = BatchPlanner::new(4, 4);
-        let group = PrefillGroup { padded: 16, seqs: vec![seq(5, 10, 16)] };
+        let p = BatchPlanner::new(4, 4, 4, 16);
+        let group = PrefillGroup { padded: 16, offset: false, seqs: vec![seq(5, 10, 16)] };
         let li = p.prefill_inputs(&group, 2, 16);
         assert_eq!(li.seq_lens, vec![10, 10], "ghost lane replicates lane 0");
         assert_eq!(li.block_tables.len(), 2 * 4);
         assert_eq!(li.tokens.len(), 2 * 16);
         assert_eq!(&li.tokens[..10], &li.tokens[16..26], "ghost row replicated");
         assert_eq!(&li.tokens[10..16], &[0i32; 6][..], "prompt padded with zeros");
+        assert!(li.offsets.is_empty(), "full prefill carries no offsets");
     }
 
     #[test]
     fn prefill_inputs_carry_only_uncached_suffix() {
-        let p = BatchPlanner::new(4, 4);
+        let p = BatchPlanner::new(4, 4, 4, 16);
         let mut s = seq(2, 40, 16);
         s.cached_prefix = 32; // two 16-token blocks served from the index
-        let group = PrefillGroup { padded: 16, seqs: vec![s] };
+        let group = PrefillGroup { padded: 16, offset: true, seqs: vec![s] };
         let li = p.prefill_inputs(&group, 1, 16);
         assert_eq!(li.seq_lens, vec![40], "seq_lens stays the full length");
         assert_eq!(&li.tokens[..8], &(32..40).collect::<Vec<i32>>()[..], "suffix tokens only");
         assert_eq!(&li.tokens[8..], &[0i32; 8][..], "suffix padded to the grid");
+        assert_eq!(li.offsets, vec![32], "per-lane runtime offset");
+    }
+
+    #[test]
+    fn offset_inputs_ghost_lanes_replicate_offset() {
+        let p = BatchPlanner::new(4, 4, 4, 16);
+        let mut a = seq(0, 40, 16);
+        a.cached_prefix = 32;
+        let mut b = seq(1, 24, 16);
+        b.cached_prefix = 16;
+        let group = PrefillGroup { padded: 16, offset: true, seqs: vec![a, b] };
+        let li = p.prefill_inputs(&group, 4, 16);
+        assert_eq!(li.offsets, vec![32, 16, 32, 32], "ghosts replicate lane 0's offset");
+        assert_eq!(li.seq_lens, vec![40, 24, 40, 40]);
     }
 
     #[test]
     fn decode_inputs_shapes() {
-        let p = BatchPlanner::new(4, 4);
+        let p = BatchPlanner::new(4, 4, 4, 16);
         let lanes = vec![
             Lane {
                 slot: 0,
@@ -215,5 +405,115 @@ mod tests {
         assert_eq!(li.tokens, vec![42, 43, 42, 42]);
         assert_eq!(li.seq_lens, vec![7, 9, 7, 7]);
         assert_eq!(li.block_tables.len(), 4 * 4);
+        assert!(li.offsets.is_empty());
+    }
+
+    /// A sharer whose prefix blocks are written by a cold seq in the
+    /// same admission must launch after it, whatever the padded-length
+    /// sort would otherwise do.
+    #[test]
+    fn sharer_group_launches_after_its_producer() {
+        let p = BatchPlanner::new(2, 2, 8, 16);
+        // Producer: cold 64-token prompt over blocks 10..14 (padded 64 —
+        // sorts *after* 16 by padded length).
+        let mut producer = seq(0, 64, 64);
+        producer.cache.blocks = vec![10, 11, 12, 13];
+        // Sharer: 80-token prompt, 64 cached (blocks 10..14 shared),
+        // 16-token suffix (padded 16 — would sort *first*).
+        let mut sharer = seq(1, 80, 16);
+        sharer.cached_prefix = 64;
+        sharer.cache.blocks = vec![10, 11, 12, 13, 14, 15];
+        let groups = p.group_prefills(vec![sharer, producer]);
+        assert_eq!(groups.len(), 2);
+        assert!(!groups[0].offset, "producer launches first");
+        assert_eq!(groups[0].seqs[0].slot, 0);
+        assert!(groups[1].offset);
+        assert_eq!(groups[1].seqs[0].slot, 1);
+    }
+
+    /// Randomized sharer-group DAGs (the stage-3b property): the launch
+    /// order never schedules a group before the group that prefills its
+    /// shared prefix blocks, and every admitted sequence launches exactly
+    /// once.
+    #[test]
+    fn prop_group_order_respects_block_dependencies() {
+        run_prop("planner-group-topo", 0x3B, 200, |rng: &mut Rng| {
+            let bs = 16usize;
+            let p = BatchPlanner::new(3, 2, 16, bs);
+            let mut next_block = 1u32;
+            let mut alloc = |n: usize| -> Vec<u32> {
+                let v: Vec<u32> = (next_block..next_block + n as u32).collect();
+                next_block += n as u32;
+                v
+            };
+            // Producers: cold seqs with random block spans.
+            let n_prod = 1 + rng.below(4) as usize;
+            let mut seqs: Vec<PrefillSeq> = vec![];
+            for slot in 0..n_prod {
+                let blocks = 1 + rng.below(4) as usize;
+                let prompt_len = blocks * bs - rng.below(bs as u64 - 1) as usize;
+                let mut s = seq(slot, prompt_len, prompt_len.next_power_of_two().max(16));
+                s.cache.blocks = alloc(blocks);
+                seqs.push(s);
+            }
+            // Sharers: consume a random full-block prefix of any earlier
+            // seq's span — including another *sharer*'s written tail, so
+            // hit→hit edges occur and genuinely force reordering (hits
+            // with short padded suffixes would otherwise sort first) —
+            // then write their own tail. Creation order guarantees a DAG.
+            let n_share = rng.below(5) as usize;
+            for i in 0..n_share {
+                let prod = &seqs[rng.below(seqs.len() as u64) as usize];
+                let avail = prod.cache.blocks.len();
+                let shared = 1 + rng.below(avail as u64) as usize;
+                let suffix = 1 + rng.below(32) as usize;
+                let prompt_len = shared * bs + suffix;
+                let mut s = seq(100 + i, prompt_len, suffix.next_power_of_two().max(16));
+                s.cached_prefix = shared * bs;
+                let mut blocks = prod.cache.blocks[..shared].to_vec();
+                blocks.extend(alloc(1 + suffix / bs));
+                s.cache.blocks = blocks;
+                seqs.push(s);
+            }
+            let expected: std::collections::HashSet<usize> =
+                seqs.iter().map(|s| s.slot).collect();
+            let groups = p.group_prefills(seqs);
+
+            // Exactly-once launch.
+            let launched: Vec<usize> =
+                groups.iter().flat_map(|g| g.seqs.iter().map(|s| s.slot)).collect();
+            assert_eq!(launched.len(), expected.len(), "no seq dropped or duplicated");
+            assert_eq!(
+                launched.iter().copied().collect::<std::collections::HashSet<_>>(),
+                expected
+            );
+
+            // Dependency order: a block consumed as shared prefix is
+            // never consumed before the group that writes it launches.
+            let mut group_of_writer: std::collections::HashMap<u32, usize> = Default::default();
+            for (gi, g) in groups.iter().enumerate() {
+                for s in &g.seqs {
+                    for &b in s.cache.blocks.iter().skip(s.cached_prefix / bs) {
+                        group_of_writer.entry(b).or_insert(gi);
+                    }
+                }
+            }
+            for (gi, g) in groups.iter().enumerate() {
+                for s in &g.seqs {
+                    for &b in s.cache.blocks.iter().take(s.cached_prefix / bs) {
+                        if let Some(&wg) = group_of_writer.get(&b) {
+                            // Strictly before: sharing a launch with the
+                            // producer is an intra-graph use-before-write.
+                            assert!(
+                                wg < gi,
+                                "group {gi} (slot {}) consumes block {b} not written before it \
+                                 (writer group {wg})",
+                                s.slot
+                            );
+                        }
+                    }
+                }
+            }
+        });
     }
 }

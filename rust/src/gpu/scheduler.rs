@@ -51,6 +51,28 @@ pub enum Placement {
     CpuResident { scratch_mb: usize, touches_per_step: usize },
 }
 
+/// Prefix-aware KV reuse mode (DESIGN.md §7). A live hit prefills only
+/// the uncached suffix through an *offset* prefill graph
+/// (`prefill_offset_b{B}_s{S}` in the AOT grid), so reuse is only as
+/// real as the artifacts: `Auto` turns it on exactly when the manifest
+/// provides offset graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixReuse {
+    /// Default: reuse on when the artifacts ship offset prefill graphs,
+    /// off (the paper's cold-admission behavior) otherwise.
+    Auto,
+    /// Force the index machinery on even without offset graphs: hits are
+    /// still *detected* (counters, observability) but every one falls
+    /// back to a full cold prefill, so numerics stay correct — no suffix
+    /// is ever prefilled at the wrong positions.
+    On,
+    /// The paper's behavior: every admission reserves its full span,
+    /// cold. The DES models reuse independently
+    /// (`SimConfig::prefix_cache_tokens`), so `blink eval prefix` does
+    /// not depend on this mode.
+    Off,
+}
+
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     pub placement: Placement,
@@ -63,15 +85,9 @@ pub struct SchedulerConfig {
     /// Admission policy (pipeline stage 2). FCFS reproduces the paper.
     pub policy: PolicyKind,
     /// Prefix-aware KV reuse (DESIGN.md §7): match each prompt against
-    /// the block-hash prefix index and prefill only the uncached suffix.
-    /// Default `false` — the paper's behavior (every admission reserves
-    /// its full span, cold), and the only correct choice for *real* AOT
-    /// artifacts until the grid gains an offset prefill graph (a hit
-    /// prefills the suffix at position 0 otherwise; see DESIGN.md §7
-    /// known limitations). The DES models reuse independently
-    /// (`SimConfig::prefix_cache_tokens`), so `blink eval prefix` does
-    /// not depend on this flag.
-    pub prefix_reuse: bool,
+    /// the block-hash prefix index and prefill only the uncached suffix
+    /// through an offset prefill graph. Default [`PrefixReuse::Auto`].
+    pub prefix_reuse: PrefixReuse,
 }
 
 impl Default for SchedulerConfig {
@@ -82,7 +98,7 @@ impl Default for SchedulerConfig {
             apply_launch_delays: true,
             exit_when_idle: false,
             policy: PolicyKind::Fcfs,
-            prefix_reuse: false,
+            prefix_reuse: PrefixReuse::Auto,
         }
     }
 }
@@ -155,7 +171,7 @@ pub fn cache_from_manifest(m: &ModelManifest) -> GraphCache {
         .map(|(i, g)| GraphSpec {
             id: GraphId(i),
             name: g.name.clone(),
-            kind: if g.kind == "decode" { GraphKind::Decode } else { GraphKind::Prefill },
+            kind: GraphKind::from_manifest(&g.kind),
             batch: g.batch,
             seq: g.seq,
         })
@@ -179,6 +195,9 @@ struct SchedulerCore {
     completions: Completions,
     seed_ctr: u32,
     max_batch: usize,
+    /// Resolved reuse switch: `config.prefix_reuse` crossed with the
+    /// artifacts (`Auto` requires offset graphs in the manifest).
+    reuse: bool,
     /// Ticket of the most recently admitted request (out-of-order stat).
     last_admitted_ticket: Option<u64>,
 }
@@ -205,12 +224,26 @@ impl SchedulerCore {
         };
         let gpu_resident = matches!(config.placement, Placement::GpuResident);
         let max_batch = cache.max_decode_batch();
-        let max_lanes = max_batch.max(cache.max_prefill_batch());
+        let max_lanes =
+            max_batch.max(cache.max_prefill_batch()).max(cache.max_prefill_offset_batch());
         let policy = config.policy.build();
-        let planner = BatchPlanner::new(cache.max_prefill_batch(), manifest.max_blocks_per_seq);
+        let planner = BatchPlanner::new(
+            cache.max_prefill_batch(),
+            cache.max_prefill_offset_batch(),
+            manifest.max_blocks_per_seq,
+            manifest.block_size,
+        );
         let launcher =
             Launcher::new(executor, gpu_resident, config.apply_launch_delays, stats.clone());
         let completions = Completions::new(Arc::new(CompletionBuffer::new(max_lanes.max(16))));
+        // Live reuse is only as real as the artifacts: `Auto` flips on
+        // exactly when the manifest provides offset prefill graphs
+        // (graceful fallback to the paper's cold behavior otherwise).
+        let reuse = match config.prefix_reuse {
+            PrefixReuse::Off => false,
+            PrefixReuse::On => true,
+            PrefixReuse::Auto => cache.has_offset_graphs(),
+        };
         SchedulerCore {
             ring,
             manifest,
@@ -226,6 +259,7 @@ impl SchedulerCore {
             completions,
             seed_ctr: 1,
             max_batch,
+            reuse,
             last_admitted_ticket: None,
         }
     }
@@ -350,33 +384,64 @@ impl SchedulerCore {
             // pure slot-metadata math, so a backpressured scan cycle
             // costs nothing. Reuse path: first a metadata-only lower
             // bound — the *best case* is a maximal prefix hit (every
-            // full block short of one token cached, none of it parked);
-            // if even that best-case tail cannot be reserved, reject
-            // before the O(prompt) arena read + hash. Only then read the
-            // prompt (side-effect free, pre-claim) and run the exact
-            // match-aware check. On rejection, stop admitting so a later
-            // (lower-ranked) candidate cannot leapfrog the policy's
-            // head-of-queue choice.
+            // full block short of one token cached, none of it parked)
+            // whose suffix the offset grid covers; if even that
+            // best-case tail cannot be reserved, reject before the
+            // O(prompt) arena read + hash. Only then read the prompt
+            // (side-effect free, pre-claim) and run the exact
+            // match-aware check. A hit whose suffix fits no offset
+            // graph is demoted to a cold full prefill *before* any
+            // reservation, so nothing is ever double-charged. On
+            // rejection, stop admitting so a later (lower-ranked)
+            // candidate cannot leapfrog the policy's head-of-queue
+            // choice.
             let bs = self.kv.config().block_size;
             let prompt_u32: Option<Vec<u32>>;
             let pm: Option<crate::kvcache::PrefixMatch>;
             let padded;
-            if self.config.prefix_reuse {
+            if self.reuse {
+                // Floor = the cheapest possible outcome: a maximal hit
+                // whose suffix the offset grid covers, or a cold full
+                // prefill — whichever needs fewer fresh blocks (on a
+                // sparse offset grid the smallest offset graph can be
+                // *larger* than the cold padding, so the hit is not
+                // automatically the best case).
+                let cold_padded = padded_seq(&self.cache, prompt_len);
+                let cold_need =
+                    self.kv.config().blocks_needed(cold_padded, prompt_len, max_new as usize);
                 let best_match = (prompt_len - 1) / bs * bs;
-                let best_padded = padded_seq(&self.cache, prompt_len - best_match);
-                let need_floor = self.kv.config().blocks_needed_with_prefix(
-                    best_match,
-                    best_padded,
-                    prompt_len,
-                    max_new as usize,
-                );
-                if need_floor - best_match / bs > self.kv.available_blocks() {
+                let floor = match self.cache.padded_offset_seq(prompt_len - best_match) {
+                    Some(p) => {
+                        let hit_need = self.kv.config().blocks_needed_with_prefix(
+                            best_match,
+                            p,
+                            prompt_len,
+                            max_new as usize,
+                        );
+                        (hit_need - best_match / bs).min(cold_need)
+                    }
+                    None => cold_need,
+                };
+                if floor > self.kv.available_blocks() {
                     self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                     break;
                 }
                 let p = self.ring.read_prompt(slot_idx);
-                let m = self.kv.match_prefix(&p);
-                padded = padded_seq(&self.cache, prompt_len - m.tokens);
+                let mut m = self.kv.match_prefix(&p);
+                padded = if m.tokens == 0 {
+                    cold_padded
+                } else if let Some(p_off) = self.cache.padded_offset_seq(prompt_len - m.tokens) {
+                    p_off
+                } else {
+                    // Graceful fallback: the suffix is off the offset
+                    // grid (or the artifacts ship none — PrefixReuse::On
+                    // without offset graphs). Abandon the match before
+                    // reserving anything: the request admits cold with a
+                    // full prefill, sharing no blocks.
+                    self.stats.prefix_fallback_full.fetch_add(1, Ordering::Relaxed);
+                    m = crate::kvcache::PrefixMatch::default();
+                    cold_padded
+                };
                 if !self.kv.can_admit_reuse(&m, padded, prompt_len, max_new as usize) {
                     self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                     break;
@@ -429,11 +494,14 @@ impl SchedulerCore {
             return;
         }
 
-        // Stage 3b: group to the prefill graph grid and launch each group.
-        // No intra-batch sharing hazard: index entries commit only after
-        // a group's prefill completed (each launch below is polled
-        // synchronously), so a match can only ever land on blocks whose
-        // K/V is already written.
+        // Stage 3b: group to the prefill graph grid (full vs offset
+        // launches, see planner) and launch each group in shared-block
+        // dependency order — `group_prefills` topologically orders
+        // sharer groups after their prefix producers, so a hit can never
+        // launch before the prefill that writes its shared blocks. Index
+        // entries additionally commit only after a group's prefill
+        // completed (each launch below is polled synchronously), so a
+        // match can only ever land on K/V that is already written.
         for group in self.planner.group_prefills(admitted) {
             self.launch_prefill(group);
         }
@@ -466,15 +534,51 @@ impl SchedulerCore {
     }
 
     /// Pipeline stages 4+5 for one prefill group: marshal, launch, poll,
-    /// publish first tokens.
-    fn launch_prefill(&mut self, group: PrefillGroup) {
+    /// publish first tokens. Offset groups launch a `prefill_offset`
+    /// graph whose seq equals the padded *suffix* the admission stage
+    /// reserved — never a longer one, whose K/V writes would land past
+    /// the reservation (hits whose suffix is off-grid were demoted to
+    /// cold full prefills before reserving anything). A sparse or
+    /// non-rectangular offset grid that cannot cover the whole group at
+    /// that exact seq in one launch is handled by splitting on the batch
+    /// axis.
+    fn launch_prefill(&mut self, mut group: PrefillGroup) {
         let b_actual = group.seqs.len();
-        let gid = self
-            .cache
-            .select_prefill(b_actual, group.padded)
-            .expect("grid covers all padded sizes");
+        let gid = if group.offset {
+            // aot.py emits dense rectangular grids, so the first probe
+            // succeeds at full width; hand-built manifests may not be
+            // rectangular, in which case the widest exactly-sized prefix
+            // of the group launches now and the tail recurses. Batch 1
+            // always fits: `padded` came from `padded_offset_seq`, so a
+            // graph with that exact seq exists and the (seq, batch)
+            // tie-break selects it.
+            let exact_fit = |cache: &GraphCache, b: usize, padded: usize| {
+                cache
+                    .select_prefill_offset(b, padded)
+                    .filter(|&g| cache.spec(g).seq == padded)
+            };
+            let fit = (1..=b_actual)
+                .rev()
+                .find(|&b| exact_fit(&self.cache, b, group.padded).is_some())
+                .expect("admission verified an exact-seq offset graph at batch 1");
+            if fit < b_actual {
+                let rest = group.seqs.split_off(fit);
+                let padded = group.padded;
+                self.launch_prefill(group);
+                self.launch_prefill(PrefillGroup { padded, offset: true, seqs: rest });
+                return;
+            }
+            exact_fit(&self.cache, b_actual, group.padded).expect("probed above")
+        } else {
+            self.cache
+                .select_prefill(b_actual, group.padded)
+                .expect("grid covers all padded sizes")
+        };
         let spec = self.cache.spec(gid).clone();
         let inputs = self.planner.prefill_inputs(&group, spec.batch, spec.seq);
+        if group.offset {
+            self.stats.prefill_offset_batches.fetch_add(1, Ordering::Relaxed);
+        }
 
         let seed = self.next_seed();
         self.launcher.launch(LaunchCmd {
@@ -482,6 +586,7 @@ impl SchedulerCore {
             block_tables: inputs.block_tables,
             seq_lens: inputs.seq_lens,
             tokens: inputs.tokens,
+            offsets: inputs.offsets,
             seed,
             completion: self.completions.buffer(),
             reset_kv: false,
@@ -498,12 +603,14 @@ impl SchedulerCore {
         };
 
         self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
+        let group_offset = group.offset;
         for (lane_idx, seq) in group.seqs.into_iter().enumerate() {
-            let PrefillSeq { slot, mut cache, prompt, max_new, .. } = seq;
+            let PrefillSeq { slot, mut cache, prompt, max_new, cached_prefix, .. } = seq;
+            debug_assert!(cached_prefix == 0 || group_offset, "hit seq in a full-prefill group");
             cache.cached_len = prompt.len();
             // The prefill wrote this prompt's K/V: commit its full
             // blocks to the prefix index so later turns can share them.
-            if self.config.prefix_reuse {
+            if self.reuse {
                 let toks: Vec<u32> = prompt.iter().map(|&t| t as u32).collect();
                 self.kv.index_prompt(&cache, &toks);
             }
@@ -550,6 +657,7 @@ impl SchedulerCore {
             block_tables: inputs.block_tables,
             seq_lens: inputs.seq_lens,
             tokens: inputs.tokens,
+            offsets: inputs.offsets,
             seed,
             completion: self.completions.buffer(),
             reset_kv: false,
@@ -646,7 +754,8 @@ mod tests {
                  n_kv_heads 1\nd_head 4\nd_ff 8\nblock_size 16\nnum_blocks 8\n\
                  max_blocks_per_seq 4\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
                  param p 4 f32\ngraph decode_b1 decode 1 0\ngraph prefill_b1_s16 prefill 1 16\n\
-                 graph prefill_b1_s32 prefill 1 32\ngraph prefill_b2_s64 prefill 2 64\n",
+                 graph prefill_b1_s32 prefill 1 32\ngraph prefill_b2_s64 prefill 2 64\n\
+                 graph prefill_offset_b1_s16 prefill_offset 1 16\n",
             )
             .unwrap(),
         )
@@ -664,5 +773,63 @@ mod tests {
     #[test]
     fn default_config_is_paper_fcfs() {
         assert_eq!(SchedulerConfig::default().policy, PolicyKind::Fcfs);
+        assert_eq!(SchedulerConfig::default().prefix_reuse, PrefixReuse::Auto);
+    }
+
+    #[test]
+    fn manifest_offset_graphs_parsed_into_cache() {
+        let c = toy_cache();
+        assert!(c.has_offset_graphs());
+        assert_eq!(c.padded_offset_seq(9), Some(16));
+        assert_eq!(c.padded_offset_seq(17), None, "off the partial offset grid");
+    }
+
+    /// Satellite: a hit whose suffix is off the offset grid is demoted
+    /// to a cold full prefill *before* reserving anything — the cold
+    /// admission charges exactly the cold block count (no leaked
+    /// refcounts, no shared blocks), and a release restores the pool.
+    #[test]
+    fn offgrid_suffix_falls_back_cold_without_double_charge() {
+        use crate::kvcache::{KvConfig, KvManager, PrefixMatch};
+        let cache = toy_cache(); // offset grid covers suffixes ≤ 16 only
+        let mut kv = KvManager::new(KvConfig {
+            block_size: 16,
+            num_blocks: 32,
+            max_blocks_per_seq: 8,
+        });
+        // Turn 1: a 40-token prompt indexes its 2 full blocks (32 tokens).
+        let prefix: Vec<u32> = (0..40).collect();
+        let a = kv.admit_reuse(&prefix, 64, 4).unwrap();
+        kv.index_prompt(&a, &prefix);
+        kv.release(a);
+        let baseline = kv.free_blocks() + kv.evictable_blocks();
+
+        // Turn 2: 64-token prompt hitting 32 cached tokens → suffix 32,
+        // which the offset grid does NOT cover. The admission sequence
+        // (mirroring SchedulerCore::admit_and_prefill's reuse branch):
+        let prompt: Vec<u32> = (0..64).collect();
+        let mut m = kv.match_prefix(&prompt);
+        assert_eq!(m.tokens, 32, "the index does hit");
+        if cache.padded_offset_seq(prompt.len() - m.tokens).is_none() {
+            m = PrefixMatch::default(); // demote before reserving
+        }
+        assert_eq!(m.tokens, 0, "suffix 32 > offset grid max 16 → cold");
+        let padded = padded_seq(&cache, prompt.len());
+        assert!(kv.can_admit_reuse(&m, padded, prompt.len(), 4));
+        let c = kv.admit_matched(&m, prompt.len(), padded, 4).unwrap();
+        assert_eq!(c.prefix_len, 0, "no reuse reserved on the fallback path");
+        // Cold cost: span = max(64, 64+4) = 68 → 5 fresh blocks, none
+        // shared with the parked prefix (which stays parked).
+        assert_eq!(c.blocks.len(), 5);
+        assert_eq!(baseline - (kv.free_blocks() + kv.evictable_blocks()), 5);
+        kv.release(c);
+        assert_eq!(kv.free_blocks() + kv.evictable_blocks(), baseline, "no double-charge");
+        kv.check_invariants();
+
+        // A short second turn (suffix ≤ 16) does use the offset path.
+        let short: Vec<u32> = (0..48).collect();
+        let m2 = kv.match_prefix(&short);
+        assert_eq!(m2.tokens, 32);
+        assert_eq!(cache.padded_offset_seq(short.len() - m2.tokens), Some(16));
     }
 }

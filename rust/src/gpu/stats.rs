@@ -38,6 +38,13 @@ pub struct SchedulerStats {
     pub prefix_evicted_blocks: AtomicU64,
     /// Blocks currently shared or parked in the prefix index (gauge).
     pub prefix_indexed_blocks: AtomicU64,
+    /// Offset-prefill graph launches (suffix-only prefills of live
+    /// prefix-cache hits) — the counter `eval prefix-live` and
+    /// `/metrics` report.
+    pub prefill_offset_batches: AtomicU64,
+    /// Prefix hits demoted to a full cold prefill because their suffix
+    /// fit no offset graph (partial or absent offset grid).
+    pub prefix_fallback_full: AtomicU64,
     /// Admissions carrying a session tag (multi-turn traffic) — read off
     /// the slot's RDMA-written `session_id` by the GPU plane, so
     /// `/metrics` distinguishes conversation turns from one-shot load.
@@ -69,12 +76,13 @@ impl SchedulerStats {
 
     pub fn summary(&self) -> String {
         format!(
-            "decode_steps={} prefills={} completed={} failed={} tokens={} occupancy={:.2} \
-             pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} backpressure={} \
-             reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
-             prefix_evicted={} prefix_indexed={} session_requests={}",
+            "decode_steps={} prefills={} offset_prefills={} completed={} failed={} tokens={} \
+             occupancy={:.2} pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} \
+             backpressure={} reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
+             prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
+            self.prefill_offset_batches.load(Ordering::Relaxed),
             self.completed_requests.load(Ordering::Relaxed),
             self.failed_requests.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -89,6 +97,7 @@ impl SchedulerStats {
             self.ttft_deadline_misses.load(Ordering::Relaxed),
             self.prefix_hits.load(Ordering::Relaxed),
             self.prefix_hit_tokens.load(Ordering::Relaxed),
+            self.prefix_fallback_full.load(Ordering::Relaxed),
             self.prefix_evicted_blocks.load(Ordering::Relaxed),
             self.prefix_indexed_blocks.load(Ordering::Relaxed),
             self.session_requests.load(Ordering::Relaxed),

@@ -14,7 +14,25 @@ pub struct GraphId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GraphKind {
     Prefill,
+    /// Suffix prefill at a runtime offset (live prefix-cache hits): the
+    /// graph's `seq` is the padded *suffix* length; per-lane
+    /// block-aligned offsets are a runtime input.
+    PrefillOffset,
     Decode,
+}
+
+impl GraphKind {
+    /// Manifest `graph` kind strings (see python/compile/aot.py).
+    /// Unknown kinds are rejected by the manifest *parser* at load time
+    /// (`runtime::manifest`), so by the time a kind string reaches this
+    /// mapping it is one of the three known values.
+    pub fn from_manifest(kind: &str) -> GraphKind {
+        match kind {
+            "decode" => GraphKind::Decode,
+            "prefill_offset" => GraphKind::PrefillOffset,
+            _ => GraphKind::Prefill,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -27,6 +45,48 @@ pub struct GraphSpec {
     pub seq: usize,
 }
 
+impl GraphSpec {
+    /// Validate launch-input lengths against this graph's shape — the
+    /// single check both the PJRT engine and the modeled executor
+    /// apply, so the two backends can never drift: tokens are `[B]` for
+    /// decode and `[B*S]` for (offset) prefill, and `offsets` is `[B]`
+    /// exactly for offset prefill graphs, empty otherwise.
+    pub fn validate_launch_shapes(
+        &self,
+        max_blocks_per_seq: usize,
+        block_tables_len: usize,
+        seq_lens_len: usize,
+        tokens_len: usize,
+        offsets_len: usize,
+    ) -> Result<(), String> {
+        let b = self.batch;
+        if block_tables_len != b * max_blocks_per_seq {
+            return Err(format!(
+                "{}: block_tables len {} != {}x{}",
+                self.name, block_tables_len, b, max_blocks_per_seq
+            ));
+        }
+        if seq_lens_len != b {
+            return Err(format!("{}: seq_lens len {} != batch {}", self.name, seq_lens_len, b));
+        }
+        let expected_tok = match self.kind {
+            GraphKind::Decode => b,
+            GraphKind::Prefill | GraphKind::PrefillOffset => b * self.seq,
+        };
+        if tokens_len != expected_tok {
+            return Err(format!("{}: tokens len {} != {}", self.name, tokens_len, expected_tok));
+        }
+        let expected_off = if self.kind == GraphKind::PrefillOffset { b } else { 0 };
+        if offsets_len != expected_off {
+            return Err(format!(
+                "{}: offsets len {} != {}",
+                self.name, offsets_len, expected_off
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// O(1) tightest-fit graph selection.
 ///
 /// `prefill_lut[b-1][s-1]` and `decode_lut[b-1]` are fully materialized at
@@ -37,7 +97,12 @@ pub struct GraphCache {
     specs: Vec<GraphSpec>,
     max_batch: usize,
     max_seq: usize,
+    /// Largest padded-suffix length in the offset-prefill grid (0 = the
+    /// artifacts ship no offset graphs: live prefix reuse falls back to
+    /// full prefill).
+    max_offset_seq: usize,
     prefill_lut: Vec<Vec<Option<GraphId>>>,
+    prefill_offset_lut: Vec<Vec<Option<GraphId>>>,
     decode_lut: Vec<Option<GraphId>>,
     /// Fallback: the maximum-shape prefill graph.
     pub fallback_prefill: Option<GraphId>,
@@ -49,20 +114,36 @@ impl GraphCache {
         let max_batch = specs.iter().map(|s| s.batch).max().unwrap_or(0);
         let max_seq =
             specs.iter().filter(|s| s.kind == GraphKind::Prefill).map(|s| s.seq).max().unwrap_or(0);
+        let max_offset_seq = specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::PrefillOffset)
+            .map(|s| s.seq)
+            .max()
+            .unwrap_or(0);
 
-        // Tightest fit = minimize (batch, then seq) among graphs that fit.
-        let mut prefill_lut = vec![vec![None; max_seq]; max_batch];
-        for (bi, row) in prefill_lut.iter_mut().enumerate() {
-            let b = bi + 1;
-            for (si, cell) in row.iter_mut().enumerate() {
-                let s = si + 1;
-                *cell = specs
-                    .iter()
-                    .filter(|g| g.kind == GraphKind::Prefill && g.batch >= b && g.seq >= s)
-                    .min_by_key(|g| (g.batch, g.seq))
-                    .map(|g| g.id);
+        // Tightest fit = minimize (batch, then seq) among graphs that
+        // fit. The offset LUT minimizes (seq, then batch) instead: its
+        // seq axis is reservation-critical — a wider-than-reserved
+        // suffix graph would write K/V past the admitted span — while a
+        // wider batch only adds benign ghost lanes. The two orders agree
+        // on rectangular grids (everything aot.py emits).
+        let fit_lut = |kind: GraphKind, seq_cap: usize, seq_first: bool| {
+            let mut lut: Vec<Vec<Option<GraphId>>> = vec![vec![None; seq_cap]; max_batch];
+            for (bi, row) in lut.iter_mut().enumerate() {
+                let b = bi + 1;
+                for (si, cell) in row.iter_mut().enumerate() {
+                    let s = si + 1;
+                    *cell = specs
+                        .iter()
+                        .filter(|g| g.kind == kind && g.batch >= b && g.seq >= s)
+                        .min_by_key(|g| if seq_first { (g.seq, g.batch) } else { (g.batch, g.seq) })
+                        .map(|g| g.id);
+                }
             }
-        }
+            lut
+        };
+        let prefill_lut = fit_lut(GraphKind::Prefill, max_seq, false);
+        let prefill_offset_lut = fit_lut(GraphKind::PrefillOffset, max_offset_seq, true);
         let mut decode_lut = vec![None; max_batch];
         for (bi, cell) in decode_lut.iter_mut().enumerate() {
             let b = bi + 1;
@@ -86,7 +167,9 @@ impl GraphCache {
             specs,
             max_batch,
             max_seq,
+            max_offset_seq,
             prefill_lut,
+            prefill_offset_lut,
             decode_lut,
             fallback_prefill,
             fallback_decode,
@@ -124,6 +207,26 @@ impl GraphCache {
             .unwrap_or(0)
     }
 
+    /// Do the artifacts provide offset prefill graphs? Gates default-on
+    /// live prefix reuse (`PrefixReuse::Auto`).
+    pub fn has_offset_graphs(&self) -> bool {
+        self.max_offset_seq > 0
+    }
+
+    /// Largest padded-suffix length in the offset grid (0 = none).
+    pub fn max_prefill_offset_seq(&self) -> usize {
+        self.max_offset_seq
+    }
+
+    pub fn max_prefill_offset_batch(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::PrefillOffset)
+            .map(|s| s.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Tightest-fitting prefill graph for `batch` prompts padded to
     /// `seq` tokens; falls back to the maximum shape when off-grid.
     pub fn select_prefill(&self, batch: usize, seq: usize) -> Option<GraphId> {
@@ -139,6 +242,27 @@ impl GraphCache {
             return self.fallback_prefill;
         }
         None
+    }
+
+    /// Tightest-fitting *offset* prefill graph for `batch` suffixes
+    /// padded to `suffix` tokens. Deliberately no maximum-shape fallback:
+    /// a suffix that fits no offset graph means the caller must fall back
+    /// to a full prefill (and must not reserve any prefix reuse), so
+    /// `None` here is the fallback signal, never a panic.
+    pub fn select_prefill_offset(&self, batch: usize, suffix: usize) -> Option<GraphId> {
+        if batch == 0 || suffix == 0 || batch > self.max_batch || suffix > self.max_offset_seq {
+            return None;
+        }
+        self.prefill_offset_lut[batch - 1][suffix - 1]
+    }
+
+    /// Smallest offset-grid suffix length that fits `suffix` (the padding
+    /// target for a prefix hit), or `None` when the suffix is off-grid.
+    /// O(1): the (seq, batch)-first tie-break makes the batch-1 LUT
+    /// entry's seq exactly the minimum covering grid length — this runs
+    /// on the admission hot path (floor check + post-match padding).
+    pub fn padded_offset_seq(&self, suffix: usize) -> Option<usize> {
+        self.select_prefill_offset(1, suffix).map(|g| self.spec(g).seq)
     }
 
     /// Tightest-fitting decode graph for a live batch of `batch` lanes.
@@ -168,6 +292,21 @@ mod tests {
                     id: GraphId(id),
                     name: format!("prefill_b{b}_s{s}"),
                     kind: GraphKind::Prefill,
+                    batch: b,
+                    seq: s,
+                });
+                id += 1;
+            }
+        }
+        // A *partial* offset grid (suffixes only up to 64): longer
+        // suffixes must report None so the scheduler falls back to a
+        // full prefill.
+        for b in [1usize, 2] {
+            for s in [16usize, 32, 64] {
+                specs.push(GraphSpec {
+                    id: GraphId(id),
+                    name: format!("prefill_offset_b{b}_s{s}"),
+                    kind: GraphKind::PrefillOffset,
                     batch: b,
                     seq: s,
                 });
@@ -240,5 +379,98 @@ mod tests {
     #[test]
     fn max_decode_batch_reported() {
         assert_eq!(cache().max_decode_batch(), 8);
+    }
+
+    #[test]
+    fn offset_selection_tightest_fit() {
+        let c = cache();
+        let g = c.select_prefill_offset(1, 16).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_offset_b1_s16");
+        let g = c.select_prefill_offset(2, 17).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_offset_b2_s32", "rounds up both axes");
+        let g = c.select_prefill_offset(1, 5).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_offset_b1_s16");
+    }
+
+    #[test]
+    fn offset_selection_off_grid_is_fallback_signal_not_panic() {
+        let c = cache();
+        // Suffix longer than any offset graph: None (caller falls back
+        // to full prefill), even though a *full* prefill graph covers it.
+        assert!(c.select_prefill_offset(1, 65).is_none());
+        assert!(c.select_prefill(1, 65).is_some());
+        assert_eq!(c.padded_offset_seq(65), None);
+        // Batch wider than the offset grid: same signal.
+        assert!(c.select_prefill_offset(4, 16).is_none());
+        // Degenerate inputs.
+        assert!(c.select_prefill_offset(0, 16).is_none());
+        assert!(c.select_prefill_offset(1, 0).is_none());
+    }
+
+    #[test]
+    fn offset_selection_consistent_with_linear_scan() {
+        // Offset fit minimizes (seq, batch): seq is reservation-critical.
+        let c = cache();
+        for b in 1..=4usize {
+            for s in 1..=80usize {
+                let lin = c
+                    .specs()
+                    .iter()
+                    .filter(|g| g.kind == GraphKind::PrefillOffset && g.batch >= b && g.seq >= s)
+                    .min_by_key(|g| (g.seq, g.batch))
+                    .map(|g| g.id);
+                assert_eq!(c.select_prefill_offset(b, s), lin, "b={b} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn offset_selection_never_over_provisions_seq() {
+        // Non-rectangular grid: offset graphs b1_s64 and b2_s16. A
+        // 16-token suffix at batch 1 must select (2, 16) — more batch is
+        // benign ghost lanes — never (1, 64), whose K/V writes would
+        // land past the admitted reservation.
+        let mut specs = vec![];
+        for (i, (b, s)) in [(1usize, 64usize), (2, 16)].iter().enumerate() {
+            specs.push(GraphSpec {
+                id: GraphId(i),
+                name: format!("prefill_offset_b{b}_s{s}"),
+                kind: GraphKind::PrefillOffset,
+                batch: *b,
+                seq: *s,
+            });
+        }
+        let c = GraphCache::new(specs);
+        let g = c.select_prefill_offset(1, 16).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_offset_b2_s16");
+        // A 17-token suffix genuinely needs the s64 graph.
+        let g = c.select_prefill_offset(1, 17).unwrap();
+        assert_eq!(c.spec(g).name, "prefill_offset_b1_s64");
+    }
+
+    #[test]
+    fn offset_grid_queries() {
+        let c = cache();
+        assert!(c.has_offset_graphs());
+        assert_eq!(c.max_prefill_offset_seq(), 64);
+        assert_eq!(c.max_prefill_offset_batch(), 2);
+        assert_eq!(c.padded_offset_seq(20), Some(32));
+        // A cache without offset graphs reports their absence.
+        let plain = GraphCache::new(vec![GraphSpec {
+            id: GraphId(0),
+            name: "prefill_b1_s16".into(),
+            kind: GraphKind::Prefill,
+            batch: 1,
+            seq: 16,
+        }]);
+        assert!(!plain.has_offset_graphs());
+        assert!(plain.select_prefill_offset(1, 8).is_none());
+    }
+
+    #[test]
+    fn manifest_kind_mapping() {
+        assert_eq!(GraphKind::from_manifest("decode"), GraphKind::Decode);
+        assert_eq!(GraphKind::from_manifest("prefill"), GraphKind::Prefill);
+        assert_eq!(GraphKind::from_manifest("prefill_offset"), GraphKind::PrefillOffset);
     }
 }

@@ -4,15 +4,16 @@
 //!
 //! ```text
 //! serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
-//!         [--prefix-reuse]
-//!         start a live server (P: fcfs|priority|sjf|slo)
-//! eval    <all|policies|prefix|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         [--prefix-reuse | --no-prefix-reuse]
+//!         start a live server (P: fcfs|priority|sjf|slo); prefix reuse
+//!         defaults to auto (on when the artifacts ship offset graphs)
+//! eval    <all|policies|prefix|prefix-live|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
 //!         [--out DIR] [--window S] [--threads N]
 //! info    print manifest + graph grid for a model
 //! ```
 
 use blink::eval;
-use blink::gpu::{Placement, PolicyKind};
+use blink::gpu::{Placement, PolicyKind, PrefixReuse};
 use blink::http::HttpServer;
 use blink::server::{BlinkServer, ServerConfig};
 use blink::sim::costmodel::PAPER_MODELS;
@@ -28,8 +29,8 @@ fn main() {
             eprintln!(
                 "usage: blink <serve|eval|info> [...]\n\
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
-                       [--policy fcfs|priority|sjf|slo] [--prefix-reuse]\n\
-                 eval <all|policies|prefix|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                       [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse]\n\
+                 eval <all|policies|prefix|prefix-live|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
                       [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)]\n\
                  info [--model blink-tiny]"
             );
@@ -47,11 +48,21 @@ fn serve(args: &Args) {
         Placement::GpuResident
     };
     let policy = parse_policy_flag(args).unwrap_or(PolicyKind::Fcfs);
-    // Opt-in: live prefix reuse needs the offset prefill graph the AOT
-    // grid doesn't have yet (DESIGN.md §7); fine on the modeled executor.
-    let prefix_reuse = args.has_flag("prefix-reuse");
+    // Default-on: prefix reuse engages automatically when the artifacts
+    // provide offset prefill graphs (suffix-only prefill at the correct
+    // positions — DESIGN.md §7); without them it gracefully stays on the
+    // paper's cold path. `--no-prefix-reuse` forces it off,
+    // `--prefix-reuse` keeps the index machinery on even without offset
+    // graphs (hits are counted but demoted to full prefills).
+    let prefix_reuse = if args.has_flag("no-prefix-reuse") {
+        PrefixReuse::Off
+    } else if args.has_flag("prefix-reuse") {
+        PrefixReuse::On
+    } else {
+        PrefixReuse::Auto
+    };
     eprintln!(
-        "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={} ...",
+        "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={:?} ...",
         policy.name(),
         prefix_reuse
     );
@@ -94,6 +105,7 @@ fn eval_cmd(args: &Args) {
             return eval::policy_comparison(out_ref, window, threads, parse_policy_flag(args));
         }
         "prefix" => return eval::prefix_comparison(out_ref, window, threads),
+        "prefix-live" => return eval::live::prefix_live(out_ref),
         _ => {}
     }
 

@@ -110,6 +110,14 @@ impl ModelManifest {
                 "graph" => {
                     let name = val()?.to_string();
                     let kind = val()?.to_string();
+                    // Reject unknown kinds here, at load time: the three
+                    // kinds have different launch signatures (offset
+                    // prefill takes an extra [B] offsets argument), so a
+                    // typo'd kind silently defaulting to "prefill" would
+                    // surface only as runtime arg-count failures.
+                    if !matches!(kind.as_str(), "decode" | "prefill" | "prefill_offset") {
+                        bail!("unknown graph kind {kind:?} for graph {name}");
+                    }
                     let batch = val()?.parse()?;
                     let seq = val()?.parse()?;
                     m.graphs.push(GraphEntry { name, kind, batch, seq });
@@ -160,6 +168,7 @@ param tok_embed 2048x256 f32
 param final_norm 256 f32
 graph decode_b1 decode 1 0
 graph prefill_b2_s32 prefill 2 32
+graph prefill_offset_b2_s32 prefill_offset 2 32
 ";
 
     #[test]
@@ -170,10 +179,20 @@ graph prefill_b2_s32 prefill 2 32
         assert!(!m.moe);
         assert_eq!(m.params.len(), 2);
         assert_eq!(m.params[0], ("tok_embed".to_string(), vec![2048, 256]));
-        assert_eq!(m.graphs.len(), 2);
+        assert_eq!(m.graphs.len(), 3);
         assert_eq!(
             m.graphs[1],
             GraphEntry { name: "prefill_b2_s32".into(), kind: "prefill".into(), batch: 2, seq: 32 }
+        );
+        // Offset prefill graphs ride the same schema with their own kind.
+        assert_eq!(
+            m.graphs[2],
+            GraphEntry {
+                name: "prefill_offset_b2_s32".into(),
+                kind: "prefill_offset".into(),
+                batch: 2,
+                seq: 32
+            }
         );
         assert_eq!(m.max_context(), 512);
     }
@@ -181,6 +200,13 @@ graph prefill_b2_s32 prefill 2 32
     #[test]
     fn rejects_bad_header() {
         assert!(ModelManifest::parse("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_graph_kind() {
+        let bad = SAMPLE.replace("prefill_offset 2 32", "prefil_offset 2 32");
+        let err = ModelManifest::parse(&bad).unwrap_err();
+        assert!(format!("{err}").contains("unknown graph kind"), "{err}");
     }
 
     #[test]

@@ -64,7 +64,7 @@ impl Engine {
             specs.push(GraphSpec {
                 id: GraphId(i),
                 name: g.name.clone(),
-                kind: if g.kind == "decode" { GraphKind::Decode } else { GraphKind::Prefill },
+                kind: GraphKind::from_manifest(&g.kind),
                 batch: g.batch,
                 seq: g.seq,
             });
@@ -101,7 +101,9 @@ impl Engine {
 
     /// Execute one graph. `tokens` is `[B]` for decode or `[B*S]`
     /// row-major for prefill; `block_tables` is `[B * max_blocks_per_seq]`
-    /// row-major; `seq_lens` is `[B]`. Returns the sampled tokens `[B]`.
+    /// row-major; `seq_lens` is `[B]`. `offsets` is `[B]` for offset
+    /// prefill graphs (per-lane cached-prefix lengths) and must be empty
+    /// for every other kind. Returns the sampled tokens `[B]`.
     ///
     /// The KV pool is passed as a device buffer and swapped for the
     /// output's pool element — no host copy of cache state, the analogue
@@ -112,23 +114,20 @@ impl Engine {
         block_tables: &[i32],
         seq_lens: &[i32],
         tokens: &[i32],
+        offsets: &[i32],
         seed: u32,
     ) -> Result<Vec<i32>> {
         let spec = self.cache.spec(id).clone();
         let b = spec.batch;
         let m = self.manifest.max_blocks_per_seq;
-        if block_tables.len() != b * m {
-            bail!("block_tables len {} != {}x{}", block_tables.len(), b, m);
-        }
-        if seq_lens.len() != b {
-            bail!("seq_lens len {} != batch {}", seq_lens.len(), b);
-        }
-        let expected_tok = match spec.kind {
-            GraphKind::Decode => b,
-            GraphKind::Prefill => b * spec.seq,
-        };
-        if tokens.len() != expected_tok {
-            bail!("tokens len {} != {}", tokens.len(), expected_tok);
+        if let Err(e) = spec.validate_launch_shapes(
+            m,
+            block_tables.len(),
+            seq_lens.len(),
+            tokens.len(),
+            offsets.len(),
+        ) {
+            bail!("{e}");
         }
 
         let c = &self.client;
@@ -138,9 +137,16 @@ impl Engine {
         let sl = c.buffer_from_host_buffer(seq_lens, &[b], None).map_err(wrap_xla)?;
         let tok = match spec.kind {
             GraphKind::Decode => c.buffer_from_host_buffer(tokens, &[b], None),
-            GraphKind::Prefill => c.buffer_from_host_buffer(tokens, &[b, spec.seq], None),
+            GraphKind::Prefill | GraphKind::PrefillOffset => {
+                c.buffer_from_host_buffer(tokens, &[b, spec.seq], None)
+            }
         }
         .map_err(wrap_xla)?;
+        let off_b = if spec.kind == GraphKind::PrefillOffset {
+            Some(c.buffer_from_host_buffer(offsets, &[b], None).map_err(wrap_xla)?)
+        } else {
+            None
+        };
         let seed_b = c
             .buffer_from_host_buffer(&[seed], &[] as &[usize], None)
             .map_err(wrap_xla)?;
@@ -150,6 +156,9 @@ impl Engine {
         args.push(&bt);
         args.push(&sl);
         args.push(&tok);
+        if let Some(off) = off_b.as_ref() {
+            args.push(off);
+        }
         args.push(&seed_b);
 
         let mut out = self.executables[id.0].execute_b_untupled(&args).map_err(wrap_xla)?;

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::frontend::token_reader::ReaderConfig;
 use crate::frontend::{DpuFrontend, FrontendConfig, RequestClass, RequestHandle};
-use crate::gpu::{Executor, Placement, PolicyKind, Scheduler, SchedulerConfig};
+use crate::gpu::{Executor, Placement, PolicyKind, PrefixReuse, Scheduler, SchedulerConfig};
 use crate::rdma::{RdmaConfig, RdmaEngine};
 use crate::ringbuf::{RingBuffer, RingConfig};
 use crate::runtime::{artifacts_dir, ModelManifest};
@@ -27,11 +27,12 @@ pub struct ServerConfig {
     /// Admission policy for the persistent scheduler (`--policy` on the
     /// CLI). FCFS reproduces the paper.
     pub policy: PolicyKind,
-    /// Prefix-aware KV reuse (DESIGN.md §7). Off by default (the
-    /// paper's behavior, and required for real AOT artifacts until the
-    /// grid gains an offset prefill graph); `serve --prefix-reuse`
-    /// opts in on the modeled executor.
-    pub prefix_reuse: bool,
+    /// Prefix-aware KV reuse (DESIGN.md §7). `Auto` (the default) turns
+    /// reuse on exactly when the artifacts provide offset prefill
+    /// graphs, so a hit prefills only its uncached suffix at the correct
+    /// positions; without them it falls back to the paper's cold
+    /// behavior. `serve --no-prefix-reuse` forces it off.
+    pub prefix_reuse: PrefixReuse,
 }
 
 impl Default for ServerConfig {
@@ -45,7 +46,7 @@ impl Default for ServerConfig {
             rdma: RdmaConfig::default(),
             apply_launch_delays: true,
             policy: PolicyKind::Fcfs,
-            prefix_reuse: false,
+            prefix_reuse: PrefixReuse::Auto,
         }
     }
 }

@@ -26,7 +26,7 @@ fn prefill_then_decode_roundtrip() {
     bt[0] = 1;
     bt[1] = 2;
     let prompt: Vec<i32> = (0..16).map(|i| (i * 7 + 3) % m.vocab_size as i32).collect();
-    let first = eng.execute(g, &bt, &[10], &prompt, 42).expect("prefill exec");
+    let first = eng.execute(g, &bt, &[10], &prompt, &[], 42).expect("prefill exec");
     assert_eq!(first.len(), 1);
     assert!((0..m.vocab_size as i32).contains(&first[0]));
 
@@ -35,7 +35,7 @@ fn prefill_then_decode_roundtrip() {
     let mut tok = first[0];
     let mut len = 10i32;
     for step in 0..4u32 {
-        let out = eng.execute(d, &bt, &[len], &[tok], 100 + step).expect("decode exec");
+        let out = eng.execute(d, &bt, &[len], &[tok], &[], 100 + step).expect("decode exec");
         assert_eq!(out.len(), 1);
         assert!((0..m.vocab_size as i32).contains(&out[0]));
         tok = out[0];
@@ -58,10 +58,10 @@ fn generation_is_deterministic_given_seeds() {
 
     let mut run = |eng: &mut Engine| -> Vec<i32> {
         eng.reset_kv().unwrap();
-        let mut toks = eng.execute(g, &bt, &[12], &prompt, 7).unwrap();
+        let mut toks = eng.execute(g, &bt, &[12], &prompt, &[], 7).unwrap();
         let mut len = 12;
         for s in 0..6u32 {
-            let t = eng.execute(d, &bt, &[len], &[*toks.last().unwrap()], 1000 + s).unwrap();
+            let t = eng.execute(d, &bt, &[len], &[*toks.last().unwrap()], &[], 1000 + s).unwrap();
             toks.push(t[0]);
             len += 1;
         }
@@ -90,7 +90,7 @@ fn batched_decode_matches_singleton_lanes() {
     bt[mbs + 1] = 8;
     let prompt: Vec<i32> = (0..16).map(|i| (i * 11 + 2) % 2048).collect();
     let both: Vec<i32> = prompt.iter().chain(prompt.iter()).copied().collect();
-    let first = eng.execute(g, &bt, &[10, 10], &both, 9).unwrap();
+    let first = eng.execute(g, &bt, &[10, 10], &both, &[], 9).unwrap();
     assert_eq!(first.len(), 2);
     // Identical inputs at identical positions with per-lane independent
     // uniforms: lanes may differ in sampled token, but both must be valid.

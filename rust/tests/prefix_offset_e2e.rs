@@ -1,0 +1,206 @@
+//! Scheduler-level offset-prefill tests on the *modeled* executor: the
+//! full pipeline (ring scan → admission → prefix index → planner →
+//! launcher → completion) runs without artifacts or PJRT, so these —
+//! unlike `scheduler_e2e.rs` — never skip. The headline assertion is the
+//! PR's acceptance criterion: with offset graphs in the manifest, a
+//! second-turn request with a ≥50 % block-aligned prefix hit launches a
+//! `prefill_offset` graph covering only the uncached suffix.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blink::gpu::{Executor, ModeledCost, PrefixReuse, Scheduler, SchedulerConfig};
+use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
+use blink::runtime::ModelManifest;
+
+/// A manifest for the modeled executor. `offset_seqs` controls the
+/// offset-prefill grid: empty = artifacts without offset graphs (reuse
+/// must auto-disable), partial = fallback coverage.
+fn manifest(offset_seqs: &[usize]) -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel modeled-test\nvocab_size 2048\nd_model 64\nn_layers 2\n\
+         n_heads 4\nn_kv_heads 2\nd_head 16\nd_ff 128\nblock_size 16\nnum_blocks 64\n\
+         max_blocks_per_seq 16\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
+         param tok_embed 2048x64 f32\n",
+    );
+    for b in [1usize, 2, 4, 8] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0\n"));
+    }
+    for b in [1usize, 2, 4] {
+        for s in [16usize, 32, 64, 128] {
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s}\n"));
+        }
+    }
+    for b in [1usize, 2, 4] {
+        for &s in offset_seqs {
+            text.push_str(&format!("graph prefill_offset_b{b}_s{s} prefill_offset {b} {s}\n"));
+        }
+    }
+    ModelManifest::parse(&text).expect("modeled test manifest")
+}
+
+fn start(m: &ModelManifest, prefix_reuse: PrefixReuse) -> (Arc<RingBuffer>, Scheduler) {
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 64,
+        max_prompt: 256,
+        max_output: 64,
+    }));
+    let executor = Executor::spawn_modeled(m, ModeledCost::zero());
+    let sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        m.clone(),
+        SchedulerConfig { apply_launch_delays: false, prefix_reuse, ..Default::default() },
+    );
+    (ring, sched)
+}
+
+fn submit(ring: &RingBuffer, slot: usize, prompt: &[u32], max_new: u32) {
+    assert!(ring.claim_for_write(slot));
+    ring.write_prompt(slot, prompt);
+    ring.submit(slot, slot as u64, prompt.len() as u32, max_new, slot as u32);
+}
+
+fn wait_done(ring: &RingBuffer, slots: &[usize]) {
+    let t = Instant::now();
+    loop {
+        let done = slots.iter().all(|&s| {
+            matches!(ring.slot(s).state(), SlotState::DecodeCompleted | SlotState::Failed)
+        });
+        if done {
+            return;
+        }
+        assert!(t.elapsed() < Duration::from_secs(60), "timed out waiting for completion");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn prompt_of(len: usize, tag: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| (i * 13 + tag * 101 + 5) % 2048).collect()
+}
+
+/// Acceptance criterion: offset graphs in the manifest + a second turn
+/// whose first 64 of 96 tokens (67 %, block-aligned) are cached ⇒ the
+/// scheduler launches a `prefill_offset` graph sized to the 32-token
+/// suffix, reusing 64 tokens from the index.
+#[test]
+fn second_turn_hit_launches_offset_graph_for_suffix_only() {
+    let m = manifest(&[16, 32, 64, 128]);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+
+    // Turn 1: cold 64-token prompt (4 full blocks indexed on success).
+    let first = prompt_of(64, 1);
+    submit(&ring, 0, &first, 4);
+    wait_done(&ring, &[0]);
+    assert_eq!(ring.slot(0).state(), SlotState::DecodeCompleted);
+
+    // Turn 2: the same 64 tokens + 32 new ones.
+    let mut second = first.clone();
+    second.extend(prompt_of(32, 2).iter().map(|t| t + 1));
+    submit(&ring, 1, &second, 4);
+    wait_done(&ring, &[1]);
+    assert_eq!(ring.slot(1).state(), SlotState::DecodeCompleted);
+    sched.drain_and_stop();
+
+    let st = &sched.stats;
+    assert_eq!(st.completed_requests.load(Ordering::Relaxed), 2);
+    assert_eq!(st.prefix_hits.load(Ordering::Relaxed), 1, "turn 2 must hit the index");
+    assert_eq!(
+        st.prefix_hit_tokens.load(Ordering::Relaxed),
+        64,
+        "the whole block-aligned shared prefix is served from cache"
+    );
+    assert_eq!(
+        st.prefill_offset_batches.load(Ordering::Relaxed),
+        1,
+        "turn 2 prefills through an offset graph"
+    );
+    assert_eq!(
+        st.prefill_batches.load(Ordering::Relaxed),
+        2,
+        "one full prefill (turn 1) + one offset prefill (turn 2)"
+    );
+    assert_eq!(st.prefix_fallback_full.load(Ordering::Relaxed), 0);
+    // Tokens flowed end to end.
+    let n = ring.slot(1).generated.load(Ordering::Acquire);
+    assert_eq!(n, 4);
+    assert!(ring.read_tokens(1, 0, n).iter().all(|&t| t < 2048));
+}
+
+/// Without offset graphs in the artifacts, `Auto` reuse must resolve to
+/// the paper's cold behavior: identical two-turn traffic produces no
+/// hits, no offset launches — and correct results.
+#[test]
+fn auto_reuse_stays_cold_without_offset_graphs() {
+    let m = manifest(&[]);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+    let first = prompt_of(64, 3);
+    submit(&ring, 0, &first, 4);
+    wait_done(&ring, &[0]);
+    let mut second = first.clone();
+    second.extend(prompt_of(32, 4));
+    submit(&ring, 1, &second, 4);
+    wait_done(&ring, &[1]);
+    sched.drain_and_stop();
+
+    let st = &sched.stats;
+    assert_eq!(st.completed_requests.load(Ordering::Relaxed), 2);
+    assert_eq!(st.prefix_hits.load(Ordering::Relaxed), 0, "no offset graphs → no live reuse");
+    assert_eq!(st.prefill_offset_batches.load(Ordering::Relaxed), 0);
+}
+
+/// Forced-on reuse with a *partial* offset grid: a hit whose suffix is
+/// off the grid is demoted to a full cold prefill (counted, correct,
+/// no offset launch) — the graceful-fallback path end to end.
+#[test]
+fn offgrid_suffix_falls_back_to_full_prefill_live() {
+    let m = manifest(&[16]); // suffixes ≤ 16 only
+    let (ring, mut sched) = start(&m, PrefixReuse::On);
+    let first = prompt_of(64, 5);
+    submit(&ring, 0, &first, 4);
+    wait_done(&ring, &[0]);
+    // Suffix of 32 > the grid's 16: must fall back.
+    let mut second = first.clone();
+    second.extend(prompt_of(32, 6));
+    submit(&ring, 1, &second, 4);
+    wait_done(&ring, &[1]);
+    assert_eq!(ring.slot(1).state(), SlotState::DecodeCompleted);
+    // Suffix of 16 fits: offset path.
+    let mut third = first.clone();
+    third.extend(prompt_of(16, 7));
+    submit(&ring, 2, &third, 4);
+    wait_done(&ring, &[2]);
+    assert_eq!(ring.slot(2).state(), SlotState::DecodeCompleted);
+    sched.drain_and_stop();
+
+    let st = &sched.stats;
+    assert_eq!(st.completed_requests.load(Ordering::Relaxed), 3);
+    assert_eq!(st.prefix_fallback_full.load(Ordering::Relaxed), 1, "turn 2 fell back");
+    assert_eq!(st.prefill_offset_batches.load(Ordering::Relaxed), 1, "turn 3 used the grid");
+    assert_eq!(st.prefix_hits.load(Ordering::Relaxed), 1, "only the on-grid hit reserves reuse");
+}
+
+/// The modeled executor carries ordinary (cold, batched, continuous)
+/// traffic through the whole pipeline — scheduler-level coverage that
+/// used to exist only when artifacts were built.
+#[test]
+fn modeled_executor_serves_concurrent_batch() {
+    let m = manifest(&[16, 32, 64, 128]);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+    let slots: Vec<usize> = (0..6).collect();
+    for &s in &slots {
+        submit(&ring, s, &prompt_of(10 + s, 10 + s as u32), 8);
+    }
+    wait_done(&ring, &slots);
+    sched.drain_and_stop();
+    let st = &sched.stats;
+    assert_eq!(st.completed_requests.load(Ordering::Relaxed), 6);
+    assert!(st.decode_steps.load(Ordering::Relaxed) >= 7, "8 tokens each → ≥7 decode steps");
+    for &s in &slots {
+        assert_eq!(ring.slot(s).state(), SlotState::DecodeCompleted, "slot {s}");
+        let n = ring.slot(s).generated.load(Ordering::Acquire);
+        assert_eq!(n, 8, "modeled tokens never hit EOS");
+        assert!(ring.read_tokens(s, 0, n).iter().all(|&t| t < 2048));
+    }
+}

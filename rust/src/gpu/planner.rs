@@ -20,19 +20,28 @@ pub struct Lane {
     pub last_token: i32,
 }
 
-/// One admitted sequence awaiting prefill.
+/// One admitted sequence awaiting prefill — or one *chunk* of a
+/// chunked prefill (see `gpu::scheduler`'s `ChunkedPrefill`): a chunk
+/// carries the prompt prefix up to the chunk's end, with
+/// `cached_prefix` marking the already-written tokens before it.
 pub struct PrefillSeq {
     pub slot: usize,
     pub cache: SeqCache,
     pub prompt: Vec<i32>,
     pub max_new: u32,
-    /// Leading prompt tokens already cached via prefix reuse (block-
+    /// Leading prompt tokens whose K/V is already written — a prefix-
+    /// reuse hit, or the completed chunks of a chunked prefill (block-
     /// aligned; 0 = cold). The prefill launch covers only the suffix.
     pub cached_prefix: usize,
     /// *Suffix* length (prompt − cached_prefix) padded up to the graph
     /// grid — with no prefix hit this is the padded prompt length,
     /// exactly as before.
     pub padded: usize,
+    /// True when this launch completes the prompt's prefill and its
+    /// sampled token is the request's first output token. False only
+    /// for intermediate chunks of a chunked prefill, whose completion
+    /// merely advances the lane's high-water mark.
+    pub first_token: bool,
 }
 
 /// A group of same-padded-length sequences forming one prefill launch.
@@ -104,6 +113,17 @@ impl BatchPlanner {
     /// sequences form full-prefill groups — the two kinds never share a
     /// launch, because their graph grids differ.
     ///
+    /// Chunks of a chunked prefill are ordinary sequences here: chunk
+    /// *k*+1 consumes (as `cached_prefix`) exactly the blocks chunk *k*
+    /// writes, so the same consumer→writer edges that order sharers
+    /// after producers also order a lane's own chunks — self-edges in
+    /// the slot sense, regular edges in the sequence sense. For that to
+    /// hold, a sequence's *write span* must be its padded launch window
+    /// `[cached_prefix, cached_prefix + padded)`, not its whole
+    /// reservation: chunks of one lane share a block list, and crediting
+    /// every chunk with the full tail would let an earlier-listed chunk
+    /// absorb a later chunk's writes and drop the k→k+1 edge.
+    ///
     /// Today the prefix index only ever matches blocks whose prefill
     /// already *completed* (kvcache invariant 5), so intra-admission
     /// edges cannot arise through the index — the order is enforced
@@ -117,12 +137,16 @@ impl BatchPlanner {
             return vec![];
         }
         let bs = self.block_size.max(1);
-        // writer[block] = admitted index whose prefill writes it: every
-        // reserved block from the first uncached one onward (padded
-        // suffix plus decode span).
+        // writer[block] = admitted index whose prefill launch writes it:
+        // the blocks under the padded launch window. (The decode region
+        // past the window is written by decode steps, which no admitted
+        // prefill can consume as a shared prefix — the index only ever
+        // holds full *prompt* blocks.)
         let mut writer: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
         for (i, s) in admitted.iter().enumerate() {
-            for &b in s.cache.blocks.iter().skip(s.cached_prefix / bs) {
+            let lo = (s.cached_prefix / bs).min(s.cache.blocks.len());
+            let hi = (s.cached_prefix + s.padded).div_ceil(bs).min(s.cache.blocks.len());
+            for &b in &s.cache.blocks[lo..hi] {
                 writer.entry(b).or_insert(i);
             }
         }
@@ -286,6 +310,7 @@ mod tests {
             max_new: 4,
             cached_prefix: 0,
             padded,
+            first_token: true,
         }
     }
 
@@ -457,14 +482,20 @@ mod tests {
                 seqs.push(s);
             }
             // Sharers: consume a random full-block prefix of any earlier
-            // seq's span — including another *sharer*'s written tail, so
-            // hit→hit edges occur and genuinely force reordering (hits
-            // with short padded suffixes would otherwise sort first) —
-            // then write their own tail. Creation order guarantees a DAG.
+            // seq's *written prompt* span — including another *sharer*'s
+            // written tail, so hit→hit edges occur and genuinely force
+            // reordering (hits with short padded suffixes would
+            // otherwise sort first) — then write their own tail. Only
+            // full prompt blocks are ever shareable (the index never
+            // holds the decode region past a launch window), so `avail`
+            // is capped there. Creation order guarantees a DAG.
             let n_share = rng.below(5) as usize;
             for i in 0..n_share {
                 let prod = &seqs[rng.below(seqs.len() as u64) as usize];
-                let avail = prod.cache.blocks.len();
+                let avail = (prod.prompt.len() / bs).min(prod.cache.blocks.len());
+                if avail == 0 {
+                    continue;
+                }
                 let shared = 1 + rng.below(avail as u64) as usize;
                 let suffix = 1 + rng.below(32) as usize;
                 let prompt_len = shared * bs + suffix;
@@ -490,10 +521,16 @@ mod tests {
 
             // Dependency order: a block consumed as shared prefix is
             // never consumed before the group that writes it launches.
+            // Writers are determined by the padded launch window, the
+            // same span the implementation credits (a launch writes
+            // `[cached_prefix, cached_prefix + padded)`, nothing more).
             let mut group_of_writer: std::collections::HashMap<u32, usize> = Default::default();
             for (gi, g) in groups.iter().enumerate() {
                 for s in &g.seqs {
-                    for &b in s.cache.blocks.iter().skip(s.cached_prefix / bs) {
+                    let lo = (s.cached_prefix / bs).min(s.cache.blocks.len());
+                    let hi =
+                        (s.cached_prefix + s.padded).div_ceil(bs).min(s.cache.blocks.len());
+                    for &b in &s.cache.blocks[lo..hi] {
                         group_of_writer.entry(b).or_insert(gi);
                     }
                 }

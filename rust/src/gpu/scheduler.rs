@@ -20,12 +20,22 @@
 //!   generated tokens and status updates back to the ring.
 //!
 //! Continuous batching is pause-and-resume inline prefill, exactly as
-//! before the decomposition. The same pipeline runs under two
-//! *placements* (Fig 3's controlled comparison): `GpuResident` — the
-//! Blink design, overlapped ring scan hidden behind decode compute, 2 µs
-//! device launches, zero host work — and `CpuResident` — each step pays
-//! a host round trip on the interference-sensitive host heap, with the
-//! ring scan serialized after completion instead of overlapped.
+//! before the decomposition — with one bound (DESIGN.md §5): a prompt
+//! whose uncached suffix exceeds the per-iteration prefill budget
+//! ([`SchedulerConfig::prefill_chunk_tokens`]) does *not* prefill in
+//! the iteration it is admitted. It enters a [`ChunkedPrefill`] state
+//! machine that reserves all blocks up front and launches one
+//! block-aligned chunk per control-loop iteration — chunk 0 through an
+//! ordinary prefill graph, chunk *k* > 0 through a `prefill_offset`
+//! graph at its true positions — so every in-flight decode lane pays at
+//! most one bounded chunk of stall per token instead of the whole
+//! prompt's prefill. First-token completion is deferred to the final
+//! chunk. The same pipeline runs under two *placements* (Fig 3's
+//! controlled comparison): `GpuResident` — the Blink design, overlapped
+//! ring scan hidden behind decode compute, 2 µs device launches, zero
+//! host work — and `CpuResident` — each step pays a host round trip on
+//! the interference-sensitive host heap, with the ring scan serialized
+//! after completion instead of overlapped.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -39,7 +49,7 @@ use crate::gpu::policy::{AdmissionPolicy, Candidate, PolicyKind};
 use crate::gpu::stats::SchedulerStats;
 use crate::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
 use crate::hostsim::HostOrchestrator;
-use crate::kvcache::{KvConfig, KvManager};
+use crate::kvcache::{KvConfig, KvManager, SeqCache};
 use crate::ringbuf::{RingBuffer, SlotState};
 use crate::runtime::ModelManifest;
 
@@ -88,6 +98,17 @@ pub struct SchedulerConfig {
     /// the block-hash prefix index and prefill only the uncached suffix
     /// through an offset prefill graph. Default [`PrefixReuse::Auto`].
     pub prefix_reuse: PrefixReuse,
+    /// Per-iteration prefill token budget (chunked prefill, DESIGN.md
+    /// §5): an admitted prompt whose uncached suffix exceeds the budget
+    /// is split into block-aligned chunks, one launched per scheduler
+    /// iteration and interleaved with decode steps, so a long prompt
+    /// can no longer stall every decode lane for its whole prefill.
+    /// `None` = the default budget, the largest offset-graph sequence
+    /// length (the biggest chunk the grid can express); `Some(0)`
+    /// disables chunking (whole-prompt prefill, the paper's behavior).
+    /// Chunk *k* > 0 runs a `prefill_offset` graph, so without offset
+    /// graphs in the artifacts the budget resolves to 0 either way.
+    pub prefill_chunk_tokens: Option<usize>,
 }
 
 impl Default for SchedulerConfig {
@@ -99,6 +120,7 @@ impl Default for SchedulerConfig {
             exit_when_idle: false,
             policy: PolicyKind::Fcfs,
             prefix_reuse: PrefixReuse::Auto,
+            prefill_chunk_tokens: None,
         }
     }
 }
@@ -179,6 +201,36 @@ pub fn cache_from_manifest(m: &ModelManifest) -> GraphCache {
     GraphCache::new(specs)
 }
 
+/// In-flight chunked prefill (one long-prompt lane mid-prefill): the
+/// whole block span is reserved at admission; `done` advances by one
+/// block-aligned chunk per scheduler iteration until the final chunk
+/// publishes the first token and the lane joins the decode batch. The
+/// lane holds its slot in `PrefillProcessing` the entire time — the
+/// revised §5 invariant is "an admitted prefill completes within
+/// ⌈suffix / budget⌉ iterations", not "in the iteration it is admitted".
+struct ChunkedPrefill {
+    slot: usize,
+    /// The full reservation (release obligation: exactly once, either
+    /// on chunk failure here or by the decode lane it becomes).
+    cache: SeqCache,
+    prompt: Vec<i32>,
+    max_new: u32,
+    /// Prompt tokens whose K/V is already written: the admission-time
+    /// cached prefix plus every completed chunk. Block-aligned until
+    /// the final chunk lands.
+    done: usize,
+    /// Rolling prefix-index commit state: full blocks already walked by
+    /// `index_prompt_resume` and the chain hash to resume from (`None`
+    /// until the first chunk commits), so each chunk's commit costs
+    /// O(chunk), not O(prefix).
+    indexed_blocks: usize,
+    index_chain: Option<u64>,
+    /// Consecutive iterations this lane waited while the per-iteration
+    /// budget serviced lanes ahead of it (telemetry: the scheduler
+    /// publishes the maximum as `max_chunk_wait_iters`).
+    wait_iters: u64,
+}
+
 struct SchedulerCore {
     ring: Arc<RingBuffer>,
     manifest: ModelManifest,
@@ -187,6 +239,9 @@ struct SchedulerCore {
     stats: Arc<SchedulerStats>,
     kv: KvManager,
     lanes: Vec<Lane>,
+    /// Chunked-prefill state machines (lanes mid-prefill), serviced
+    /// FIFO by [`SchedulerCore::chunk_step`] once per iteration.
+    chunked: Vec<ChunkedPrefill>,
     orchestrator: Option<HostOrchestrator>,
     // Pipeline stages (see module docs).
     policy: Box<dyn AdmissionPolicy>,
@@ -198,6 +253,10 @@ struct SchedulerCore {
     /// Resolved reuse switch: `config.prefix_reuse` crossed with the
     /// artifacts (`Auto` requires offset graphs in the manifest).
     reuse: bool,
+    /// Resolved per-iteration prefill budget in tokens: block-aligned,
+    /// clamped to the graph grids (0 = chunking off). See
+    /// [`SchedulerConfig::prefill_chunk_tokens`].
+    chunk_tokens: usize,
     /// Ticket of the most recently admitted request (out-of-order stat).
     last_admitted_ticket: Option<u64>,
 }
@@ -244,6 +303,21 @@ impl SchedulerCore {
             PrefixReuse::On => true,
             PrefixReuse::Auto => cache.has_offset_graphs(),
         };
+        // Chunk k > 0 prefills through an offset graph at its true
+        // positions, so chunking is only as real as the offset grid:
+        // the budget is block-aligned (chunk boundaries are the offsets
+        // the graphs take) and clamped so every non-final chunk fits
+        // both grids (chunk 0 of a cold prompt runs an ordinary prefill
+        // graph). Without offset graphs it resolves to 0 — whole-prompt
+        // prefill, exactly the paper's behavior.
+        let bs = manifest.block_size.max(1);
+        let chunk_cap = cache.max_prefill_offset_seq().min(cache.max_prefill_seq()) / bs * bs;
+        let chunk_tokens = match config.prefill_chunk_tokens {
+            _ if chunk_cap == 0 => 0,
+            Some(0) => 0,
+            Some(n) => n.clamp(bs, chunk_cap) / bs * bs,
+            None => chunk_cap,
+        };
         SchedulerCore {
             ring,
             manifest,
@@ -252,6 +326,7 @@ impl SchedulerCore {
             stats,
             kv,
             lanes: Vec::with_capacity(max_batch),
+            chunked: Vec::new(),
             orchestrator,
             policy,
             planner,
@@ -260,6 +335,7 @@ impl SchedulerCore {
             seed_ctr: 1,
             max_batch,
             reuse,
+            chunk_tokens,
             last_admitted_ticket: None,
         }
     }
@@ -275,13 +351,17 @@ impl SchedulerCore {
                 break;
             }
             let draining = drain.load(Ordering::Acquire);
-            if draining && self.lanes.is_empty() && self.ring.pending_hint() == 0 {
+            if draining
+                && self.lanes.is_empty()
+                && self.chunked.is_empty()
+                && self.ring.pending_hint() == 0
+            {
                 break;
             }
 
             // Admission (when not draining): scan + policy + claim +
-            // inline prefill.
-            if !draining && self.lanes.len() < self.max_batch {
+            // inline prefill. Chunked lanes occupy batch slots too.
+            if !draining && self.lanes.len() + self.chunked.len() < self.max_batch {
                 let candidates = self.scan(true);
                 if !candidates.is_empty() {
                     if !self.lanes.is_empty() {
@@ -296,7 +376,17 @@ impl SchedulerCore {
                 }
             }
 
+            // Chunked-prefill progress: one budget-bounded chunk round,
+            // then the decode step it interleaves with.
+            self.chunk_step();
+
             if self.lanes.is_empty() {
+                if !self.chunked.is_empty() {
+                    // No decode lanes yet, but chunked prefills are
+                    // advancing — not idle.
+                    idle_spins = 0;
+                    continue;
+                }
                 idle_spins += 1;
                 if idle_spins > 64 {
                     // Persistent kernels spin; on a shared test machine we
@@ -359,8 +449,11 @@ impl SchedulerCore {
 
         // Stage 3a: admission checks + CAS claims, in policy order.
         let mut admitted: Vec<PrefillSeq> = vec![];
+        let mut new_chunked: Vec<ChunkedPrefill> = vec![];
         for cand in candidates {
-            if self.lanes.len() + admitted.len() >= self.max_batch {
+            let occupied =
+                self.lanes.len() + self.chunked.len() + admitted.len() + new_chunked.len();
+            if occupied >= self.max_batch {
                 self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 break; // leave pending in the ring: backpressure
             }
@@ -371,77 +464,143 @@ impl SchedulerCore {
             }
             let prompt_len = slot.prompt_len.load(Ordering::Acquire) as usize;
             let max_new = slot.max_new_tokens.load(Ordering::Relaxed).max(1);
-            let max_seq = self.cache.max_prefill_seq();
-            if prompt_len == 0 || prompt_len > max_seq {
+            // With chunking off, a prompt must fit one full-prefill
+            // graph; chunked prefill lifts that single-launch cap (each
+            // chunk fits its grid), leaving the block budget — enforced
+            // by the KV admission below — as the only length bound.
+            let over_grid =
+                prompt_len > self.cache.max_prefill_seq() && self.chunk_tokens == 0;
+            // A prompt that already fills the whole context has no
+            // decode headroom: `max_new` would clamp to 0 below and the
+            // sequence could never produce a token — fail it like any
+            // other invalid request instead of admitting a dead lane.
+            let headroom = self.manifest.max_context().saturating_sub(prompt_len);
+            if prompt_len == 0 || over_grid || headroom == 0 {
                 // Invalid request: claim it and fail it.
                 if self.ring.claim_pending(slot_idx) {
                     self.fail_slot(slot_idx);
                 }
                 continue;
             }
-            let max_new = max_new.min((self.manifest.max_context() - prompt_len) as u32);
+            let max_new = max_new.min(headroom as u32);
             // Condition (ii)/KV admission. Cold path: the exact check is
             // pure slot-metadata math, so a backpressured scan cycle
             // costs nothing. Reuse path: first a metadata-only lower
-            // bound — the *best case* is a maximal prefix hit (every
-            // full block short of one token cached, none of it parked)
-            // whose suffix the offset grid covers; if even that
-            // best-case tail cannot be reserved, reject before the
-            // O(prompt) arena read + hash. Only then read the prompt
-            // (side-effect free, pre-claim) and run the exact
-            // match-aware check. A hit whose suffix fits no offset
-            // graph is demoted to a cold full prefill *before* any
-            // reservation, so nothing is ever double-charged. On
+            // bound; if even the best case cannot be reserved, reject
+            // before the O(prompt) arena read + hash. Only then read
+            // the prompt (side-effect free, pre-claim) and run the
+            // exact match-aware check. With chunking off, a hit whose
+            // suffix fits no offset graph is demoted to a cold full
+            // prefill *before* any reservation, so nothing is ever
+            // double-charged; with chunking on such a suffix chunks
+            // through the offset grid instead, keeping the hit. On
             // rejection, stop admitting so a later (lower-ranked)
             // candidate cannot leapfrog the policy's head-of-queue
             // choice.
             let bs = self.kv.config().block_size;
             let prompt_u32: Option<Vec<u32>>;
             let pm: Option<crate::kvcache::PrefixMatch>;
-            let padded;
+            // Padded prefill span to reserve beyond the cached prefix:
+            // one launch window, or the furthest chunk write bound.
+            let mut padded;
+            // Chunked admission: the uncached suffix exceeds the
+            // per-iteration budget, so the prompt enters the chunked
+            // state machine instead of prefilling inline.
+            let mut chunk_this;
             if self.reuse {
-                // Floor = the cheapest possible outcome: a maximal hit
-                // whose suffix the offset grid covers, or a cold full
-                // prefill — whichever needs fewer fresh blocks (on a
-                // sparse offset grid the smallest offset graph can be
-                // *larger* than the cold padding, so the hit is not
-                // automatically the best case).
-                let cold_padded = padded_seq(&self.cache, prompt_len);
-                let cold_need =
-                    self.kv.config().blocks_needed(cold_padded, prompt_len, max_new as usize);
+                // Floor: a uniform fresh-block lower bound across every
+                // admission shape (cold, hit, chunked): the reserved
+                // span always covers prompt + max_new, and sharing can
+                // save at most the maximal block-aligned prefix. Exact
+                // per-shape needs are only higher (padding, parked
+                // matches), so a floor over available blocks is a sound
+                // early reject.
                 let best_match = (prompt_len - 1) / bs * bs;
-                let floor = match self.cache.padded_offset_seq(prompt_len - best_match) {
-                    Some(p) => {
-                        let hit_need = self.kv.config().blocks_needed_with_prefix(
-                            best_match,
-                            p,
-                            prompt_len,
-                            max_new as usize,
-                        );
-                        (hit_need - best_match / bs).min(cold_need)
-                    }
-                    None => cold_need,
-                };
+                let floor =
+                    (prompt_len + max_new as usize).div_ceil(bs) - best_match / bs;
                 if floor > self.kv.available_blocks() {
                     self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                     break;
                 }
                 let p = self.ring.read_prompt(slot_idx);
                 let mut m = self.kv.match_prefix(&p);
-                padded = if m.tokens == 0 {
-                    cold_padded
-                } else if let Some(p_off) = self.cache.padded_offset_seq(prompt_len - m.tokens) {
-                    p_off
+                let suffix = prompt_len - m.tokens;
+                if self.chunk_tokens > 0 && suffix > self.chunk_tokens {
+                    // Chunked: reserve the whole span up front, sized
+                    // by the furthest padded chunk write. A hit's long
+                    // suffix stays a hit — every chunk k > 0 fits the
+                    // offset grid by the budget clamp, so no demotion.
+                    chunk_this = true;
+                    padded =
+                        chunk_write_end(&self.cache, m.tokens, prompt_len, self.chunk_tokens)
+                            - m.tokens;
+                } else if m.tokens == 0 {
+                    chunk_this = false;
+                    padded = padded_seq(&self.cache, prompt_len);
+                } else if let Some(p_off) = self.cache.padded_offset_seq(suffix) {
+                    chunk_this = false;
+                    padded = p_off;
                 } else {
-                    // Graceful fallback: the suffix is off the offset
-                    // grid (or the artifacts ship none — PrefixReuse::On
-                    // without offset graphs). Abandon the match before
-                    // reserving anything: the request admits cold with a
-                    // full prefill, sharing no blocks.
+                    // Graceful fallback — reachable only with chunking
+                    // off (on, any suffix ≤ budget fits the grid): the
+                    // suffix is off the offset grid (or the artifacts
+                    // ship none — PrefixReuse::On without offset
+                    // graphs). Abandon the match before reserving
+                    // anything: the request admits cold with a full
+                    // prefill, sharing no blocks.
                     self.stats.prefix_fallback_full.fetch_add(1, Ordering::Relaxed);
                     m = crate::kvcache::PrefixMatch::default();
-                    cold_padded
-                };
+                    chunk_this = false;
+                    padded = padded_seq(&self.cache, prompt_len);
+                }
+                // On a sparse offset grid the *final* chunk's padding
+                // can push the chunked write bound past the per-seq
+                // block budget even though the prompt itself fits
+                // (e.g. a 15-token remainder padding to a 64-token
+                // graph). A shape over that cap can never admit no
+                // matter how many blocks free up, so routing it to the
+                // backpressure break would wedge the queue forever.
+                // Rescue ladder instead — unchunked hit, then cold
+                // whole prompt, each rung re-checked against the cap —
+                // and fail fast when no rung fits.
+                let cap = self.kv.config().max_blocks_per_seq;
+                if chunk_this
+                    && self.kv.config().blocks_needed_with_prefix(
+                        m.tokens,
+                        padded,
+                        prompt_len,
+                        max_new as usize,
+                    ) > cap
+                {
+                    let hit_shape = self.cache.padded_offset_seq(suffix).filter(|&p_off| {
+                        m.tokens > 0
+                            && self.kv.config().blocks_needed_with_prefix(
+                                m.tokens,
+                                p_off,
+                                prompt_len,
+                                max_new as usize,
+                            ) <= cap
+                    });
+                    if let Some(p_off) = hit_shape {
+                        chunk_this = false;
+                        padded = p_off;
+                    } else if let Some(cold_padded) =
+                        self.cold_rescue_shape(prompt_len, max_new)
+                    {
+                        if m.tokens > 0 {
+                            self.stats.prefix_fallback_full.fetch_add(1, Ordering::Relaxed);
+                            m = crate::kvcache::PrefixMatch::default();
+                        }
+                        chunk_this = false;
+                        padded = cold_padded;
+                    } else {
+                        // No admissible shape at any size: unservable.
+                        if self.ring.claim_pending(slot_idx) {
+                            self.fail_slot(slot_idx);
+                        }
+                        continue;
+                    }
+                }
                 if !self.kv.can_admit_reuse(&m, padded, prompt_len, max_new as usize) {
                     self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                     break;
@@ -449,7 +608,29 @@ impl SchedulerCore {
                 prompt_u32 = Some(p);
                 pm = Some(m);
             } else {
-                padded = padded_seq(&self.cache, prompt_len);
+                chunk_this = self.chunk_tokens > 0 && prompt_len > self.chunk_tokens;
+                padded = if chunk_this {
+                    chunk_write_end(&self.cache, 0, prompt_len, self.chunk_tokens)
+                } else {
+                    padded_seq(&self.cache, prompt_len)
+                };
+                // Same final-chunk-padding rescue as the reuse path:
+                // demote to a whole-prompt launch only when that shape
+                // actually fits the per-seq cap; fail fast otherwise.
+                if chunk_this
+                    && self.kv.config().blocks_needed(padded, prompt_len, max_new as usize)
+                        > self.kv.config().max_blocks_per_seq
+                {
+                    if let Some(cold_padded) = self.cold_rescue_shape(prompt_len, max_new) {
+                        chunk_this = false;
+                        padded = cold_padded;
+                    } else {
+                        if self.ring.claim_pending(slot_idx) {
+                            self.fail_slot(slot_idx);
+                        }
+                        continue;
+                    }
+                }
                 if !self.kv.can_admit(padded, prompt_len, max_new as usize) {
                     self.stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
                     break;
@@ -486,9 +667,34 @@ impl SchedulerCore {
             };
             let cached_prefix = cache.prefix_len;
             let prompt: Vec<i32> = prompt_u32.into_iter().map(|t| t as i32).collect();
-            admitted
-                .push(PrefillSeq { slot: slot_idx, cache, prompt, max_new, cached_prefix, padded });
+            if chunk_this {
+                self.stats.chunked_prefills.fetch_add(1, Ordering::Relaxed);
+                new_chunked.push(ChunkedPrefill {
+                    slot: slot_idx,
+                    cache,
+                    prompt,
+                    max_new,
+                    done: cached_prefix,
+                    indexed_blocks: 0,
+                    index_chain: None,
+                    wait_iters: 0,
+                });
+            } else {
+                admitted.push(PrefillSeq {
+                    slot: slot_idx,
+                    cache,
+                    prompt,
+                    max_new,
+                    cached_prefix,
+                    padded,
+                    first_token: true,
+                });
+            }
         }
+        // Chunked admissions launch nothing here: their chunks are
+        // emitted by `chunk_step`, one budget-bounded round per
+        // iteration, starting this same control-loop pass.
+        self.chunked.extend(new_chunked);
         if admitted.is_empty() {
             self.publish_kv_stats();
             return;
@@ -522,6 +728,21 @@ impl SchedulerCore {
         );
     }
 
+    /// The cold rung of the chunk-plan rescue ladder (both admission
+    /// paths): the whole-prompt launch shape, iff the prompt fits a
+    /// single prefill graph *and* that shape's block need fits the
+    /// per-seq cap. `None` means the request is unservable at any size
+    /// — callers fail it fast instead of wedging the queue on a shape
+    /// `can_admit` would reject forever.
+    fn cold_rescue_shape(&self, prompt_len: usize, max_new: u32) -> Option<usize> {
+        if prompt_len > self.cache.max_prefill_seq() {
+            return None;
+        }
+        let cold_padded = padded_seq(&self.cache, prompt_len);
+        let need = self.kv.config().blocks_needed(cold_padded, prompt_len, max_new as usize);
+        (need <= self.kv.config().max_blocks_per_seq).then_some(cold_padded)
+    }
+
     /// Out-of-ticket-order admissions (non-FCFS policies at work); FCFS
     /// keeps this at zero, which the integration tests pin down.
     fn note_admission_order(&mut self, ticket: u64) {
@@ -533,53 +754,62 @@ impl SchedulerCore {
         }
     }
 
-    /// Pipeline stages 4+5 for one prefill group: marshal, launch, poll,
-    /// publish first tokens. Offset groups launch a `prefill_offset`
-    /// graph whose seq equals the padded *suffix* the admission stage
-    /// reserved — never a longer one, whose K/V writes would land past
-    /// the reservation (hits whose suffix is off-grid were demoted to
-    /// cold full prefills before reserving anything). A sparse or
-    /// non-rectangular offset grid that cannot cover the whole group at
-    /// that exact seq in one launch is handled by splitting on the batch
-    /// axis.
-    fn launch_prefill(&mut self, mut group: PrefillGroup) {
-        let b_actual = group.seqs.len();
-        let gid = if group.offset {
-            // aot.py emits dense rectangular grids, so the first probe
-            // succeeds at full width; hand-built manifests may not be
-            // rectangular, in which case the widest exactly-sized prefix
-            // of the group launches now and the tail recurses. Batch 1
-            // always fits: `padded` came from `padded_offset_seq`, so a
-            // graph with that exact seq exists and the (seq, batch)
-            // tie-break selects it.
-            let exact_fit = |cache: &GraphCache, b: usize, padded: usize| {
-                cache
-                    .select_prefill_offset(b, padded)
-                    .filter(|&g| cache.spec(g).seq == padded)
-            };
-            let fit = (1..=b_actual)
-                .rev()
-                .find(|&b| exact_fit(&self.cache, b, group.padded).is_some())
-                .expect("admission verified an exact-seq offset graph at batch 1");
-            if fit < b_actual {
-                let rest = group.seqs.split_off(fit);
-                let padded = group.padded;
-                self.launch_prefill(group);
-                self.launch_prefill(PrefillGroup { padded, offset: true, seqs: rest });
-                return;
+    /// Resolve one prefill group to concrete graph launches. Offset
+    /// groups launch a `prefill_offset` graph whose seq equals the
+    /// padded *suffix* the admission stage reserved — never a longer
+    /// one, whose K/V writes would land past the reservation (hits
+    /// whose suffix is off-grid were demoted to cold full prefills
+    /// before reserving anything). A sparse or non-rectangular offset
+    /// grid that cannot cover the whole group at that exact seq in one
+    /// launch is handled by splitting on the batch axis: aot.py emits
+    /// dense rectangular grids, so the first probe succeeds at full
+    /// width; hand-built manifests may not be rectangular, in which
+    /// case the widest exactly-sized prefix of the group launches first
+    /// and the tail follows. Batch 1 always fits: `padded` came from
+    /// `padded_offset_seq`, so a graph with that exact seq exists and
+    /// the (seq, batch) tie-break selects it.
+    fn plan_group_launches(&self, mut group: PrefillGroup) -> Vec<(GraphId, PrefillGroup)> {
+        let mut out = vec![];
+        loop {
+            let b_actual = group.seqs.len();
+            if group.offset {
+                let exact_fit = |cache: &GraphCache, b: usize, padded: usize| {
+                    cache
+                        .select_prefill_offset(b, padded)
+                        .filter(|&g| cache.spec(g).seq == padded)
+                };
+                let fit = (1..=b_actual)
+                    .rev()
+                    .find(|&b| exact_fit(&self.cache, b, group.padded).is_some())
+                    .expect("admission verified an exact-seq offset graph at batch 1");
+                let gid = exact_fit(&self.cache, fit, group.padded).expect("probed above");
+                if fit < b_actual {
+                    let rest = group.seqs.split_off(fit);
+                    let padded = group.padded;
+                    out.push((gid, group));
+                    group = PrefillGroup { padded, offset: true, seqs: rest };
+                    continue;
+                }
+                out.push((gid, group));
+            } else {
+                let gid = self
+                    .cache
+                    .select_prefill(b_actual, group.padded)
+                    .expect("grid covers all padded sizes");
+                out.push((gid, group));
             }
-            exact_fit(&self.cache, b_actual, group.padded).expect("probed above")
-        } else {
-            self.cache
-                .select_prefill(b_actual, group.padded)
-                .expect("grid covers all padded sizes")
-        };
+            return out;
+        }
+    }
+
+    /// Marshal + launch + poll one resolved prefill launch; returns the
+    /// per-lane sampled tokens, or `None` when the launch failed.
+    fn fire_prefill(&mut self, gid: GraphId, group: &PrefillGroup) -> Option<Vec<u32>> {
         let spec = self.cache.spec(gid).clone();
-        let inputs = self.planner.prefill_inputs(&group, spec.batch, spec.seq);
+        let inputs = self.planner.prefill_inputs(group, spec.batch, spec.seq);
         if group.offset {
             self.stats.prefill_offset_batches.fetch_add(1, Ordering::Relaxed);
         }
-
         let seed = self.next_seed();
         self.launcher.launch(LaunchCmd {
             graph: gid,
@@ -591,29 +821,99 @@ impl SchedulerCore {
             completion: self.completions.buffer(),
             reset_kv: false,
         });
-        let Some(first_tokens) = self.completions.poll(spec.batch) else {
-            // Failed prefill: plain release. Nothing was published to
-            // the prefix index (entries commit only on success below),
-            // so no later prompt can "hit" the unwritten K/V.
-            for s in group.seqs {
-                self.kv.release(s.cache);
-                self.fail_slot(s.slot);
-            }
-            return;
-        };
+        self.completions.poll(spec.batch)
+    }
 
-        self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
+    /// Pipeline stages 4+5 for one prefill group — whole prompts and
+    /// chunks alike: resolve graphs, launch, poll, then publish first
+    /// tokens (or advance chunked lanes).
+    fn launch_prefill(&mut self, group: PrefillGroup) {
+        for (gid, g) in self.plan_group_launches(group) {
+            match self.fire_prefill(gid, &g) {
+                None => self.fail_prefill_seqs(g),
+                Some(tokens) => {
+                    self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
+                    self.complete_prefill_seqs(g, &tokens);
+                }
+            }
+        }
+    }
+
+    /// Failed prefill launch: plain release, once per lane. Nothing was
+    /// published to the prefix index for the failed span (entries
+    /// commit only on success), so no later prompt can "hit" unwritten
+    /// K/V — blocks of a chunked lane's *earlier* chunks may stay
+    /// indexed: their prefill completed and their K/V is real. A chunk
+    /// seq's cache clone names the same blocks as its lane's
+    /// reservation, so releasing the clone settles the lane's whole
+    /// obligation; the state-machine entry is dropped without a second
+    /// release.
+    fn fail_prefill_seqs(&mut self, group: PrefillGroup) {
+        for s in group.seqs {
+            if let Some(pos) = self.chunked.iter().position(|c| c.slot == s.slot) {
+                self.chunked.remove(pos);
+            }
+            self.kv.release(s.cache);
+            self.fail_slot(s.slot);
+        }
+    }
+
+    /// Successful prefill launch: commit the written blocks to the
+    /// prefix index, then either publish the first token and open a
+    /// decode lane (whole prompts and final chunks) or advance the
+    /// chunked lane's high-water mark (intermediate chunks).
+    fn complete_prefill_seqs(&mut self, group: PrefillGroup, first_tokens: &[u32]) {
         let group_offset = group.offset;
         for (lane_idx, seq) in group.seqs.into_iter().enumerate() {
-            let PrefillSeq { slot, mut cache, prompt, max_new, cached_prefix, .. } = seq;
+            let PrefillSeq { slot, mut cache, prompt, max_new, cached_prefix, first_token, .. } =
+                seq;
             debug_assert!(cached_prefix == 0 || group_offset, "hit seq in a full-prefill group");
-            cache.cached_len = prompt.len();
-            // The prefill wrote this prompt's K/V: commit its full
-            // blocks to the prefix index so later turns can share them.
+            // The launch wrote K/V for `prompt` — the whole prompt, or
+            // the prefix up to this chunk's end. Commit its *full*
+            // blocks to the prefix index so later turns (and concurrent
+            // sessions, even mid-chunking) can share them. Partial-index
+            // invariant: only fully prefilled blocks ever commit, so a
+            // partially prefilled prompt exposes exactly its completed
+            // chunks and nothing beyond. Chunked lanes resume the hash
+            // chain where the previous chunk's commit left it, so the
+            // per-iteration commit work is O(chunk) (the prefix copy
+            // into `toks` remains — it is a bounded memcpy, not hash +
+            // index-probe work).
             if self.reuse {
                 let toks: Vec<u32> = prompt.iter().map(|&t| t as u32).collect();
-                self.kv.index_prompt(&cache, &toks);
+                if let Some(cp) = self.chunked.iter_mut().find(|c| c.slot == slot) {
+                    let bs = self.kv.config().block_size;
+                    let full = (toks.len() / bs).min(cache.blocks.len());
+                    let h = self.kv.index_prompt_resume(
+                        &cache,
+                        &toks,
+                        cp.indexed_blocks,
+                        cp.index_chain,
+                    );
+                    cp.indexed_blocks = full;
+                    cp.index_chain = Some(h);
+                } else {
+                    self.kv.index_prompt(&cache, &toks);
+                }
             }
+            if !first_token {
+                // Intermediate chunk: no token exists yet — first-token
+                // completion is deferred to the final chunk.
+                let cp = self
+                    .chunked
+                    .iter_mut()
+                    .find(|c| c.slot == slot)
+                    .expect("intermediate chunk has an in-flight lane");
+                cp.done = prompt.len();
+                continue;
+            }
+            // Final chunk of a chunked lane: retire the state-machine
+            // entry. Its release obligation moves to the decode lane
+            // below (the chunk seq's cache names the same blocks).
+            if let Some(pos) = self.chunked.iter().position(|c| c.slot == slot) {
+                self.chunked.remove(pos);
+            }
+            cache.cached_len = prompt.len();
             let tok = first_tokens[lane_idx] as i32;
             self.ring.slot(slot).set_state(SlotState::DecodeProcessing);
             self.ring.publish_token(slot, tok as u32);
@@ -627,6 +927,74 @@ impl SchedulerCore {
                 self.lanes.push(Lane { slot, cache, generated: 1, max_new, last_token: tok });
             }
         }
+    }
+
+    /// Chunked-prefill state machine step (one per control-loop
+    /// iteration): launch the next block-aligned chunk for as many
+    /// in-flight lanes as the per-iteration token budget covers — FIFO
+    /// from the oldest lane, always at least one so progress is
+    /// guaranteed — grouped so same-shape chunks share a launch. The
+    /// decode step the main loop runs right after is what the budget
+    /// protects: every in-flight decode lane waits for at most
+    /// `chunk_tokens` of prefill per iteration, not a whole prompt.
+    fn chunk_step(&mut self) {
+        if self.chunked.is_empty() {
+            return;
+        }
+        let paused = !self.lanes.is_empty();
+        if paused {
+            // Chunk launches are inline prefills: same pause-and-resume
+            // protocol as admission.
+            self.stats.pauses.fetch_add(1, Ordering::Relaxed);
+            self.pause_lanes();
+        }
+        // How many lanes fit this round's budget (≥ 1).
+        let mut spent = 0usize;
+        let mut serviced = 0usize;
+        while serviced < self.chunked.len() {
+            let cp = &self.chunked[serviced];
+            let len = (cp.prompt.len() - cp.done).min(self.chunk_tokens);
+            if serviced > 0 && spent + len > self.chunk_tokens {
+                break;
+            }
+            spent += len;
+            serviced += 1;
+        }
+        let mut seqs: Vec<PrefillSeq> = Vec::with_capacity(serviced);
+        for cp in self.chunked.iter_mut().take(serviced) {
+            let len = (cp.prompt.len() - cp.done).min(self.chunk_tokens);
+            let end = cp.done + len;
+            let padded = if cp.done == 0 {
+                // Chunk 0 of a cold prompt is a plain prefix prefill.
+                padded_seq(&self.cache, len)
+            } else {
+                self.cache
+                    .padded_offset_seq(len)
+                    .expect("budget clamped to the offset grid")
+            };
+            seqs.push(PrefillSeq {
+                slot: cp.slot,
+                cache: cp.cache.clone(),
+                prompt: cp.prompt[..end].to_vec(),
+                max_new: cp.max_new,
+                cached_prefix: cp.done,
+                padded,
+                first_token: end == cp.prompt.len(),
+            });
+            cp.wait_iters = 0;
+        }
+        for cp in self.chunked.iter_mut().skip(serviced) {
+            cp.wait_iters += 1;
+            self.stats.max_chunk_wait_iters.fetch_max(cp.wait_iters, Ordering::Relaxed);
+        }
+        self.stats.chunk_launches.fetch_add(seqs.len() as u64, Ordering::Relaxed);
+        for group in self.planner.group_prefills(seqs) {
+            self.launch_prefill(group);
+        }
+        if paused {
+            self.resume_lanes();
+        }
+        self.publish_kv_stats();
     }
 
     /// TTFT-deadline attainment accounting (SLO-aware observability).
@@ -703,7 +1071,10 @@ impl SchedulerCore {
         }
 
         // Pause-and-resume admission using the overlapped scan results.
-        if !overlapped_pending.is_empty() && self.lanes.len() < self.max_batch && !draining {
+        if !overlapped_pending.is_empty()
+            && self.lanes.len() + self.chunked.len() < self.max_batch
+            && !draining
+        {
             self.stats.pauses.fetch_add(1, Ordering::Relaxed);
             self.pause_lanes();
             self.admit_and_prefill(overlapped_pending);
@@ -726,6 +1097,33 @@ impl SchedulerCore {
         self.seed_ctr = self.seed_ctr.wrapping_mul(747796405).wrapping_add(2891336453);
         self.seed_ctr
     }
+}
+
+/// Furthest K/V position any chunk launch writes when prefilling the
+/// `prompt_len − cached` suffix in chunks of `chunk` tokens: non-final
+/// chunks cover exactly `chunk` tokens (a block multiple by the budget
+/// clamp, so every later chunk starts block-aligned — the offset form
+/// the `prefill_offset` graphs take); each chunk pads to its grid, and
+/// padded writes land past the chunk like padded full prefills do, so
+/// the reservation must cover this bound, not just the prompt.
+fn chunk_write_end(cache: &GraphCache, cached: usize, prompt_len: usize, chunk: usize) -> usize {
+    debug_assert!(chunk > 0 && prompt_len > cached);
+    let mut end = prompt_len;
+    let mut off = cached;
+    while off < prompt_len {
+        let len = (prompt_len - off).min(chunk);
+        let padded = if off == 0 {
+            padded_seq(cache, len)
+        } else {
+            // The budget is clamped to the offset grid's largest seq,
+            // so every offset chunk fits; `unwrap_or` only guards
+            // hand-built caches mutated after the clamp.
+            cache.padded_offset_seq(len).unwrap_or(len)
+        };
+        end = end.max(off + padded);
+        off += len;
+    }
+    end
 }
 
 /// Smallest grid sequence length >= prompt_len.
@@ -774,6 +1172,29 @@ mod tests {
     fn default_config_is_paper_fcfs() {
         assert_eq!(SchedulerConfig::default().policy, PolicyKind::Fcfs);
         assert_eq!(SchedulerConfig::default().prefix_reuse, PrefixReuse::Auto);
+        assert_eq!(
+            SchedulerConfig::default().prefill_chunk_tokens,
+            None,
+            "default budget resolves from the offset grid at spawn"
+        );
+    }
+
+    /// The chunk plan's write bound: block-aligned chunk starts, padded
+    /// final chunk, and the reservation covering the furthest padded
+    /// write of *any* chunk.
+    #[test]
+    fn chunk_write_end_covers_padded_chunks() {
+        let c = toy_cache(); // full grid {16,32,64}, offset grid {16}
+        // 40 tokens in 16-token chunks: [0,16) (full graph, padded 16),
+        // [16,32) (offset, padded 16), [32,40) (offset, padded 16 →
+        // writes through 48).
+        assert_eq!(chunk_write_end(&c, 0, 40, 16), 48);
+        // Exactly block-aligned prompt: no padding overhang.
+        assert_eq!(chunk_write_end(&c, 0, 32, 16), 32);
+        // Cached prefix: chunks start at the block-aligned hit.
+        assert_eq!(chunk_write_end(&c, 16, 40, 16), 48);
+        // The bound never undershoots the prompt itself.
+        assert!(chunk_write_end(&c, 0, 33, 16) >= 33);
     }
 
     #[test]

@@ -49,6 +49,17 @@ pub struct SchedulerStats {
     /// the slot's RDMA-written `session_id` by the GPU plane, so
     /// `/metrics` distinguishes conversation turns from one-shot load.
     pub session_requests: AtomicU64,
+    /// Chunked-prefill telemetry (DESIGN.md §5): admissions whose
+    /// uncached suffix exceeded the per-iteration budget and entered
+    /// the chunked state machine, ...
+    pub chunked_prefills: AtomicU64,
+    /// ... individual chunk launches (one per lane per chunk, the final
+    /// chunk included), ...
+    pub chunk_launches: AtomicU64,
+    /// ... and the worst backlog a chunked lane saw: the maximum number
+    /// of consecutive scheduler iterations a lane spent waiting for the
+    /// per-iteration token budget to reach it.
+    pub max_chunk_wait_iters: AtomicU64,
 }
 
 impl SchedulerStats {
@@ -79,7 +90,8 @@ impl SchedulerStats {
             "decode_steps={} prefills={} offset_prefills={} completed={} failed={} tokens={} \
              occupancy={:.2} pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} \
              backpressure={} reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
-             prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={}",
+             prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={} \
+             chunked_prefills={} chunk_launches={} max_chunk_wait_iters={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.prefill_offset_batches.load(Ordering::Relaxed),
@@ -101,6 +113,9 @@ impl SchedulerStats {
             self.prefix_evicted_blocks.load(Ordering::Relaxed),
             self.prefix_indexed_blocks.load(Ordering::Relaxed),
             self.session_requests.load(Ordering::Relaxed),
+            self.chunked_prefills.load(Ordering::Relaxed),
+            self.chunk_launches.load(Ordering::Relaxed),
+            self.max_chunk_wait_iters.load(Ordering::Relaxed),
         )
     }
 }

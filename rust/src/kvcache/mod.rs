@@ -368,16 +368,45 @@ impl KvManager {
     /// the twin's still-unwritten blocks. Partial blocks (prompt tail,
     /// decode region) are never indexed: their content is not a stable
     /// full-block prefix.
+    ///
+    /// Chunked prefill commits *progressively* through the same entry
+    /// point: after chunk *k* completes, the scheduler passes the
+    /// prompt prefix up to the chunk's end, so a partially prefilled
+    /// prompt's index entries cover exactly its fully prefilled blocks
+    /// and nothing beyond — invariant 5 holds mid-flight, and the
+    /// already-committed entries stay valid even if a later chunk
+    /// fails (their K/V was written by completed launches).
     pub fn index_prompt(&mut self, cache: &SeqCache, tokens: &[u32]) {
-        let bs = self.config.block_size;
-        let full = (tokens.len() / bs).min(cache.blocks.len());
         // Rehashing from the seed (rather than resuming from the
         // admission-time match) is deliberate: it runs once per
         // *successful prefill* (sub-µs against a multi-ms launch) and
         // keeps the commit independent of any state captured at
-        // admission.
-        let mut h = CHAIN_SEED;
-        for bi in 0..full {
+        // admission. Chunked lanes, whose commits repeat per chunk,
+        // use [`KvManager::index_prompt_resume`] instead.
+        self.index_prompt_resume(cache, tokens, 0, None);
+    }
+
+    /// Resume-from-`chain` form of [`KvManager::index_prompt`] for
+    /// chunked prefill: commits only the full blocks `from_block..` of
+    /// `tokens`, continuing the hash chain from the value the previous
+    /// call returned (`None` = start at the chain root, `from_block`
+    /// must then be 0). Returns the chain hash after the last full
+    /// block, to pass back in — so a lane's successive chunk commits
+    /// each pay O(chunk), not O(prefix), and their total equals one
+    /// whole-prompt `index_prompt`. Contract: `(from_block, chain)`
+    /// must come from the previous call over the same growing prompt.
+    pub fn index_prompt_resume(
+        &mut self,
+        cache: &SeqCache,
+        tokens: &[u32],
+        from_block: usize,
+        chain: Option<u64>,
+    ) -> u64 {
+        debug_assert!(chain.is_some() || from_block == 0, "rootless resume");
+        let bs = self.config.block_size;
+        let full = (tokens.len() / bs).min(cache.blocks.len());
+        let mut h = chain.unwrap_or(CHAIN_SEED);
+        for bi in from_block..full {
             let content = &tokens[bi * bs..(bi + 1) * bs];
             let next = chain_hash(h, content);
             // Existing entries (this sequence's own matched prefix, or a
@@ -398,6 +427,7 @@ impl KvManager {
             }
             h = next;
         }
+        h
     }
 
     /// Return a finished request's blocks: decrement refcounts; an
@@ -725,6 +755,42 @@ mod tests {
         assert_eq!(m.stats.indexed_blocks, 4, "sharer re-commit inserts nothing");
         m.release(c);
         m.release(b);
+        m.check_invariants();
+    }
+
+    /// Chunked prefill's partial-index invariant: committing the prompt
+    /// prefix up to a completed chunk indexes exactly those full
+    /// blocks; a later prompt can hit them while the rest of the
+    /// prompt is still unprefilled, and the final commit extends the
+    /// chain without duplicating entries.
+    #[test]
+    fn partial_commit_indexes_only_completed_chunks() {
+        let mut m = KvManager::new(cfg());
+        let toks = prompt(8, 64); // 4 full blocks
+        let a = m.admit_reuse(&toks, 64, 4).unwrap();
+        // Chunk 1 of 2 completed: commit the first 32 tokens only,
+        // rooting the resumable hash chain.
+        let h = m.index_prompt_resume(&a, &toks[..32], 0, None);
+        assert_eq!(m.stats.indexed_blocks, 2, "only the chunk's full blocks commit");
+        assert_eq!(
+            m.match_prefix(&toks).tokens,
+            32,
+            "a concurrent prompt hits exactly the prefilled prefix"
+        );
+        // Final chunk: resuming from the stored chain walks only the
+        // new blocks, and the result equals one whole-prompt commit —
+        // the same prompt indexed whole in a twin manager matches
+        // identically.
+        m.index_prompt_resume(&a, &toks, 2, Some(h));
+        assert_eq!(m.stats.indexed_blocks, 4);
+        assert_eq!(m.match_prefix(&toks).tokens, 48, "match capped below the full prompt");
+        let mut whole = KvManager::new(cfg());
+        let b = whole.admit_reuse(&toks, 64, 4).unwrap();
+        whole.index_prompt(&b, &toks);
+        assert_eq!(whole.stats.indexed_blocks, m.stats.indexed_blocks);
+        assert_eq!(whole.match_prefix(&toks).tokens, m.match_prefix(&toks).tokens);
+        whole.release(b);
+        m.release(a);
         m.check_invariants();
     }
 

@@ -4,10 +4,12 @@
 //!
 //! ```text
 //! serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
-//!         [--prefix-reuse | --no-prefix-reuse]
+//!         [--prefix-reuse | --no-prefix-reuse] [--prefill-chunk-tokens N]
 //!         start a live server (P: fcfs|priority|sjf|slo); prefix reuse
-//!         defaults to auto (on when the artifacts ship offset graphs)
-//! eval    <all|policies|prefix|prefix-live|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         defaults to auto (on when the artifacts ship offset graphs);
+//!         chunk budget defaults to the largest offset-graph seq (0 =
+//!         whole-prompt prefill, the paper's behavior)
+//! eval    <all|policies|prefix|prefix-live|chunked|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
 //!         [--out DIR] [--window S] [--threads N]
 //! info    print manifest + graph grid for a model
 //! ```
@@ -29,8 +31,9 @@ fn main() {
             eprintln!(
                 "usage: blink <serve|eval|info> [...]\n\
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
-                       [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse]\n\
-                 eval <all|policies|prefix|prefix-live|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                       [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse] \\\n\
+                       [--prefill-chunk-tokens N (0 = whole-prompt prefill)]\n\
+                 eval <all|policies|prefix|prefix-live|chunked|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
                       [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)]\n\
                  info [--model blink-tiny]"
             );
@@ -61,16 +64,31 @@ fn serve(args: &Args) {
     } else {
         PrefixReuse::Auto
     };
+    // Chunked prefill (DESIGN.md §5): absent = the default budget (the
+    // largest offset-graph seq in the artifacts); 0 = whole-prompt
+    // prefill, the paper's behavior.
+    let prefill_chunk_tokens = args.get("prefill-chunk-tokens").map(|raw| {
+        raw.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--prefill-chunk-tokens must be a non-negative integer, got {raw}");
+            std::process::exit(2);
+        })
+    });
     eprintln!(
-        "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={:?} ...",
+        "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={:?}, \
+         prefill_chunk_tokens={} ...",
         policy.name(),
-        prefix_reuse
+        prefix_reuse,
+        match prefill_chunk_tokens {
+            Some(n) => n.to_string(),
+            None => "auto".into(),
+        },
     );
     let server = BlinkServer::start(ServerConfig {
         model,
         placement,
         policy,
         prefix_reuse,
+        prefill_chunk_tokens,
         ..Default::default()
     })
     .expect("server start");
@@ -106,6 +124,7 @@ fn eval_cmd(args: &Args) {
         }
         "prefix" => return eval::prefix_comparison(out_ref, window, threads),
         "prefix-live" => return eval::live::prefix_live(out_ref),
+        "chunked" => return eval::chunked_comparison(out_ref, window, threads),
         _ => {}
     }
 

@@ -33,6 +33,12 @@ pub struct ServerConfig {
     /// positions; without them it falls back to the paper's cold
     /// behavior. `serve --no-prefix-reuse` forces it off.
     pub prefix_reuse: PrefixReuse,
+    /// Per-iteration prefill token budget (`--prefill-chunk-tokens`):
+    /// prompts whose uncached suffix exceeds it prefill in block-aligned
+    /// chunks interleaved with decode steps (DESIGN.md §5). `None` =
+    /// the largest offset-graph seq; `Some(0)` = whole-prompt prefill
+    /// (the paper's behavior).
+    pub prefill_chunk_tokens: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -47,6 +53,7 @@ impl Default for ServerConfig {
             apply_launch_delays: true,
             policy: PolicyKind::Fcfs,
             prefix_reuse: PrefixReuse::Auto,
+            prefill_chunk_tokens: None,
         }
     }
 }
@@ -88,6 +95,7 @@ impl BlinkServer {
                 apply_launch_delays: config.apply_launch_delays,
                 policy: config.policy,
                 prefix_reuse: config.prefix_reuse,
+                prefill_chunk_tokens: config.prefill_chunk_tokens,
                 ..Default::default()
             },
         );

@@ -111,13 +111,31 @@ impl CostModel {
     /// context `ctx` tokens: HBM-bound weight sweep + per-sequence KV
     /// reads + fixed graph overhead.
     pub fn decode_step_s(&self, b: usize, mean_ctx: f64) -> f64 {
+        self.decode_step_with_chunk_s(b, mean_ctx, 0)
+    }
+
+    /// One decode iteration that also carries `chunk_tokens` of prefill
+    /// — the chunked-prefill launch pair (decode graph + bounded
+    /// `prefill_offset` chunk, back to back, before the next
+    /// completion poll). Decode is HBM-bound: the weight sweep is paid
+    /// once per iteration either way, so the chunk's GEMM FLOPs hide
+    /// beneath it until the pair turns compute-bound, and only the
+    /// excess extends the step — the roofline form of prefill/decode
+    /// co-scheduling ("piggybacking" in the related-work framing). On
+    /// this model the hide point is `flops × weight_sweep / (2 ×
+    /// active_params)` tokens (~150 for an 8B dense model): budgets
+    /// near it make long-prompt prefill nearly free for decode tails,
+    /// while large budgets degenerate toward the whole-prompt stall.
+    pub fn decode_step_with_chunk_s(&self, b: usize, mean_ctx: f64, chunk_tokens: usize) -> f64 {
         let weights = self.active_weight_bytes(b) / self.hw.hbm_bytes_per_s;
         // KV bytes per token per layer ≈ 2 (K,V) × d_kv × 2 bytes. Use a
         // GQA-typical 1024 bytes/token/layer.
         let kv_bytes = b as f64 * mean_ctx * self.model.layers as f64 * 1024.0;
         let kv = kv_bytes / self.hw.hbm_bytes_per_s;
-        // Batched GEMV compute (rarely binding below b≈64).
-        let flops = 2.0 * self.model.active_params * b as f64 / self.hw.flops;
+        // Batched GEMV compute (rarely binding below b≈64) plus the
+        // piggybacked chunk's prefill GEMMs.
+        let flops =
+            2.0 * self.model.active_params * (b + chunk_tokens) as f64 / self.hw.flops;
         weights.max(flops) + kv + self.hw.graph_exec_overhead_s
     }
 
@@ -199,6 +217,43 @@ mod tests {
         // short-prefill weight sweep (never zero).
         assert!(cm.prefill_with_prefix_s(2048, 4096) >= cm.prefill_s(1));
         assert_eq!(cm.prefill_with_prefix_s(2048, 0), full);
+    }
+
+    #[test]
+    fn piggybacked_chunk_hides_under_decode_sweep() {
+        let cm = CostModel::new(LLAMA3_8B);
+        let plain = cm.decode_step_s(16, 1200.0);
+        // A near-hide-point chunk rides free: 2·8e9·(16+128) FLOPs stay
+        // under the 16 GB weight sweep.
+        let small = cm.decode_step_with_chunk_s(16, 1200.0, 128);
+        assert_eq!(small, plain, "128-token chunk hides under the weight sweep");
+        // A large chunk turns the pair compute-bound: the step extends
+        // by roughly the chunk's prefill time.
+        let big = cm.decode_step_with_chunk_s(16, 1200.0, 2048);
+        assert!(big > 10.0 * plain, "2048-token chunk dominates: {big} vs {plain}");
+        assert!(big < plain + cm.prefill_s(2048), "but cheaper than a serial stall");
+    }
+
+    #[test]
+    fn standalone_chunk_rounds_cost_bounded_overhead() {
+        // The DES's standalone chunk rounds (no decode lanes to
+        // piggyback on) charge `prefill_s` per chunk: the total for a
+        // split suffix exceeds one whole launch by exactly the extra
+        // per-launch overheads (8192 = 4 × 2048, each chunk
+        // MXU-bound), while each *iteration stall* shrinks from the
+        // whole prompt to one chunk — the quantity chunking bounds.
+        let cm = CostModel::new(LLAMA3_8B);
+        let whole = cm.prefill_s(8192);
+        let chunked = 4.0 * cm.prefill_s(2048);
+        assert!(chunked > whole, "chunked {chunked} vs whole {whole}");
+        let premium = chunked - whole;
+        let overhead = cm.hw.graph_exec_overhead_s;
+        assert!(
+            (premium - 3.0 * overhead).abs() < 1e-9,
+            "premium {premium} vs 3 overheads {}",
+            3.0 * overhead
+        );
+        assert!(cm.prefill_s(2048) < 0.3 * whole);
     }
 
     #[test]

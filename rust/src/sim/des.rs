@@ -21,8 +21,8 @@ use crate::sim::interference::InterferenceProcess;
 use crate::sim::systems::System;
 use crate::util::rng::Rng;
 use crate::workload::{
-    ClassMix, LengthModel, MultiTurnMix, PrefixStats, RequestMetrics, TraceGen, TraceRequest,
-    WindowMetrics,
+    ChunkStats, ClassMix, LengthModel, LongPromptMix, MultiTurnMix, PrefixStats, RequestMetrics,
+    TraceGen, TraceRequest, WindowMetrics,
 };
 
 #[derive(Debug, Clone)]
@@ -53,6 +53,18 @@ pub struct SimConfig {
     /// for the uncached suffix of its session history, and cached
     /// sessions are evicted LRU under capacity pressure.
     pub prefix_cache_tokens: usize,
+    /// Per-iteration prefill token budget, mirroring the live
+    /// scheduler's `--prefill-chunk-tokens`: an admitted prompt whose
+    /// uncached suffix exceeds the budget prefills in chunks of at most
+    /// this many tokens — one budget-bounded round per scheduler
+    /// iteration, decode steps interleaved, first token only after the
+    /// final chunk. 0 = whole-prompt prefill (the paper's setup, and
+    /// the §3.1 head-of-line-blocking regime under long prompts).
+    pub prefill_chunk_tokens: usize,
+    /// Heavy-tailed long-prompt workload (the chunked-prefill
+    /// comparison's trace); takes precedence over `classes`/`lengths`,
+    /// but not over `multi_turn`, when set.
+    pub long_prompts: Option<LongPromptMix>,
 }
 
 impl SimConfig {
@@ -71,7 +83,24 @@ impl SimConfig {
             classes: None,
             multi_turn: None,
             prefix_cache_tokens: 0,
+            prefill_chunk_tokens: 0,
+            long_prompts: None,
         }
+    }
+
+    /// Reject degenerate configurations before they can poison the
+    /// event loop: a non-finite rate makes every Poisson inter-arrival
+    /// gap NaN (`exp(rate)`), which would spin the arrival loop forever
+    /// and defeat the arrival-time sorts — caught here, once, with a
+    /// clear message instead of a deep-in-the-sweep panic or hang.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("offered rate must be finite and > 0, got {}", self.rate));
+        }
+        if !self.window_s.is_finite() || self.window_s <= 0.0 {
+            return Err(format!("window_s must be finite and > 0, got {}", self.window_s));
+        }
+        Ok(())
     }
 }
 
@@ -175,6 +204,15 @@ struct Run {
     itl_s: Vec<f64>,
 }
 
+/// One admitted request mid-chunked-prefill (the DES mirror of the live
+/// scheduler's `ChunkedPrefill` state machine): `remaining` uncached
+/// suffix tokens still to prefill, consumed in budget-bounded rounds;
+/// the request produces its first token when the final chunk lands.
+struct ChunkRun {
+    req: TraceRequest,
+    remaining: usize,
+}
+
 pub fn simulate(cfg: &SimConfig) -> WindowMetrics {
     let sens =
         if cfg.interference { cfg.system.interference_sensitivity() } else { 1.0 };
@@ -186,6 +224,7 @@ pub fn simulate(cfg: &SimConfig) -> WindowMetrics {
 /// pinning, CAT) where the effective pressure differs from the full
 /// colocation scenario.
 pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMetrics {
+    cfg.validate().expect("invalid SimConfig");
     // Interference runs use an independent seed even for immune systems:
     // the paper reports Blink's interference numbers as "within
     // experimental variance" of isolation, i.e. a different run, not a
@@ -195,6 +234,8 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let cm = CostModel::new(cfg.model);
     let trace = if let Some(mt) = &cfg.multi_turn {
         mt.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096)
+    } else if let Some(lp) = &cfg.long_prompts {
+        lp.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096)
     } else {
         match &cfg.classes {
             Some(mix) => mix.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096),
@@ -226,7 +267,9 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
             (r.arrival_s + adm, *r)
         })
         .collect();
-    ready.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // `total_cmp`: no panic even if a degenerate admission model ever
+    // produced a non-finite ready time (rates are validated above).
+    ready.sort_by(|a, b| a.0.total_cmp(&b.0));
 
     let mean_footprint = mean_tokens(&trace).max(64.0);
     let max_batch = cm.max_batch(mean_footprint).min(cfg.max_num_seqs);
@@ -239,11 +282,19 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let mut pending: Vec<(f64, TraceRequest, u64)> = vec![];
     let mut ticket_ctr = 0u64;
     let mut running: Vec<Run> = vec![];
+    // Admitted lanes mid-chunked-prefill (FIFO; the same one-round-per-
+    // iteration servicing as the live scheduler's chunk_step).
+    let mut chunking: Vec<ChunkRun> = vec![];
+    let mut chunk_stats = ChunkStats::default();
+    let budget = cfg.prefill_chunk_tokens;
     let mut done: Vec<RequestMetrics> = vec![];
     let mut gpu_busy_s = 0.0f64;
     let drain_deadline = cfg.window_s * 4.0 + 120.0;
 
-    while (next_ready < ready.len() || !pending.is_empty() || !running.is_empty())
+    while (next_ready < ready.len()
+        || !pending.is_empty()
+        || !running.is_empty()
+        || !chunking.is_empty())
         && t < drain_deadline
     {
         // Requests whose admission path finished become schedulable.
@@ -253,8 +304,11 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
             next_ready += 1;
         }
 
-        // Admit in policy order while capacity allows; prefill in batches.
-        let free = max_batch.saturating_sub(running.len()).min(cfg.max_prefill_batch);
+        // Admit in policy order while capacity allows; prefill in
+        // batches. Chunking lanes hold batch slots until they finish.
+        let free = max_batch
+            .saturating_sub(running.len() + chunking.len())
+            .min(cfg.max_prefill_batch);
         let mut admitted: Vec<TraceRequest> = vec![];
         if free > 0 && !pending.is_empty() {
             let now_us = (t * 1e6) as u64;
@@ -288,56 +342,134 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
         if !admitted.is_empty() {
             // Pause decode, run one prefill batch (paper policy), resume.
             // With prefix reuse, each request charges only its uncached
-            // suffix — the cached history's K/V is already resident.
-            let prefill_tokens: usize = admitted
-                .iter()
-                .map(|r| {
-                    let hit = prefix.as_mut().map_or(0, |p| p.lookup(r));
-                    r.input_tokens - hit
-                })
-                .sum();
+            // suffix — the cached history's K/V is already resident. A
+            // suffix over the chunk budget does *not* prefill inline: it
+            // queues for budget-bounded chunk rounds below, exactly like
+            // the live scheduler's ChunkedPrefill state machine.
+            let mut direct: Vec<TraceRequest> = vec![];
+            let mut direct_tokens = 0usize;
+            for r in admitted {
+                let hit = prefix.as_mut().map_or(0, |p| p.lookup(&r));
+                let suffix = r.input_tokens - hit;
+                if budget > 0 && suffix > budget {
+                    chunk_stats.chunked_prefills += 1;
+                    chunking.push(ChunkRun { req: r, remaining: suffix });
+                } else {
+                    direct_tokens += suffix;
+                    direct.push(r);
+                }
+            }
             // The admitted prompts themselves become cached history
             // (full prompt blocks only — the live path's index_prompt
             // commits exactly this after the prefill; replies become
             // matchable only once a later prompt containing them
-            // commits).
+            // commits). Chunked prompts commit when their final chunk
+            // lands, mirroring the live partial-index invariant.
             if let Some(p) = prefix.as_mut() {
-                for r in &admitted {
+                for r in &direct {
                     p.store(r.session_id, r.input_tokens);
                 }
             }
-            let host = cfg.system.step_overhead_moe_s(running.len() + admitted.len(), cfg.model.moe)
-                * interference.sample(t, &mut rng);
-            let dur = cm.prefill_s(prefill_tokens) + host;
-            gpu_busy_s += cm.prefill_s(prefill_tokens);
-            t += dur;
-            for r in admitted {
-                running.push(Run {
-                    req: r,
-                    produced: 1, // prefill emits the first token
-                    ctx: r.input_tokens + 1,
-                    first_token_s: t,
-                    last_token_s: t,
-                    itl_s: vec![],
-                });
+            if !direct.is_empty() {
+                let host = cfg
+                    .system
+                    .step_overhead_moe_s(
+                        running.len() + chunking.len() + direct.len(),
+                        cfg.model.moe,
+                    )
+                    * interference.sample(t, &mut rng);
+                let dur = cm.prefill_s(direct_tokens) + host;
+                gpu_busy_s += cm.prefill_s(direct_tokens);
+                t += dur;
+                for r in direct {
+                    running.push(Run {
+                        req: r,
+                        produced: 1, // prefill emits the first token
+                        ctx: r.input_tokens + 1,
+                        first_token_s: t,
+                        last_token_s: t,
+                        itl_s: vec![],
+                    });
+                }
+                // Single-token requests finish at prefill.
+                retire(&mut running, &mut done);
+                if chunking.is_empty() {
+                    // No chunked lanes in flight: identical cadence to
+                    // the pre-chunking loop (re-check arrivals first).
+                    continue;
+                }
+                // Chunked lanes in flight: fall through to the chunk
+                // round + decode step below — the live control loop
+                // runs chunk_step every iteration, admission ones
+                // included, so skipping the round here would starve
+                // mid-flight lanes under sustained arrivals.
             }
-            // Single-token requests finish at prefill.
+        }
+
+        // Budget-bounded chunk servicing for this iteration: FIFO from
+        // the oldest chunking lane, one chunk per lane, at least one
+        // lane when any are queued — the same round the live
+        // scheduler's `chunk_step` runs. Returns the lengths taken.
+        let chunk_lens: Vec<usize> = if chunking.is_empty() {
+            vec![]
+        } else {
+            let mut serviced = 0usize;
+            let mut spent = 0usize;
+            while serviced < chunking.len() {
+                let len = chunking[serviced].remaining.min(budget);
+                if serviced > 0 && spent + len > budget {
+                    break;
+                }
+                spent += len;
+                serviced += 1;
+            }
+            chunking
+                .iter_mut()
+                .take(serviced)
+                .map(|cr| {
+                    let len = cr.remaining.min(budget);
+                    cr.remaining -= len;
+                    chunk_stats.chunk_launches += 1;
+                    len
+                })
+                .collect()
+        };
+
+        if running.is_empty() {
+            if chunk_lens.is_empty() {
+                // Idle: jump to the next ready request.
+                if next_ready < ready.len() {
+                    t = t.max(ready[next_ready].0);
+                }
+                continue;
+            }
+            // No decode lanes to piggyback on: the chunk round runs as
+            // standalone prefill launches.
+            let round: f64 = chunk_lens.iter().map(|&l| cm.prefill_s(l)).sum();
+            let host = cfg
+                .system
+                .step_overhead_moe_s(chunking.len(), cfg.model.moe)
+                * interference.sample(t, &mut rng);
+            gpu_busy_s += round;
+            t += round + host;
+            finish_chunked(&mut chunking, &mut running, &mut prefix, t);
             retire(&mut running, &mut done);
             continue;
         }
 
-        if running.is_empty() {
-            // Idle: jump to the next ready request.
-            if next_ready < ready.len() {
-                t = t.max(ready[next_ready].0);
-            }
-            continue;
-        }
-
-        // One decode iteration for the whole batch.
+        // One decode iteration for the whole batch — carrying this
+        // round's chunks as piggybacked launches: the weight sweep is
+        // paid once, the bounded chunk's GEMMs largely hide beneath it
+        // (`decode_step_with_chunk_s`), and each chunk pays its own
+        // launch overhead. This is what turns a long prompt's prefill
+        // from an exclusive decode stall into bounded per-iteration
+        // work — the quantity the chunk-budget sweep trades against
+        // the per-launch overhead.
         let b = running.len();
         let mean_ctx = running.iter().map(|r| r.ctx as f64).sum::<f64>() / b as f64;
-        let gpu = cm.decode_step_s(b, mean_ctx);
+        let chunk_tokens: usize = chunk_lens.iter().sum();
+        let gpu = cm.decode_step_with_chunk_s(b, mean_ctx, chunk_tokens)
+            + chunk_lens.len() as f64 * cm.hw.graph_exec_overhead_s;
         let host =
             cfg.system.step_overhead_moe_s(b, cfg.model.moe) * interference.sample(t, &mut rng);
         t += gpu + host;
@@ -348,6 +480,10 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
             r.itl_s.push(t - r.last_token_s);
             r.last_token_s = t;
         }
+        // Lanes whose final chunk landed open their decode lane now
+        // (first token at the end of this iteration, not a decode
+        // token — they start producing next iteration).
+        finish_chunked(&mut chunking, &mut running, &mut prefix, t);
         retire(&mut running, &mut done);
     }
 
@@ -355,6 +491,7 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     if let Some(p) = &prefix {
         wm.prefix = p.stats;
     }
+    wm.chunked = chunk_stats;
     // Energy: GPU utilization over the *active* span.
     let active = t.min(cfg.window_s).max(1e-9);
     let gpu_util = (gpu_busy_s.min(active) / active).clamp(0.0, 1.0);
@@ -366,6 +503,39 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
         tok_s.max(1e-9),
     );
     wm
+}
+
+/// Chunked lanes whose final chunk just landed produce their first
+/// token at `t`: the cached history commits (the live partial-index
+/// invariant — a prompt becomes matchable only once fully prefilled;
+/// intermediate chunks are already committed progressively on the live
+/// path, which the session-granular cache sim cannot express, so it
+/// commits at completion) and a decode lane opens.
+fn finish_chunked(
+    chunking: &mut Vec<ChunkRun>,
+    running: &mut Vec<Run>,
+    prefix: &mut Option<PrefixCacheSim>,
+    t: f64,
+) {
+    let mut i = 0;
+    while i < chunking.len() {
+        if chunking[i].remaining == 0 {
+            let cr = chunking.remove(i);
+            if let Some(p) = prefix.as_mut() {
+                p.store(cr.req.session_id, cr.req.input_tokens);
+            }
+            running.push(Run {
+                req: cr.req,
+                produced: 1,
+                ctx: cr.req.input_tokens + 1,
+                first_token_s: t,
+                last_token_s: t,
+                itl_s: vec![],
+            });
+        } else {
+            i += 1;
+        }
+    }
 }
 
 fn retire(running: &mut Vec<Run>, done: &mut Vec<RequestMetrics>) {
@@ -467,5 +637,85 @@ mod tests {
         let b = simulate(&cfg);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.ttft.p99, b.ttft.p99);
+    }
+
+    /// The tentpole's acceptance shape: on the heavy-tailed long-prompt
+    /// mix, bounding per-iteration prefill strictly lowers the P99 TPOT
+    /// of concurrent decodes versus whole-prompt prefill of the *same
+    /// trace* (same seed ⇒ identical arrivals and lengths; only the
+    /// budget differs). 256 tokens sits near the 8B model's hide point
+    /// (`decode_step_with_chunk_s`), where chunks ride the decode
+    /// weight sweep almost free.
+    #[test]
+    fn chunked_prefill_cuts_p99_tpot_on_long_prompt_mix() {
+        let mix = crate::workload::LongPromptMix::document_chat();
+        let mut cfg = SimConfig::new(System::Blink, LLAMA3_8B, 10.0, false);
+        cfg.window_s = 30.0;
+        cfg.long_prompts = Some(mix);
+        let whole = simulate(&cfg);
+        cfg.prefill_chunk_tokens = 256;
+        let chunked = simulate(&cfg);
+        assert!(whole.completed > 100 && chunked.completed > 100, "both runs must serve");
+        assert_eq!(whole.chunked.chunk_launches, 0, "budget 0 never chunks");
+        assert!(chunked.chunked.chunked_prefills > 0, "document prompts must chunk");
+        assert!(
+            chunked.chunked.chunk_launches >= 2 * chunked.chunked.chunked_prefills,
+            "a chunked prompt launches ≥ 2 chunks"
+        );
+        assert!(
+            chunked.tpot.p99 < whole.tpot.p99,
+            "chunked P99 TPOT {:.1} ms must beat whole-prompt {:.1} ms",
+            chunked.tpot.p99,
+            whole.tpot.p99
+        );
+        // Chunking trades document TTFT for decode tails; it must not
+        // cost throughput (the total work is conserved up to per-chunk
+        // launch overheads, most of which hide under the sweep).
+        assert!(
+            chunked.completed as f64 >= 0.9 * whole.completed as f64,
+            "chunked {} vs whole {} completions",
+            chunked.completed,
+            whole.completed
+        );
+    }
+
+    /// Chunk-count contract shared with the live scheduler: a request
+    /// whose uncached suffix spans `s` tokens under budget `c` launches
+    /// exactly ⌈s/c⌉ chunks — the quantity the live modeled-executor
+    /// e2e test pins against the same formula.
+    #[test]
+    fn chunk_counts_match_ceil_formula() {
+        let mut cfg = SimConfig::new(System::Blink, LLAMA3_8B, 2.0, false);
+        cfg.window_s = 20.0;
+        cfg.lengths = LengthModel::Fixed { input: 5000, output: 8 };
+        cfg.prefill_chunk_tokens = 2048;
+        let wm = simulate(&cfg);
+        assert!(wm.chunked.chunked_prefills > 0);
+        let per_request = 5000usize.div_ceil(2048) as u64; // = 3
+        assert_eq!(
+            wm.chunked.chunk_launches,
+            per_request * wm.chunked.chunked_prefills,
+            "every 5000-token prompt takes exactly {per_request} chunks"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_rate_is_rejected() {
+        let cfg = SimConfig::new(System::Blink, LLAMA3_8B, f64::NAN, false);
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    fn chunked_run_is_deterministic() {
+        let mut cfg = SimConfig::new(System::Blink, LLAMA3_8B, 8.0, false);
+        cfg.window_s = 15.0;
+        cfg.long_prompts = Some(crate::workload::LongPromptMix::document_chat());
+        cfg.prefill_chunk_tokens = 1024;
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.tpot.p99, b.tpot.p99);
+        assert_eq!(a.chunked.chunk_launches, b.chunked.chunk_launches);
     }
 }

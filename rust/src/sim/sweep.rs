@@ -12,7 +12,7 @@ use crate::sim::costmodel::{PaperModel, PAPER_MODELS};
 use crate::sim::des::{simulate, SimConfig};
 use crate::sim::systems::{System, ALL_SYSTEMS};
 use crate::util::stats::{geomean, saturation_index};
-use crate::workload::{ClassMix, MultiTurnMix, WindowMetrics};
+use crate::workload::{ClassMix, LongPromptMix, MultiTurnMix, WindowMetrics};
 
 /// guidellm-style sweep levels (13 levels, 1..32 req/s).
 pub fn load_levels() -> Vec<f64> {
@@ -298,6 +298,95 @@ pub fn run_prefix_sweep(model: PaperModel, window_s: f64, threads: usize) -> Pre
     PrefixSweepResults { model, levels, mix, points: results.into_inner().unwrap() }
 }
 
+// ---------------------------------------------------------------------------
+// Chunked-prefill sweep: Blink on the heavy-tailed long-prompt workload,
+// chunk budgets against P99 TPOT/TTFT (the `blink eval chunked`
+// experiment).
+// ---------------------------------------------------------------------------
+
+/// Chunk budgets for the chunked-prefill comparison, in tokens (0 = the
+/// paper's whole-prompt prefill baseline). The interesting region sits
+/// around the cost model's hide point (~150 tokens for the dense 8B):
+/// small budgets ride the decode weight sweep nearly free, large ones
+/// degenerate toward the whole-prompt stall.
+pub fn chunk_budget_levels() -> Vec<usize> {
+    vec![0, 128, 256, 512, 1024, 2048, 4096]
+}
+
+/// Offered load for the chunked comparison (req/s): enough concurrency
+/// that document prefills genuinely stall in-flight decodes, below the
+/// dense-8B knee so queueing doesn't swamp the mechanism.
+pub const CHUNKED_SWEEP_RATE: f64 = 10.0;
+
+pub struct ChunkedSweepResults {
+    pub model: PaperModel,
+    pub rate: f64,
+    pub budgets: Vec<usize>,
+    pub mix: LongPromptMix,
+    /// budget-level index → window metrics.
+    pub points: HashMap<usize, WindowMetrics>,
+}
+
+impl ChunkedSweepResults {
+    pub fn get(&self, level: usize) -> &WindowMetrics {
+        self.points.get(&level).expect("chunked sweep point")
+    }
+}
+
+/// Build the SimConfig for one chunked-comparison point.
+pub fn chunked_point_config(
+    model: PaperModel,
+    budget: usize,
+    rate: f64,
+    window_s: f64,
+    mix: &LongPromptMix,
+) -> SimConfig {
+    let mut cfg = SimConfig::new(System::Blink, model, rate, false);
+    cfg.window_s = window_s;
+    cfg.long_prompts = Some(mix.clone());
+    cfg.prefill_chunk_tokens = budget;
+    cfg
+}
+
+/// Run the chunked-prefill comparison: Blink × the long-prompt document
+/// mix × the chunk-budget levels at one fixed offered load. Every point
+/// replays the *same trace* (same seed; the budget is not a trace
+/// input), so curves differ only by the scheduling mechanism. Points
+/// are independent sims, sharded across threads like the main sweep.
+pub fn run_chunked_sweep(model: PaperModel, window_s: f64, threads: usize) -> ChunkedSweepResults {
+    let budgets = chunk_budget_levels();
+    let mix = LongPromptMix::document_chat();
+    let work: Vec<(usize, SimConfig)> = budgets
+        .iter()
+        .enumerate()
+        .map(|(level, &b)| {
+            (level, chunked_point_config(model, b, CHUNKED_SWEEP_RATE, window_s, &mix))
+        })
+        .collect();
+    let results: Mutex<HashMap<usize, WindowMetrics>> = Mutex::new(HashMap::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (key, cfg) = &work[i];
+                let wm = simulate(cfg);
+                results.lock().unwrap().insert(*key, wm);
+            });
+        }
+    });
+    ChunkedSweepResults {
+        model,
+        rate: CHUNKED_SWEEP_RATE,
+        budgets,
+        mix,
+        points: results.into_inner().unwrap(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +474,26 @@ mod tests {
         let wm = simulate(&cfg);
         assert!(wm.prefix.evicted_tokens > 0, "tight budget must evict");
         assert!(wm.prefix.hit_tokens > 0, "recent sessions still hit");
+    }
+
+    #[test]
+    fn chunked_sweep_structure_and_trace_identity() {
+        let r = run_chunked_sweep(LLAMA3_8B, 8.0, 4);
+        assert_eq!(r.points.len(), chunk_budget_levels().len());
+        let whole = r.get(0);
+        assert_eq!(whole.chunked.chunk_launches, 0, "budget 0 never chunks");
+        // Same trace at every point: completions stay comparable and
+        // the chunked points actually chunk.
+        for (level, &b) in r.budgets.iter().enumerate().skip(1) {
+            let wm = r.get(level);
+            assert!(wm.completed > 0);
+            assert!(
+                wm.chunked.chunked_prefills > 0,
+                "budget {b} must chunk the document prompts"
+            );
+            // Smaller budgets mean more launches per chunked prompt.
+            assert!(wm.chunked.chunk_launches > wm.chunked.chunked_prefills);
+        }
     }
 
     #[test]

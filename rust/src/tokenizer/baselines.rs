@@ -55,7 +55,7 @@ impl NaiveTokenizer {
             for w in live.windows(2) {
                 let (i, j) = (w[0], w[1]);
                 if let Some(&(new_id, rank)) = self.merges.get(&(nodes[i].sym, nodes[j].sym)) {
-                    if best.map_or(true, |(r, ..)| rank < r) {
+                    if best.is_none_or(|(r, ..)| rank < r) {
                         best = Some((rank, i, j, new_id));
                     }
                 }

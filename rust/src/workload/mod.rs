@@ -31,6 +31,13 @@ impl LengthModel {
         LengthModel::ShareGpt { in_mean: 60.0, out_mean: 28.0, cv: 0.8 }
     }
 
+    /// Sampled (input, output) token lengths, clamped to `[1, max]` at
+    /// the sampler itself: a lognormal draw rounds to 0 for small
+    /// means, `Fixed`/`Uniform` accept 0 bounds, and a 0-token length
+    /// downstream lands in the scheduler's invalid-request fail path —
+    /// skewing exactly the policy-comparison metrics the traces feed.
+    /// The caps are floored at 1 too, so a degenerate `max_in`/`max_out`
+    /// of 0 cannot panic the clamp.
     pub fn sample(&self, rng: &mut Rng, max_in: usize, max_out: usize) -> (usize, usize) {
         let (i, o) = match self {
             LengthModel::ShareGpt { in_mean, out_mean, cv } => (
@@ -43,7 +50,7 @@ impl LengthModel {
                 rng.range(*out_lo as u64, *out_hi as u64) as usize,
             ),
         };
-        (i.clamp(1, max_in), o.clamp(1, max_out))
+        (i.clamp(1, max_in.max(1)), o.clamp(1, max_out.max(1)))
     }
 }
 
@@ -292,8 +299,56 @@ impl MultiTurnMix {
             }
             session += 1;
         }
-        out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN arrival
+        // (degenerate rate config) must not panic the sweep —
+        // `SimConfig::validate` rejects such configs up front, and the
+        // sort stays total-ordered regardless.
+        out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         out
+    }
+}
+
+/// Long-prompt colocation workload: a majority of chat-sized prompts
+/// plus a heavy tail of document-length prompts — the head-of-line
+/// blocking regime chunked prefill targets, where one multi-thousand-
+/// token prefill launched whole stalls every in-flight decode lane for
+/// its full duration and P99 TPOT collapses.
+#[derive(Debug, Clone)]
+pub struct LongPromptMix {
+    /// Probability a request draws from the long-document model.
+    pub long_frac: f64,
+    /// The common case: chat-sized prompts.
+    pub base: LengthModel,
+    /// The heavy tail: document-length prompts, modest outputs.
+    pub long: LengthModel,
+}
+
+impl LongPromptMix {
+    /// The canonical mix: 8 % document-length prompts (4–8k tokens in,
+    /// short answers out) over a short-prompt chat majority.
+    pub fn document_chat() -> LongPromptMix {
+        LongPromptMix {
+            long_frac: 0.08,
+            base: LengthModel::ShareGpt { in_mean: 160.0, out_mean: 128.0, cv: 0.8 },
+            long: LengthModel::Uniform { in_lo: 4096, in_hi: 8192, out_lo: 64, out_hi: 256 },
+        }
+    }
+
+    /// Poisson arrivals at `rate` req/s over `window_s`, each request's
+    /// length model drawn by `long_frac`.
+    pub fn generate(
+        &self,
+        rng: &mut Rng,
+        rate: f64,
+        window_s: f64,
+        max_in: usize,
+        max_out: usize,
+    ) -> Vec<TraceRequest> {
+        poisson_trace(rng, rate, window_s, |rng| {
+            let model = if rng.f64() < self.long_frac { &self.long } else { &self.base };
+            let (i, o) = model.sample(rng, max_in, max_out);
+            (i, o, 0, 0.0)
+        })
     }
 }
 
@@ -322,6 +377,23 @@ impl PrefixStats {
             self.hit_tokens as f64 / self.input_tokens as f64
         }
     }
+}
+
+/// Chunked-prefill counters for one simulated window (filled by the DES
+/// when `SimConfig::prefill_chunk_tokens` > 0; all-zero otherwise).
+/// Mirrors the live scheduler's `chunked_prefills` / `chunk_launches`
+/// stats: a request whose uncached suffix spans `s` tokens under a
+/// budget of `c` launches ⌈s/c⌉ chunks. Note the live scheduler first
+/// normalizes its budget (block-aligned, clamped to the offset grid)
+/// while the DES — which has no graph grid — uses the configured value
+/// as-is, so counts are directly comparable only when the budget is
+/// already block-aligned and on-grid (as the e2e agreement test uses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkStats {
+    /// Admissions whose suffix exceeded the budget and went chunked.
+    pub chunked_prefills: u64,
+    /// Individual chunk launches (per request per chunk, final included).
+    pub chunk_launches: u64,
 }
 
 /// Per-request measurements (seconds), aggregated into the paper's
@@ -385,6 +457,9 @@ pub struct WindowMetrics {
     /// Prefix-cache hit/evict counters (filled by the DES when reuse is
     /// enabled; all-zero otherwise).
     pub prefix: PrefixStats,
+    /// Chunked-prefill counters (filled by the DES when a chunk budget
+    /// is set; all-zero otherwise).
+    pub chunked: ChunkStats,
     /// Per-priority-class TTFT, highest priority first (single-class
     /// workloads produce one entry with priority 0).
     pub ttft_by_class: Vec<ClassTtft>,
@@ -463,6 +538,7 @@ impl WindowMetrics {
             prefill_tok_s: in_tokens as f64 / window_s,
             energy_mj_per_tok: 0.0,
             prefix: PrefixStats::default(),
+            chunked: ChunkStats::default(),
             ttft_by_class,
         }
     }
@@ -510,6 +586,60 @@ mod tests {
         let mut rng = Rng::new(3);
         let reqs = g.generate(&mut rng, 5.0, 10.0);
         assert!(reqs.iter().all(|r| r.input_tokens == 512 && r.output_tokens == 128));
+    }
+
+    /// Regression (sampler clamp): tiny lognormal means round to 0 and
+    /// `Fixed`/`Uniform` accept 0 bounds — the sampler itself must
+    /// never emit a 0-token prompt or output (0-length requests land in
+    /// the scheduler's invalid-request fail path and skew comparison
+    /// metrics), and a degenerate 0 cap must not panic the clamp.
+    #[test]
+    fn sampler_never_emits_zero_lengths() {
+        let mut rng = Rng::new(17);
+        let tiny = LengthModel::ShareGpt { in_mean: 0.1, out_mean: 0.1, cv: 0.5 };
+        for _ in 0..500 {
+            let (i, o) = tiny.sample(&mut rng, 8192, 4096);
+            assert!(i >= 1 && o >= 1, "lognormal sample clamped to ≥1");
+        }
+        let (i, o) = LengthModel::Fixed { input: 0, output: 0 }.sample(&mut rng, 512, 128);
+        assert_eq!((i, o), (1, 1));
+        let zero_ranges =
+            LengthModel::Uniform { in_lo: 0, in_hi: 1, out_lo: 0, out_hi: 1 };
+        for _ in 0..50 {
+            let (i, o) = zero_ranges.sample(&mut rng, 512, 128);
+            assert!(i >= 1 && o >= 1);
+        }
+        // 0-token caps: clamp floors at 1 instead of panicking.
+        let (i, o) = LengthModel::Fixed { input: 5, output: 5 }.sample(&mut rng, 0, 0);
+        assert_eq!((i, o), (1, 1));
+    }
+
+    #[test]
+    fn long_prompt_mix_has_heavy_tail() {
+        let mix = LongPromptMix::document_chat();
+        let mut rng = Rng::new(23);
+        let reqs = mix.generate(&mut rng, 40.0, 500.0, 8192, 4096);
+        assert!(!reqs.is_empty());
+        let long: Vec<&TraceRequest> =
+            reqs.iter().filter(|r| r.input_tokens >= 4096).collect();
+        let frac = long.len() as f64 / reqs.len() as f64;
+        assert!(
+            (frac - mix.long_frac).abs() < 0.03,
+            "long fraction {frac:.3} vs configured {}",
+            mix.long_frac
+        );
+        // The tail dominates offered prefill work despite its rarity —
+        // the property that makes whole-prompt prefill a decode-stall
+        // problem.
+        let long_tokens: usize = long.iter().map(|r| r.input_tokens).sum();
+        let all_tokens: usize = reqs.iter().map(|r| r.input_tokens).sum();
+        assert!(
+            long_tokens * 2 > all_tokens,
+            "document prompts should carry most prefill tokens: {long_tokens}/{all_tokens}"
+        );
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "Poisson arrivals strictly increase");
+        }
     }
 
     #[test]
@@ -584,7 +714,7 @@ mod tests {
         }
         let mut multi = 0usize;
         for turns in by_session.values_mut() {
-            turns.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            turns.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             assert_eq!(
                 turns[0].history_tokens,
                 mix.system_prompt_tokens,

@@ -40,7 +40,11 @@ fn manifest(offset_seqs: &[usize]) -> ModelManifest {
     ModelManifest::parse(&text).expect("modeled test manifest")
 }
 
-fn start(m: &ModelManifest, prefix_reuse: PrefixReuse) -> (Arc<RingBuffer>, Scheduler) {
+fn start(
+    m: &ModelManifest,
+    prefix_reuse: PrefixReuse,
+    prefill_chunk_tokens: Option<usize>,
+) -> (Arc<RingBuffer>, Scheduler) {
     let ring = Arc::new(RingBuffer::new(RingConfig {
         num_slots: 64,
         max_prompt: 256,
@@ -51,7 +55,12 @@ fn start(m: &ModelManifest, prefix_reuse: PrefixReuse) -> (Arc<RingBuffer>, Sche
         ring.clone(),
         executor,
         m.clone(),
-        SchedulerConfig { apply_launch_delays: false, prefix_reuse, ..Default::default() },
+        SchedulerConfig {
+            apply_launch_delays: false,
+            prefix_reuse,
+            prefill_chunk_tokens,
+            ..Default::default()
+        },
     );
     (ring, sched)
 }
@@ -87,7 +96,7 @@ fn prompt_of(len: usize, tag: u32) -> Vec<u32> {
 #[test]
 fn second_turn_hit_launches_offset_graph_for_suffix_only() {
     let m = manifest(&[16, 32, 64, 128]);
-    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto, None);
 
     // Turn 1: cold 64-token prompt (4 full blocks indexed on success).
     let first = prompt_of(64, 1);
@@ -134,7 +143,7 @@ fn second_turn_hit_launches_offset_graph_for_suffix_only() {
 #[test]
 fn auto_reuse_stays_cold_without_offset_graphs() {
     let m = manifest(&[]);
-    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto, None);
     let first = prompt_of(64, 3);
     submit(&ring, 0, &first, 4);
     wait_done(&ring, &[0]);
@@ -156,7 +165,11 @@ fn auto_reuse_stays_cold_without_offset_graphs() {
 #[test]
 fn offgrid_suffix_falls_back_to_full_prefill_live() {
     let m = manifest(&[16]); // suffixes ≤ 16 only
-    let (ring, mut sched) = start(&m, PrefixReuse::On);
+    // Chunking off: with the default budget (= the grid's largest
+    // offset seq, 16 here) the off-grid 32-token suffix would *chunk*
+    // through two offset launches instead of falling back — this test
+    // pins the chunking-disabled demotion path.
+    let (ring, mut sched) = start(&m, PrefixReuse::On, Some(0));
     let first = prompt_of(64, 5);
     submit(&ring, 0, &first, 4);
     wait_done(&ring, &[0]);
@@ -187,7 +200,7 @@ fn offgrid_suffix_falls_back_to_full_prefill_live() {
 #[test]
 fn modeled_executor_serves_concurrent_batch() {
     let m = manifest(&[16, 32, 64, 128]);
-    let (ring, mut sched) = start(&m, PrefixReuse::Auto);
+    let (ring, mut sched) = start(&m, PrefixReuse::Auto, None);
     let slots: Vec<usize> = (0..6).collect();
     for &s in &slots {
         submit(&ring, s, &prompt_of(10 + s, 10 + s as u32), 8);

@@ -1,0 +1,193 @@
+//! Hot-loop cost of the persistent-batch control loop, two layers:
+//!
+//! 1. **Marshal microbench** — arena staging (`stage_decode`, the
+//!    production path: in-place incremental update of persistent planes)
+//!    vs the kept-for-comparison rebuild path (`decode_inputs`, fresh
+//!    `Vec` quartet per step) at batch 1 / 32 / 256. The printed ratio
+//!    is the PR's acceptance number: the arena path must beat the
+//!    rebuild path at batch 256.
+//! 2. **End-to-end iteration cost** — the full control loop (scan →
+//!    stage → doorbell launch → overlapped scan → poll → retire pass)
+//!    on the zero-cost modeled executor at batch 1 / 32 / 256, reported
+//!    as µs per decode iteration from the scheduler's own step counter.
+//!
+//! `--test` runs a seconds-scale smoke of both layers (the CI bench-smoke
+//! step: `cargo bench --bench decode_hotloop -- --test`), so the bench
+//! itself cannot bit-rot.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blink::gpu::planner::{BatchPlanner, Lane};
+use blink::gpu::{Executor, ModeledCost, PrefixReuse, Scheduler, SchedulerConfig};
+use blink::graphs::{GraphCache, GraphId, GraphKind, GraphSpec};
+use blink::kvcache::SeqCache;
+use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
+use blink::runtime::ModelManifest;
+use blink::util::timer::bench;
+
+const BATCHES: [usize; 3] = [1, 32, 256];
+const MBS: usize = 64; // block-table row width for the marshal bench
+
+fn marshal_cache() -> GraphCache {
+    let mut specs = vec![];
+    for (i, b) in BATCHES.iter().enumerate() {
+        specs.push(GraphSpec {
+            id: GraphId(i),
+            name: format!("decode_b{b}"),
+            kind: GraphKind::Decode,
+            batch: *b,
+            seq: 0,
+        });
+    }
+    GraphCache::new(specs)
+}
+
+fn lanes_of(batch: usize) -> Vec<Lane> {
+    (0..batch)
+        .map(|i| Lane {
+            slot: i,
+            cache: SeqCache {
+                blocks: (1..9usize).map(|j| (i * 8 + j) as u32).collect(),
+                cached_len: 100 + i,
+                prefix_len: 0,
+            },
+            generated: 1,
+            max_new: 1 << 20,
+            last_token: i as i32,
+        })
+        .collect()
+}
+
+/// Layer 1: staging vs rebuilding the decode launch inputs. Each timed
+/// iteration first mutates the lane state the way a decode step does
+/// (seq_len bump + fresh last_token), so the arena path pays its real
+/// incremental work, not a no-op.
+fn marshal_bench(budget: Duration) {
+    println!("== decode launch marshal: arena (stage_decode) vs rebuild (decode_inputs) ==");
+    for &batch in &BATCHES {
+        let cache = marshal_cache();
+        let mut planner = BatchPlanner::for_cache(&cache, MBS, 16);
+        let mut lanes = lanes_of(batch);
+        // One full sync (the membership-change case), then steady state.
+        planner.stage_decode(&lanes, batch);
+
+        let mut tick = 0i32;
+        let arena = bench(&format!("hotloop/arena_stage_decode b={batch}"), 50, budget, || {
+            for l in lanes.iter_mut() {
+                l.cache.cached_len += 1;
+                l.last_token = tick;
+            }
+            tick = tick.wrapping_add(1);
+            std::hint::black_box(planner.stage_decode(&lanes, batch));
+        });
+
+        let rebuild = bench(&format!("hotloop/rebuild_decode_inputs b={batch}"), 50, budget, || {
+            for l in lanes.iter_mut() {
+                l.cache.cached_len += 1;
+                l.last_token = tick;
+            }
+            tick = tick.wrapping_add(1);
+            std::hint::black_box(planner.decode_inputs(&lanes, batch));
+        });
+
+        println!(
+            "hotloop/marshal-ratio b={batch}: rebuild/arena = {:.2}x (arena {:.0} ns, rebuild {:.0} ns)\n",
+            rebuild.mean_ns / arena.mean_ns,
+            arena.mean_ns,
+            rebuild.mean_ns
+        );
+    }
+}
+
+/// Manifest for the end-to-end layer: decode grid up to 256 lanes,
+/// prefill grid wide enough to admit them quickly. `max_blocks_per_seq
+/// 512` (block 16) bounds the context at 8192 tokens, so lanes survive
+/// thousands of iterations before retiring.
+fn loop_manifest() -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel hotloop-bench\nvocab_size 2048\nd_model 64\nn_layers 2\n\
+         n_heads 4\nn_kv_heads 2\nd_head 16\nd_ff 128\nblock_size 16\nnum_blocks 140000\n\
+         max_blocks_per_seq 512\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
+         param tok_embed 2048x64 f32\n",
+    );
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0\n"));
+    }
+    for b in [1usize, 8, 32] {
+        text.push_str(&format!("graph prefill_b{b}_s16 prefill {b} 16\n"));
+    }
+    ModelManifest::parse(&text).expect("hotloop bench manifest")
+}
+
+/// Layer 2: µs per control-loop iteration on the zero-cost modeled
+/// executor — the pure orchestration cost of a decode step at batch B.
+fn loop_bench(measure_steps: u64) {
+    println!("== end-to-end control-loop iteration cost (modeled executor, zero graph cost) ==");
+    let m = loop_manifest();
+    for &batch in &BATCHES {
+        let ring = Arc::new(RingBuffer::new(RingConfig {
+            num_slots: 256,
+            max_prompt: 32,
+            max_output: 8192,
+        }));
+        let executor = Executor::spawn_modeled(&m, ModeledCost::zero());
+        let mut sched = Scheduler::spawn(
+            ring.clone(),
+            executor,
+            m.clone(),
+            SchedulerConfig {
+                apply_launch_delays: false,
+                prefix_reuse: PrefixReuse::Off,
+                ..Default::default()
+            },
+        );
+        let stats = sched.stats.clone();
+        for slot in 0..batch {
+            assert!(ring.claim_for_write(slot));
+            let prompt: Vec<u32> = (0..16u32).map(|i| (i * 13 + slot as u32) % 2048).collect();
+            ring.write_prompt(slot, &prompt);
+            ring.submit(slot, slot as u64, 16, u32::MAX, slot as u32);
+        }
+        let steps = || stats.decode_steps.load(Ordering::Relaxed);
+        let deadline = Instant::now();
+        // Warmup: all lanes decoding, scratches and arena sync settled.
+        while steps() < 100 {
+            assert!(
+                deadline.elapsed() < Duration::from_secs(30),
+                "warmup stalled: {} lanes pending",
+                ring.count_state(SlotState::PrefillPending)
+            );
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let s0 = steps();
+        let t0 = Instant::now();
+        while steps() < s0 + measure_steps {
+            assert!(t0.elapsed() < Duration::from_secs(30), "measurement stalled");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let iters = steps() - s0;
+        let us_per_iter = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+        println!(
+            "hotloop/loop-iteration b={batch}: {us_per_iter:.2} µs/iter over {iters} iters \
+             (scheduler-reported p50 {:.2} µs, p99 {:.2} µs)",
+            stats.loop_iter_p50_us(),
+            stats.loop_iter_p99_us()
+        );
+        sched.stop();
+    }
+    println!();
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        // CI bench-smoke: exercise both layers end to end in seconds.
+        marshal_bench(Duration::from_millis(20));
+        loop_bench(200);
+    } else {
+        marshal_bench(Duration::from_millis(300));
+        loop_bench(3000);
+    }
+}

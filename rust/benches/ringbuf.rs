@@ -9,7 +9,7 @@ fn main() {
     let budget = Duration::from_millis(400);
 
     bench("ringbuf/scan_4096_empty (paper: 1-5µs)", 100, budget, || {
-        std::hint::black_box(rb.scan_pending(256));
+        std::hint::black_box(rb.scan_pending());
     });
 
     // Populate 64 pending slots spread across the ring.
@@ -19,7 +19,7 @@ fn main() {
         rb.submit(i, i as u64, 3, 8, 0);
     }
     bench("ringbuf/scan_4096_64pending", 100, budget, || {
-        std::hint::black_box(rb.scan_pending(256));
+        std::hint::black_box(rb.scan_pending());
     });
 
     let rb2 = RingBuffer::new(RingConfig::default());

@@ -47,7 +47,14 @@ fn main() {
         rb.write_prompt(i, &[1]);
         rb.submit(i, i as u64, 1, 4, 0);
     }
-    bench("scheduler/overlapped_ring_scan(4096, 256 lanes)", 100, budget, || {
-        std::hint::black_box(rb.scan_pending(256));
+    bench("scheduler/overlapped_ring_scan(4096 slots)", 100, budget, || {
+        std::hint::black_box(rb.scan_pending());
+    });
+
+    // The hot-loop variant: same sweep into a persistent scratch.
+    let mut scratch: Vec<usize> = Vec::with_capacity(4096);
+    bench("scheduler/overlapped_ring_scan_into(4096 slots)", 100, budget, || {
+        rb.scan_pending_into(&mut scratch);
+        std::hint::black_box(scratch.len());
     });
 }

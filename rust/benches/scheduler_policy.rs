@@ -33,11 +33,11 @@ fn main() {
             },
         );
     }
-    let pending = rb.scan_pending(256);
+    let pending = rb.scan_pending();
     println!("pending slots: {}", pending.len());
 
     bench("policy/scan+snapshot (4096 slots)", 100, budget, || {
-        let pending = rb.scan_pending(256);
+        let pending = rb.scan_pending();
         std::hint::black_box(Candidate::collect(&rb, &pending));
     });
 
@@ -60,7 +60,7 @@ fn main() {
     // End-to-end selection: scan + snapshot + order, per policy.
     for (name, policy) in &policies {
         bench(&format!("policy/scan+order {name} (4096 slots)"), 100, budget, || {
-            let pending = rb.scan_pending(256);
+            let pending = rb.scan_pending();
             let mut cands = Candidate::collect(&rb, &pending);
             policy.order(&mut cands, now);
             std::hint::black_box(&cands);

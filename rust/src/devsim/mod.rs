@@ -9,6 +9,7 @@
 //! far coarser) and the discrete-event simulator's cost model.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 /// CUDA runtime limit on outstanding fire-and-forget launches from a
@@ -165,6 +166,85 @@ impl LaunchWindow {
     }
 }
 
+/// The launch doorbell: a single-slot rendezvous between the persistent
+/// scheduler and the executor ("SMs"), replacing a heap-backed channel.
+///
+/// The scheduler's launch protocol is strictly serialized — it never
+/// issues a second launch before polling the previous one's completion
+/// buffer — so a one-command slot is exactly the capacity the protocol
+/// needs, and ringing the doorbell allocates nothing (an mpsc send heap-
+/// allocates a queue node per command, which is precisely the kind of
+/// steady-state host-heap traffic the zero-allocation control loop
+/// forbids). `ring` parks only in the can't-happen case of a command
+/// already armed; `recv` parks until armed or closed.
+pub struct Doorbell<T> {
+    inner: Mutex<DoorbellInner<T>>,
+    cv: Condvar,
+}
+
+struct DoorbellInner<T> {
+    cmd: Option<T>,
+    closed: bool,
+}
+
+impl<T> Default for Doorbell<T> {
+    fn default() -> Self {
+        Doorbell::new()
+    }
+}
+
+impl<T> Doorbell<T> {
+    pub fn new() -> Doorbell<T> {
+        Doorbell {
+            inner: Mutex::new(DoorbellInner { cmd: None, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arm the doorbell with one command. Returns false (dropping the
+    /// command) if the doorbell is closed. Blocks while a previous
+    /// command is still armed — unreachable under the serialized
+    /// launch/poll protocol, but safe if a caller violates it.
+    pub fn ring(&self, cmd: T) -> bool {
+        let mut g = self.inner.lock().expect("doorbell poisoned");
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.cmd.is_none() {
+                g.cmd = Some(cmd);
+                self.cv.notify_all();
+                return true;
+            }
+            g = self.cv.wait(g).expect("doorbell poisoned");
+        }
+    }
+
+    /// Executor side: park until a command is armed (Some) or the
+    /// doorbell closes with no command pending (None).
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("doorbell poisoned");
+        loop {
+            if let Some(cmd) = g.cmd.take() {
+                self.cv.notify_all();
+                return Some(cmd);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).expect("doorbell poisoned");
+        }
+    }
+
+    /// Close the doorbell: wakes a parked `recv` (which drains any armed
+    /// command first, then returns None) and makes future `ring`s no-ops.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("doorbell poisoned");
+        g.closed = true;
+        self.cv.notify_all();
+    }
+}
+
 /// Device-polled completion buffer (paper §4.2 "Completion detection").
 ///
 /// Fire-and-forget launches deliver no callback; the inference graph's
@@ -208,13 +288,24 @@ impl CompletionBuffer {
     /// Scheduler side: spin until the epoch advances past `last_seen`,
     /// then read `n` tokens. Returns None on executor failure.
     pub fn poll_wait(&self, last_seen: u64, n: usize) -> Option<Vec<u32>> {
+        let mut out = Vec::with_capacity(n);
+        self.poll_wait_into(last_seen, n, &mut out).then_some(out)
+    }
+
+    /// Allocation-free variant of [`CompletionBuffer::poll_wait`]: spin
+    /// until the epoch advances, then fill the caller's scratch with the
+    /// `n` tokens (cleared first; no reallocation once the scratch has
+    /// grown to the widest grid). Returns false on executor failure.
+    pub fn poll_wait_into(&self, last_seen: u64, n: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
         while self.epoch.load(Ordering::Acquire) <= last_seen {
             std::hint::spin_loop();
         }
         if self.failed.load(Ordering::Acquire) != 0 {
-            return None;
+            return false;
         }
-        Some((0..n).map(|i| self.tokens[i].load(Ordering::Relaxed)).collect())
+        out.extend((0..n).map(|i| self.tokens[i].load(Ordering::Relaxed)));
+        true
     }
 }
 
@@ -285,5 +376,50 @@ mod tests {
         let t = Instant::now();
         spin_us(100.0);
         assert!(t.elapsed().as_micros() >= 100);
+    }
+
+    #[test]
+    fn poll_wait_into_reuses_scratch_capacity() {
+        let cb = CompletionBuffer::new(8);
+        let mut scratch: Vec<u32> = Vec::with_capacity(8);
+        cb.publish(&[1, 2, 3]);
+        assert!(cb.poll_wait_into(0, 3, &mut scratch));
+        assert_eq!(scratch, vec![1, 2, 3]);
+        let cap = scratch.capacity();
+        cb.publish(&[4, 5]);
+        assert!(cb.poll_wait_into(1, 2, &mut scratch));
+        assert_eq!(scratch, vec![4, 5]);
+        assert_eq!(scratch.capacity(), cap, "scratch never reallocates");
+        cb.fail();
+        assert!(!cb.poll_wait_into(2, 1, &mut scratch));
+    }
+
+    #[test]
+    fn doorbell_delivers_in_order_and_closes() {
+        let bell = std::sync::Arc::new(Doorbell::<u32>::new());
+        let bell2 = bell.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = vec![];
+            while let Some(v) = bell2.recv() {
+                got.push(v);
+            }
+            got
+        });
+        // Serialized protocol: each ring is consumed before the next.
+        for v in 0..16u32 {
+            assert!(bell.ring(v));
+        }
+        bell.close();
+        assert_eq!(h.join().unwrap(), (0..16).collect::<Vec<u32>>());
+        assert!(!bell.ring(99), "ring after close is a dropped no-op");
+    }
+
+    #[test]
+    fn doorbell_recv_drains_armed_command_before_close_returns_none() {
+        let bell = Doorbell::<u8>::new();
+        assert!(bell.ring(7));
+        bell.close();
+        assert_eq!(bell.recv(), Some(7), "armed command survives close");
+        assert_eq!(bell.recv(), None);
     }
 }

@@ -21,8 +21,18 @@ use crate::util::rng::Rng;
 pub const FIG3_WORKLOADS: [(usize, usize, usize); 4] =
     [(8, 64, 16), (8, 64, 32), (16, 96, 32), (16, 96, 64)];
 
-/// Run one workload through a scheduler placement; returns makespan.
-fn run_makespan(model: &str, placement: Placement, n: usize, input: usize, output: usize) -> Duration {
+/// Run one workload through a scheduler placement; returns the makespan
+/// plus the control-overhead percentiles (loop top → decode-launch
+/// enqueue, µs) — the per-iteration number the zero-allocation loop
+/// budget is about: under interference the CPU-resident placement's
+/// percentiles inflate while the GPU-resident ones hold.
+fn run_makespan(
+    model: &str,
+    placement: Placement,
+    n: usize,
+    input: usize,
+    output: usize,
+) -> (Duration, f64, f64) {
     let dir = artifacts_dir();
     let manifest = ModelManifest::load(&dir.join(model).join("manifest.txt")).expect("manifest");
     let ring = Arc::new(RingBuffer::new(RingConfig {
@@ -72,7 +82,8 @@ fn run_makespan(model: &str, placement: Placement, n: usize, input: usize, outpu
         assert_eq!(ring.slot(i).generated.load(Ordering::Acquire), output as u32);
     }
     sched.drain_and_stop();
-    makespan
+    let (p50, p99) = (sched.stats.loop_iter_p50_us(), sched.stats.loop_iter_p99_us());
+    (makespan, p50, p99)
 }
 
 /// Fig 3: normalized makespan, CPU-resident vs GPU-resident scheduling on
@@ -80,11 +91,21 @@ fn run_makespan(model: &str, placement: Placement, n: usize, input: usize, outpu
 pub fn fig3(out: Option<&std::path::Path>) {
     println!("\n== Figure 3: normalized makespan, GPU- vs CPU-resident scheduling (live, blink-tiny) ==");
     println!("(paper: CPU placement inflates makespan 1.16-1.70x on Qwen3-32B/H100; shape, not absolutes)");
-    println!("{:<14} {:>12} {:>12} {:>8}", "workload", "GPU-res (s)", "CPU-res (s)", "ratio");
-    let mut csv = String::from("workload,gpu_s,cpu_s,ratio\n");
+    println!(
+        "{:<14} {:>12} {:>12} {:>8} {:>22} {:>22}",
+        "workload",
+        "GPU-res (s)",
+        "CPU-res (s)",
+        "ratio",
+        "gpu iter p50/p99 (µs)",
+        "cpu iter p50/p99 (µs)"
+    );
+    let mut csv = String::from(
+        "workload,gpu_s,cpu_s,ratio,gpu_iter_p50_us,gpu_iter_p99_us,cpu_iter_p50_us,cpu_iter_p99_us\n",
+    );
     for (n, i, o) in FIG3_WORKLOADS {
-        let gpu = run_makespan("blink-tiny", Placement::GpuResident, n, i, o);
-        let cpu = run_makespan(
+        let (gpu, gp50, gp99) = run_makespan("blink-tiny", Placement::GpuResident, n, i, o);
+        let (cpu, cp50, cp99) = run_makespan(
             "blink-tiny",
             // Host orchestration sized so its share of step time matches
             // the paper's CPU-resident baseline proportion (~15-30 % of a
@@ -98,13 +119,21 @@ pub fn fig3(out: Option<&std::path::Path>) {
         let ratio = cpu.as_secs_f64() / gpu.as_secs_f64();
         let name = format!("{n}x{i}->{o}");
         println!(
-            "{:<14} {:>12.2} {:>12.2} {:>8.2}",
+            "{:<14} {:>12.2} {:>12.2} {:>8.2} {:>12.1}/{:>8.1} {:>12.1}/{:>8.1}",
             name,
             gpu.as_secs_f64(),
             cpu.as_secs_f64(),
-            ratio
+            ratio,
+            gp50,
+            gp99,
+            cp50,
+            cp99,
         );
-        csv.push_str(&format!("{name},{:.4},{:.4},{ratio:.4}\n", gpu.as_secs_f64(), cpu.as_secs_f64()));
+        csv.push_str(&format!(
+            "{name},{:.4},{:.4},{ratio:.4},{gp50:.2},{gp99:.2},{cp50:.2},{cp99:.2}\n",
+            gpu.as_secs_f64(),
+            cpu.as_secs_f64()
+        ));
     }
     write_out(out, "fig3.csv", &csv);
 }
@@ -299,10 +328,16 @@ pub fn prefix_live(out: Option<&std::path::Path>) {
          fallbacks to full prefill: {}",
         ld(&st.prefix_fallback_full)
     );
+    let (ip50, ip99) = (st.loop_iter_p50_us(), st.loop_iter_p99_us());
+    println!("control overhead per iteration: p50 {ip50:.1} µs   p99 {ip99:.1} µs");
     println!("stats: {}", st.summary());
+    // The iteration-overhead histogram is cumulative over the run, so it
+    // rides on the final (turn 2) row only.
     let csv = format!(
-        "turn,requests,makespan_ms,prefix_hits,hit_tokens,offset_prefill_batches\n\
-         1,{sessions},{:.3},0,0,0\n2,{sessions},{:.3},{hits},{hit_tokens},{offset_batches}\n",
+        "turn,requests,makespan_ms,prefix_hits,hit_tokens,offset_prefill_batches,\
+         loop_iter_p50_us,loop_iter_p99_us\n\
+         1,{sessions},{:.3},0,0,0,,\n\
+         2,{sessions},{:.3},{hits},{hit_tokens},{offset_batches},{ip50:.2},{ip99:.2}\n",
         t1.as_secs_f64() * 1e3,
         t2.as_secs_f64() * 1e3,
     );

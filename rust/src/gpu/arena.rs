@@ -1,0 +1,328 @@
+//! The launch arena: persistent, device-shaped staging planes for graph
+//! launch inputs (paper §4.2 — batch state lives in GPU memory and is
+//! updated *in place*; the host never re-marshals it).
+//!
+//! Before this arena, every control-loop iteration rebuilt four owned
+//! `Vec`s (`block_tables` / `seq_lens` / `tokens` / `offsets`) and moved
+//! them through `LaunchCmd` — per-iteration host-heap churn, exactly the
+//! interference-amplifying orchestration surface the CPU-resident
+//! baseline is supposed to demonstrate and the GPU-resident path is
+//! supposed to avoid. Now the planes are allocated once at spawn, sized
+//! to the widest graph grid, and mutated in place: a steady-state decode
+//! step touches one `seq_lens` slot and one `tokens` slot per lane and
+//! nothing else.
+//!
+//! Two independent *regions* keep interleaved launches from clobbering
+//! each other's persistent state: the **decode** region holds the live
+//! batch (incrementally updated across steps — its `block_tables` rows
+//! are rewritten only when batch membership changes), while the
+//! **prefill** region is fully restaged per prefill launch (prefill
+//! groups are transient by nature). An inline-prefill pause therefore
+//! never invalidates the decode region's incremental state.
+//!
+//! # The epoch / ownership rule (the executor boundary)
+//!
+//! The scheduler thread is the only writer; the executor thread is the
+//! only reader. Each launch follows a strict protocol:
+//!
+//! 1. scheduler stages a region's planes (relaxed stores, in place),
+//! 2. scheduler calls [`LaunchArena::publish`] — a release epoch bump —
+//!    and puts the returned epoch into the `LaunchCmd`,
+//! 3. executor acquire-loads the epoch; a mismatch with the command's
+//!    epoch means the protocol was violated (a second stage before the
+//!    completion poll) and the launch must fail rather than read torn
+//!    inputs,
+//! 4. executor copies the staged extents out of the planes — the one
+//!    copy in the whole launch path, at the device boundary where host
+//!    memory becomes device buffers — and publishes the completion the
+//!    scheduler is polling,
+//! 5. only after that poll returns does the scheduler write again.
+//!
+//! The release/acquire pair on the epoch makes every relaxed plane store
+//! (including untouched rows staged under *earlier* epochs — the whole
+//! point of incremental update) visible to the executor.
+
+use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
+
+/// Which staging region a launch reads. Decode graphs read the decode
+/// region; (offset) prefill graphs read the prefill region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Decode,
+    Prefill,
+}
+
+/// Plane capacities, fixed at spawn from the graph grid.
+#[derive(Debug, Clone, Copy)]
+pub struct ArenaDims {
+    /// Widest decode-graph batch.
+    pub decode_lanes: usize,
+    /// Widest (offset-)prefill-graph batch.
+    pub prefill_lanes: usize,
+    /// Largest `batch × seq` token plane over all prefill graphs.
+    pub prefill_tokens: usize,
+    /// Block-table row width (manifest `max_blocks_per_seq`).
+    pub max_blocks_per_seq: usize,
+}
+
+/// One region's staging planes plus the extents staged for the current
+/// launch (what the executor snapshots and validates against the graph).
+struct RegionPlanes {
+    block_tables: Vec<AtomicI32>,
+    seq_lens: Vec<AtomicI32>,
+    tokens: Vec<AtomicI32>,
+    offsets: Vec<AtomicI32>,
+    staged_bt: AtomicUsize,
+    staged_sl: AtomicUsize,
+    staged_tok: AtomicUsize,
+    staged_off: AtomicUsize,
+}
+
+fn plane(n: usize) -> Vec<AtomicI32> {
+    (0..n).map(|_| AtomicI32::new(0)).collect()
+}
+
+impl RegionPlanes {
+    fn new(lanes: usize, tokens: usize, mbs: usize, with_offsets: bool) -> RegionPlanes {
+        RegionPlanes {
+            block_tables: plane(lanes * mbs),
+            seq_lens: plane(lanes),
+            tokens: plane(tokens),
+            offsets: plane(if with_offsets { lanes } else { 0 }),
+            staged_bt: AtomicUsize::new(0),
+            staged_sl: AtomicUsize::new(0),
+            staged_tok: AtomicUsize::new(0),
+            staged_off: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// The arena itself. See the module docs for the ownership protocol.
+pub struct LaunchArena {
+    dims: ArenaDims,
+    decode: RegionPlanes,
+    prefill: RegionPlanes,
+    epoch: AtomicU64,
+}
+
+impl LaunchArena {
+    pub fn new(dims: ArenaDims) -> LaunchArena {
+        let mbs = dims.max_blocks_per_seq;
+        LaunchArena {
+            dims,
+            // Decode reads one token per lane; offsets never apply.
+            decode: RegionPlanes::new(dims.decode_lanes, dims.decode_lanes, mbs, false),
+            prefill: RegionPlanes::new(dims.prefill_lanes, dims.prefill_tokens, mbs, true),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub fn dims(&self) -> ArenaDims {
+        self.dims
+    }
+
+    fn region(&self, r: Region) -> &RegionPlanes {
+        match r {
+            Region::Decode => &self.decode,
+            Region::Prefill => &self.prefill,
+        }
+    }
+
+    // --- writer (scheduler thread) ------------------------------------
+
+    /// Write one block-table row: the lane's block list, zero-padded to
+    /// the `max_blocks_per_seq` row width (block 0 is never handed out,
+    /// matching `SeqCache::table_row`'s padding convention).
+    pub fn write_block_row(&self, r: Region, row: usize, blocks: &[u32]) {
+        let mbs = self.dims.max_blocks_per_seq;
+        let p = &self.region(r).block_tables[row * mbs..(row + 1) * mbs];
+        for (j, cell) in p.iter().enumerate() {
+            let v = blocks.get(j).map_or(0, |&b| b as i32);
+            cell.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn write_seq_len(&self, r: Region, row: usize, v: i32) {
+        self.region(r).seq_lens[row].store(v, Ordering::Relaxed);
+    }
+
+    /// Write one token at a flat plane index (decode: index = lane;
+    /// prefill: index = lane × grid_seq + position, the row-major layout
+    /// the graphs expect).
+    pub fn write_token(&self, r: Region, idx: usize, v: i32) {
+        self.region(r).tokens[idx].store(v, Ordering::Relaxed);
+    }
+
+    /// Per-lane runtime offset (prefill region only).
+    pub fn write_offset(&self, row: usize, v: i32) {
+        self.prefill.offsets[row].store(v, Ordering::Relaxed);
+    }
+
+    /// Record the extents staged for the next launch. Deliberately set
+    /// by the *planner* from the shape it marshaled — the executor
+    /// validates them against the launched graph's spec, preserving the
+    /// planner-vs-graph cross-check the owned-`Vec` path had.
+    pub fn stage_extents(&self, r: Region, bt: usize, sl: usize, tok: usize, off: usize) {
+        let p = self.region(r);
+        debug_assert!(
+            bt <= p.block_tables.len()
+                && sl <= p.seq_lens.len()
+                && tok <= p.tokens.len()
+                && off <= p.offsets.len(),
+            "staged extents exceed the arena planes"
+        );
+        p.staged_bt.store(bt, Ordering::Relaxed);
+        p.staged_sl.store(sl, Ordering::Relaxed);
+        p.staged_tok.store(tok, Ordering::Relaxed);
+        p.staged_off.store(off, Ordering::Relaxed);
+    }
+
+    /// Release-publish the staged state; the returned epoch goes into
+    /// the `LaunchCmd` (protocol step 2 in the module docs).
+    pub fn publish(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Release) + 1
+    }
+
+    // --- reader (executor thread) -------------------------------------
+
+    /// Acquire-load the current epoch (protocol step 3).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Copy the staged extents into the executor's reusable scratch
+    /// buffers (cleared first; no reallocation once grown to the widest
+    /// grid) — the single copy at the device boundary. The staged
+    /// lengths become the scratch `len()`s, which is what the executors
+    /// feed into `validate_launch_shapes`.
+    pub fn snapshot_into(
+        &self,
+        r: Region,
+        bt: &mut Vec<i32>,
+        sl: &mut Vec<i32>,
+        tok: &mut Vec<i32>,
+        off: &mut Vec<i32>,
+    ) {
+        let p = self.region(r);
+        let copy = |dst: &mut Vec<i32>, src: &[AtomicI32], staged: &AtomicUsize| {
+            dst.clear();
+            let n = staged.load(Ordering::Relaxed);
+            dst.extend(src[..n].iter().map(|c| c.load(Ordering::Relaxed)));
+        };
+        copy(bt, &p.block_tables, &p.staged_bt);
+        copy(sl, &p.seq_lens, &p.staged_sl);
+        copy(tok, &p.tokens, &p.staged_tok);
+        copy(off, &p.offsets, &p.staged_off);
+    }
+
+    /// Worst-case scratch capacities over both regions, for executors to
+    /// pre-reserve their boundary buffers.
+    pub fn scratch_capacities(&self) -> (usize, usize, usize, usize) {
+        (
+            self.decode.block_tables.len().max(self.prefill.block_tables.len()),
+            self.decode.seq_lens.len().max(self.prefill.seq_lens.len()),
+            self.decode.tokens.len().max(self.prefill.tokens.len()),
+            self.prefill.offsets.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> LaunchArena {
+        LaunchArena::new(ArenaDims {
+            decode_lanes: 4,
+            prefill_lanes: 2,
+            prefill_tokens: 2 * 32,
+            max_blocks_per_seq: 3,
+        })
+    }
+
+    #[test]
+    fn staged_rows_round_trip() {
+        let a = arena();
+        a.write_block_row(Region::Decode, 0, &[7, 8]);
+        a.write_block_row(Region::Decode, 1, &[9, 10, 11]);
+        a.write_seq_len(Region::Decode, 0, 17);
+        a.write_seq_len(Region::Decode, 1, 33);
+        a.write_token(Region::Decode, 0, 42);
+        a.write_token(Region::Decode, 1, 43);
+        a.stage_extents(Region::Decode, 2 * 3, 2, 2, 0);
+        let e = a.publish();
+        assert_eq!(e, 1);
+        assert_eq!(a.epoch(), 1);
+
+        let (mut bt, mut sl, mut tok, mut off) = (vec![], vec![], vec![], vec![]);
+        a.snapshot_into(Region::Decode, &mut bt, &mut sl, &mut tok, &mut off);
+        assert_eq!(
+            (bt.len(), sl.len(), tok.len(), off.len()),
+            (6, 2, 2, 0),
+            "scratch lengths are the staged extents"
+        );
+        assert_eq!(bt, vec![7, 8, 0, 9, 10, 11], "rows zero-padded to the table width");
+        assert_eq!(sl, vec![17, 33]);
+        assert_eq!(tok, vec![42, 43]);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn regions_are_independent() {
+        let a = arena();
+        a.write_seq_len(Region::Decode, 0, 5);
+        a.write_token(Region::Decode, 0, 1);
+        a.stage_extents(Region::Decode, 3, 1, 1, 0);
+        a.publish();
+
+        // A prefill launch staged in between must not disturb the decode
+        // region's persistent rows.
+        a.write_seq_len(Region::Prefill, 0, 64);
+        for i in 0..32 {
+            a.write_token(Region::Prefill, i, i as i32);
+        }
+        a.write_offset(0, 16);
+        a.stage_extents(Region::Prefill, 3, 1, 32, 1);
+        a.publish();
+
+        let (mut bt, mut sl, mut tok, mut off) = (vec![], vec![], vec![], vec![]);
+        a.snapshot_into(Region::Prefill, &mut bt, &mut sl, &mut tok, &mut off);
+        assert_eq!(sl, vec![64]);
+        assert_eq!(tok.len(), 32);
+        assert_eq!(off, vec![16]);
+        a.snapshot_into(Region::Decode, &mut bt, &mut sl, &mut tok, &mut off);
+        assert_eq!(sl, vec![5], "decode region untouched by the prefill stage");
+        assert_eq!(tok, vec![1]);
+    }
+
+    #[test]
+    fn epoch_increments_per_publish() {
+        let a = arena();
+        assert_eq!(a.epoch(), 0);
+        assert_eq!(a.publish(), 1);
+        assert_eq!(a.publish(), 2);
+        assert_eq!(a.epoch(), 2);
+    }
+
+    #[test]
+    fn snapshot_reuses_scratch_capacity() {
+        let a = arena();
+        let (cb, cs, ct, co) = a.scratch_capacities();
+        let mut bt = Vec::with_capacity(cb);
+        let mut sl = Vec::with_capacity(cs);
+        let mut tok = Vec::with_capacity(ct);
+        let mut off = Vec::with_capacity(co);
+        a.stage_extents(Region::Prefill, 2 * 3, 2, 2 * 32, 2);
+        a.publish();
+        a.snapshot_into(Region::Prefill, &mut bt, &mut sl, &mut tok, &mut off);
+        let caps = (bt.capacity(), sl.capacity(), tok.capacity(), off.capacity());
+        a.stage_extents(Region::Decode, 4 * 3, 4, 4, 0);
+        a.publish();
+        a.snapshot_into(Region::Decode, &mut bt, &mut sl, &mut tok, &mut off);
+        assert_eq!(
+            caps,
+            (bt.capacity(), sl.capacity(), tok.capacity(), off.capacity()),
+            "boundary copies never grow the scratch past the widest grid"
+        );
+    }
+}

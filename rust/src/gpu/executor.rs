@@ -1,9 +1,18 @@
 //! The graph executor: models the GPU's SMs running pre-captured
 //! inference graphs. Owns the (!Send) PJRT [`Engine`] on a dedicated
 //! thread; receives fire-and-forget launch commands from the persistent
-//! scheduler and publishes sampled tokens into a polled
-//! [`CompletionBuffer`] — never a callback, matching the paper's
-//! completion-detection design.
+//! scheduler through a single-slot [`Doorbell`] and publishes sampled
+//! tokens into a polled [`CompletionBuffer`] — never a callback, matching
+//! the paper's completion-detection design.
+//!
+//! A [`LaunchCmd`] carries no input data. Inputs live in the scheduler's
+//! persistent [`LaunchArena`] (staged in place, see `gpu::arena`); the
+//! command names the graph plus the arena epoch its inputs were published
+//! under. This boundary is where the one copy in the launch path happens:
+//! the executor snapshots the staged planes into its reusable boundary
+//! scratch (and, on the real engine, from there into device buffers) —
+//! once per launch, not once per pipeline hop, and allocation-free after
+//! the scratch has grown to the widest grid.
 //!
 //! Two backends behind one doorbell:
 //!
@@ -18,27 +27,34 @@
 //!   tests and `blink eval prefix-live` run the full pipeline on any
 //!   machine.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use crate::devsim::CompletionBuffer;
+use crate::devsim::{CompletionBuffer, Doorbell};
+use crate::gpu::arena::{LaunchArena, Region};
 use crate::graphs::{GraphCache, GraphId, GraphKind};
 use crate::runtime::{Engine, ModelManifest};
 
-/// One launch: everything the graph needs, plus the completion buffer the
-/// scheduler will poll. `offsets` is per-lane cached-prefix lengths for
-/// offset prefill graphs (empty for every other kind); `reset_kv`
-/// supports benchmark phase boundaries.
+/// One launch: the graph to run, the arena holding its staged inputs,
+/// the epoch those inputs were published under (the executor refuses a
+/// stale epoch rather than read torn inputs — see `gpu::arena`'s
+/// ownership rule), and the completion buffer the scheduler will poll.
 pub struct LaunchCmd {
     pub graph: GraphId,
-    pub block_tables: Vec<i32>,
-    pub seq_lens: Vec<i32>,
-    pub tokens: Vec<i32>,
-    pub offsets: Vec<i32>,
+    pub arena: Arc<LaunchArena>,
+    pub epoch: u64,
     pub seed: u32,
     pub completion: Arc<CompletionBuffer>,
-    pub reset_kv: bool,
+}
+
+impl LaunchCmd {
+    /// Which arena region this launch reads, from the graph kind.
+    pub fn region(kind: GraphKind) -> Region {
+        match kind {
+            GraphKind::Decode => Region::Decode,
+            GraphKind::Prefill | GraphKind::PrefillOffset => Region::Prefill,
+        }
+    }
 }
 
 /// Cost profile for the modeled executor, in microseconds (charged by
@@ -65,10 +81,54 @@ impl ModeledCost {
     }
 }
 
+/// Reusable boundary buffers: the staged planes are copied here once per
+/// launch. Capacities grow to the widest grid during warmup and then
+/// never change — the executor thread is allocation-free in steady state.
+#[derive(Default)]
+struct BoundaryScratch {
+    block_tables: Vec<i32>,
+    seq_lens: Vec<i32>,
+    tokens: Vec<i32>,
+    offsets: Vec<i32>,
+    /// Sampled-token staging for the completion publish.
+    out: Vec<u32>,
+}
+
+impl BoundaryScratch {
+    fn with_capacity(bt: usize, sl: usize, tok: usize, off: usize) -> BoundaryScratch {
+        BoundaryScratch {
+            block_tables: Vec::with_capacity(bt),
+            seq_lens: Vec::with_capacity(sl),
+            tokens: Vec::with_capacity(tok),
+            offsets: Vec::with_capacity(off),
+            out: Vec::with_capacity(sl),
+        }
+    }
+
+    /// Protocol steps 3+4 (see `gpu::arena`): check the epoch, then copy
+    /// the staged extents out of the arena.
+    fn snapshot(&mut self, cmd: &LaunchCmd, kind: GraphKind) -> Result<(), String> {
+        let seen = cmd.arena.epoch();
+        if seen != cmd.epoch {
+            return Err(format!(
+                "stale launch epoch: command {} vs arena {seen} (staged before poll?)",
+                cmd.epoch
+            ));
+        }
+        cmd.arena.snapshot_into(
+            LaunchCmd::region(kind),
+            &mut self.block_tables,
+            &mut self.seq_lens,
+            &mut self.tokens,
+            &mut self.offsets,
+        );
+        Ok(())
+    }
+}
+
 /// Handle to the executor thread.
 pub struct Executor {
-    tx: Sender<LaunchCmd>,
-    alive: Arc<AtomicBool>,
+    bell: Arc<Doorbell<LaunchCmd>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -78,10 +138,9 @@ impl Executor {
     /// load errors synchronously — this is host-assisted initialization,
     /// the one phase where the host is allowed on the path.
     pub fn spawn(artifacts: std::path::PathBuf, model: String) -> anyhow::Result<Executor> {
-        let (tx, rx) = channel::<LaunchCmd>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let alive = Arc::new(AtomicBool::new(true));
-        let alive2 = alive.clone();
+        let bell = Arc::new(Doorbell::<LaunchCmd>::new());
+        let bell2 = bell.clone();
         let handle = std::thread::Builder::new()
             .name("gpu-executor".into())
             .spawn(move || {
@@ -95,31 +154,26 @@ impl Executor {
                         return;
                     }
                 };
-                while let Ok(cmd) = rx.recv() {
-                    if !alive2.load(Ordering::Acquire) {
-                        break;
-                    }
-                    if cmd.reset_kv {
-                        if engine.reset_kv().is_err() {
-                            cmd.completion.fail();
-                            continue;
-                        }
-                        if cmd.tokens.is_empty() {
-                            cmd.completion.publish(&[]);
-                            continue;
-                        }
+                let mut scratch = BoundaryScratch::default();
+                while let Some(cmd) = bell2.recv() {
+                    let kind = engine.cache.spec(cmd.graph).kind;
+                    if let Err(e) = scratch.snapshot(&cmd, kind) {
+                        eprintln!("executor: {e}");
+                        cmd.completion.fail();
+                        continue;
                     }
                     match engine.execute(
                         cmd.graph,
-                        &cmd.block_tables,
-                        &cmd.seq_lens,
-                        &cmd.tokens,
-                        &cmd.offsets,
+                        &scratch.block_tables,
+                        &scratch.seq_lens,
+                        &scratch.tokens,
+                        &scratch.offsets,
                         cmd.seed,
                     ) {
                         Ok(tokens) => {
-                            let toks: Vec<u32> = tokens.iter().map(|t| *t as u32).collect();
-                            cmd.completion.publish(&toks);
+                            scratch.out.clear();
+                            scratch.out.extend(tokens.iter().map(|t| *t as u32));
+                            cmd.completion.publish(&scratch.out);
                         }
                         Err(e) => {
                             eprintln!("executor: graph execution failed: {e:#}");
@@ -129,39 +183,38 @@ impl Executor {
                 }
             })?;
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Executor { tx, alive, handle: Some(handle) }),
+            Ok(Ok(())) => Ok(Executor { bell, handle: Some(handle) }),
             Ok(Err(e)) => anyhow::bail!("engine load failed: {e}"),
             Err(_) => anyhow::bail!("executor thread died during load"),
         }
     }
 
     /// Spawn a *modeled* executor over the manifest's graph grid: the
-    /// same launch/poll protocol and the same shape validation as the
-    /// real engine, with deterministic token generation instead of PJRT
-    /// execution. Tokens never equal the manifest's EOS, so a lane always
-    /// runs to its `max_new` budget — which is what makes scheduler-level
-    /// assertions (batch counts, offset-graph launches) reproducible.
+    /// same doorbell/poll protocol, the same arena-boundary snapshot and
+    /// the same shape validation as the real engine, with deterministic
+    /// token generation instead of PJRT execution. Tokens never equal the
+    /// manifest's EOS, so a lane always runs to its `max_new` budget —
+    /// which is what makes scheduler-level assertions (batch counts,
+    /// offset-graph launches) reproducible.
     pub fn spawn_modeled(manifest: &ModelManifest, cost: ModeledCost) -> Executor {
         let cache = crate::gpu::scheduler::cache_from_manifest(manifest);
         let max_blocks = manifest.max_blocks_per_seq;
         let vocab = manifest.vocab_size.max(2) as u32;
         let eos = manifest.eos_token;
-        let (tx, rx) = channel::<LaunchCmd>();
-        let alive = Arc::new(AtomicBool::new(true));
-        let alive2 = alive.clone();
+        let bell = Arc::new(Doorbell::<LaunchCmd>::new());
+        let bell2 = bell.clone();
+        // Pre-reserve the boundary scratch to the grid's widest shapes so
+        // even the first launches never grow it mid-run.
+        let max_b = cache.specs().iter().map(|s| s.batch).max().unwrap_or(1).max(1);
+        let max_tok = cache.max_launch_tokens().max(max_b);
         let handle = std::thread::Builder::new()
             .name("gpu-executor-modeled".into())
             .spawn(move || {
-                while let Ok(cmd) = rx.recv() {
-                    if !alive2.load(Ordering::Acquire) {
-                        break;
-                    }
-                    if cmd.reset_kv && cmd.tokens.is_empty() {
-                        cmd.completion.publish(&[]);
-                        continue;
-                    }
-                    match modeled_step(&cache, max_blocks, vocab, eos, cost, &cmd) {
-                        Ok(toks) => cmd.completion.publish(&toks),
+                let mut scratch =
+                    BoundaryScratch::with_capacity(max_b * max_blocks, max_b, max_tok, max_b);
+                while let Some(cmd) = bell2.recv() {
+                    match modeled_step(&cache, max_blocks, vocab, eos, cost, &cmd, &mut scratch) {
+                        Ok(()) => cmd.completion.publish(&scratch.out),
                         Err(e) => {
                             eprintln!("modeled executor: {e}");
                             cmd.completion.fail();
@@ -170,26 +223,27 @@ impl Executor {
                 }
             })
             .expect("spawn modeled executor");
-        Executor { tx, alive, handle: Some(handle) }
+        Executor { bell, handle: Some(handle) }
     }
 
-    /// Fire-and-forget launch: returns immediately; the caller polls the
-    /// completion buffer it passed in.
+    /// Fire-and-forget launch: ring the doorbell and return immediately;
+    /// the caller polls the completion buffer it passed in. Allocation-
+    /// free — the single-slot doorbell has no queue to grow.
     pub fn launch(&self, cmd: LaunchCmd) {
-        let _ = self.tx.send(cmd);
+        // After shutdown the ring is a dropped no-op; nothing launches
+        // and nothing is polled, so ignoring the result is safe.
+        let _ = self.bell.ring(cmd);
     }
 
     pub fn shutdown(&mut self) {
-        self.alive.store(false, Ordering::Release);
-        // Unblock recv with a no-op command if needed: dropping tx suffices
-        // when Executor drops; explicit shutdown just marks the flag.
+        self.bell.close();
     }
 }
 
-/// One modeled launch: validate shapes with the *same* checker
+/// One modeled launch: validate the staged shapes with the *same* checker
 /// `Engine::execute` applies (`GraphSpec::validate_launch_shapes` — one
 /// implementation, no drift), charge the modeled cost, emit one
-/// deterministic non-EOS token per lane.
+/// deterministic non-EOS token per lane into `scratch.out`.
 fn modeled_step(
     cache: &GraphCache,
     max_blocks: usize,
@@ -197,20 +251,22 @@ fn modeled_step(
     eos: u32,
     cost: ModeledCost,
     cmd: &LaunchCmd,
-) -> Result<Vec<u32>, String> {
+    scratch: &mut BoundaryScratch,
+) -> Result<(), String> {
     let spec = cache.spec(cmd.graph);
     let b = spec.batch;
+    scratch.snapshot(cmd, spec.kind)?;
     spec.validate_launch_shapes(
         max_blocks,
-        cmd.block_tables.len(),
-        cmd.seq_lens.len(),
-        cmd.tokens.len(),
-        cmd.offsets.len(),
+        scratch.block_tables.len(),
+        scratch.seq_lens.len(),
+        scratch.tokens.len(),
+        scratch.offsets.len(),
     )?;
     if spec.kind == GraphKind::PrefillOffset {
         // An offset beyond its lane's length would put the KV write
         // window outside the sequence — a marshalling bug upstream.
-        for (i, (&off, &len)) in cmd.offsets.iter().zip(&cmd.seq_lens).enumerate() {
+        for (i, (&off, &len)) in scratch.offsets.iter().zip(&scratch.seq_lens).enumerate() {
             if off < 0 || off >= len {
                 return Err(format!("{}: lane {i} offset {off} not in 0..{len}", spec.name));
             }
@@ -227,15 +283,14 @@ fn modeled_step(
     };
     crate::devsim::spin_us(us);
 
-    let toks = (0..b)
-        .map(|lane| {
-            let h = mix64((cmd.seed as u64) ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            let r = (h % (vocab as u64 - 1)) as u32;
-            // Skip EOS so modeled lanes always run their full budget.
-            if r >= eos { r + 1 } else { r }
-        })
-        .collect();
-    Ok(toks)
+    scratch.out.clear();
+    scratch.out.extend((0..b).map(|lane| {
+        let h = mix64((cmd.seed as u64) ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let r = (h % (vocab as u64 - 1)) as u32;
+        // Skip EOS so modeled lanes always run their full budget.
+        if r >= eos { r + 1 } else { r }
+    }));
+    Ok(())
 }
 
 fn mix64(mut x: u64) -> u64 {
@@ -248,11 +303,7 @@ fn mix64(mut x: u64) -> u64 {
 
 impl Drop for Executor {
     fn drop(&mut self) {
-        self.alive.store(false, Ordering::Release);
-        // Close the channel, then join.
-        let (dead_tx, _) = channel();
-        let tx = std::mem::replace(&mut self.tx, dead_tx);
-        drop(tx);
+        self.bell.close();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }

@@ -88,4 +88,13 @@ impl Completions {
         self.epoch = self.buffer.epoch();
         res
     }
+
+    /// Allocation-free poll: block until the next epoch's `n` tokens
+    /// arrive and write them into the caller's scratch (cleared first).
+    /// Returns false when the executor failed the launch.
+    pub fn poll_into(&mut self, n: usize, out: &mut Vec<u32>) -> bool {
+        let ok = self.buffer.poll_wait_into(self.epoch, n, out);
+        self.epoch = self.buffer.epoch();
+        ok
+    }
 }

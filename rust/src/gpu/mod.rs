@@ -23,6 +23,7 @@
 //! host round-trip through `crate::hostsim`'s interference-sensitive
 //! orchestrator.
 
+pub mod arena;
 pub mod executor;
 pub mod launcher;
 pub mod planner;
@@ -30,6 +31,7 @@ pub mod policy;
 pub mod scheduler;
 pub mod stats;
 
+pub use arena::{ArenaDims, LaunchArena};
 pub use executor::{Executor, LaunchCmd, ModeledCost};
 pub use policy::{AdmissionPolicy, Candidate, PolicyKind};
 pub use scheduler::{Placement, PrefixReuse, Scheduler, SchedulerConfig};

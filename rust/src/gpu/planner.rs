@@ -3,12 +3,35 @@
 //! fit the AOT graph grid (full or *offset* prefill — see
 //! [`PrefillGroup::offset`]), orders those groups so a prefix-sharing
 //! group never launches before the group that prefills its shared blocks
-//! (stage 3b's dependency order), and marshals live decode lanes into
-//! decode launch inputs — the pure data-marshalling logic that used to be
-//! inlined in `SchedulerCore::admit_and_prefill` / `decode_step`. Pure
-//! functions of their inputs: no ring, no executor, no clock — which is
-//! what makes this stage unit-testable without artifacts.
+//! (stage 3b's dependency order), and marshals launch inputs.
+//!
+//! Marshalling has two implementations:
+//!
+//! * the **arena path** ([`BatchPlanner::stage_decode`] /
+//!   [`BatchPlanner::stage_prefill`]) — the production path: inputs are
+//!   staged in place into the planner's persistent
+//!   [`LaunchArena`](crate::gpu::arena::LaunchArena), allocation-free in
+//!   steady state. A decode step bumps each live lane's `seq_len` and
+//!   rewrites its `last_token`; `block_tables` rows are rewritten only
+//!   when batch membership changed since the previous step
+//!   ([`BatchPlanner::mark_decode_dirty`]) — the whole block span is
+//!   reserved at admission, so a lane's table row is immutable for its
+//!   lifetime and crossing a block boundary needs no row update.
+//! * the **rebuild path** ([`BatchPlanner::decode_inputs`] /
+//!   [`BatchPlanner::prefill_inputs`]) — the pre-arena behavior, one
+//!   fresh `Vec` quartet per launch. Kept as the baseline the
+//!   `decode_hotloop` bench compares against and as the
+//!   reference implementation the arena-equivalence property pins the
+//!   arena path to.
+//!
+//! Grouping and the rebuild path are pure functions of their inputs: no
+//! ring, no executor, no clock — which is what makes this stage
+//! unit-testable without artifacts.
 
+use std::sync::Arc;
+
+use crate::gpu::arena::{ArenaDims, LaunchArena, Region};
+use crate::graphs::GraphCache;
 use crate::kvcache::SeqCache;
 
 /// One decode lane: a request that finished prefill and is generating.
@@ -56,8 +79,11 @@ pub struct PrefillGroup {
     pub seqs: Vec<PrefillSeq>,
 }
 
-/// Device-shaped launch inputs (what `LaunchCmd` carries). `offsets` is
-/// populated only for offset groups (empty otherwise).
+/// Device-shaped launch inputs as owned `Vec`s — the rebuild path's
+/// output (what `LaunchCmd` carried before the arena; today the bench
+/// baseline and the reference the arena path is property-tested
+/// against). `offsets` is populated only for offset groups (empty
+/// otherwise).
 pub struct LaunchInputs {
     pub block_tables: Vec<i32>,
     pub seq_lens: Vec<i32>,
@@ -76,9 +102,24 @@ pub struct BatchPlanner {
     /// Manifest `block_size` (maps a cached-prefix token count to the
     /// shared block span for dependency ordering).
     pub block_size: usize,
+    /// The persistent staging planes the production marshal path writes
+    /// in place (shared with the executor, which snapshots them at the
+    /// device boundary).
+    arena: Arc<LaunchArena>,
+    /// Decode grid width the arena's decode region was last *fully*
+    /// synced for — 0 ("dirty") whenever batch membership changed, which
+    /// forces the next [`BatchPlanner::stage_decode`] to rewrite every
+    /// row (block tables included) instead of the incremental per-step
+    /// touch.
+    decode_synced_grid: usize,
 }
 
 impl BatchPlanner {
+    /// Grouping/rebuild-path constructor (unit tests and benches): the
+    /// staging arena is minimally sized, so only [`Self::group_prefills`]
+    /// / [`Self::decode_inputs`] / [`Self::prefill_inputs`] may be used.
+    /// The scheduler builds planners with [`Self::for_cache`], which
+    /// sizes the arena to the graph grid.
     pub fn new(
         max_prefill_batch: usize,
         max_prefill_offset_batch: usize,
@@ -90,7 +131,150 @@ impl BatchPlanner {
             max_prefill_offset_batch,
             max_blocks_per_seq,
             block_size,
+            arena: Arc::new(LaunchArena::new(ArenaDims {
+                decode_lanes: 1,
+                prefill_lanes: max_prefill_batch.max(max_prefill_offset_batch).max(1),
+                prefill_tokens: 1,
+                max_blocks_per_seq,
+            })),
+            decode_synced_grid: 0,
         }
+    }
+
+    /// Production constructor: plane capacities are the widest shapes in
+    /// the graph grid, allocated once here and mutated in place for the
+    /// scheduler's lifetime.
+    pub fn for_cache(cache: &GraphCache, max_blocks_per_seq: usize, block_size: usize) -> Self {
+        BatchPlanner {
+            max_prefill_batch: cache.max_prefill_batch(),
+            max_prefill_offset_batch: cache.max_prefill_offset_batch(),
+            max_blocks_per_seq,
+            block_size,
+            arena: Arc::new(LaunchArena::new(ArenaDims {
+                decode_lanes: cache.max_decode_batch().max(1),
+                prefill_lanes: cache
+                    .max_prefill_batch()
+                    .max(cache.max_prefill_offset_batch())
+                    .max(1),
+                prefill_tokens: cache.max_launch_tokens().max(1),
+                max_blocks_per_seq,
+            })),
+            decode_synced_grid: 0,
+        }
+    }
+
+    /// The shared staging planes (an `Arc` clone — no allocation), for
+    /// embedding into each `LaunchCmd`.
+    pub fn arena(&self) -> Arc<LaunchArena> {
+        self.arena.clone()
+    }
+
+    /// Batch membership changed (admit / retire / failure teardown):
+    /// the next [`Self::stage_decode`] must rewrite every decode row —
+    /// `swap_remove` moved a tail lane into a retired lane's row, new
+    /// lanes appended rows, and ghost rows must re-replicate lane 0.
+    pub fn mark_decode_dirty(&mut self) {
+        self.decode_synced_grid = 0;
+    }
+
+    /// Stage the live decode batch into the arena's decode region and
+    /// publish it; returns the launch epoch for the `LaunchCmd`.
+    ///
+    /// Steady state (same membership, same grid as the previous step)
+    /// touches exactly `grid_batch` `seq_lens` slots and `grid_batch`
+    /// `tokens` slots — the in-place "bump `seq_len`, write
+    /// `last_token`" update of the paper's GPU-resident batch state.
+    /// Block-table rows are written only on a full sync: a lane's
+    /// reservation is fixed at admission, so its row never changes while
+    /// it lives, and ghost rows (grid wider than the batch) replicate
+    /// lane 0, whose identity is stable between membership changes.
+    pub fn stage_decode(&mut self, lanes: &[Lane], grid_batch: usize) -> u64 {
+        debug_assert!(!lanes.is_empty() && lanes.len() <= grid_batch);
+        assert!(
+            grid_batch <= self.arena.dims().decode_lanes,
+            "staging a {grid_batch}-wide decode batch on an arena sized for {} lanes — \
+             planners built with BatchPlanner::new are rebuild-path only; use for_cache",
+            self.arena.dims().decode_lanes
+        );
+        let a = &self.arena;
+        if self.decode_synced_grid != grid_batch {
+            for (i, l) in lanes.iter().enumerate() {
+                a.write_block_row(Region::Decode, i, &l.cache.blocks);
+            }
+            for g in lanes.len()..grid_batch {
+                a.write_block_row(Region::Decode, g, &lanes[0].cache.blocks);
+            }
+            a.stage_extents(
+                Region::Decode,
+                grid_batch * self.max_blocks_per_seq,
+                grid_batch,
+                grid_batch,
+                0,
+            );
+            self.decode_synced_grid = grid_batch;
+        }
+        for (i, l) in lanes.iter().enumerate() {
+            a.write_seq_len(Region::Decode, i, l.cache.cached_len as i32);
+            a.write_token(Region::Decode, i, l.last_token);
+        }
+        // Ghost lanes perform the same (benign, identical) KV write as
+        // lane 0, so their position must track lane 0's every step.
+        for g in lanes.len()..grid_batch {
+            a.write_seq_len(Region::Decode, g, lanes[0].cache.cached_len as i32);
+            a.write_token(Region::Decode, g, lanes[0].last_token);
+        }
+        a.publish()
+    }
+
+    /// Stage one prefill group into the arena's prefill region for a
+    /// `(grid_batch, grid_seq)` graph and publish it; returns the launch
+    /// epoch. Prefill groups are transient, so the whole region is
+    /// restaged per launch (still allocation-free: the planes persist).
+    /// Semantics mirror [`Self::prefill_inputs`]: suffix-only tokens,
+    /// full-length `seq_lens`, ghost lanes replicating lane 0, per-lane
+    /// runtime offsets for offset groups.
+    pub fn stage_prefill(&self, group: &PrefillGroup, grid_batch: usize, grid_seq: usize) -> u64 {
+        let b_actual = group.seqs.len();
+        debug_assert!(b_actual > 0 && b_actual <= grid_batch);
+        let dims = self.arena.dims();
+        assert!(
+            grid_batch <= dims.prefill_lanes && grid_batch * grid_seq <= dims.prefill_tokens,
+            "staging a ({grid_batch}, {grid_seq}) prefill on an arena sized for {} lanes / {} \
+             tokens — planners built with BatchPlanner::new are rebuild-path only; use for_cache",
+            dims.prefill_lanes,
+            dims.prefill_tokens
+        );
+        let a = &self.arena;
+        let stage_row = |row: usize, s: &PrefillSeq| {
+            let suffix = &s.prompt[s.cached_prefix.min(s.prompt.len())..];
+            debug_assert!(suffix.len() <= grid_seq, "suffix exceeds prefill grid");
+            a.write_block_row(Region::Prefill, row, &s.cache.blocks);
+            a.write_seq_len(Region::Prefill, row, s.prompt.len() as i32);
+            let base = row * grid_seq;
+            for (j, &t) in suffix.iter().enumerate() {
+                a.write_token(Region::Prefill, base + j, t);
+            }
+            for j in suffix.len()..grid_seq {
+                a.write_token(Region::Prefill, base + j, 0);
+            }
+            if group.offset {
+                a.write_offset(row, s.cached_prefix as i32);
+            }
+        };
+        for (i, s) in group.seqs.iter().enumerate() {
+            stage_row(i, s);
+        }
+        for g in b_actual..grid_batch {
+            stage_row(g, &group.seqs[0]);
+        }
+        a.stage_extents(
+            Region::Prefill,
+            grid_batch * self.max_blocks_per_seq,
+            grid_batch,
+            grid_batch * grid_seq,
+            if group.offset { grid_batch } else { 0 },
+        );
+        a.publish()
     }
 
     /// Group admitted sequences into prefill launches, in shared-block
@@ -226,7 +410,9 @@ impl BatchPlanner {
         groups
     }
 
-    /// Marshal one prefill group for a `(grid_batch, grid_seq)` graph.
+    /// Rebuild-path marshal (see module docs; the scheduler uses
+    /// [`Self::stage_prefill`]): one prefill group for a
+    /// `(grid_batch, grid_seq)` graph, as freshly allocated `Vec`s.
     /// Ghost lanes (grid wider than the group) replicate lane 0 —
     /// identical writes are benign, outputs ignored. Offset groups also
     /// carry per-lane runtime offsets (the block-aligned cached-prefix
@@ -270,8 +456,9 @@ impl BatchPlanner {
         LaunchInputs { block_tables, seq_lens, tokens, offsets }
     }
 
-    /// Marshal the live decode lanes for a `grid_batch`-wide decode
-    /// graph, ghost lanes replicating lane 0.
+    /// Rebuild-path marshal (see module docs; the scheduler uses
+    /// [`Self::stage_decode`]): the live decode lanes for a
+    /// `grid_batch`-wide decode graph, ghost lanes replicating lane 0.
     pub fn decode_inputs(&self, lanes: &[Lane], grid_batch: usize) -> LaunchInputs {
         let mbs = self.max_blocks_per_seq;
         debug_assert!(!lanes.is_empty() && lanes.len() <= grid_batch);
@@ -431,6 +618,171 @@ mod tests {
         assert_eq!(li.seq_lens, vec![7, 9, 7, 7]);
         assert_eq!(li.block_tables.len(), 4 * 4);
         assert!(li.offsets.is_empty());
+    }
+
+    /// Toy grid for the staging-path tests: decode up to 4 lanes,
+    /// prefill/offset up to (2, 32).
+    fn staged_planner() -> BatchPlanner {
+        use crate::graphs::{GraphId, GraphKind, GraphSpec};
+        let mut specs = vec![];
+        let mut id = 0;
+        for b in [1usize, 2, 4] {
+            specs.push(GraphSpec {
+                id: GraphId(id),
+                name: format!("decode_b{b}"),
+                kind: GraphKind::Decode,
+                batch: b,
+                seq: 0,
+            });
+            id += 1;
+        }
+        for b in [1usize, 2] {
+            for s in [16usize, 32] {
+                for (kind, tag) in
+                    [(GraphKind::Prefill, "prefill"), (GraphKind::PrefillOffset, "prefill_offset")]
+                {
+                    specs.push(GraphSpec {
+                        id: GraphId(id),
+                        name: format!("{tag}_b{b}_s{s}"),
+                        kind,
+                        batch: b,
+                        seq: s,
+                    });
+                    id += 1;
+                }
+            }
+        }
+        BatchPlanner::for_cache(&GraphCache::new(specs), 4, 16)
+    }
+
+    fn snapshot(p: &BatchPlanner, region: Region) -> LaunchInputs {
+        let (mut bt, mut sl, mut tok, mut off) = (vec![], vec![], vec![], vec![]);
+        p.arena().snapshot_into(region, &mut bt, &mut sl, &mut tok, &mut off);
+        LaunchInputs { block_tables: bt, seq_lens: sl, tokens: tok, offsets: off }
+    }
+
+    fn mk_lane(slot: usize, blocks: Vec<u32>, cached_len: usize, last_token: i32) -> Lane {
+        Lane {
+            slot,
+            cache: SeqCache { blocks, cached_len, prefix_len: 0 },
+            generated: 1,
+            max_new: 64,
+            last_token,
+        }
+    }
+
+    /// The arena path must marshal byte-identically to the rebuild path
+    /// — full sync, then incremental steps, then a membership change —
+    /// across decode and (offset) prefill launches. This is the
+    /// equivalence that lets the scheduler switch marshal paths without
+    /// changing which graphs launch with which logical inputs.
+    #[test]
+    fn prop_arena_staging_matches_rebuild_path() {
+        run_prop("arena-vs-rebuild", 0xA2E, 100, |rng: &mut Rng| {
+            let mut p = staged_planner();
+            let mut next_block = 1u32;
+            let mut lanes: Vec<Lane> = (0..1 + rng.below(4) as usize)
+                .map(|i| {
+                    let nb = 1 + rng.below(4) as usize;
+                    let blocks: Vec<u32> = (next_block..next_block + nb as u32).collect();
+                    next_block += nb as u32;
+                    mk_lane(i, blocks, 1 + rng.below(60) as usize, rng.below(2048) as i32)
+                })
+                .collect();
+            let grid = lanes.len().next_power_of_two();
+
+            // Full sync (first step after a membership change).
+            p.mark_decode_dirty();
+            let e1 = p.stage_decode(&lanes, grid);
+            let want = p.decode_inputs(&lanes, grid);
+            let got = snapshot(&p, Region::Decode);
+            assert_eq!(got.block_tables, want.block_tables);
+            assert_eq!(got.seq_lens, want.seq_lens);
+            assert_eq!(got.tokens, want.tokens);
+            assert!(got.offsets.is_empty());
+
+            // Incremental steps: bump state in place, stage again — the
+            // arena must track without a block-table rewrite.
+            for _ in 0..3 {
+                for l in lanes.iter_mut() {
+                    l.cache.cached_len += 1;
+                    l.last_token = rng.below(2048) as i32;
+                }
+                let e = p.stage_decode(&lanes, grid);
+                assert!(e > e1, "every step publishes a fresh epoch");
+                let want = p.decode_inputs(&lanes, grid);
+                let got = snapshot(&p, Region::Decode);
+                assert_eq!(got.seq_lens, want.seq_lens, "incremental seq_len bump");
+                assert_eq!(got.tokens, want.tokens, "incremental last_token write");
+                assert_eq!(got.block_tables, want.block_tables, "rows persist untouched");
+            }
+
+            // Membership change: swap_remove a lane, mark dirty, restage.
+            if lanes.len() > 1 {
+                let victim = rng.below(lanes.len() as u64) as usize;
+                lanes.swap_remove(victim);
+                p.mark_decode_dirty();
+                let grid = lanes.len().next_power_of_two();
+                p.stage_decode(&lanes, grid);
+                let want = p.decode_inputs(&lanes, grid);
+                let got = snapshot(&p, Region::Decode);
+                assert_eq!(got.block_tables, want.block_tables, "full resync after retire");
+                assert_eq!(got.seq_lens, want.seq_lens);
+                assert_eq!(got.tokens, want.tokens);
+            }
+
+            // Prefill group (randomly offset or cold) through both paths.
+            let offset = rng.below(2) == 0;
+            let cached = if offset { 16 } else { 0 };
+            let s_len = cached + 1 + rng.below(16) as usize;
+            let mut s = seq(9, s_len, 16);
+            s.cached_prefix = cached;
+            s.cache.blocks = vec![30, 31, 32];
+            let group = PrefillGroup { padded: 16, offset, seqs: vec![s] };
+            p.stage_prefill(&group, 2, 16);
+            let want = p.prefill_inputs(&group, 2, 16);
+            let got = snapshot(&p, Region::Prefill);
+            assert_eq!(got.block_tables, want.block_tables);
+            assert_eq!(got.seq_lens, want.seq_lens);
+            assert_eq!(got.tokens, want.tokens);
+            assert_eq!(got.offsets, want.offsets);
+        });
+    }
+
+    /// Steady-state staging leaves block-table rows alone: overwrite the
+    /// arena's decode rows out-of-band, stage incrementally (rows must
+    /// keep the sentinel), then mark dirty (rows must be rewritten).
+    #[test]
+    fn stage_decode_touches_block_tables_only_when_dirty() {
+        let mut p = staged_planner();
+        let lanes = vec![mk_lane(0, vec![5, 6], 10, 41), mk_lane(1, vec![7], 11, 42)];
+        p.stage_decode(&lanes, 2); // initial full sync
+        let arena = p.arena();
+        arena.write_block_row(Region::Decode, 0, &[999]); // sentinel
+        p.stage_decode(&lanes, 2); // incremental: must not rewrite rows
+        let got = snapshot(&p, Region::Decode);
+        assert_eq!(&got.block_tables[..4], &[999, 0, 0, 0], "row untouched in steady state");
+        p.mark_decode_dirty();
+        p.stage_decode(&lanes, 2);
+        let got = snapshot(&p, Region::Decode);
+        assert_eq!(&got.block_tables[..4], &[5, 6, 0, 0], "dirty forces the full rewrite");
+    }
+
+    /// A grid-width change (batch crossed a decode-graph boundary) also
+    /// forces a full resync, so freshly exposed ghost rows never carry a
+    /// previous launch's stale tables.
+    #[test]
+    fn stage_decode_resyncs_on_grid_change() {
+        let mut p = staged_planner();
+        let mut lanes = vec![mk_lane(0, vec![5], 10, 41)];
+        p.stage_decode(&lanes, 1);
+        lanes.push(mk_lane(1, vec![7], 3, 43));
+        p.mark_decode_dirty();
+        p.stage_decode(&lanes, 2);
+        let got = snapshot(&p, Region::Decode);
+        assert_eq!(got.seq_lens, vec![10, 3]);
+        assert_eq!(got.tokens, vec![41, 43]);
+        assert_eq!(got.block_tables, vec![5, 0, 0, 0, 7, 0, 0, 0]);
     }
 
     /// A sharer whose prefix blocks are written by a cold seq in the

@@ -59,7 +59,16 @@ impl Candidate {
 
     /// Snapshot every slot in `indices` from the ring.
     pub fn collect(ring: &RingBuffer, indices: &[usize]) -> Vec<Candidate> {
-        indices.iter().map(|&i| Candidate::from_slot(i, ring.slot(i))).collect()
+        let mut out = Vec::with_capacity(indices.len());
+        Candidate::collect_into(ring, indices, &mut out);
+        out
+    }
+
+    /// Allocation-free snapshot into a scheduler-owned scratch (cleared
+    /// first) — the hot-loop variant of [`Candidate::collect`].
+    pub fn collect_into(ring: &RingBuffer, indices: &[usize], out: &mut Vec<Candidate>) {
+        out.clear();
+        out.extend(indices.iter().map(|&i| Candidate::from_slot(i, ring.slot(i))));
     }
 
     pub fn age_us(&self, now_us: u64) -> u64 {

@@ -36,6 +36,20 @@
 //! host work — and `CpuResident` — each step pays a host round trip on
 //! the interference-sensitive host heap, with the ring scan serialized
 //! after completion instead of overlapped.
+//!
+//! The steady-state loop is **allocation-free** (DESIGN.md §5
+//! "Persistent batch state", pinned by `rust/tests/hotloop_alloc.rs`):
+//! launch inputs live in the planner's persistent
+//! [`LaunchArena`](crate::gpu::arena::LaunchArena) and are updated in
+//! place (a decode step bumps each live lane's `seq_len` and rewrites
+//! its `last_token`; block-table rows are rewritten only on batch
+//! membership changes), the ring scan / candidate snapshot / completion
+//! poll fill scheduler-owned scratch buffers, launches ride an
+//! allocation-free doorbell, and retirement is one reverse in-place
+//! `swap_remove` pass. Per-iteration control overhead (loop top →
+//! decode-launch enqueue) is histogrammed into
+//! `SchedulerStats::loop_iter` and exported as `loop_iter_p50_us` /
+//! `loop_iter_p99_us`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -86,8 +100,6 @@ pub enum PrefixReuse {
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     pub placement: Placement,
-    /// Parallel scan lanes (paper: the 256-thread scheduler block).
-    pub scan_lanes: usize,
     /// Apply the paper's launch-latency constants as spin delays.
     pub apply_launch_delays: bool,
     /// Stop automatically once idle (used by batch benchmarks).
@@ -115,7 +127,6 @@ impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
             placement: Placement::GpuResident,
-            scan_lanes: 256,
             apply_launch_delays: true,
             exit_when_idle: false,
             policy: PolicyKind::Fcfs,
@@ -250,6 +261,12 @@ struct SchedulerCore {
     completions: Completions,
     seed_ctr: u32,
     max_batch: usize,
+    /// Hot-loop scratch buffers (DESIGN.md §5): the ring sweep, the
+    /// candidate snapshot and the completion poll all fill these
+    /// persistent vectors instead of allocating per iteration.
+    scan_scratch: Vec<usize>,
+    cand_scratch: Vec<Candidate>,
+    token_scratch: Vec<u32>,
     /// Resolved reuse switch: `config.prefix_reuse` crossed with the
     /// artifacts (`Auto` requires offset graphs in the manifest).
     reuse: bool,
@@ -286,12 +303,8 @@ impl SchedulerCore {
         let max_lanes =
             max_batch.max(cache.max_prefill_batch()).max(cache.max_prefill_offset_batch());
         let policy = config.policy.build();
-        let planner = BatchPlanner::new(
-            cache.max_prefill_batch(),
-            cache.max_prefill_offset_batch(),
-            manifest.max_blocks_per_seq,
-            manifest.block_size,
-        );
+        let planner =
+            BatchPlanner::for_cache(&cache, manifest.max_blocks_per_seq, manifest.block_size);
         let launcher =
             Launcher::new(executor, gpu_resident, config.apply_launch_delays, stats.clone());
         let completions = Completions::new(Arc::new(CompletionBuffer::new(max_lanes.max(16))));
@@ -318,6 +331,10 @@ impl SchedulerCore {
             Some(n) => n.clamp(bs, chunk_cap) / bs * bs,
             None => chunk_cap,
         };
+        // Scratch capacities cover the worst case up front (every ring
+        // slot pending; the widest grid's completion), so the hot loop
+        // never grows them.
+        let num_slots = ring.num_slots();
         SchedulerCore {
             ring,
             manifest,
@@ -334,6 +351,9 @@ impl SchedulerCore {
             completions,
             seed_ctr: 1,
             max_batch,
+            scan_scratch: Vec::with_capacity(num_slots),
+            cand_scratch: Vec::with_capacity(num_slots),
+            token_scratch: Vec::with_capacity(max_lanes.max(16)),
             reuse,
             chunk_tokens,
             last_admitted_ticket: None,
@@ -347,6 +367,11 @@ impl SchedulerCore {
     fn run(&mut self, stop: &AtomicBool, drain: &AtomicBool) {
         let mut idle_spins = 0u64;
         loop {
+            // Control-overhead clock: everything from here to the decode
+            // launch enqueue is host-side orchestration the paper's
+            // GPU-resident design claims is (near) free — measured per
+            // iteration into `stats.loop_iter`.
+            let iter_t0 = Instant::now();
             if stop.load(Ordering::Acquire) {
                 break;
             }
@@ -361,19 +386,19 @@ impl SchedulerCore {
 
             // Admission (when not draining): scan + policy + claim +
             // inline prefill. Chunked lanes occupy batch slots too.
-            if !draining && self.lanes.len() + self.chunked.len() < self.max_batch {
-                let candidates = self.scan(true);
-                if !candidates.is_empty() {
-                    if !self.lanes.is_empty() {
-                        // Continuous batching: pausing in-flight decode to
-                        // run an inline prefill (the decode loop resumes on
-                        // the next iteration — state is in `self.lanes`).
-                        self.stats.pauses.fetch_add(1, Ordering::Relaxed);
-                        self.pause_lanes();
-                    }
-                    self.admit_and_prefill(candidates);
-                    self.resume_lanes();
+            if !draining
+                && self.lanes.len() + self.chunked.len() < self.max_batch
+                && self.scan_into(true)
+            {
+                if !self.lanes.is_empty() {
+                    // Continuous batching: pausing in-flight decode to
+                    // run an inline prefill (the decode loop resumes on
+                    // the next iteration — state is in `self.lanes`).
+                    self.stats.pauses.fetch_add(1, Ordering::Relaxed);
+                    self.pause_lanes();
                 }
+                self.admit_and_prefill();
+                self.resume_lanes();
             }
 
             // Chunked-prefill progress: one budget-bounded chunk round,
@@ -402,23 +427,29 @@ impl SchedulerCore {
             }
             idle_spins = 0;
 
-            self.decode_step(draining);
+            self.decode_step(draining, iter_t0);
         }
     }
 
     /// Pipeline stage 1 — timed ring scan (the paper's 1–5 µs full-ring
-    /// sweep), snapshotting pending slots as policy candidates.
-    fn scan(&self, only_if_hinted: bool) -> Vec<Candidate> {
+    /// sweep) into the scheduler-owned scratches, snapshotting pending
+    /// slots as policy candidates in `self.cand_scratch`. Returns true
+    /// when at least one candidate was found. Allocation-free: both
+    /// scratches persist across iterations, and the cheap doorbell check
+    /// skips even the sweep when nothing is pending.
+    fn scan_into(&mut self, only_if_hinted: bool) -> bool {
+        self.cand_scratch.clear();
         if only_if_hinted && self.ring.pending_hint() == 0 {
-            return vec![];
+            return false;
         }
         let t = Instant::now();
-        let pending = self.ring.scan_pending(self.config.scan_lanes);
+        self.ring.scan_pending_into(&mut self.scan_scratch);
         // The timed region covers only the sweep itself, so scan_mean/max
         // stay comparable to the paper envelope; the candidate snapshot
         // is policy-stage work.
         self.stats.record_scan(t.elapsed().as_nanos() as u64);
-        Candidate::collect(&self.ring, &pending)
+        Candidate::collect_into(&self.ring, &self.scan_scratch, &mut self.cand_scratch);
+        !self.cand_scratch.is_empty()
     }
 
     fn pause_lanes(&self) {
@@ -437,20 +468,34 @@ impl SchedulerCore {
         }
     }
 
-    /// Pipeline stages 2+3 — order candidates by the admission policy,
-    /// admit under the three admission conditions (paper §4.2
-    /// "Continuous batching": (i) pending prefills detected, (ii) free
-    /// batch-slot capacity, (iii) launch-window headroom) plus KV
-    /// backpressure, then group and launch the prefills.
-    fn admit_and_prefill(&mut self, mut candidates: Vec<Candidate>) {
+    /// Pipeline stages 2+3 — order the candidates scanned into
+    /// `self.cand_scratch` by the admission policy, admit under the
+    /// three admission conditions (paper §4.2 "Continuous batching":
+    /// (i) pending prefills detected, (ii) free batch-slot capacity,
+    /// (iii) launch-window headroom) plus KV backpressure, then group
+    /// and launch the prefills.
+    ///
+    /// Admission is the loop's *bounded* allocating phase (prompt reads,
+    /// admitted-sequence staging, group planning); the steady-state
+    /// decode path allocates nothing (see `hotloop_alloc.rs`, which
+    /// asserts both halves). The candidate scratch itself is borrowed
+    /// via `mem::take` and handed back cleared, capacity intact.
+    fn admit_and_prefill(&mut self) {
+        let mut candidates = std::mem::take(&mut self.cand_scratch);
         // Stage 2: policy ordering (FCFS = ticket order, the paper).
         let now_us = crate::util::timer::now_us();
         self.policy.order(&mut candidates, now_us);
+        self.admit_ordered(&candidates);
+        candidates.clear();
+        self.cand_scratch = candidates;
+    }
 
-        // Stage 3a: admission checks + CAS claims, in policy order.
+    /// Stage 3a body: admission checks + CAS claims, in policy order,
+    /// then stage 3b grouping + launches.
+    fn admit_ordered(&mut self, candidates: &[Candidate]) {
         let mut admitted: Vec<PrefillSeq> = vec![];
         let mut new_chunked: Vec<ChunkedPrefill> = vec![];
-        for cand in candidates {
+        for &cand in candidates {
             let occupied =
                 self.lanes.len() + self.chunked.len() + admitted.len() + new_chunked.len();
             if occupied >= self.max_batch {
@@ -802,26 +847,31 @@ impl SchedulerCore {
         }
     }
 
-    /// Marshal + launch + poll one resolved prefill launch; returns the
-    /// per-lane sampled tokens, or `None` when the launch failed.
-    fn fire_prefill(&mut self, gid: GraphId, group: &PrefillGroup) -> Option<Vec<u32>> {
-        let spec = self.cache.spec(gid).clone();
-        let inputs = self.planner.prefill_inputs(group, spec.batch, spec.seq);
+    /// Stage + launch + poll one resolved prefill launch; on success the
+    /// per-lane sampled tokens are left in `self.token_scratch`. Inputs
+    /// are staged into the arena's prefill region (one epoch publish)
+    /// rather than marshaled into owned `Vec`s.
+    fn fire_prefill(&mut self, gid: GraphId, group: &PrefillGroup) -> bool {
+        let (grid_batch, grid_seq) = {
+            let spec = self.cache.spec(gid);
+            (spec.batch, spec.seq)
+        };
         if group.offset {
             self.stats.prefill_offset_batches.fetch_add(1, Ordering::Relaxed);
         }
+        let epoch = self.planner.stage_prefill(group, grid_batch, grid_seq);
         let seed = self.next_seed();
         self.launcher.launch(LaunchCmd {
             graph: gid,
-            block_tables: inputs.block_tables,
-            seq_lens: inputs.seq_lens,
-            tokens: inputs.tokens,
-            offsets: inputs.offsets,
+            arena: self.planner.arena(),
+            epoch,
             seed,
             completion: self.completions.buffer(),
-            reset_kv: false,
         });
-        self.completions.poll(spec.batch)
+        let mut tokens = std::mem::take(&mut self.token_scratch);
+        let ok = self.completions.poll_into(grid_batch, &mut tokens);
+        self.token_scratch = tokens;
+        ok
     }
 
     /// Pipeline stages 4+5 for one prefill group — whole prompts and
@@ -829,12 +879,13 @@ impl SchedulerCore {
     /// tokens (or advance chunked lanes).
     fn launch_prefill(&mut self, group: PrefillGroup) {
         for (gid, g) in self.plan_group_launches(group) {
-            match self.fire_prefill(gid, &g) {
-                None => self.fail_prefill_seqs(g),
-                Some(tokens) => {
-                    self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
-                    self.complete_prefill_seqs(g, &tokens);
-                }
+            if self.fire_prefill(gid, &g) {
+                self.stats.prefill_batches.fetch_add(1, Ordering::Relaxed);
+                let tokens = std::mem::take(&mut self.token_scratch);
+                self.complete_prefill_seqs(g, &tokens);
+                self.token_scratch = tokens;
+            } else {
+                self.fail_prefill_seqs(g);
             }
         }
     }
@@ -922,9 +973,12 @@ impl SchedulerCore {
             self.stats.prefilled_requests.fetch_add(1, Ordering::Relaxed);
             let done = max_new <= 1 || tok as u32 == self.manifest.eos_token;
             if done {
+                // Finished at its first token: never joined the decode
+                // batch, so membership (and the arena) is untouched.
                 self.finish_lane(Lane { slot, cache, generated: 1, max_new, last_token: tok });
             } else {
                 self.lanes.push(Lane { slot, cache, generated: 1, max_new, last_token: tok });
+                self.note_membership_change(1);
             }
         }
     }
@@ -1006,11 +1060,15 @@ impl SchedulerCore {
         }
     }
 
-    fn decode_step(&mut self, draining: bool) {
+    /// One steady-state decode iteration — the allocation-free path the
+    /// zero-alloc regression test pins: incremental arena staging, an
+    /// epoch-tagged doorbell launch, overlapped scratch scan, scratch
+    /// completion poll, and a single reverse in-place retire pass.
+    fn decode_step(&mut self, draining: bool, iter_t0: Instant) {
         let live = self.lanes.len();
         debug_assert!(live > 0);
         let gid = self.cache.select_decode(live).expect("decode grid covers batch sizes");
-        let spec = self.cache.spec(gid).clone();
+        let grid_batch = self.cache.spec(gid).batch;
 
         // CPU-resident placement: the host reassembles the batch before
         // every launch — interference-sensitive work on the host heap.
@@ -1018,67 +1076,90 @@ impl SchedulerCore {
             std::hint::black_box(orch.step_work());
         }
 
-        let inputs = self.planner.decode_inputs(&self.lanes, spec.batch);
+        // Stage the batch in place: per-lane seq_len bump + last_token
+        // write; block-table rows only after a membership change.
+        let epoch = self.planner.stage_decode(&self.lanes, grid_batch);
         let seed = self.next_seed();
         self.launcher.launch(LaunchCmd {
             graph: gid,
-            block_tables: inputs.block_tables,
-            seq_lens: inputs.seq_lens,
-            tokens: inputs.tokens,
-            offsets: inputs.offsets,
+            arena: self.planner.arena(),
+            epoch,
             seed,
             completion: self.completions.buffer(),
-            reset_kv: false,
         });
+        // Control-overhead sample: loop top → decode-launch enqueue.
+        self.stats.loop_iter.record_ns(iter_t0.elapsed().as_nanos() as u64);
 
         // GPU-resident: the ring scan overlaps decode compute (its latency
         // hides behind the graph execution). CPU-resident: no overlap —
         // the host waits for the step, then scans on the critical path.
-        let overlapped_pending = if self.is_gpu_resident() && !draining {
-            self.scan(true)
+        let overlapped = if self.is_gpu_resident() && !draining {
+            self.scan_into(true)
         } else {
-            vec![]
+            false
         };
 
-        let Some(step_tokens) = self.completions.poll(spec.batch) else {
+        let mut tokens = std::mem::take(&mut self.token_scratch);
+        let ok = self.completions.poll_into(grid_batch, &mut tokens);
+        self.token_scratch = tokens;
+        if !ok {
             let lanes = std::mem::take(&mut self.lanes);
+            let torn_down = lanes.len() as u64;
             for l in lanes {
                 self.kv.release(l.cache);
                 self.fail_slot(l.slot);
             }
+            self.note_membership_change(torn_down);
             return;
-        };
+        }
 
         self.stats.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.stats.batch_occupancy_sum.fetch_add(live as u64, Ordering::Relaxed);
 
-        // Apply results, retire finished lanes.
-        let mut finished: Vec<usize> = vec![];
-        for (i, lane) in self.lanes.iter_mut().enumerate() {
-            let tok = step_tokens[i] as i32;
+        // Apply results and retire finished lanes in one reverse
+        // in-place pass — `swap_remove` only disturbs indices above the
+        // cursor, which this pass has already visited, so no scratch
+        // list of finished indices is needed.
+        let mut retired = 0u64;
+        let mut i = self.lanes.len();
+        while i > 0 {
+            i -= 1;
+            let tok = self.token_scratch[i] as i32;
+            let lane = &mut self.lanes[i];
             lane.cache.cached_len += 1;
             lane.generated += 1;
             lane.last_token = tok;
-            self.ring.publish_token(lane.slot, tok as u32);
+            let slot = lane.slot;
+            let done = lane.generated >= lane.max_new || tok as u32 == self.manifest.eos_token;
+            self.ring.publish_token(slot, tok as u32);
             self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
-            if lane.generated >= lane.max_new || tok as u32 == self.manifest.eos_token {
-                finished.push(i);
+            if done {
+                let lane = self.lanes.swap_remove(i);
+                self.finish_lane(lane);
+                retired += 1;
             }
         }
-        for i in finished.into_iter().rev() {
-            let lane = self.lanes.swap_remove(i);
-            self.finish_lane(lane);
-        }
+        self.note_membership_change(retired);
 
         // Pause-and-resume admission using the overlapped scan results.
-        if !overlapped_pending.is_empty()
-            && self.lanes.len() + self.chunked.len() < self.max_batch
-            && !draining
-        {
+        if overlapped && self.lanes.len() + self.chunked.len() < self.max_batch && !draining {
             self.stats.pauses.fetch_add(1, Ordering::Relaxed);
             self.pause_lanes();
-            self.admit_and_prefill(overlapped_pending);
+            self.admit_and_prefill();
             self.resume_lanes();
+        }
+    }
+
+    /// Decode-batch membership changed by `n` lanes (admit / retire /
+    /// teardown): dirty the arena's decode region so the next staging
+    /// pass rewrites every row, and count it — membership churn is the
+    /// only thing standing between the steady loop and pure in-place
+    /// updates, so `/metrics` reports it alongside the iteration
+    /// percentiles.
+    fn note_membership_change(&mut self, n: u64) {
+        if n > 0 {
+            self.planner.mark_decode_dirty();
+            self.stats.batch_membership_changes.fetch_add(n, Ordering::Relaxed);
         }
     }
 

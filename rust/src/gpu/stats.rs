@@ -3,6 +3,58 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Lock-free log₂-bucketed latency histogram (nanosecond samples). 40
+/// buckets cover 1 ns … ~18 min; recording is one `fetch_add`, so the
+/// control loop can histogram itself without allocating or locking, and
+/// readers compute percentiles from a relaxed snapshot. Percentiles are
+/// bucket-resolution (≤ 2× error — the geometric bucket midpoint is
+/// reported), which is exactly enough to tell a 5 µs control path from a
+/// 50 µs one.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket count: ⌊log₂ ns⌋ buckets covering 1 ns … 2⁴⁰ ns (~18 min).
+const HIST_BUCKETS: usize = 40;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample. Bucket = ⌊log₂ ns⌋, clamped to the top bucket.
+    pub fn record_ns(&self, ns: u64) {
+        let idx = (ns.max(1).ilog2() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The `p`-th percentile in microseconds (0.0 when empty), reported
+    /// as the geometric midpoint of the bucket holding that rank.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Geometric midpoint of [2^i, 2^(i+1)) ns, in µs.
+                return 1.5 * (1u64 << i) as f64 / 1000.0;
+            }
+        }
+        1.5 * (1u64 << (HIST_BUCKETS - 1)) as f64 / 1000.0
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct SchedulerStats {
     pub decode_steps: AtomicU64,
@@ -60,6 +112,20 @@ pub struct SchedulerStats {
     /// of consecutive scheduler iterations a lane spent waiting for the
     /// per-iteration token budget to reach it.
     pub max_chunk_wait_iters: AtomicU64,
+    /// Per-iteration control overhead (loop top → decode-launch enqueue,
+    /// ns): ring scan, chunk servicing, policy work, arena staging and
+    /// the launch call itself — everything the host-heap orchestration
+    /// of a CPU-resident stack would inflate, measured instead of
+    /// asserted. Iterations that never reach a decode launch (pure
+    /// admission or idle spins) are not recorded; admission work that
+    /// *precedes* a decode launch lands in that iteration's sample,
+    /// which is what makes the p99 show control-path interference.
+    pub loop_iter: LatencyHistogram,
+    /// Decode-batch membership changes (lane admitted, retired, or torn
+    /// down on launch failure) — each one forces a full arena resync of
+    /// the decode region instead of the in-place incremental update, so
+    /// this counter is also "full block-table rewrites per run".
+    pub batch_membership_changes: AtomicU64,
 }
 
 impl SchedulerStats {
@@ -85,13 +151,24 @@ impl SchedulerStats {
         self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    /// Control-overhead percentiles in µs (see [`SchedulerStats::loop_iter`]).
+    pub fn loop_iter_p50_us(&self) -> f64 {
+        self.loop_iter.percentile_us(50.0)
+    }
+
+    pub fn loop_iter_p99_us(&self) -> f64 {
+        self.loop_iter.percentile_us(99.0)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "decode_steps={} prefills={} offset_prefills={} completed={} failed={} tokens={} \
              occupancy={:.2} pauses={} scan_mean={:.2}µs scan_max={:.2}µs fnf={} tail={} \
              backpressure={} reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
              prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={} \
-             chunked_prefills={} chunk_launches={} max_chunk_wait_iters={}",
+             chunked_prefills={} chunk_launches={} max_chunk_wait_iters={} \
+             loop_iter_p50_us={:.2} loop_iter_p99_us={:.2} batch_membership_changes={} \
+             heap_allocs={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.prefill_offset_batches.load(Ordering::Relaxed),
@@ -116,6 +193,13 @@ impl SchedulerStats {
             self.chunked_prefills.load(Ordering::Relaxed),
             self.chunk_launches.load(Ordering::Relaxed),
             self.max_chunk_wait_iters.load(Ordering::Relaxed),
+            self.loop_iter_p50_us(),
+            self.loop_iter_p99_us(),
+            self.batch_membership_changes.load(Ordering::Relaxed),
+            // 0 unless a test binary installed the counting allocator
+            // (util::alloc) — surfaced so the zero-alloc property is a
+            // number /metrics readers can watch, not just a test.
+            crate::util::alloc::alloc_count(),
         )
     }
 }
@@ -139,5 +223,42 @@ mod tests {
         s.decode_steps.store(4, Ordering::Relaxed);
         s.batch_occupancy_sum.store(10, Ordering::Relaxed);
         assert!((s.mean_batch_occupancy() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_hit_bucket_midpoints() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(50.0), 0.0, "empty histogram reads 0");
+        // 99 samples at ~2 µs (bucket [2048, 4096) ns), 1 at ~1 ms.
+        for _ in 0..99 {
+            h.record_ns(3_000);
+        }
+        h.record_ns(1_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_us(50.0);
+        assert!((p50 - 3.072).abs() < 1e-9, "p50 = 1.5 * 2048 ns = {p50}");
+        assert!((h.percentile_us(99.0) - 3.072).abs() < 1e-9, "p99 still in the 2 µs bucket");
+        let p100 = h.percentile_us(100.0);
+        assert!(p100 > 500.0, "the millisecond outlier owns the top rank: {p100}");
+    }
+
+    #[test]
+    fn histogram_clamps_extremes() {
+        let h = LatencyHistogram::default();
+        h.record_ns(0); // clamps to bucket 0
+        h.record_ns(u64::MAX); // clamps to the top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(100.0) > 0.0);
+    }
+
+    #[test]
+    fn summary_carries_loop_iter_fields() {
+        let s = SchedulerStats::default();
+        s.loop_iter.record_ns(2_000);
+        s.batch_membership_changes.store(3, Ordering::Relaxed);
+        let sum = s.summary();
+        assert!(sum.contains("loop_iter_p50_us="), "{sum}");
+        assert!(sum.contains("batch_membership_changes=3"), "{sum}");
+        assert!(sum.contains("heap_allocs="), "{sum}");
     }
 }

@@ -207,6 +207,18 @@ impl GraphCache {
             .unwrap_or(0)
     }
 
+    /// Largest `batch × seq` token plane any (offset) prefill launch in
+    /// the grid can carry — sizes the launch arena's prefill token plane
+    /// (decode launches carry `batch` tokens, always smaller).
+    pub fn max_launch_tokens(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind != GraphKind::Decode)
+            .map(|s| s.batch * s.seq)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Do the artifacts provide offset prefill graphs? Gates default-on
     /// live prefix reuse (`PrefixReuse::Auto`).
     pub fn has_offset_graphs(&self) -> bool {
@@ -379,6 +391,13 @@ mod tests {
     #[test]
     fn max_decode_batch_reported() {
         assert_eq!(cache().max_decode_batch(), 8);
+    }
+
+    #[test]
+    fn max_launch_tokens_covers_widest_prefill_plane() {
+        // Widest full-prefill plane: b4 × s128; the offset grid tops out
+        // at b2 × s64, smaller.
+        assert_eq!(cache().max_launch_tokens(), 4 * 128);
     }
 
     #[test]

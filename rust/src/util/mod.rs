@@ -5,6 +5,9 @@
 //! are implemented here instead of pulling serde/clap/criterion/proptest
 //! (see DESIGN.md §4). Per submodule:
 //!
+//! * [`alloc`] — test-only counting global allocator behind the
+//!   zero-allocation hot-loop regression test and the `heap_allocs`
+//!   metric;
 //! * [`cli`] — `subcommand [positional...] --key value --flag` argument
 //!   parsing for the `blink` binary (clap stand-in);
 //! * [`json`] — the minimal JSON parser/serializer behind the
@@ -18,6 +21,7 @@
 //! * [`timer`] — monotonic µs clock + the warmup/percentile bench
 //!   harness every `rust/benches/*` target uses (criterion stand-in).
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod prop;

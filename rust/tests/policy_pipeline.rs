@@ -53,7 +53,7 @@ fn fcfs_preserves_ticket_order_under_scrambled_submission() {
     }
     expected.sort_unstable();
 
-    let pending = rb.scan_pending(256);
+    let pending = rb.scan_pending();
     let mut cands = Candidate::collect(&rb, &pending);
     Fcfs.order(&mut cands, blink::util::timer::now_us());
     let got: Vec<usize> = cands.iter().map(|c| c.slot).collect();
@@ -68,7 +68,7 @@ fn fcfs_preserves_ticket_order_under_scrambled_submission() {
 fn candidates_carry_class_metadata_from_the_ring() {
     let rb = ring();
     submit(&rb, 3, 17, 5, 250_000);
-    let cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    let cands = Candidate::collect(&rb, &rb.scan_pending());
     assert_eq!(cands.len(), 1);
     let c = cands[0];
     assert_eq!(c.slot, 3);
@@ -89,7 +89,7 @@ fn priority_aged_reorders_ring_candidates_by_class() {
     for s in 4..6 {
         submit(&rb, s, 8, 6, 0);
     }
-    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending());
     PriorityAged::default().order(&mut cands, blink::util::timer::now_us());
     let order: Vec<usize> = cands.iter().map(|c| c.slot).collect();
     assert_eq!(&order[..2], &[4, 5], "high-priority submissions jump ahead");
@@ -104,11 +104,11 @@ fn sjf_and_slo_rank_ring_candidates_as_documented() {
     submit(&rb, 2, 20, 0, 10_000); // tight deadline
     let now = blink::util::timer::now_us();
 
-    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending());
     ShortestPromptFirst.order(&mut cands, now);
     assert_eq!(cands.iter().map(|c| c.slot).collect::<Vec<_>>(), vec![1, 2, 0]);
 
-    let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+    let mut cands = Candidate::collect(&rb, &rb.scan_pending());
     SloAware::default().order(&mut cands, now);
     assert_eq!(cands[0].slot, 2, "tight deadline first under slo-aware");
 }
@@ -132,7 +132,7 @@ fn prop_ring_candidates_respect_starvation_cap() {
                 if rng.below(2) == 0 { 0 } else { 1_000 + rng.below(1 << 20) },
             );
         }
-        let mut cands = Candidate::collect(&rb, &rb.scan_pending(256));
+        let mut cands = Candidate::collect(&rb, &rb.scan_pending());
         // Evaluate at a virtual future clock so a random subset of the
         // submissions has crossed the starvation cap.
         let base = blink::util::timer::now_us();

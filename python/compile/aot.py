@@ -136,8 +136,14 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
         f.write(f"rope_theta {cfg.rope_theta}\n")
         for name, shape in cfg.param_specs():
             f.write(f"param {name} {'x'.join(map(str, shape))} f32\n")
+        # Trailing token records which attention build each graph was
+        # lowered against ("pallas" kernels vs the jnp "ref" oracles) so
+        # the rust runtime can surface it in /metrics and eval output;
+        # older parsers ignore the extra token, newer ones default
+        # missing backends to "unspecified".
+        backend = "pallas" if use_pallas else "ref"
         for name, kind, b, s in graphs:
-            f.write(f"graph {name} {kind} {b} {s}\n")
+            f.write(f"graph {name} {kind} {b} {s} {backend}\n")
     print(f"[{cfg.name}] exported {len(graphs)} graphs in {time.time() - t0:.1f}s")
 
 

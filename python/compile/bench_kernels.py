@@ -1,0 +1,141 @@
+"""Chunk-size cost curve: fused paged suffix-prefill kernel vs oracle.
+
+The chunked-prefill scheduler piggybacks bounded `prefill_offset`
+chunks on decode iterations; how many tokens ride free is set by the
+chunk's cost curve (DESIGN.md §5, `CostModel::decode_step_with_chunk_s`
+in rust/src/sim/costmodel.rs). This harness measures that curve: a
+chunk-size sweep (S tokens per launch, fixed cached context) timing
+`kernels.paged_prefill_attention` against the jnp gather/einsum oracle
+it replaced, emitting a CSV with a fixed schema and seeded inputs —
+row set, ordering, shapes and the numeric-agreement column are
+deterministic; wall-clock columns are whatever this machine measures.
+
+The fitted result (printed after the sweep) is the *relative* curve
+the CostModel recalibration consumes: per-launch intercept + per-token
+slope for each implementation, and the slope ratio oracle/kernel. The
+interpret-mode numbers proxy composition overhead, not MXU throughput;
+`Hardware::chunk_mxu_efficiency` documents how the ratio maps onto the
+roofline constants.
+
+Usage:
+    python -m compile.bench_kernels [--out FILE] [--reps N]
+    python -m compile.bench_kernels --smoke    # CI: 2 sizes, 1 rep,
+                                               # asserts kernel==oracle
+"""
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+CONTEXT_TOKENS = 512
+SWEEP_S = [32, 64, 128, 256, 512, 1024]
+SMOKE_S = [32, 64]
+CSV_HEADER = (
+    "s_tokens,context_tokens,kernel_ms,ref_ms,"
+    "kernel_us_per_token,ref_us_per_token,max_abs_err"
+)
+
+
+def _build_case(s: int, context: int, seed: int = 0):
+    """One seeded suffix-prefill problem: TINY-like heads, bs=16 pages,
+    the lane's table spanning context + S tokens of pool."""
+    import jax.numpy as jnp
+
+    hq, hkv, dh, bs = 8, 4, 32, 16
+    m = (context + s + bs - 1) // bs
+    n = m + 32
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, s, hq, dh)), jnp.float32)
+    pool = jnp.asarray(rng.standard_normal((n, 2, hkv, bs, dh)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(n)[:m].reshape(1, m), jnp.int32)
+    off = jnp.asarray([context], jnp.int32)
+    return q, pool, bt, off
+
+
+def _time_ms(fn, args, reps: int) -> float:
+    """Best-of-reps wall time after a compile warmup."""
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def run_sweep(sizes, reps: int, context: int = CONTEXT_TOKENS):
+    """Returns (csv_text, rows) for the given chunk sizes."""
+    from compile.kernels import paged_prefill_attention, ref
+
+    rows = []
+    for s in sizes:
+        q, pool, bt, off = _build_case(s, context)
+        got = np.asarray(paged_prefill_attention(q, pool, bt, off))
+        want = np.asarray(ref.paged_prefill_attention_ref(q, pool, bt, off))
+        err = float(np.max(np.abs(got - want)))
+        k_ms = _time_ms(paged_prefill_attention, (q, pool, bt, off), reps)
+        r_ms = _time_ms(ref.paged_prefill_attention_ref, (q, pool, bt, off), reps)
+        rows.append((s, context, k_ms, r_ms, err))
+    csv = CSV_HEADER + "\n"
+    for s, ctx, k_ms, r_ms, err in rows:
+        csv += (
+            f"{s},{ctx},{k_ms:.3f},{r_ms:.3f},"
+            f"{k_ms * 1e3 / s:.2f},{r_ms * 1e3 / s:.2f},{err:.2e}\n"
+        )
+    return csv, rows
+
+
+def _fit_line(xs, ys):
+    """Least-squares y ≈ a + b·x — (intercept, slope)."""
+    x, y = np.asarray(xs, float), np.asarray(ys, float)
+    b, a = np.polyfit(x, y, 1)
+    return a, b
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None, help="write the CSV here (default: stdout)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sweep + kernel==oracle assertion (CI anti-rot check)",
+    )
+    args = ap.parse_args()
+
+    sizes = SMOKE_S if args.smoke else SWEEP_S
+    reps = 1 if args.smoke else args.reps
+    csv, rows = run_sweep(sizes, reps)
+
+    if args.smoke:
+        worst = max(r[4] for r in rows)
+        assert worst < 3e-4, f"kernel diverged from oracle: max_abs_err={worst}"
+        print(csv, end="")
+        print(f"smoke ok: {len(rows)} sizes, max_abs_err={worst:.2e}", file=sys.stderr)
+        return 0
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(csv)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(csv, end="")
+
+    ka, kb = _fit_line([r[0] for r in rows], [r[2] for r in rows])
+    ra, rb = _fit_line([r[0] for r in rows], [r[3] for r in rows])
+    print(
+        f"fit kernel: {ka:.3f} ms + {kb * 1e3:.2f} us/token\n"
+        f"fit oracle: {ra:.3f} ms + {rb * 1e3:.2f} us/token\n"
+        f"per-token slope ratio oracle/kernel: {rb / kb:.2f}x "
+        f"(feeds Hardware::chunk_mxu_efficiency, rust/src/sim/costmodel.rs)",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,7 @@ client; see DESIGN.md §Hardware-Adaptation for the TPU mapping.
 from .flash_attention import flash_attention
 from .moe_gating import moe_gating
 from .paged_attention import paged_attention
+from .paged_prefill import paged_prefill_attention
 from .rmsnorm import rmsnorm
 from .rope import rope
 from .sampling import topp_sample
@@ -16,6 +17,7 @@ __all__ = [
     "flash_attention",
     "moe_gating",
     "paged_attention",
+    "paged_prefill_attention",
     "rmsnorm",
     "rope",
     "topp_sample",

@@ -1,0 +1,139 @@
+"""Paged suffix-prefill Pallas kernel (multi-token, offset graphs).
+
+The offset-prefill graphs behind live prefix-cache hits and chunked
+prefill (DESIGN.md §5/§7) compute attention for S *suffix* tokens per
+lane at runtime global positions ``offsets[b] .. offsets[b] + S`` over
+the paged KV pool — the cached prefix's K/V and the suffix's own K/V
+both live in pool pages reached through the lane's block table. Until
+this kernel existed the path composed a jnp gather/einsum
+(``ref.paged_prefill_attention_ref``), which materializes every lane's
+full [M*Bs, Hkv, Dh] K/V copy; this kernel streams the pool
+page-by-page instead, the multi-token sibling of ``_paged_kernel``.
+
+Kernel structure: a **single program** (grid=()) like the decode
+kernel — offset prefill shares its constraint that a grid multiplies
+pool staging under interpret=True (see paged_attention.py §Perf note) —
+with two nested loops:
+
+* an outer loop over Q tiles of ``block_q`` rows (bounds the score
+  matrix to [B, Hkv, G, bq, Bs] like ``_flash_kernel``'s grid axis,
+  with the same non-divisible fallback: ``S % bq != 0`` collapses to
+  one S-row tile);
+* an inner ``fori_loop`` walking block-table pages with
+  dynamic-slice gathers and online-softmax accumulation.
+
+Causal masking is at **true global positions**: pool position
+``k = page*Bs + slot`` is visible to suffix row ``i`` of lane ``b``
+iff ``k <= offsets[b] + i`` — exactly the oracle's rule, so padded
+suffix rows (beyond the true suffix length) and padded block-table
+entries (key positions beyond every row's horizon) mask identically
+and numerics match the ref everywhere, not just on valid rows.
+
+interpret=True for CPU-PJRT execution; numerics must match
+kernels.ref.paged_prefill_attention_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    q_ref, pool_ref, bt_ref, off_ref, o_ref, *, bs: int, bq: int, max_blocks: int
+):
+    # q_ref/o_ref: [B, Hkv, G, S, Dh]; pool_ref: [N, 2, Hkv, Bs, Dh];
+    # bt_ref: [B, max_blocks]; off_ref: [B].
+    b, hkv, g, s, dh = q_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    offsets = off_ref[...]  # [B]
+
+    # Walk only pages that can hold keys inside some row's causal
+    # horizon: the furthest query sits at global position
+    # max(offsets) + S - 1.
+    n_blocks = jnp.minimum((jnp.max(offsets) + s - 1) // bs + 1, max_blocks)
+
+    def q_tile(qi, _):
+        q = pl.load(
+            q_ref,
+            (slice(None), slice(None), slice(None), pl.dslice(qi * bq, bq), slice(None)),
+        ).astype(jnp.float32)  # [B, Hkv, G, bq, Dh]
+        # Global positions of this tile's suffix rows, per lane.
+        q_pos = offsets[:, None] + qi * bq + jax.lax.iota(jnp.int32, bq)[None, :]
+
+        def body(j, carry):
+            m_prev, l_prev, acc = carry
+            blk = bt_ref[:, j]  # [B]
+            kv = pool_ref[blk]  # [B, 2, Hkv, Bs, Dh] (gather of B pages)
+            k = kv[:, 0].astype(jnp.float32)  # [B, Hkv, Bs, Dh]
+            v = kv[:, 1].astype(jnp.float32)
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", q, k) * scale  # [B, Hkv, G, bq, Bs]
+            k_pos = j * bs + jax.lax.iota(jnp.int32, bs)  # [Bs]
+            mask = k_pos[None, None, :] <= q_pos[:, :, None]  # [B, bq, Bs]
+            sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(sc - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+            return m_cur, l_cur, acc
+
+        m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        acc0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+        _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+        # Every row sees at least pool position 0 (offsets >= 0), so l
+        # never collapses; the guard only protects against underflow.
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        pl.store(
+            o_ref,
+            (slice(None), slice(None), slice(None), pl.dslice(qi * bq, bq), slice(None)),
+            out.astype(o_ref.dtype),
+        )
+        return 0
+
+    jax.lax.fori_loop(0, s // bq, q_tile, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def paged_prefill_attention(
+    q: jax.Array,
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    offsets: jax.Array,
+    block_q: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [B, S, Hq, Dh] suffix queries; kv_pool: [N, 2, Hkv, Bs, Dh];
+    block_tables: [B, M]; offsets: [B] cached-prefix lengths (0 = cold
+    full prefill over the pool). Returns [B, S, Hq, Dh]."""
+    b, s, hq, dh = q.shape
+    n, two, hkv, bs, _ = kv_pool.shape
+    m = block_tables.shape[1]
+    group = hq // hkv
+
+    bq = min(block_q, s)
+    if s % bq != 0:
+        bq = s
+
+    # [B, Hkv, group, S, Dh] so GQA groups share their kv head's pages
+    # (same head mapping as paged_attention: head h -> kv head h//group).
+    qg = jnp.moveaxis(q.reshape(b, s, hkv, group, dh), 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, bs=bs, bq=bq, max_blocks=m),
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(qg.shape, lambda: (0, 0, 0, 0, 0)),
+            pl.BlockSpec(kv_pool.shape, lambda: (0, 0, 0, 0, 0)),
+            pl.BlockSpec((b, m), lambda: (0, 0)),
+            pl.BlockSpec((b,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec(qg.shape, lambda: (0, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, s, dh), q.dtype),
+        interpret=interpret,
+    )(qg, kv_pool, block_tables, offsets)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, hq, dh)

@@ -371,7 +371,8 @@ def prefill_offset(
     prefix), so this graph only processes the uncached suffix — rotary
     embeddings and KV writes land at the true positions
     ``offsets[b] .. offsets[b] + S`` and attention spans the whole cached
-    context via the pool (`paged_prefill_attention_ref`). ``offsets`` is a
+    context via the pool (`kernels.paged_prefill_attention`, or the
+    `paged_prefill_attention_ref` oracle). ``offsets`` is a
     runtime [B] int32 input, so one compiled (B, S) graph serves every
     block-aligned hit length; a row with offset 0 degenerates to an
     ordinary causal prefill over the pool.
@@ -406,11 +407,17 @@ def prefill_offset(
         pool_layer = kv_pool[li]
         pool_layer = _write_kv_prefill_offset(pool_layer, k, v, block_tables, offsets, cfg)
         kv_pool = jax.lax.dynamic_update_index_in_dim(kv_pool, pool_layer, li, 0)
-        # Attention gathers cached prefix + fresh suffix K/V from the
-        # pool; the pure-jnp gather/einsum composition serves both the
-        # pallas and oracle builds (no dedicated Pallas kernel yet — the
-        # rope/rmsnorm/sampling hot-spots still switch on use_pallas).
-        o = ref.paged_prefill_attention_ref(q, pool_layer, block_tables, offsets)
+        # Attention spans cached prefix + fresh suffix K/V through the
+        # pool: the fused Pallas kernel streams pages block-by-block
+        # with causal masking at true global positions, the jnp
+        # gather/einsum composition stays the oracle — dispatch is now
+        # uniform with decode/prefill.
+        attn_fn = (
+            kernels.paged_prefill_attention
+            if use_pallas
+            else ref.paged_prefill_attention_ref
+        )
+        o = attn_fn(q, pool_layer, block_tables, offsets)
         x = x + o.reshape(b, s, hq * dh) @ params["wo"][li]
         h2 = _rmsnorm(x.reshape(b * s, -1), params["mlp_norm"][li], use_pallas)
         x = x + _mlp(h2, params, li, cfg, use_pallas).reshape(b, s, -1)

@@ -12,6 +12,20 @@ collect_ignore = []
 _HAVE_JAX = importlib.util.find_spec("jax") is not None
 _HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 if not _HAVE_JAX:
-    collect_ignore += ["test_aot.py", "test_kernel.py", "test_model.py"]
+    collect_ignore += [
+        "test_aot.py",
+        "test_kernel.py",
+        "test_model.py",
+        "test_paged_prefill.py",
+    ]
 if not _HAVE_HYPOTHESIS:
     collect_ignore += ["test_kernel.py"]
+
+
+def pytest_configure(config):
+    # The interpret-mode kernel sweeps are marker-tagged so constrained
+    # environments can deselect them (`-m "not kernel"`) without
+    # touching the jax gate above.
+    config.addinivalue_line(
+        "markers", "kernel: interpret-mode Pallas kernel-vs-oracle sweeps"
+    )

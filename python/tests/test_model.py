@@ -152,9 +152,12 @@ def test_offset_prefill_matches_full_prefill(use_pallas):
         )
 
 
-def test_offset_prefill_batch_with_mixed_offsets():
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_offset_prefill_batch_with_mixed_offsets(use_pallas):
     """One offset graph serves lanes with different (and zero) offsets:
-    per-lane runtime offsets are the whole point of the [B] input."""
+    per-lane runtime offsets are the whole point of the [B] input. Runs
+    against both attention backends — the pallas leg drives the fused
+    paged suffix-prefill kernel through the full graph."""
     params = init_params(CFG)
     bs = CFG.block_size
     rng = np.random.default_rng(3)
@@ -173,7 +176,7 @@ def test_offset_prefill_batch_with_mixed_offsets():
         p0[:, : 2 * bs],
         seed,
         CFG,
-        use_pallas=False,
+        use_pallas=use_pallas,
     )
     toks = jnp.concatenate([p0[:, 2 * bs : 3 * bs], p1[:, :bs]], axis=0)
     logits, _ = prefill_offset(
@@ -185,7 +188,7 @@ def test_offset_prefill_batch_with_mixed_offsets():
         jnp.asarray([2 * bs, 0], jnp.int32),
         seed,
         CFG,
-        use_pallas=False,
+        use_pallas=use_pallas,
         return_logits=True,
     )
     want0, _ = prefill(
@@ -196,7 +199,7 @@ def test_offset_prefill_batch_with_mixed_offsets():
         p0,
         seed,
         CFG,
-        use_pallas=False,
+        use_pallas=use_pallas,
         return_logits=True,
     )
     want1, _ = prefill(
@@ -207,11 +210,34 @@ def test_offset_prefill_batch_with_mixed_offsets():
         p1[:, :bs],
         seed,
         CFG,
-        use_pallas=False,
+        use_pallas=use_pallas,
         return_logits=True,
     )
     np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(want0[0]), rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(np.asarray(logits[1]), np.asarray(want1[0]), rtol=2e-3, atol=2e-3)
+
+
+def test_offset_prefill_pallas_matches_oracle_scrambled_blocks():
+    """Direct A/B of the full offset-prefill graph on a *scrambled*
+    block table: the kernel's page walk must agree with the oracle's
+    gather when the lane's pages are physically non-contiguous."""
+    params = init_params(CFG)
+    bs = CFG.block_size
+    rng = np.random.default_rng(21)
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 48)), dtype=jnp.int32)
+    # Non-contiguous, interleaved pages for both lanes (pool has 32).
+    bt = jnp.asarray([[9, 3, 17, 25], [30, 7, 12, 1]], dtype=jnp.int32)
+    seed = jnp.uint32(9)
+    sl = jnp.asarray([48, 48], jnp.int32)
+    _, kv1 = prefill(
+        params, empty_kv_pool(CFG), bt, jnp.asarray([bs, bs], jnp.int32),
+        prompt[:, :bs], seed, CFG, use_pallas=False,
+    )
+    args = (kv1, bt, sl, prompt[:, bs:], jnp.asarray([bs, bs], jnp.int32), seed, CFG)
+    lp, kvp = prefill_offset(params, *args, use_pallas=True, return_logits=True)
+    lr, kvr = prefill_offset(params, *args, use_pallas=False, return_logits=True)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(kvp), np.asarray(kvr), rtol=3e-4, atol=3e-4)
 
 
 def test_moe_model_runs_and_matches_oracle():

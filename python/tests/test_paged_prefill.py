@@ -1,0 +1,137 @@
+"""Kernel-vs-oracle sweeps for the fused paged suffix-prefill kernel.
+
+Seeded parametrized cases (deliberately not hypothesis-driven, so they
+run — never skip — wherever jax is present) covering the shapes the
+offset graphs actually launch: scrambled non-contiguous block tables,
+mixed per-lane offsets in one batch, padded lanes whose true suffix is
+shorter than the padded S, and a non-divisible ``S % block_q`` shape
+that pins the block-size fallback path ``flash_attention`` also relies
+on. Tolerances match the attention-kernel bar in test_kernel.py (3e-4).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import paged_prefill_attention, ref
+
+pytestmark = pytest.mark.kernel
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _case(seed, b, s, hq, hkv, dh, bs, n, m, offsets, scrambled=True):
+    """Build one random (q, pool, block_tables, offsets) problem.
+
+    Block tables draw non-overlapping pages from a permutation of the
+    pool (scrambled: physically non-contiguous, like a pool that has
+    churned through alloc/free cycles); sequential tables cover the
+    fresh-pool layout.
+    """
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, dh)), jnp.float32)
+    pool = jnp.asarray(rng.standard_normal((n, 2, hkv, bs, dh)), jnp.float32)
+    if scrambled:
+        pages = rng.permutation(n)[: b * m]
+    else:
+        pages = np.arange(b * m)
+    bt = jnp.asarray(pages.reshape(b, m), jnp.int32)
+    off = jnp.asarray(offsets, jnp.int32)
+    return q, pool, bt, off
+
+
+def _assert_matches_ref(q, pool, bt, off, **kw):
+    got = paged_prefill_attention(q, pool, bt, off, **kw)
+    want = ref.paged_prefill_attention_ref(q, pool, bt, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("seed,b,s", [(0, 1, 16), (1, 2, 32), (2, 4, 16), (3, 2, 64)])
+def test_matches_ref_scrambled_block_tables(seed, b, s):
+    """Pool pages reached through permuted, non-contiguous block tables."""
+    q, pool, bt, off = _case(
+        seed, b=b, s=s, hq=8, hkv=4, dh=16, bs=16, n=64, m=8,
+        offsets=[16 * (i % 3) for i in range(b)],
+    )
+    _assert_matches_ref(q, pool, bt, off)
+
+
+def test_matches_ref_sequential_block_tables():
+    """The fresh-pool identity layout is not a special case."""
+    q, pool, bt, off = _case(
+        7, b=2, s=32, hq=8, hkv=4, dh=16, bs=16, n=64, m=6,
+        offsets=[32, 0], scrambled=False,
+    )
+    _assert_matches_ref(q, pool, bt, off)
+
+
+def test_mixed_offsets_in_one_batch():
+    """One launch serves lanes at different (and zero) offsets — the
+    whole point of the runtime [B] offsets input."""
+    q, pool, bt, off = _case(
+        11, b=4, s=16, hq=8, hkv=4, dh=16, bs=16, n=64, m=8,
+        offsets=[0, 16, 48, 96],
+    )
+    _assert_matches_ref(q, pool, bt, off)
+
+
+def test_padded_lanes_match_ref_on_all_rows():
+    """seq_len < padded S: rows past the true suffix are padding, but the
+    kernel must still match the oracle on *every* row (the model slices
+    the last valid row out of x, so padded rows feed nothing — matching
+    the ref everywhere is the strongest and simplest contract)."""
+    b, s, bs = 2, 32, 16
+    q, pool, bt, off = _case(
+        13, b=b, s=s, hq=8, hkv=4, dh=16, bs=bs, n=64, m=8, offsets=[32, 0],
+    )
+    # True suffix lengths 20 and 9 (< padded 32): scramble the padding
+    # rows' queries to prove they don't perturb valid rows either way.
+    rng = np.random.default_rng(99)
+    q_scrambled = np.asarray(q).copy()
+    q_scrambled[0, 20:] = rng.standard_normal(q_scrambled[0, 20:].shape)
+    q_scrambled[1, 9:] = rng.standard_normal(q_scrambled[1, 9:].shape)
+    q_scrambled = jnp.asarray(q_scrambled)
+    _assert_matches_ref(q_scrambled, pool, bt, off)
+    got = paged_prefill_attention(q, pool, bt, off)
+    got_s = paged_prefill_attention(q_scrambled, pool, bt, off)
+    np.testing.assert_allclose(
+        np.asarray(got)[0, :20], np.asarray(got_s)[0, :20], **TOL
+    )
+    np.testing.assert_allclose(np.asarray(got)[1, :9], np.asarray(got_s)[1, :9], **TOL)
+
+
+def test_non_divisible_block_q_falls_back_to_full_tile():
+    """S % block_q != 0 pins the block-size fallback (bq -> S), the same
+    path flash_attention relies on for odd padded lengths."""
+    q, pool, bt, off = _case(
+        17, b=2, s=24, hq=8, hkv=4, dh=16, bs=8, n=64, m=12, offsets=[8, 0],
+    )
+    _assert_matches_ref(q, pool, bt, off, block_q=16)  # 24 % 16 != 0
+    _assert_matches_ref(q, pool, bt, off, block_q=8)  # divisible tiling too
+
+
+def test_garbage_in_padded_table_entries_is_masked():
+    """Block-table entries past the causal horizon may point anywhere in
+    the pool (the rust allocator leaves stale ids there); the global
+    position bound masks them, so output must not change."""
+    q, pool, bt, off = _case(
+        19, b=2, s=16, hq=8, hkv=4, dh=16, bs=16, n=64, m=8, offsets=[16, 0],
+    )
+    # Horizon: max row position = off + s - 1 < 2 pages (lane 0) / 1 page
+    # (lane 1). Entries from page index 3 on are dead for both lanes.
+    bt_garbage = np.asarray(bt).copy()
+    bt_garbage[:, 3:] = np.random.default_rng(5).integers(0, 64, bt_garbage[:, 3:].shape)
+    got = paged_prefill_attention(q, pool, bt, off)
+    got_g = paged_prefill_attention(q, pool, jnp.asarray(bt_garbage, jnp.int32), off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got_g), **TOL)
+
+
+def test_gqa_group_head_mapping():
+    """Hq == Hkv (group 1) and Hq = 2*Hkv map heads exactly like the ref
+    (head h reads kv head h // group)."""
+    for hq, hkv, seed in [(4, 4, 23), (8, 4, 29)]:
+        q, pool, bt, off = _case(
+            seed, b=2, s=16, hq=hq, hkv=hkv, dh=16, bs=16, n=32, m=4,
+            offsets=[16, 0],
+        )
+        _assert_matches_ref(q, pool, bt, off)

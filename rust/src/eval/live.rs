@@ -214,13 +214,18 @@ fn modeled_manifest() -> ModelManifest {
          max_blocks_per_seq 32\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
          param tok_embed 2048x256 f32\n",
     );
+    // Backend token "modeled": no real attention runs here, and the
+    // label flows through to `/metrics` so a modeled run never claims
+    // to be a pallas (or ref) artifact.
     for b in [1usize, 2, 4, 8, 16] {
-        text.push_str(&format!("graph decode_b{b} decode {b} 0\n"));
+        text.push_str(&format!("graph decode_b{b} decode {b} 0 modeled\n"));
     }
     for b in [1usize, 2, 4] {
         for s in [16usize, 32, 64, 128, 256] {
-            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s}\n"));
-            text.push_str(&format!("graph prefill_offset_b{b}_s{s} prefill_offset {b} {s}\n"));
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s} modeled\n"));
+            text.push_str(&format!(
+                "graph prefill_offset_b{b}_s{s} prefill_offset {b} {s} modeled\n"
+            ));
         }
     }
     ModelManifest::parse(&text).expect("modeled manifest")

@@ -738,12 +738,19 @@ pub fn prefix_comparison(out: Option<&Path>, window_s: f64, threads: usize) {
 pub fn chunked_csv(r: &crate::sim::sweep::ChunkedSweepResults) -> String {
     let mut csv = String::from(
         "chunk_budget_tokens,mean_ttft_ms,p99_ttft_ms,mean_tpot_ms,p99_tpot_ms,p99_itl_ms,\
-         req_throughput,completed,chunked_prefills,chunk_launches\n",
+         req_throughput,completed,chunked_prefills,chunk_launches,hide_point_tokens\n",
     );
+    // The recalibrated cost model's hide point at the saturated decode
+    // batch: the largest chunk that rides the decode weight sweep for
+    // free (`CostModel::hide_point_tokens`). A derived constant, so the
+    // same value lands on every row — the column exists so a CSV reader
+    // can place each budget relative to the boundary without also
+    // loading the cost model.
+    let hide = CostModel::new(r.model).hide_point_tokens(16);
     for (level, &budget) in r.budgets.iter().enumerate() {
         let wm = r.get(level);
         csv.push_str(&format!(
-            "{},{:.1},{:.1},{:.2},{:.2},{:.2},{:.3},{},{},{}\n",
+            "{},{:.1},{:.1},{:.2},{:.2},{:.2},{:.3},{},{},{},{}\n",
             budget,
             wm.ttft.mean,
             wm.ttft.p99,
@@ -754,6 +761,7 @@ pub fn chunked_csv(r: &crate::sim::sweep::ChunkedSweepResults) -> String {
             wm.completed,
             wm.chunked.chunked_prefills,
             wm.chunked.chunk_launches,
+            hide,
         ));
     }
     csv
@@ -808,6 +816,12 @@ pub fn chunked_comparison(out: Option<&Path>, window_s: f64, threads: usize) {
         whole.tpot.p99 / bw.tpot.p99.max(1e-9),
         bw.ttft.mean,
         whole.ttft.mean,
+    );
+    println!(
+        "hide point: chunks up to {} tokens ride a saturated (b=16) decode step for free \
+         on {} (CostModel::hide_point_tokens; larger chunks pay the MXU excess)",
+        CostModel::new(r.model).hide_point_tokens(16),
+        r.model.name,
     );
 
     if let Some(dir) = out {
@@ -877,5 +891,28 @@ mod tests {
         let (ca, cb) = (chunked_csv(&a), chunked_csv(&b));
         assert_eq!(ca.lines().count(), a.budgets.len() + 1, "header + one row per budget");
         assert_eq!(ca, cb, "chunked sweep CSV must be byte-identical across runs");
+    }
+
+    /// The CSV's `hide_point_tokens` column, the DES chunk cost, and
+    /// the cost model must tell one story: the reported value is the
+    /// exact boundary where `decode_step_with_chunk_s` stops equalling
+    /// the plain decode step.
+    #[test]
+    fn chunked_csv_hide_point_agrees_with_cost_model() {
+        let r = run_chunked_sweep(LLAMA3_8B, 6.0, 3);
+        let csv = chunked_csv(&r);
+        let cm = CostModel::new(LLAMA3_8B);
+        let h = cm.hide_point_tokens(16);
+        assert_eq!(h, 128, "recalibrated llama3-8b hide point at b=16");
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.ends_with(",hide_point_tokens"), "{header}");
+        for row in lines {
+            assert!(row.ends_with(&format!(",{h}")), "row must carry the hide point: {row}");
+        }
+        // The derived value is the true boundary in the DES chunk cost.
+        let plain = cm.decode_step_s(16, 1200.0);
+        assert_eq!(cm.decode_step_with_chunk_s(16, 1200.0, h), plain);
+        assert!(cm.decode_step_with_chunk_s(16, 1200.0, h + 1) > plain);
     }
 }

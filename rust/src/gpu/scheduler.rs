@@ -286,6 +286,10 @@ impl SchedulerCore {
         config: SchedulerConfig,
         stats: Arc<SchedulerStats>,
     ) -> SchedulerCore {
+        // Stamp which attention build the artifacts carry (pallas
+        // kernels vs jnp ref oracles) so /metrics states it; first
+        // writer wins, matching "set once at startup".
+        let _ = stats.attention_backend.set(manifest.attention_backend().to_string());
         let cache = cache_from_manifest(&manifest);
         let kv = KvManager::new(KvConfig {
             block_size: manifest.block_size,

@@ -126,6 +126,11 @@ pub struct SchedulerStats {
     /// the decode region instead of the in-place incremental update, so
     /// this counter is also "full block-table rewrites per run".
     pub batch_membership_changes: AtomicU64,
+    /// Which attention implementation the loaded artifacts were lowered
+    /// against ("pallas" / "ref" / "mixed" / "modeled"), set once from
+    /// the manifest when the scheduler starts. A label, not a counter —
+    /// OnceLock keeps the struct lock-free for the hot-path writers.
+    pub attention_backend: std::sync::OnceLock<String>,
 }
 
 impl SchedulerStats {
@@ -168,7 +173,7 @@ impl SchedulerStats {
              prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={} \
              chunked_prefills={} chunk_launches={} max_chunk_wait_iters={} \
              loop_iter_p50_us={:.2} loop_iter_p99_us={:.2} batch_membership_changes={} \
-             heap_allocs={}",
+             heap_allocs={} attention_backend={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.prefill_offset_batches.load(Ordering::Relaxed),
@@ -200,6 +205,7 @@ impl SchedulerStats {
             // (util::alloc) — surfaced so the zero-alloc property is a
             // number /metrics readers can watch, not just a test.
             crate::util::alloc::alloc_count(),
+            self.attention_backend.get().map(|s| s.as_str()).unwrap_or("unspecified"),
         )
     }
 }
@@ -260,5 +266,17 @@ mod tests {
         assert!(sum.contains("loop_iter_p50_us="), "{sum}");
         assert!(sum.contains("batch_membership_changes=3"), "{sum}");
         assert!(sum.contains("heap_allocs="), "{sum}");
+        assert!(sum.contains("attention_backend=unspecified"), "{sum}");
+    }
+
+    #[test]
+    fn summary_reports_attention_backend_once_set() {
+        let s = SchedulerStats::default();
+        s.attention_backend.set("pallas".to_string()).unwrap();
+        assert!(s.summary().contains("attention_backend=pallas"));
+        // Second set loses (OnceLock) — the label stays what the
+        // scheduler stamped at startup.
+        assert!(s.attention_backend.set("ref".to_string()).is_err());
+        assert!(s.summary().contains("attention_backend=pallas"));
     }
 }

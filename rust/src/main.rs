@@ -223,9 +223,12 @@ fn info(args: &Args) {
                 "kv: block_size={} num_blocks={} max_blocks/seq={} (max context {})",
                 m.block_size, m.num_blocks, m.max_blocks_per_seq, m.max_context()
             );
-            println!("graphs ({}):", m.graphs.len());
+            println!("graphs ({}, attention={}):", m.graphs.len(), m.attention_backend());
             for g in &m.graphs {
-                println!("  {} kind={} batch={} seq={}", g.name, g.kind, g.batch, g.seq);
+                println!(
+                    "  {} kind={} batch={} seq={} backend={}",
+                    g.name, g.kind, g.batch, g.seq, g.backend
+                );
             }
         }
         Err(e) => {

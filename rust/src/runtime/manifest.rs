@@ -9,9 +9,15 @@ use std::path::Path;
 #[derive(Debug, Clone, PartialEq)]
 pub struct GraphEntry {
     pub name: String,
-    pub kind: String, // "decode" | "prefill"
+    pub kind: String, // "decode" | "prefill" | "prefill_offset"
     pub batch: usize,
     pub seq: usize,
+    /// Attention build the graph was lowered against, recorded by
+    /// aot.py as a trailing token ("pallas" kernels vs the jnp "ref"
+    /// oracles); "unspecified" for manifests written before the token
+    /// existed. Surfaced through `/metrics` and the eval CSVs so a
+    /// serving process states which attention implementation it runs.
+    pub backend: String,
 }
 
 #[derive(Debug, Clone)]
@@ -120,7 +126,12 @@ impl ModelManifest {
                     }
                     let batch = val()?.parse()?;
                     let seq = val()?.parse()?;
-                    m.graphs.push(GraphEntry { name, kind, batch, seq });
+                    // Optional trailing backend token (newer aot.py);
+                    // absent in older artifacts.
+                    let backend = val()
+                        .map(|s| s.to_string())
+                        .unwrap_or_else(|_| "unspecified".to_string());
+                    m.graphs.push(GraphEntry { name, kind, batch, seq, backend });
                 }
                 _ => {} // forward-compatible: ignore unknown keys
             }
@@ -137,6 +148,22 @@ impl ModelManifest {
     /// Max context = block span of one sequence.
     pub fn max_context(&self) -> usize {
         self.block_size * self.max_blocks_per_seq
+    }
+
+    /// The attention backend the artifacts were lowered against:
+    /// "pallas" / "ref" when every graph agrees (the normal export),
+    /// "mixed" when graphs disagree (hand-assembled artifacts), and
+    /// "unspecified" for manifests predating the per-graph token.
+    pub fn attention_backend(&self) -> &str {
+        let first = match self.graphs.first() {
+            Some(g) => g.backend.as_str(),
+            None => return "unspecified",
+        };
+        if self.graphs.iter().all(|g| g.backend == first) {
+            first
+        } else {
+            "mixed"
+        }
     }
 }
 
@@ -166,9 +193,9 @@ top_p 0.95
 rope_theta 10000.0
 param tok_embed 2048x256 f32
 param final_norm 256 f32
-graph decode_b1 decode 1 0
-graph prefill_b2_s32 prefill 2 32
-graph prefill_offset_b2_s32 prefill_offset 2 32
+graph decode_b1 decode 1 0 pallas
+graph prefill_b2_s32 prefill 2 32 pallas
+graph prefill_offset_b2_s32 prefill_offset 2 32 pallas
 ";
 
     #[test]
@@ -182,7 +209,13 @@ graph prefill_offset_b2_s32 prefill_offset 2 32
         assert_eq!(m.graphs.len(), 3);
         assert_eq!(
             m.graphs[1],
-            GraphEntry { name: "prefill_b2_s32".into(), kind: "prefill".into(), batch: 2, seq: 32 }
+            GraphEntry {
+                name: "prefill_b2_s32".into(),
+                kind: "prefill".into(),
+                batch: 2,
+                seq: 32,
+                backend: "pallas".into()
+            }
         );
         // Offset prefill graphs ride the same schema with their own kind.
         assert_eq!(
@@ -191,10 +224,29 @@ graph prefill_offset_b2_s32 prefill_offset 2 32
                 name: "prefill_offset_b2_s32".into(),
                 kind: "prefill_offset".into(),
                 batch: 2,
-                seq: 32
+                seq: 32,
+                backend: "pallas".into()
             }
         );
         assert_eq!(m.max_context(), 512);
+        assert_eq!(m.attention_backend(), "pallas");
+    }
+
+    #[test]
+    fn backend_token_is_optional_and_summarized() {
+        // Pre-backend manifests (no trailing token) parse and report
+        // "unspecified"; a ref export reports "ref"; disagreeing
+        // graphs report "mixed".
+        let legacy = SAMPLE.replace(" pallas", "");
+        let m = ModelManifest::parse(&legacy).unwrap();
+        assert_eq!(m.graphs[0].backend, "unspecified");
+        assert_eq!(m.attention_backend(), "unspecified");
+
+        let refs = SAMPLE.replace(" pallas", " ref");
+        assert_eq!(ModelManifest::parse(&refs).unwrap().attention_backend(), "ref");
+
+        let mixed = SAMPLE.replace("decode 1 0 pallas", "decode 1 0 ref");
+        assert_eq!(ModelManifest::parse(&mixed).unwrap().attention_backend(), "mixed");
     }
 
     #[test]

@@ -65,6 +65,18 @@ pub struct Hardware {
     /// Fixed per-graph-execution overhead on the GPU, seconds (kernel
     /// pipeline drain/fill; independent of batch).
     pub graph_exec_overhead_s: f64,
+    /// Fraction of the roofline `flops` a *piggybacked* suffix-prefill
+    /// chunk achieves inside a decode iteration. Recalibrated from the
+    /// measured chunk-size cost curve (python/compile/bench_kernels.py):
+    /// the fused paged suffix-prefill kernel's cost is linear in chunk
+    /// tokens with a per-token slope ~2.3x below the jnp gather/einsum
+    /// composition it replaced (interpret-mode sweep, S ∈ 32..1024 at a
+    /// 512-token context), so the chunk's GEMMs now run near — but not
+    /// at — the roofline: launch/epilogue and the page-walk's gather
+    /// bandwidth keep it a few percent under peak. The earlier model
+    /// charged chunks at a full 1.0, which overstated how many tokens
+    /// hide under the decode weight sweep.
+    pub chunk_mxu_efficiency: f64,
 }
 
 impl Default for Hardware {
@@ -74,6 +86,7 @@ impl Default for Hardware {
             flops: 4.5e14,
             vram_bytes: 96.0e9,
             graph_exec_overhead_s: 150e-6,
+            chunk_mxu_efficiency: 0.92,
         }
     }
 }
@@ -121,9 +134,11 @@ impl CostModel {
     /// once per iteration either way, so the chunk's GEMM FLOPs hide
     /// beneath it until the pair turns compute-bound, and only the
     /// excess extends the step — the roofline form of prefill/decode
-    /// co-scheduling ("piggybacking" in the related-work framing). On
-    /// this model the hide point is `flops × weight_sweep / (2 ×
-    /// active_params)` tokens (~150 for an 8B dense model): budgets
+    /// co-scheduling ("piggybacking" in the related-work framing). The
+    /// chunk's GEMMs run at `chunk_mxu_efficiency` of the roofline
+    /// (the fused-kernel calibration; see [`Hardware`]), which puts
+    /// the hide point at [`CostModel::hide_point_tokens`] — 128 tokens
+    /// for the dense 8B at the saturated b=16 decode batch: budgets
     /// near it make long-prompt prefill nearly free for decode tails,
     /// while large budgets degenerate toward the whole-prompt stall.
     pub fn decode_step_with_chunk_s(&self, b: usize, mean_ctx: f64, chunk_tokens: usize) -> f64 {
@@ -133,10 +148,28 @@ impl CostModel {
         let kv_bytes = b as f64 * mean_ctx * self.model.layers as f64 * 1024.0;
         let kv = kv_bytes / self.hw.hbm_bytes_per_s;
         // Batched GEMV compute (rarely binding below b≈64) plus the
-        // piggybacked chunk's prefill GEMMs.
-        let flops =
-            2.0 * self.model.active_params * (b + chunk_tokens) as f64 / self.hw.flops;
+        // piggybacked chunk's prefill GEMMs at the calibrated chunk
+        // efficiency.
+        let flops = 2.0 * self.model.active_params
+            * (b as f64 + chunk_tokens as f64 / self.hw.chunk_mxu_efficiency)
+            / self.hw.flops;
         weights.max(flops) + kv + self.hw.graph_exec_overhead_s
+    }
+
+    /// The hide point: the largest piggybacked chunk (tokens) whose
+    /// prefill GEMMs stay entirely under the decode weight sweep for a
+    /// batch of `b`, i.e. the largest `c` with
+    /// `decode_step_with_chunk_s(b, ctx, c) == decode_step_s(b, ctx)`.
+    /// Derived from the same calibrated constants the DES charges, so
+    /// the kernel's measured curve, the DES chunk cost, and the eval
+    /// report (`blink eval chunked`'s `hide_point_tokens` column) tell
+    /// one consistent story.
+    pub fn hide_point_tokens(&self, b: usize) -> usize {
+        let weights_s = self.active_weight_bytes(b) / self.hw.hbm_bytes_per_s;
+        let gemv_s = 2.0 * self.model.active_params * b as f64 / self.hw.flops;
+        let headroom_s = (weights_s - gemv_s).max(0.0);
+        (headroom_s * self.hw.flops * self.hw.chunk_mxu_efficiency
+            / (2.0 * self.model.active_params)) as usize
     }
 
     /// Prefill `tokens` prompt tokens (possibly batched): MXU-bound.
@@ -223,8 +256,8 @@ mod tests {
     fn piggybacked_chunk_hides_under_decode_sweep() {
         let cm = CostModel::new(LLAMA3_8B);
         let plain = cm.decode_step_s(16, 1200.0);
-        // A near-hide-point chunk rides free: 2·8e9·(16+128) FLOPs stay
-        // under the 16 GB weight sweep.
+        // A hide-point chunk rides free: its GEMM FLOPs (at the
+        // calibrated chunk efficiency) stay under the 16 GB weight sweep.
         let small = cm.decode_step_with_chunk_s(16, 1200.0, 128);
         assert_eq!(small, plain, "128-token chunk hides under the weight sweep");
         // A large chunk turns the pair compute-bound: the step extends
@@ -232,6 +265,37 @@ mod tests {
         let big = cm.decode_step_with_chunk_s(16, 1200.0, 2048);
         assert!(big > 10.0 * plain, "2048-token chunk dominates: {big} vs {plain}");
         assert!(big < plain + cm.prefill_s(2048), "but cheaper than a serial stall");
+    }
+
+    /// The derived hide point and the DES chunk cost agree by
+    /// construction: the hide point is the exact boundary of the
+    /// charged `decode_step_with_chunk_s` — one token more extends
+    /// the step. Pins the recalibrated constant for the dense 8B.
+    #[test]
+    fn hide_point_is_the_exact_chunk_cost_boundary() {
+        for model in [LLAMA3_8B, PHI4_15B, QWEN3_32B, QWEN3_30B_A3B] {
+            let cm = CostModel::new(model);
+            for b in [1, 8, 16] {
+                let h = cm.hide_point_tokens(b);
+                assert!(h > 0, "{}: hide point must be positive", model.name);
+                let plain = cm.decode_step_s(b, 1200.0);
+                assert_eq!(
+                    cm.decode_step_with_chunk_s(b, 1200.0, h),
+                    plain,
+                    "{}: a hide-point chunk must ride free at b={b}",
+                    model.name
+                );
+                assert!(
+                    cm.decode_step_with_chunk_s(b, 1200.0, h + 1) > plain,
+                    "{}: one token past the hide point must extend the step at b={b}",
+                    model.name
+                );
+            }
+        }
+        // The recalibrated dense-8B constant the eval CSV reports: the
+        // ideal-efficiency ~139 tokens at b=16, derated by the fused
+        // kernel's 0.92 calibrated chunk efficiency.
+        assert_eq!(CostModel::new(LLAMA3_8B).hide_point_tokens(16), 128);
     }
 
     #[test]

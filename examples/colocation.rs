@@ -5,27 +5,72 @@
 //! threads. The CPU-resident baseline degrades (its per-step host
 //! orchestration contends for LLC); Blink's device-plane loop does not.
 //!
-//!     cargo run --release --example colocation -- [--requests 12]
+//! Runs against compiled `blink-tiny` artifacts when they exist, and
+//! falls back to the *modeled* executor otherwise — the scheduler
+//! pipeline, ring protocol, and host-plane orchestration are identical,
+//! so the interference comparison still measures the real control loop.
+//!
+//!     cargo run --release --example colocation -- [--requests 12] [--smoke]
+//!
+//! `--smoke` shrinks the workload and the antagonist for CI: few
+//! requests, short outputs, two interferer threads.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use blink::gpu::{Executor, Placement, PrefixReuse, Scheduler, SchedulerConfig};
+use blink::eval::live::modeled_manifest;
+use blink::gpu::{Executor, ModeledCost, Placement, PrefixReuse, Scheduler, SchedulerConfig};
 use blink::hostsim::Interferer;
 use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
 use blink::runtime::{artifacts_dir, ModelManifest};
 use blink::util::cli::Args;
 use blink::util::rng::Rng;
 
-fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
+/// True when compiled blink-tiny artifacts are present (cheap check, no
+/// executor spawn).
+fn have_artifacts() -> bool {
+    ModelManifest::load(&artifacts_dir().join("blink-tiny/manifest.txt")).is_ok()
+}
+
+/// Compiled artifacts when available, modeled executor otherwise. The
+/// modeled decode cost is sized so host orchestration is a visible
+/// fraction of each step — the same proportion the real engine shows.
+fn spawn_engine() -> (ModelManifest, Executor) {
     let dir = artifacts_dir();
-    let manifest = ModelManifest::load(&dir.join("blink-tiny/manifest.txt")).expect("manifest");
+    if let Ok(manifest) = ModelManifest::load(&dir.join("blink-tiny/manifest.txt")) {
+        if let Ok(executor) = Executor::spawn(dir, "blink-tiny".into()) {
+            return (manifest, executor);
+        }
+    }
+    let manifest = modeled_manifest();
+    let cost = ModeledCost {
+        prefill_us_per_token: 20.0,
+        decode_step_us: 500.0,
+        expert_dispatch_us: 0.0,
+    };
+    let executor = Executor::spawn_modeled(&manifest, cost);
+    (manifest, executor)
+}
+
+struct RunResult {
+    makespan_s: f64,
+    iter_p50_us: f64,
+    iter_p99_us: f64,
+}
+
+fn run_once(
+    placement: Placement,
+    n: usize,
+    output: usize,
+    interfere: bool,
+    smoke: bool,
+) -> RunResult {
+    let (manifest, executor) = spawn_engine();
     let ring = Arc::new(RingBuffer::new(RingConfig {
         num_slots: 64,
         max_prompt: 128,
         max_output: 64,
     }));
-    let executor = Executor::spawn(dir, "blink-tiny".into()).expect("executor");
     let mut sched = Scheduler::spawn(
         ring.clone(),
         executor,
@@ -41,12 +86,16 @@ fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
     );
 
     let interferer = if interfere {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
-        Some(Interferer::spawn(threads, 8))
+        let threads = if smoke {
+            2
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8)
+        };
+        Some(Interferer::spawn(threads, if smoke { 2 } else { 8 }))
     } else {
         None
     };
-    std::thread::sleep(Duration::from_millis(200)); // let interferers warm
+    std::thread::sleep(Duration::from_millis(if smoke { 50 } else { 200 })); // let interferers warm
 
     let mut rng = Rng::new(1);
     let t0 = Instant::now();
@@ -54,7 +103,7 @@ fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
         let prompt: Vec<u32> = (0..48).map(|_| rng.below(2048) as u32).collect();
         assert!(ring.claim_for_write(i));
         ring.write_prompt(i, &prompt);
-        ring.submit(i, i as u64, 48, 24, i as u32);
+        ring.submit(i, i as u64, 48, output as u32, i as u32);
     }
     loop {
         let done = (0..n)
@@ -69,14 +118,29 @@ fn run_once(placement: Placement, n: usize, interfere: bool) -> f64 {
         i.stop();
     }
     sched.drain_and_stop();
-    makespan
+    RunResult {
+        makespan_s: makespan,
+        iter_p50_us: sched.stats.iter_full_p50_us(),
+        iter_p99_us: sched.stats.iter_full_p99_us(),
+    }
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.get_usize("requests", 12);
-    println!("[colocation] {n} requests x 48 prompt -> 24 output tokens, blink-tiny (live)");
-    println!("[colocation] each cell loads+compiles the engine (~30s) before measuring\n");
+    let smoke = args.has_flag("smoke");
+    let n = args.get_usize("requests", if smoke { 4 } else { 12 });
+    let output = if smoke { 8 } else { 24 };
+    let engine = if have_artifacts() {
+        "compiled blink-tiny artifacts"
+    } else {
+        "modeled executor (no artifacts found)"
+    };
+    println!("[colocation] {n} requests x 48 prompt -> {output} output tokens ({engine})");
+    if smoke {
+        println!("[colocation] --smoke: CI sizing (2 interferer threads, short outputs)\n");
+    } else {
+        println!("[colocation] each cell loads the engine before measuring\n");
+    }
 
     let configs: [(&str, Placement); 2] = [
         ("BLINK (GPU-resident)", Placement::GpuResident),
@@ -86,13 +150,22 @@ fn main() {
         ),
     ];
     println!(
-        "{:<26} {:>12} {:>12} {:>18}",
-        "scheduler", "isolated(s)", "colocated(s)", "colocated/isolated"
+        "{:<26} {:>12} {:>12} {:>18} {:>22}",
+        "scheduler", "isolated(s)", "colocated(s)", "colocated/isolated", "co iter p50/p99 (µs)"
     );
     for (name, placement) in configs {
-        let iso = run_once(placement.clone(), n, false);
-        let co = run_once(placement.clone(), n, true);
-        println!("{:<26} {:>12.2} {:>12.2} {:>18.2}", name, iso, co, co / iso);
+        let iso = run_once(placement.clone(), n, output, false, smoke);
+        let co = run_once(placement.clone(), n, output, true, smoke);
+        println!(
+            "{:<26} {:>12.2} {:>12.2} {:>18.2} {:>14.1}/{:>6.1}",
+            name,
+            iso.makespan_s,
+            co.makespan_s,
+            co.makespan_s / iso.makespan_s,
+            co.iter_p50_us,
+            co.iter_p99_us,
+        );
     }
     println!("\n(paper Fig 1: baselines retain 28-54 % of isolated throughput; BLINK ~100 %)");
+    println!("(deterministic-antagonist version: `blink eval interference`)");
 }

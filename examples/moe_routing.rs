@@ -5,18 +5,40 @@
 //! (the gating top-k runs inside the AOT graph; see
 //! python/compile/kernels/moe_gating.py).
 //!
+//! Without compiled artifacts the demo falls back to the modeled
+//! executor on the `modeled-tiny-moe` manifest: the scheduler pipeline
+//! is identical, and each decode step pays the manifest-declared
+//! expert-dispatch cost for the batch's expected expert union.
+//!
 //!     cargo run --release --example moe_routing
 
-use blink::gpu::Placement;
+use std::sync::Arc;
+
+use blink::eval::live::modeled_moe_manifest;
+use blink::gpu::{
+    executor::expected_active_experts, Executor, ModeledCost, Placement, Scheduler,
+    SchedulerConfig,
+};
+use blink::ringbuf::{RingBuffer, RingConfig, SlotState};
 use blink::server::{BlinkServer, ServerConfig};
+use blink::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     println!("[moe] starting Blink on blink-tiny-moe (AOT compile ~30s)...");
-    let server = BlinkServer::start(ServerConfig {
+    match BlinkServer::start(ServerConfig {
         model: "blink-tiny-moe".into(),
         placement: Placement::GpuResident,
         ..Default::default()
-    })?;
+    }) {
+        Ok(server) => run_compiled(server),
+        Err(e) => {
+            println!("[moe] no compiled artifacts ({e:#}); falling back to the modeled executor");
+            run_modeled()
+        }
+    }
+}
+
+fn run_compiled(server: BlinkServer) -> anyhow::Result<()> {
     let m = &server.manifest;
     println!(
         "[moe] model={} experts={} top_k={} layers={} (moe={})",
@@ -42,5 +64,64 @@ fn main() -> anyhow::Result<()> {
     println!("[moe] no host round-trip occurred for any routing decision:");
     println!("      gating top-k executes inside each decode graph (L1 Pallas kernel).");
     server.shutdown();
+    Ok(())
+}
+
+/// Artifacts-free path: same scheduler, same ring protocol, modeled
+/// launches. Decode steps carry the expected-expert-union dispatch cost,
+/// so the MoE tax is visible in the iteration stats.
+fn run_modeled() -> anyhow::Result<()> {
+    let manifest = modeled_moe_manifest();
+    println!(
+        "[moe] model={} experts={} top_k={} layers={} (moe={})",
+        manifest.model, manifest.n_experts, manifest.top_k, manifest.n_layers, manifest.moe
+    );
+    let n = 4usize;
+    println!(
+        "[moe] expected expert union at batch {n}: {:.2} of {} experts",
+        expected_active_experts(manifest.n_experts, manifest.top_k, n),
+        manifest.n_experts,
+    );
+
+    let cost = ModeledCost {
+        prefill_us_per_token: 20.0,
+        decode_step_us: 300.0,
+        expert_dispatch_us: 50.0,
+    };
+    let executor = Executor::spawn_modeled(&manifest, cost);
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 16,
+        max_prompt: 64,
+        max_output: 32,
+    }));
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest,
+        SchedulerConfig { placement: Placement::GpuResident, ..Default::default() },
+    );
+
+    let mut rng = Rng::new(9);
+    for i in 0..n {
+        let prompt: Vec<u32> = (0..24).map(|_| rng.below(2048) as u32).collect();
+        assert!(ring.claim_for_write(i));
+        ring.write_prompt(i, &prompt);
+        ring.submit(i, i as u64, 24, 16, i as u32);
+    }
+    loop {
+        let done = (0..n)
+            .all(|i| matches!(ring.slot(i).state(), SlotState::DecodeCompleted | SlotState::Failed));
+        if done {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    for i in 0..n {
+        let generated = ring.slot(i).generated.load(std::sync::atomic::Ordering::Relaxed);
+        println!("[moe] slot {i}: {generated} output tokens");
+    }
+    sched.drain_and_stop();
+    println!("[moe] scheduler: {}", sched.stats.summary());
+    println!("[moe] routing stays on-device either way: the host never sees an expert id.");
     Ok(())
 }

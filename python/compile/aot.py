@@ -31,16 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax._src.lib import xla_client as xc
 
+from .manifest import (
+    DENSE_DECODE_BATCHES,
+    DENSE_PREFILL_GRID,
+    MOE_DECODE_BATCHES,
+    MOE_PREFILL_GRID,
+    manifest_text,
+)
 from .model import TINY, TINY_MOE, ModelConfig, init_params, make_flat_fns
-
-# The (batch, seq) graph grids. Decode graphs are keyed by batch size;
-# prefill graphs by (batch, padded seq len).
-DENSE_DECODE_BATCHES = [1, 2, 4, 8, 16]
-DENSE_PREFILL_GRID = [
-    (b, s) for b in (1, 2, 4) for s in (16, 32, 64, 128, 256)
-]
-MOE_DECODE_BATCHES = [1, 2, 4, 8]
-MOE_PREFILL_GRID = [(b, s) for b in (1, 2) for s in (16, 32, 64, 128)]
 
 
 def to_hlo_text(lowered) -> str:
@@ -122,28 +120,9 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
         graphs.append((name, "prefill_offset", b, s))
         print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
 
+    backend = "pallas" if use_pallas else "ref"
     with open(os.path.join(out, "manifest.txt"), "w") as f:
-        f.write("blink-manifest v1\n")
-        f.write(f"model {cfg.name}\n")
-        for field in (
-            "vocab_size d_model n_layers n_heads n_kv_heads d_head d_ff "
-            "block_size num_blocks max_blocks_per_seq n_experts top_k eos_token"
-        ).split():
-            f.write(f"{field} {getattr(cfg, field)}\n")
-        f.write(f"moe {int(cfg.moe)}\n")
-        f.write(f"temperature {cfg.temperature}\n")
-        f.write(f"top_p {cfg.top_p}\n")
-        f.write(f"rope_theta {cfg.rope_theta}\n")
-        for name, shape in cfg.param_specs():
-            f.write(f"param {name} {'x'.join(map(str, shape))} f32\n")
-        # Trailing token records which attention build each graph was
-        # lowered against ("pallas" kernels vs the jnp "ref" oracles) so
-        # the rust runtime can surface it in /metrics and eval output;
-        # older parsers ignore the extra token, newer ones default
-        # missing backends to "unspecified".
-        backend = "pallas" if use_pallas else "ref"
-        for name, kind, b, s in graphs:
-            f.write(f"graph {name} {kind} {b} {s} {backend}\n")
+        f.write(manifest_text(cfg, graphs, backend))
     print(f"[{cfg.name}] exported {len(graphs)} graphs in {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,71 @@
+"""Manifest + graph-grid declarations for the AOT export — jax-free.
+
+``aot.py`` lowers graphs with JAX and then writes the manifest the rust
+runtime parses (rust/src/runtime/manifest.rs). The *content* of that
+manifest — which fields, which graph grid, in what order — is pure data,
+so it lives here where tests can exercise it without a JAX install: the
+manifest is the contract between the python exporter and the rust
+coordinator, and the contract should be checkable everywhere the tests
+run.
+
+``manifest_text`` duck-types its config (anything with the ModelConfig
+field names and ``param_specs()``), which is what keeps this module
+import-clean: ``model.ModelConfig`` itself lives behind a jax import.
+"""
+
+from typing import List, Tuple
+
+# The (batch, seq) graph grids. Decode graphs are keyed by batch size;
+# prefill graphs by (batch, padded seq len). The MoE grid is smaller —
+# expert dispatch multiplies lowering time and the sparse model exists to
+# prove the path, not to chase throughput.
+DENSE_DECODE_BATCHES = [1, 2, 4, 8, 16]
+DENSE_PREFILL_GRID = [
+    (b, s) for b in (1, 2, 4) for s in (16, 32, 64, 128, 256)
+]
+MOE_DECODE_BATCHES = [1, 2, 4, 8]
+MOE_PREFILL_GRID = [(b, s) for b in (1, 2) for s in (16, 32, 64, 128)]
+
+Graph = Tuple[str, str, int, int]  # (name, kind, batch, seq)
+
+
+def graph_grid(moe: bool) -> List[Graph]:
+    """The full graph list one export produces, in manifest order:
+    decode graphs, then prefill, then the offset-prefill variants (which
+    share the prefill grid — S is the padded *suffix* length, and the
+    per-lane offsets are a runtime input)."""
+    decode_batches = MOE_DECODE_BATCHES if moe else DENSE_DECODE_BATCHES
+    prefill_grid = MOE_PREFILL_GRID if moe else DENSE_PREFILL_GRID
+    graphs: List[Graph] = [(f"decode_b{b}", "decode", b, 0) for b in decode_batches]
+    graphs += [(f"prefill_b{b}_s{s}", "prefill", b, s) for b, s in prefill_grid]
+    graphs += [
+        (f"prefill_offset_b{b}_s{s}", "prefill_offset", b, s) for b, s in prefill_grid
+    ]
+    return graphs
+
+
+def manifest_text(cfg, graphs: List[Graph], backend: str) -> str:
+    """The manifest the rust runtime parses, as one string.
+
+    ``cfg`` is a ``model.ModelConfig`` (or anything shaped like one);
+    ``backend`` records which attention build the graphs were lowered
+    against ("pallas" kernels vs the jnp "ref" oracles) so the runtime
+    can surface it in /metrics and eval output — older parsers ignore
+    the extra token, newer ones default missing backends to
+    "unspecified".
+    """
+    lines = ["blink-manifest v1", f"model {cfg.name}"]
+    for field in (
+        "vocab_size d_model n_layers n_heads n_kv_heads d_head d_ff "
+        "block_size num_blocks max_blocks_per_seq n_experts top_k eos_token"
+    ).split():
+        lines.append(f"{field} {getattr(cfg, field)}")
+    lines.append(f"moe {int(cfg.moe)}")
+    lines.append(f"temperature {cfg.temperature}")
+    lines.append(f"top_p {cfg.top_p}")
+    lines.append(f"rope_theta {cfg.rope_theta}")
+    for name, shape in cfg.param_specs():
+        lines.append(f"param {name} {'x'.join(map(str, shape))} f32")
+    for name, kind, b, s in graphs:
+        lines.append(f"graph {name} {kind} {b} {s} {backend}")
+    return "\n".join(lines) + "\n"

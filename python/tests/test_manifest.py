@@ -1,0 +1,106 @@
+"""The manifest contract, testable without JAX.
+
+``compile.manifest`` is the jax-free half of the AOT exporter: the graph
+grids and the manifest text the rust runtime parses. These tests pin the
+blink-tiny-moe contract the interference eval and the rust MoE path rely
+on — the manifest must declare the sparse geometry (``moe 1``,
+``n_experts 4``, ``top_k 2``) and the MoE graph grid — so a grid or
+field-order change that would strand the rust parser fails here, in any
+environment, before an export ever runs.
+"""
+
+import dataclasses
+
+import pytest
+
+from compile.manifest import (
+    MOE_DECODE_BATCHES,
+    MOE_PREFILL_GRID,
+    graph_grid,
+    manifest_text,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StubMoeConfig:
+    """blink-tiny-moe's declared geometry (model.TINY_MOE), restated
+    without importing the jax-backed model module. The jax-gated test
+    below asserts this stub and the real config emit identical
+    manifests, so the two cannot drift apart silently."""
+
+    name: str = "blink-tiny-moe"
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 512
+    rope_theta: float = 10000.0
+    block_size: int = 16
+    num_blocks: int = 512
+    max_blocks_per_seq: int = 32
+    moe: bool = True
+    n_experts: int = 4
+    top_k: int = 2
+    temperature: float = 0.8
+    top_p: float = 0.95
+    eos_token: int = 0
+
+    def param_specs(self):
+        l, d, f = self.n_layers, self.d_model, self.d_ff
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        e = self.n_experts
+        return [
+            ("tok_embed", (self.vocab_size, d)),
+            ("attn_norm", (l, d)),
+            ("wq", (l, d, hq * dh)),
+            ("wk", (l, d, hkv * dh)),
+            ("wv", (l, d, hkv * dh)),
+            ("wo", (l, hq * dh, d)),
+            ("mlp_norm", (l, d)),
+            ("router", (l, d, e)),
+            ("w_gate", (l, e, d, f)),
+            ("w_up", (l, e, d, f)),
+            ("w_down", (l, e, f, d)),
+            ("final_norm", (d,)),
+        ]
+
+
+def test_moe_manifest_declares_sparse_geometry():
+    text = manifest_text(StubMoeConfig(), graph_grid(moe=True), "pallas")
+    lines = text.splitlines()
+    assert lines[0] == "blink-manifest v1"
+    assert lines[1] == "model blink-tiny-moe"
+    assert "moe 1" in lines
+    assert "n_experts 4" in lines
+    assert "top_k 2" in lines
+    # Expert weights carry the [L, E, ...] axis the rust loader expects.
+    assert "param router 4x256x4 f32" in lines
+    assert "param w_gate 4x4x256x512 f32" in lines
+
+
+def test_moe_graph_grid_covers_decode_and_both_prefill_kinds():
+    graphs = graph_grid(moe=True)
+    names = [g[0] for g in graphs]
+    for b in MOE_DECODE_BATCHES:
+        assert f"decode_b{b}" in names
+    for b, s in MOE_PREFILL_GRID:
+        assert f"prefill_b{b}_s{s}" in names
+        assert f"prefill_offset_b{b}_s{s}" in names
+    assert len(names) == len(set(names)) == len(MOE_DECODE_BATCHES) + 2 * len(
+        MOE_PREFILL_GRID
+    )
+    # Every graph line lands in the manifest with the backend token.
+    text = manifest_text(StubMoeConfig(), graphs, "ref")
+    assert f"graph decode_b{MOE_DECODE_BATCHES[0]} decode {MOE_DECODE_BATCHES[0]} 0 ref" in text
+    assert all(f"graph {n} " in text for n in names)
+
+
+def test_stub_matches_the_real_model_config():
+    jax = pytest.importorskip("jax")  # noqa: F841 — model.py imports jax
+    from compile.model import TINY_MOE
+
+    assert manifest_text(StubMoeConfig(), graph_grid(moe=True), "pallas") == manifest_text(
+        TINY_MOE, graph_grid(moe=True), "pallas"
+    )

@@ -1,0 +1,661 @@
+//! The headline reproduction: stability under CPU interference (paper
+//! Fig 1, §6.3), live and modeled.
+//!
+//! Blink's signature result is that a device-plane control loop does not
+//! care what the host CPUs are doing: colocated antagonists degrade
+//! CPU-resident baselines by up to two orders of magnitude while Blink
+//! holds flat. This module demonstrates that end-to-end as a scenario
+//! grid over
+//!
+//! * **model**: dense (`modeled-tiny`) vs MoE (`modeled-tiny-moe`, 4
+//!   experts top-2 — the sparse path pays a per-step expert-dispatch tax
+//!   in the modeled executor);
+//! * **placement**: `gpu` ([`Placement::GpuResident`], the overlapped
+//!   device-plane loop) vs `host` ([`Placement::CpuResident`], the
+//!   deliberately host-driven baseline whose every iteration runs
+//!   [`HostOrchestrator`](crate::hostsim::HostOrchestrator) work on the
+//!   host heap);
+//! * **antagonist intensity**: 0, ½, 1 — mapped to a mean host-work
+//!   multiplier of `1 + 7·intensity` (8× at full tilt, the shape of the
+//!   paper's 24× pbzip2 antagonist scaled to the tiny testbed).
+//!
+//! Two antagonist channels exist and they serve different purposes
+//! (DESIGN.md §8): a *live* [`Interferer`](crate::hostsim::Interferer)
+//! produces real LLC/TLB contention but host-dependent timing, while
+//! the *deterministic* channel
+//! ([`HostOrchestrator::set_contention`](crate::hostsim::HostOrchestrator::set_contention))
+//! inflates the orchestrator's work by samples from a seeded
+//! [`InterferenceProcess`] so time scales with work and CI can assert
+//! inflation *ratios*. The golden-tested `interference.csv` comes from a
+//! fully virtual-time model of the control loop (byte-deterministic at a
+//! fixed seed — wall clocks never enter it); the live cells run the real
+//! ring → scheduler → modeled-executor pipeline and report measured
+//! values in `interference_live.csv`, which is *not* golden-tested.
+//!
+//! Energy per token is wired to both via
+//! [`PowerModel::mj_per_token_live`]: wall power decomposed into base +
+//! GPU swing + host share + antagonist draw (scaled by intensity) + DPU,
+//! divided by measured throughput.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::eval::live::{modeled_manifest, modeled_moe_manifest};
+use crate::gpu::executor::expected_active_experts;
+use crate::gpu::{
+    Executor, HostContention, ModeledCost, Placement, PrefixReuse, Scheduler, SchedulerConfig,
+};
+use crate::ringbuf::{RingBuffer, RingConfig, SlotState};
+use crate::sim::energy::PowerModel;
+use crate::sim::interference::InterferenceProcess;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::workload::{RequestMetrics, WindowMetrics};
+
+/// Antagonist intensities the suite sweeps (the acceptance grid needs
+/// ≥ 3 so the curve's *shape* — flat vs exploding — is visible).
+pub const INTENSITIES: [f64; 3] = [0.0, 0.5, 1.0];
+
+/// Intensity → mean host-work multiplier: 8× at full intensity. The
+/// paper's 24× antagonist collapses a host-driven stack outright; 8×
+/// keeps the tiny testbed's cells fast while leaving the ≥3×-vs-<1.5×
+/// headline margin wide.
+pub fn contention_mean(intensity: f64) -> f64 {
+    1.0 + 7.0 * intensity.clamp(0.0, 1.0)
+}
+
+/// One cell of the scenario grid.
+#[derive(Debug, Clone, Copy)]
+pub struct CellSpec {
+    pub moe: bool,
+    /// Host-driven control loop (the baseline) vs device-plane loop.
+    pub host: bool,
+    pub intensity: f64,
+}
+
+impl CellSpec {
+    pub fn model(&self) -> &'static str {
+        if self.moe {
+            "moe"
+        } else {
+            "dense"
+        }
+    }
+
+    pub fn placement(&self) -> &'static str {
+        if self.host {
+            "host"
+        } else {
+            "gpu"
+        }
+    }
+}
+
+/// The full {dense, moe} × {gpu, host} × intensity grid, in CSV row order.
+pub fn cell_grid() -> Vec<CellSpec> {
+    let mut cells = vec![];
+    for moe in [false, true] {
+        for host in [false, true] {
+            for intensity in INTENSITIES {
+                cells.push(CellSpec { moe, host, intensity });
+            }
+        }
+    }
+    cells
+}
+
+/// Per-cell results — shared between the modeled sweep and the live
+/// runner so both serialize through [`interference_csv`].
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub spec: CellSpec,
+    /// Control-overhead percentiles (loop top → decode launch, µs).
+    pub loop_p50_us: f64,
+    pub loop_p99_us: f64,
+    /// Full-iteration percentiles (control + executor step, µs).
+    pub iter_p50_us: f64,
+    pub iter_p99_us: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p99_ms: f64,
+    pub tok_per_s: f64,
+    pub energy_mj_per_tok: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Modeled cells: a virtual-time model of the control loop. Deterministic
+// by construction — no wall clock anywhere — which is what makes the
+// golden byte-determinism test possible. The loop structure mirrors the
+// live scheduler: control work at the loop top, paused-admission prefill
+// in batches, one decode step per iteration over the live lanes.
+// ---------------------------------------------------------------------------
+
+/// Modeled per-iteration control work, µs. The device-plane loop's
+/// control share (ring scan + staging + launch enqueue) is a few µs and
+/// — the design point — contains no host-heap work to inflate.
+const GPU_CONTROL_US: f64 = 5.0;
+/// The host-driven baseline's per-iteration orchestration (batch
+/// reassembly and bookkeeping over the host heap); this is what the
+/// antagonist multiplies.
+const HOST_ORCH_US: f64 = 400.0;
+const DECODE_STEP_US: f64 = 200.0;
+const PREFILL_US_PER_TOKEN: f64 = 50.0;
+const EXPERT_DISPATCH_US: f64 = 40.0;
+/// MoE routing geometry of `modeled-tiny-moe`.
+const MOE_EXPERTS: usize = 4;
+const MOE_TOP_K: usize = 2;
+
+/// Modeled workload: all requests arrive at t = 0, prefill admits in
+/// grid-sized batches, decode runs the batch to completion.
+const MODELED_REQUESTS: usize = 16;
+const MODELED_INPUT: usize = 64;
+const MODELED_OUTPUT: usize = 32;
+
+/// Run one modeled cell in virtual time. Same `(spec, seed)` ⇒ identical
+/// results on every host and platform.
+pub fn run_modeled_cell(spec: &CellSpec, seed: u64) -> Cell {
+    let (max_batch, prefill_batch) = if spec.moe { (8, 2) } else { (16, 4) };
+    let mut rng = Rng::new(seed);
+    let mean = contention_mean(spec.intensity);
+    let process = if spec.host && mean > 1.0 {
+        InterferenceProcess::new(mean, &mut rng)
+    } else {
+        InterferenceProcess::none()
+    };
+
+    let n = MODELED_REQUESTS;
+    let mut t_us = 0.0f64;
+    let mut busy_us = 0.0f64; // device-plane busy (prefill + decode)
+    let mut ctrl_us_sum = 0.0f64;
+    let mut pending = n;
+    let mut lanes: Vec<(usize, usize)> = Vec::new(); // (request, generated)
+    let mut first_s = vec![0.0f64; n];
+    let mut finish_s = vec![0.0f64; n];
+    let mut ctrl_samples: Vec<f64> = Vec::new();
+    let mut iter_samples: Vec<f64> = Vec::new();
+    let mut iter_idx = 0u64;
+
+    while pending > 0 || !lanes.is_empty() {
+        // Control work at the loop top. The host placement's share is
+        // inflated by the seeded antagonist process (10 ms of virtual
+        // time per iteration drives its phase wander, matching
+        // HostOrchestrator::step_work); the device-plane share has no
+        // host-heap work for the antagonist to touch.
+        let ctrl = if spec.host {
+            HOST_ORCH_US * process.sample(iter_idx as f64 * 0.01, &mut rng)
+        } else {
+            GPU_CONTROL_US
+        };
+        iter_idx += 1;
+        t_us += ctrl;
+        ctrl_us_sum += ctrl;
+        ctrl_samples.push(ctrl);
+
+        // Paused-admission prefill, one grid batch per iteration. The
+        // prefill launch publishes each lane's first token, so TTFT is
+        // stamped at prefill completion — same as the live ring.
+        if pending > 0 && lanes.len() < max_batch {
+            let admit = prefill_batch.min(pending).min(max_batch - lanes.len());
+            let pf = PREFILL_US_PER_TOKEN * (admit * MODELED_INPUT) as f64;
+            t_us += pf;
+            busy_us += pf;
+            for _ in 0..admit {
+                let id = n - pending;
+                first_s[id] = t_us / 1e6;
+                lanes.push((id, 0));
+                pending -= 1;
+            }
+        }
+
+        // One decode step over the live batch; MoE pays the dispatch tax
+        // for the expected expert union at this batch size.
+        if !lanes.is_empty() {
+            let b = lanes.len();
+            let dispatch = if spec.moe {
+                EXPERT_DISPATCH_US * expected_active_experts(MOE_EXPERTS, MOE_TOP_K, b)
+            } else {
+                0.0
+            };
+            let step = DECODE_STEP_US + dispatch;
+            t_us += step;
+            busy_us += step;
+            iter_samples.push(ctrl + step);
+            let mut i = 0;
+            while i < lanes.len() {
+                lanes[i].1 += 1;
+                if lanes[i].1 >= MODELED_OUTPUT {
+                    finish_s[lanes[i].0] = t_us / 1e6;
+                    lanes.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    let window_s = t_us / 1e6;
+    let reqs: Vec<RequestMetrics> = (0..n)
+        .map(|id| RequestMetrics {
+            id: id as u64,
+            arrival_s: 0.0,
+            first_token_s: first_s[id],
+            finish_s: finish_s[id],
+            input_tokens: MODELED_INPUT,
+            output_tokens: MODELED_OUTPUT,
+            itl_s: vec![],
+            priority: 0,
+            ttft_budget_s: 0.0,
+        })
+        .collect();
+    let wm = WindowMetrics::from_requests(n as f64 / window_s, window_s, &reqs);
+
+    ctrl_samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    iter_samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Energy: the device plane's utilization is its busy share of the
+    // makespan; the host share is the orchestration's busy fraction
+    // (one hot core plus what contention adds) on the host placement
+    // and near-idle on the device placement. The device-plane stack
+    // fronts through the DPU (Blink's BlueField draw); the host-driven
+    // baseline has no DPU. Antagonist draw scales with intensity.
+    let gpu_util = busy_us / t_us;
+    let host_util = if spec.host { (ctrl_us_sum / t_us).min(1.0) } else { 0.02 };
+    let dpu_w = if spec.host { 0.0 } else { 75.0 };
+    let tok_per_s = wm.decode_tok_s;
+    let energy = PowerModel::default()
+        .mj_per_token_live(gpu_util, host_util, dpu_w, spec.intensity, tok_per_s);
+
+    Cell {
+        spec: *spec,
+        loop_p50_us: percentile_sorted(&ctrl_samples, 50.0),
+        loop_p99_us: percentile_sorted(&ctrl_samples, 99.0),
+        iter_p50_us: percentile_sorted(&iter_samples, 50.0),
+        iter_p99_us: percentile_sorted(&iter_samples, 99.0),
+        ttft_p99_ms: wm.ttft.p99,
+        tpot_p99_ms: wm.tpot.p99,
+        tok_per_s,
+        energy_mj_per_tok: energy,
+    }
+}
+
+/// The full modeled grid at a fixed seed (per-cell sub-seeds are derived
+/// by index, so cells are independent but the whole sweep is one seed).
+pub fn modeled_cells(seed: u64) -> Vec<Cell> {
+    cell_grid()
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            run_modeled_cell(spec, seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9)))
+        })
+        .collect()
+}
+
+/// Serialize cells to the suite's CSV (stable column order; the golden
+/// test pins these bytes at a fixed seed).
+pub fn interference_csv(cells: &[Cell]) -> String {
+    let mut csv = String::from(
+        "model,placement,intensity,loop_iter_p50_us,loop_iter_p99_us,iter_full_p50_us,\
+         iter_full_p99_us,ttft_p99_ms,tpot_p99_ms,tok_per_s,energy_mj_per_tok\n",
+    );
+    for c in cells {
+        csv.push_str(&format!(
+            "{},{},{:.2},{:.2},{:.2},{:.2},{:.2},{:.3},{:.4},{:.1},{:.2}\n",
+            c.spec.model(),
+            c.spec.placement(),
+            c.spec.intensity,
+            c.loop_p50_us,
+            c.loop_p99_us,
+            c.iter_p50_us,
+            c.iter_p99_us,
+            c.ttft_p99_ms,
+            c.tpot_p99_ms,
+            c.tok_per_s,
+            c.energy_mj_per_tok,
+        ));
+    }
+    csv
+}
+
+// ---------------------------------------------------------------------------
+// Live cells: the real ring → scheduler → modeled-executor pipeline under
+// the deterministic antagonist channel. Wall-clock measured — printed and
+// written to interference_live.csv, never golden-tested (DESIGN.md §8:
+// on shared CI hosts only *ratios* are assertable, and the tier-1 test
+// asserts exactly those).
+// ---------------------------------------------------------------------------
+
+/// Knobs for one live run. `eval()` is the eval-suite sizing; the tier-1
+/// ratio test uses heavier decode/orchestration costs so OS noise is
+/// small relative to every iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveParams {
+    pub requests: usize,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    pub decode_step_us: f64,
+    pub prefill_us_per_token: f64,
+    pub expert_dispatch_us: f64,
+    /// Host-driven baseline's orchestrator sizing.
+    pub scratch_mb: usize,
+    pub touches_per_step: usize,
+    pub seed: u64,
+}
+
+impl LiveParams {
+    pub fn eval() -> LiveParams {
+        LiveParams {
+            requests: 8,
+            input_tokens: 64,
+            output_tokens: 48,
+            decode_step_us: DECODE_STEP_US,
+            prefill_us_per_token: PREFILL_US_PER_TOKEN,
+            expert_dispatch_us: EXPERT_DISPATCH_US,
+            scratch_mb: 4,
+            touches_per_step: 60_000,
+            seed: 7,
+        }
+    }
+
+    pub fn smoke() -> LiveParams {
+        LiveParams { requests: 4, output_tokens: 16, ..LiveParams::eval() }
+    }
+}
+
+/// Run one live cell: real scheduler + modeled executor, requests
+/// submitted through the ring, per-request TTFT/TPOT read back off the
+/// slots' device-plane timestamps.
+pub fn run_live_cell(spec: &CellSpec, p: &LiveParams) -> Cell {
+    let manifest = if spec.moe { modeled_moe_manifest() } else { modeled_manifest() };
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 64,
+        max_prompt: 256,
+        max_output: 256,
+    }));
+    let cost = ModeledCost {
+        prefill_us_per_token: p.prefill_us_per_token,
+        decode_step_us: p.decode_step_us,
+        expert_dispatch_us: p.expert_dispatch_us,
+    };
+    let executor = Executor::spawn_modeled(&manifest, cost);
+    let placement = if spec.host {
+        Placement::CpuResident { scratch_mb: p.scratch_mb, touches_per_step: p.touches_per_step }
+    } else {
+        Placement::GpuResident
+    };
+    let mean = contention_mean(spec.intensity);
+    let host_contention = (spec.host && mean > 1.0)
+        .then_some(HostContention { mean, seed: p.seed ^ 0xC010_C0DE });
+    let n_experts = manifest.n_experts;
+    let top_k = manifest.top_k;
+    let is_moe = manifest.moe;
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest,
+        SchedulerConfig {
+            placement,
+            apply_launch_delays: false,
+            prefix_reuse: PrefixReuse::Off,
+            host_contention,
+            ..Default::default()
+        },
+    );
+
+    let mut rng = Rng::new(p.seed);
+    let prompts: Vec<Vec<u32>> = (0..p.requests)
+        .map(|_| (0..p.input_tokens).map(|_| rng.below(2048) as u32).collect())
+        .collect();
+
+    let t0 = Instant::now();
+    for (i, prompt) in prompts.iter().enumerate() {
+        assert!(ring.claim_for_write(i));
+        ring.write_prompt(i, prompt);
+        ring.submit(i, i as u64, prompt.len() as u32, p.output_tokens as u32, i as u32);
+    }
+    loop {
+        let done = (0..p.requests).all(|i| {
+            matches!(ring.slot(i).state(), SlotState::DecodeCompleted | SlotState::Failed)
+        });
+        if done {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    let makespan = t0.elapsed();
+    sched.drain_and_stop();
+
+    // Per-request metrics off the slot timestamps (stamped by the ring
+    // at submit / first published token / completion), re-based to the
+    // earliest submit.
+    let epoch_us = (0..p.requests)
+        .map(|i| ring.slot(i).submit_time_us.load(Ordering::Acquire))
+        .min()
+        .unwrap_or(0);
+    let reqs: Vec<RequestMetrics> = (0..p.requests)
+        .filter(|&i| ring.slot(i).state() == SlotState::DecodeCompleted)
+        .map(|i| {
+            let s = ring.slot(i);
+            RequestMetrics::from_slot_times_us(
+                i as u64,
+                epoch_us,
+                s.submit_time_us.load(Ordering::Acquire),
+                s.first_token_time_us.load(Ordering::Acquire),
+                s.finish_time_us.load(Ordering::Acquire),
+                p.input_tokens,
+                p.output_tokens,
+            )
+        })
+        .collect();
+    let window_s = makespan.as_secs_f64().max(1e-9);
+    let wm = WindowMetrics::from_requests(p.requests as f64 / window_s, window_s, &reqs);
+
+    // Device-plane busy estimate for the power decomposition: decode
+    // steps at their modeled cost (plus the expert-dispatch tax at the
+    // mean live batch) and the submitted prefill tokens.
+    let steps = sched.stats.decode_steps.load(Ordering::Relaxed) as f64;
+    let mean_batch = sched.stats.mean_batch_occupancy().round().max(1.0) as usize;
+    let dispatch = if is_moe {
+        p.expert_dispatch_us * expected_active_experts(n_experts, top_k, mean_batch)
+    } else {
+        0.0
+    };
+    let busy_us = steps * (p.decode_step_us + dispatch)
+        + (p.requests * p.input_tokens) as f64 * p.prefill_us_per_token;
+    let gpu_util = (busy_us / (window_s * 1e6)).clamp(0.0, 1.0);
+    // The live path has no perf counters; charge the modeled host share
+    // (orchestration busy fraction is not separable from the makespan
+    // here, so use the same placement constants the modeled cells
+    // converge to: a hot host core under the baseline, near-idle host
+    // under the device plane).
+    let host_util = if spec.host { 0.40 } else { 0.02 };
+    let dpu_w = if spec.host { 0.0 } else { 75.0 };
+    let tok_per_s = wm.decode_tok_s;
+    let energy = PowerModel::default()
+        .mj_per_token_live(gpu_util, host_util, dpu_w, spec.intensity, tok_per_s);
+
+    Cell {
+        spec: *spec,
+        loop_p50_us: sched.stats.loop_iter_p50_us(),
+        loop_p99_us: sched.stats.loop_iter_p99_us(),
+        iter_p50_us: sched.stats.iter_full_p50_us(),
+        iter_p99_us: sched.stats.iter_full_p99_us(),
+        ttft_p99_ms: wm.ttft.p99,
+        tpot_p99_ms: wm.tpot.p99,
+        tok_per_s,
+        energy_mj_per_tok: energy,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The eval entry point.
+// ---------------------------------------------------------------------------
+
+fn print_cells(title: &str, cells: &[Cell]) {
+    println!("\n{title}");
+    println!(
+        "{:<7} {:<6} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "model",
+        "place",
+        "intensity",
+        "loop_p50_us",
+        "loop_p99_us",
+        "iter_p50_us",
+        "iter_p99_us",
+        "ttft_p99",
+        "tpot_p99",
+        "tok/s",
+        "mJ/tok"
+    );
+    for c in cells {
+        println!(
+            "{:<7} {:<6} {:>9.2} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>10.3} {:>10.1} {:>8.1}",
+            c.spec.model(),
+            c.spec.placement(),
+            c.spec.intensity,
+            c.loop_p50_us,
+            c.loop_p99_us,
+            c.iter_p50_us,
+            c.iter_p99_us,
+            c.ttft_p99_ms,
+            c.tpot_p99_ms,
+            c.tok_per_s,
+            c.energy_mj_per_tok,
+        );
+    }
+}
+
+/// The grid cell matching (model, placement, intensity), if present.
+fn find_cell(cells: &[Cell], moe: bool, host: bool, i: f64) -> Option<&Cell> {
+    cells.iter().find(|c| c.spec.moe == moe && c.spec.host == host && c.spec.intensity == i)
+}
+
+/// P99 inflation of max-intensity cells over their isolated siblings,
+/// per (model, placement) — the Fig 1 shape in two numbers per row.
+fn print_inflation(cells: &[Cell], metric: fn(&Cell) -> f64, what: &str) {
+    println!("\n  p99 {what} inflation at max antagonist intensity (vs isolated):");
+    for moe in [false, true] {
+        for host in [false, true] {
+            let pick = |i: f64| find_cell(cells, moe, host, i);
+            if let (Some(iso), Some(hot)) = (pick(0.0), pick(1.0)) {
+                let ratio = metric(hot) / metric(iso).max(1e-9);
+                println!(
+                    "    {:<7} {:<6} {:>6.2}x  {}",
+                    iso.spec.model(),
+                    iso.spec.placement(),
+                    ratio,
+                    if host { "(host-driven baseline)" } else { "(device-plane loop)" },
+                );
+            }
+        }
+    }
+}
+
+/// `blink eval interference [--out DIR] [--smoke]`: the deterministic
+/// modeled sweep (golden CSV) followed by the live scenario grid.
+pub fn interference(out: Option<&std::path::Path>, smoke: bool) {
+    println!("\n== Interference & colocation suite (paper Fig 1 / §6.3) ==");
+    println!("(host-driven placement collapses under antagonist load; the device-plane loop holds)");
+
+    let seed = 7u64;
+    let modeled = modeled_cells(seed);
+    print_cells("-- modeled cells (virtual time, byte-deterministic at fixed seed) --", &modeled);
+    print_inflation(&modeled, |c| c.loop_p99_us, "control-overhead");
+    super::live::write_out(out, "interference.csv", &interference_csv(&modeled));
+
+    let params = if smoke { LiveParams::smoke() } else { LiveParams::eval() };
+    println!(
+        "\n-- live cells (real scheduler + modeled executor; {} req x {} out per cell) --",
+        params.requests, params.output_tokens
+    );
+    let live: Vec<Cell> = cell_grid().iter().map(|s| run_live_cell(s, &params)).collect();
+    print_cells("-- live cells (wall-clock; ratios are the stable signal) --", &live);
+    print_inflation(&live, |c| c.iter_p99_us, "full-iteration");
+    super::live::write_out(out, "interference_live.csv", &interference_csv(&live));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interference_csv_is_deterministic() {
+        // Same seed ⇒ identical bytes (the acceptance criterion, same
+        // contract as prefix_eval_csv_is_deterministic). The modeled
+        // sweep runs in virtual time, so this holds on any machine.
+        let a = interference_csv(&modeled_cells(7));
+        let b = interference_csv(&modeled_cells(7));
+        assert_eq!(a, b, "same seed must produce identical CSV bytes");
+        let c = interference_csv(&modeled_cells(8));
+        assert_ne!(a, c, "the seed must actually drive the antagonist");
+    }
+
+    #[test]
+    fn interference_csv_covers_the_acceptance_grid() {
+        let csv = interference_csv(&modeled_cells(7));
+        let header = csv.lines().next().unwrap();
+        for col in
+            ["loop_iter_p99_us", "ttft_p99_ms", "tpot_p99_ms", "energy_mj_per_tok", "tok_per_s"]
+        {
+            assert!(header.contains(col), "missing column {col}: {header}");
+        }
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 2 * 2 * INTENSITIES.len(), "{{dense,moe}} x {{gpu,host}} x 3");
+        for model in ["dense", "moe"] {
+            for place in ["gpu", "host"] {
+                for i in INTENSITIES {
+                    let prefix = format!("{model},{place},{i:.2},");
+                    assert!(rows.iter().any(|r| r.starts_with(&prefix)), "missing cell {prefix}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn modeled_cells_pin_headline_shape() {
+        // The Fig 1 shape, deterministically: under the max-intensity
+        // antagonist the host-driven placement's control p99 inflates
+        // hard while the device-plane loop does not move at all.
+        let cells = modeled_cells(7);
+        let pick = |moe: bool, host: bool, i: f64| find_cell(&cells, moe, host, i).unwrap();
+        for moe in [false, true] {
+            let host_ratio = pick(moe, true, 1.0).loop_p99_us / pick(moe, true, 0.0).loop_p99_us;
+            let gpu_ratio = pick(moe, false, 1.0).loop_p99_us / pick(moe, false, 0.0).loop_p99_us;
+            assert!(host_ratio >= 3.0, "moe={moe}: host p99 inflation {host_ratio} < 3x");
+            assert!(gpu_ratio < 1.5, "moe={moe}: gpu p99 inflation {gpu_ratio} >= 1.5x");
+        }
+        // The sparse path pays its dispatch tax: MoE decode iterations
+        // are strictly slower than dense at the same placement.
+        assert!(
+            pick(true, false, 0.0).iter_p50_us > pick(false, false, 0.0).iter_p50_us,
+            "expert dispatch must show up in MoE iteration cost"
+        );
+        // Colocation draws antagonist power: at the same placement the
+        // device-plane cells pay more energy per token when the
+        // antagonist runs (throughput holds, wall power rises).
+        assert!(
+            pick(false, false, 1.0).energy_mj_per_tok > pick(false, false, 0.0).energy_mj_per_tok,
+            "interferer draw must be accounted in colocated energy"
+        );
+    }
+
+    #[test]
+    fn modeled_host_baseline_degrades_monotonically() {
+        // Along the intensity sweep the host-driven placement's tail and
+        // throughput must degrade monotonically — the curve Fig 1 plots.
+        let cells = modeled_cells(7);
+        for moe in [false, true] {
+            let host: Vec<&Cell> =
+                cells.iter().filter(|c| c.spec.moe == moe && c.spec.host).collect();
+            for w in host.windows(2) {
+                assert!(
+                    w[1].loop_p99_us >= w[0].loop_p99_us,
+                    "moe={moe}: host p99 not monotone over intensity"
+                );
+                assert!(
+                    w[1].tok_per_s <= w[0].tok_per_s,
+                    "moe={moe}: host throughput not monotone over intensity"
+                );
+            }
+        }
+    }
+}

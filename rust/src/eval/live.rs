@@ -207,7 +207,7 @@ pub fn fig4(out: Option<&std::path::Path>) {
 /// A modeled-executor manifest with the full graph grid, including the
 /// offset prefill variants (what `make artifacts` now emits for
 /// blink-tiny, minus the weights no modeled run needs).
-fn modeled_manifest() -> ModelManifest {
+pub fn modeled_manifest() -> ModelManifest {
     let mut text = String::from(
         "blink-manifest v1\nmodel modeled-tiny\nvocab_size 2048\nd_model 256\nn_layers 4\n\
          n_heads 8\nn_kv_heads 4\nd_head 32\nd_ff 704\nblock_size 16\nnum_blocks 512\n\
@@ -229,6 +229,34 @@ fn modeled_manifest() -> ModelManifest {
         }
     }
     ModelManifest::parse(&text).expect("modeled manifest")
+}
+
+/// The MoE sibling of [`modeled_manifest`]: blink-tiny-moe's geometry
+/// (4 experts, top-2 routing, d_ff 512) over the AOT MoE graph grid —
+/// the narrower batch/seq grid `python/compile/aot.py` exports for MoE
+/// models. This is what makes the sparse path *servable* without
+/// artifacts: `Executor::spawn_modeled` reads `moe`/`n_experts`/`top_k`
+/// off this manifest and charges the expert-dispatch tax per decode
+/// step.
+pub fn modeled_moe_manifest() -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel modeled-tiny-moe\nvocab_size 2048\nd_model 256\nn_layers 4\n\
+         n_heads 8\nn_kv_heads 4\nd_head 32\nd_ff 512\nblock_size 16\nnum_blocks 512\n\
+         max_blocks_per_seq 32\nn_experts 4\ntop_k 2\neos_token 0\nmoe 1\n\
+         param tok_embed 2048x256 f32\n",
+    );
+    for b in [1usize, 2, 4, 8] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0 modeled\n"));
+    }
+    for b in [1usize, 2] {
+        for s in [16usize, 32, 64, 128] {
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s} modeled\n"));
+            text.push_str(&format!(
+                "graph prefill_offset_b{b}_s{s} prefill_offset {b} {s} modeled\n"
+            ));
+        }
+    }
+    ModelManifest::parse(&text).expect("modeled moe manifest")
 }
 
 /// Prefix reuse, live: the real scheduler pipeline (ring scan →
@@ -349,7 +377,7 @@ pub fn prefix_live(out: Option<&std::path::Path>) {
     write_out(out, "prefix_live.csv", &csv);
 }
 
-fn write_out(out: Option<&std::path::Path>, name: &str, content: &str) {
+pub(crate) fn write_out(out: Option<&std::path::Path>, name: &str, content: &str) {
     if let Some(dir) = out {
         std::fs::create_dir_all(dir).ok();
         let p = dir.join(name);

@@ -8,6 +8,7 @@
 //! side-by-side where the paper prints a single table, so shape
 //! divergence is visible at a glance.
 
+pub mod interference;
 pub mod live;
 
 use std::io::Write;

@@ -67,18 +67,38 @@ impl LaunchCmd {
 pub struct ModeledCost {
     pub prefill_us_per_token: f64,
     pub decode_step_us: f64,
+    /// MoE models only: extra decode cost per *activated* expert per
+    /// step. A decode step over batch `b` activates on expectation
+    /// `E·(1 − (1 − k/E)^b)` of `E` experts (the union of `b`
+    /// independent top-`k` draws — the same expert-union math
+    /// `CostModel::active_weight_bytes` uses), so sparse decode gets
+    /// cheaper per token as the batch grows but pays a dispatch tax a
+    /// dense model never sees. Ignored for dense manifests.
+    pub expert_dispatch_us: f64,
 }
 
 impl Default for ModeledCost {
     fn default() -> Self {
-        ModeledCost { prefill_us_per_token: 0.2, decode_step_us: 2.0 }
+        ModeledCost { prefill_us_per_token: 0.2, decode_step_us: 2.0, expert_dispatch_us: 0.0 }
     }
 }
 
 impl ModeledCost {
     pub fn zero() -> Self {
-        ModeledCost { prefill_us_per_token: 0.0, decode_step_us: 0.0 }
+        ModeledCost { prefill_us_per_token: 0.0, decode_step_us: 0.0, expert_dispatch_us: 0.0 }
     }
+}
+
+/// Expected number of distinct experts activated by a decode step over
+/// `batch` lanes with top-`k`-of-`n` routing: `n·(1 − (1 − k/n)^batch)`.
+/// `top_k` at batch 1, saturating toward `n` as lanes stack up.
+pub fn expected_active_experts(n_experts: usize, top_k: usize, batch: usize) -> f64 {
+    if n_experts == 0 || top_k == 0 || batch == 0 {
+        return 0.0;
+    }
+    let n = n_experts as f64;
+    let k = top_k.min(n_experts) as f64;
+    n * (1.0 - (1.0 - k / n).powi(batch as i32))
 }
 
 /// Reusable boundary buffers: the staged planes are copied here once per
@@ -201,6 +221,8 @@ impl Executor {
         let max_blocks = manifest.max_blocks_per_seq;
         let vocab = manifest.vocab_size.max(2) as u32;
         let eos = manifest.eos_token;
+        // MoE manifests pay the expert-dispatch tax on decode steps.
+        let moe = if manifest.moe { Some((manifest.n_experts, manifest.top_k)) } else { None };
         let bell = Arc::new(Doorbell::<LaunchCmd>::new());
         let bell2 = bell.clone();
         // Pre-reserve the boundary scratch to the grid's widest shapes so
@@ -213,7 +235,9 @@ impl Executor {
                 let mut scratch =
                     BoundaryScratch::with_capacity(max_b * max_blocks, max_b, max_tok, max_b);
                 while let Some(cmd) = bell2.recv() {
-                    match modeled_step(&cache, max_blocks, vocab, eos, cost, &cmd, &mut scratch) {
+                    let res =
+                        modeled_step(&cache, max_blocks, vocab, eos, cost, moe, &cmd, &mut scratch);
+                    match res {
                         Ok(()) => cmd.completion.publish(&scratch.out),
                         Err(e) => {
                             eprintln!("modeled executor: {e}");
@@ -244,12 +268,14 @@ impl Executor {
 /// `Engine::execute` applies (`GraphSpec::validate_launch_shapes` — one
 /// implementation, no drift), charge the modeled cost, emit one
 /// deterministic non-EOS token per lane into `scratch.out`.
+#[allow(clippy::too_many_arguments)]
 fn modeled_step(
     cache: &GraphCache,
     max_blocks: usize,
     vocab: u32,
     eos: u32,
     cost: ModeledCost,
+    moe: Option<(usize, usize)>,
     cmd: &LaunchCmd,
     scratch: &mut BoundaryScratch,
 ) -> Result<(), String> {
@@ -276,7 +302,11 @@ fn modeled_step(
     // Cost: suffix-only for offset graphs by construction — the launched
     // token count *is* batch × padded-suffix.
     let us = match spec.kind {
-        GraphKind::Decode => cost.decode_step_us,
+        GraphKind::Decode => {
+            let dispatch =
+                moe.map_or(0.0, |(e, k)| cost.expert_dispatch_us * expected_active_experts(e, k, b));
+            cost.decode_step_us + dispatch
+        }
         GraphKind::Prefill | GraphKind::PrefillOffset => {
             cost.prefill_us_per_token * (b * spec.seq) as f64
         }
@@ -307,5 +337,31 @@ impl Drop for Executor {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_union_matches_routing_math() {
+        // batch 1 activates exactly top_k experts.
+        assert!((expected_active_experts(4, 2, 1) - 2.0).abs() < 1e-12);
+        // Monotone in batch, saturating below n_experts.
+        let mut prev = 0.0;
+        for b in 1..=32 {
+            let e = expected_active_experts(4, 2, b);
+            assert!(e > prev, "monotone in batch: {e} vs {prev}");
+            assert!(e <= 4.0 + 1e-12);
+            prev = e;
+        }
+        assert!(prev > 3.9, "large batches activate nearly all experts: {prev}");
+        // Degenerate configs dispatch nothing.
+        assert_eq!(expected_active_experts(0, 2, 8), 0.0);
+        assert_eq!(expected_active_experts(4, 0, 8), 0.0);
+        assert_eq!(expected_active_experts(4, 2, 0), 0.0);
+        // top_k clamped to n_experts: dense-equivalent routing.
+        assert!((expected_active_experts(4, 9, 3) - 4.0).abs() < 1e-12);
     }
 }

@@ -34,5 +34,5 @@ pub mod stats;
 pub use arena::{ArenaDims, LaunchArena};
 pub use executor::{Executor, LaunchCmd, ModeledCost};
 pub use policy::{AdmissionPolicy, Candidate, PolicyKind};
-pub use scheduler::{Placement, PrefixReuse, Scheduler, SchedulerConfig};
+pub use scheduler::{HostContention, Placement, PrefixReuse, Scheduler, SchedulerConfig};
 pub use stats::SchedulerStats;

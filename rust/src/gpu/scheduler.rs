@@ -121,6 +121,24 @@ pub struct SchedulerConfig {
     /// Chunk *k* > 0 runs a `prefill_offset` graph, so without offset
     /// graphs in the artifacts the budget resolves to 0 either way.
     pub prefill_chunk_tokens: Option<usize>,
+    /// Seeded modeled CPU contention applied to the host orchestrator
+    /// (CpuResident placement only — the device-plane loop has no
+    /// host-heap work to inflate, which is exactly Blink's design
+    /// point). `None` = isolated host. See
+    /// [`HostOrchestrator::set_contention`].
+    pub host_contention: Option<HostContention>,
+}
+
+/// Intensity of the deterministic antagonist channel: the host
+/// orchestrator's per-step work is multiplied by samples from a seeded
+/// `InterferenceProcess` with this mean. Deterministic work (rather than
+/// a live interferer's timing) is what lets CI assert inflation ratios.
+#[derive(Debug, Clone, Copy)]
+pub struct HostContention {
+    /// Mean work multiplier (≥ 1.0; the interference eval maps antagonist
+    /// intensity `i` to `1 + 7i`, so full intensity means 8× host work).
+    pub mean: f64,
+    pub seed: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -132,6 +150,7 @@ impl Default for SchedulerConfig {
             policy: PolicyKind::Fcfs,
             prefix_reuse: PrefixReuse::Auto,
             prefill_chunk_tokens: None,
+            host_contention: None,
         }
     }
 }
@@ -299,7 +318,11 @@ impl SchedulerCore {
         let orchestrator = match &config.placement {
             Placement::GpuResident => None,
             Placement::CpuResident { scratch_mb, touches_per_step } => {
-                Some(HostOrchestrator::new(*scratch_mb, *touches_per_step))
+                let mut orch = HostOrchestrator::new(*scratch_mb, *touches_per_step);
+                if let Some(c) = config.host_contention {
+                    orch.set_contention(c.mean, c.seed);
+                }
+                Some(orch)
             }
         };
         let gpu_resident = matches!(config.placement, Placement::GpuResident);
@@ -1144,6 +1167,13 @@ impl SchedulerCore {
             }
         }
         self.note_membership_change(retired);
+        // Full-iteration sample (loop top → tokens retired): control
+        // overhead *plus* the executor step, raw ns for exact
+        // percentiles. This is the number the interference eval pins
+        // its inflation ratios on — on the host-driven placement it
+        // contains the (possibly contended) orchestration work; on the
+        // device plane it is dominated by the executor step.
+        self.stats.iter_full.record_ns(iter_t0.elapsed().as_nanos() as u64);
 
         // Pause-and-resume admission using the overlapped scan results.
         if overlapped && self.lanes.len() + self.chunked.len() < self.max_batch && !draining {

@@ -55,6 +55,78 @@ impl LatencyHistogram {
     }
 }
 
+/// Fixed-capacity ring of raw nanosecond samples for *exact* percentiles.
+///
+/// The log₂ histogram above quantizes to powers of two, which is fine for
+/// telling 5 µs from 50 µs but useless for asserting a "<1.5×" inflation
+/// ratio: adjacent buckets are already 2× apart. The interference eval
+/// pins its headline ratios on exact samples instead. Recording is two
+/// relaxed atomic ops (cursor `fetch_add` + slot `store`) — no locks, no
+/// allocation, so the zero-alloc control loop (rust/tests/hotloop_alloc.rs)
+/// can record into it every iteration. Once the ring wraps, the oldest
+/// samples are overwritten; percentile readers snapshot, sort, and
+/// interpolate on their own (cold-path) heap.
+#[derive(Debug)]
+pub struct SampleRing {
+    slots: Box<[AtomicU64]>,
+    cursor: AtomicU64,
+}
+
+/// Default ring capacity — comfortably above the longest eval cell
+/// (~thousands of decode iterations) so percentiles see the full run.
+const SAMPLE_RING_CAP: usize = 8192;
+
+impl Default for SampleRing {
+    fn default() -> Self {
+        SampleRing::with_capacity(SAMPLE_RING_CAP)
+    }
+}
+
+impl SampleRing {
+    /// `capacity` is rounded up to at least 1.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        SampleRing {
+            slots: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one raw sample (alloc-free; hot-path safe). Samples are
+    /// stored as `ns + 1` so an unwritten slot (0) is distinguishable.
+    pub fn record_ns(&self, ns: u64) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        self.slots[i].store(ns.saturating_add(1), Ordering::Relaxed);
+    }
+
+    /// Samples recorded since construction (not capped at capacity).
+    pub fn count(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the retained samples in µs (unordered). Allocates —
+    /// reader-side only, never called from the control loop.
+    pub fn snapshot_us(&self) -> Vec<f64> {
+        self.slots
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .filter(|&v| v > 0)
+            .map(|v| (v - 1) as f64 / 1000.0)
+            .collect()
+    }
+
+    /// Exact `p`-th percentile in µs over the retained window (0.0 when
+    /// empty), linearly interpolated between ranks.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let mut v = self.snapshot_us();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_sorted(&v, p)
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct SchedulerStats {
     pub decode_steps: AtomicU64,
@@ -121,6 +193,14 @@ pub struct SchedulerStats {
     /// *precedes* a decode launch lands in that iteration's sample,
     /// which is what makes the p99 show control-path interference.
     pub loop_iter: LatencyHistogram,
+    /// Full decode-iteration latency (loop top → tokens retired, ns) as
+    /// raw samples: control overhead *plus* the executor step. Where
+    /// `loop_iter` is a coarse log₂ histogram of control overhead alone,
+    /// this ring keeps exact samples so the interference eval can assert
+    /// tight inflation ratios (a host-driven loop under contention must
+    /// inflate ≥3× while the device-plane loop holds <1.5× — bucket
+    /// resolution can't express 1.5×).
+    pub iter_full: SampleRing,
     /// Decode-batch membership changes (lane admitted, retired, or torn
     /// down on launch failure) — each one forces a full arena resync of
     /// the decode region instead of the in-place incremental update, so
@@ -165,6 +245,15 @@ impl SchedulerStats {
         self.loop_iter.percentile_us(99.0)
     }
 
+    /// Exact full-iteration percentiles in µs (see [`SchedulerStats::iter_full`]).
+    pub fn iter_full_p50_us(&self) -> f64 {
+        self.iter_full.percentile_us(50.0)
+    }
+
+    pub fn iter_full_p99_us(&self) -> f64 {
+        self.iter_full.percentile_us(99.0)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "decode_steps={} prefills={} offset_prefills={} completed={} failed={} tokens={} \
@@ -172,7 +261,8 @@ impl SchedulerStats {
              backpressure={} reordered={} ttft_misses={} prefix_hits={} prefix_hit_tokens={} \
              prefix_fallback_full={} prefix_evicted={} prefix_indexed={} session_requests={} \
              chunked_prefills={} chunk_launches={} max_chunk_wait_iters={} \
-             loop_iter_p50_us={:.2} loop_iter_p99_us={:.2} batch_membership_changes={} \
+             loop_iter_p50_us={:.2} loop_iter_p99_us={:.2} iter_full_p50_us={:.2} \
+             iter_full_p99_us={:.2} batch_membership_changes={} \
              heap_allocs={} attention_backend={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
@@ -200,6 +290,8 @@ impl SchedulerStats {
             self.max_chunk_wait_iters.load(Ordering::Relaxed),
             self.loop_iter_p50_us(),
             self.loop_iter_p99_us(),
+            self.iter_full_p50_us(),
+            self.iter_full_p99_us(),
             self.batch_membership_changes.load(Ordering::Relaxed),
             // 0 unless a test binary installed the counting allocator
             // (util::alloc) — surfaced so the zero-alloc property is a
@@ -267,6 +359,34 @@ mod tests {
         assert!(sum.contains("batch_membership_changes=3"), "{sum}");
         assert!(sum.contains("heap_allocs="), "{sum}");
         assert!(sum.contains("attention_backend=unspecified"), "{sum}");
+    }
+
+    #[test]
+    fn sample_ring_exact_percentiles() {
+        let r = SampleRing::with_capacity(128);
+        assert_eq!(r.percentile_us(99.0), 0.0, "empty ring reads 0");
+        // 100 samples spanning 1..=100 µs: exact percentiles, not bucket
+        // midpoints — p50 must land near 50 µs, not at a power of two.
+        for us in 1..=100u64 {
+            r.record_ns(us * 1000);
+        }
+        assert_eq!(r.count(), 100);
+        let p50 = r.percentile_us(50.0);
+        assert!((p50 - 50.5).abs() < 1.0, "p50 ≈ 50 µs, got {p50}");
+        let p99 = r.percentile_us(99.0);
+        assert!((p99 - 99.0).abs() < 1.5, "p99 ≈ 99 µs, got {p99}");
+    }
+
+    #[test]
+    fn sample_ring_wraps_keeping_newest() {
+        let r = SampleRing::with_capacity(4);
+        for us in [1u64, 2, 3, 4, 100, 200, 300, 400] {
+            r.record_ns(us * 1000);
+        }
+        assert_eq!(r.count(), 8);
+        let snap = r.snapshot_us();
+        assert_eq!(snap.len(), 4, "capacity bounds retention");
+        assert!(snap.iter().all(|&v| v >= 100.0), "old samples overwritten: {snap:?}");
     }
 
     #[test]

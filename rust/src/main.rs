@@ -9,8 +9,8 @@
 //!         defaults to auto (on when the artifacts ship offset graphs);
 //!         chunk budget defaults to the largest offset-graph seq (0 =
 //!         whole-prompt prefill, the paper's behavior)
-//! eval    <all|policies|prefix|prefix-live|chunked|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
-//!         [--out DIR] [--window S] [--threads N]
+//! eval    <all|policies|prefix|prefix-live|chunked|interference|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         [--out DIR] [--window S] [--threads N] [--smoke (interference: CI-sized live cells)]
 //! info    print manifest + graph grid for a model
 //! ```
 
@@ -33,8 +33,9 @@ fn main() {
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
                        [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse] \\\n\
                        [--prefill-chunk-tokens N (0 = whole-prompt prefill)]\n\
-                 eval <all|policies|prefix|prefix-live|chunked|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
-                      [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)]\n\
+                 eval <all|policies|prefix|prefix-live|chunked|interference|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                      [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)] \\\n\
+                      [--smoke (interference: CI-sized live cells)]\n\
                  info [--model blink-tiny]"
             );
             std::process::exit(2);
@@ -125,6 +126,9 @@ fn eval_cmd(args: &Args) {
         "prefix" => return eval::prefix_comparison(out_ref, window, threads),
         "prefix-live" => return eval::live::prefix_live(out_ref),
         "chunked" => return eval::chunked_comparison(out_ref, window, threads),
+        "interference" => {
+            return eval::interference::interference(out_ref, args.has_flag("smoke"));
+        }
         _ => {}
     }
 

@@ -36,16 +36,33 @@ impl Default for PowerModel {
 
 impl PowerModel {
     /// Mean wall power during a window.
-    pub fn wall_power_w(
+    pub fn wall_power_w(&self, system: System, gpu_util: f64, interference: bool) -> f64 {
+        self.wall_power_live_w(
+            gpu_util,
+            system.host_util(),
+            system.dpu_power_w(),
+            if interference { 1.0 } else { 0.0 },
+        )
+    }
+
+    /// System-free wall-power decomposition: what a *live* run reports
+    /// when there is no `System` enum in play — the interference eval
+    /// measures `gpu_util`/`host_util` off its own control loop and
+    /// scales the antagonist draw by its intensity (`interferer_frac`,
+    /// 0..1: the antagonist runs fewer busy cores at partial intensity).
+    /// `wall_power_w` is this with the system's calibrated constants, so
+    /// the DES and the live path share one decomposition.
+    pub fn wall_power_live_w(
         &self,
-        system: System,
         gpu_util: f64,
-        interference: bool,
+        host_util: f64,
+        dpu_w: f64,
+        interferer_frac: f64,
     ) -> f64 {
         let gpu = self.gpu_idle_w + (self.gpu_max_w - self.gpu_idle_w) * gpu_util.clamp(0.0, 1.0);
-        let host = self.cpu_max_w * system.host_util();
-        let interferer = if interference { self.interferer_w } else { 0.0 };
-        self.base_w + gpu + host + interferer + system.dpu_power_w()
+        let host = self.cpu_max_w * host_util.clamp(0.0, 1.0);
+        let interferer = self.interferer_w * interferer_frac.clamp(0.0, 1.0);
+        self.base_w + gpu + host + interferer + dpu_w
     }
 
     /// Energy per generated token, millijoules.
@@ -60,6 +77,22 @@ impl PowerModel {
             return f64::NAN;
         }
         self.wall_power_w(system, gpu_util, interference) / tokens_per_s * 1e3
+    }
+
+    /// Live-run counterpart of [`PowerModel::mj_per_token`] (same NaN
+    /// contract on zero throughput).
+    pub fn mj_per_token_live(
+        &self,
+        gpu_util: f64,
+        host_util: f64,
+        dpu_w: f64,
+        interferer_frac: f64,
+        tokens_per_s: f64,
+    ) -> f64 {
+        if tokens_per_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.wall_power_live_w(gpu_util, host_util, dpu_w, interferer_frac) / tokens_per_s * 1e3
     }
 }
 
@@ -86,5 +119,57 @@ mod tests {
         assert!(fast < slow);
         // Llama-3 8B band: paper reports 363–1306 mJ/tok across models.
         assert!((200.0..600.0).contains(&fast), "fast {fast}");
+    }
+
+    #[test]
+    fn live_decomposition_sums_exactly() {
+        let p = PowerModel::default();
+        let (gpu_util, host_util, dpu_w) = (0.6, 0.25, 75.0);
+        let expect = p.base_w
+            + p.gpu_idle_w
+            + (p.gpu_max_w - p.gpu_idle_w) * gpu_util
+            + p.cpu_max_w * host_util
+            + dpu_w;
+        let got = p.wall_power_live_w(gpu_util, host_util, dpu_w, 0.0);
+        assert!((got - expect).abs() < 1e-9, "decomposition sums: {got} vs {expect}");
+        // Utilizations clamp rather than extrapolate.
+        assert_eq!(
+            p.wall_power_live_w(2.0, 2.0, 0.0, 0.0),
+            p.wall_power_live_w(1.0, 1.0, 0.0, 0.0)
+        );
+        // The DES path is this decomposition with the system constants —
+        // one formula, no drift.
+        for s in crate::sim::systems::ALL_SYSTEMS {
+            let via_sys = p.wall_power_w(s, 0.7, true);
+            let via_live = p.wall_power_live_w(0.7, s.host_util(), s.dpu_power_w(), 1.0);
+            assert!((via_sys - via_live).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn colocated_runs_include_interferer_draw() {
+        let p = PowerModel::default();
+        let iso = p.wall_power_live_w(0.8, 0.1, 0.0, 0.0);
+        let co = p.wall_power_live_w(0.8, 0.1, 0.0, 1.0);
+        assert!((co - iso - p.interferer_w).abs() < 1e-9, "full-intensity delta = interferer_w");
+        // Partial antagonist intensity draws a proportional fraction.
+        let half = p.wall_power_live_w(0.8, 0.1, 0.0, 0.5);
+        assert!((half - iso - 0.5 * p.interferer_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_per_token_falls_as_throughput_rises_at_fixed_power() {
+        let p = PowerModel::default();
+        let mut prev = f64::INFINITY;
+        for tok_s in [500.0, 1000.0, 2000.0, 4000.0] {
+            let e = p.mj_per_token_live(0.85, 0.1, 75.0, 0.0, tok_s);
+            assert!(e < prev, "energy/token monotone down in throughput: {e} vs {prev}");
+            prev = e;
+        }
+        // Same wall power, double throughput ⇒ exactly half the energy.
+        let e1 = p.mj_per_token_live(0.85, 0.1, 75.0, 0.0, 1000.0);
+        let e2 = p.mj_per_token_live(0.85, 0.1, 75.0, 0.0, 2000.0);
+        assert!((e1 / e2 - 2.0).abs() < 1e-9);
+        assert!(p.mj_per_token_live(0.85, 0.1, 75.0, 0.0, 0.0).is_nan());
     }
 }

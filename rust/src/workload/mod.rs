@@ -414,6 +414,36 @@ pub struct RequestMetrics {
 }
 
 impl RequestMetrics {
+    /// Build metrics from the ring slot's device-plane timestamps
+    /// (microseconds since the process epoch, `util::timer::now_us` —
+    /// stamped at submit, first published token, and completion),
+    /// re-based to `epoch_us` (normally the earliest submit in the run)
+    /// so live batch runs aggregate through [`WindowMetrics`] exactly
+    /// like simulated traces. The slot plane keeps no per-token stamps,
+    /// so `itl_s` is empty — TPOT still follows from first/finish.
+    pub fn from_slot_times_us(
+        id: u64,
+        epoch_us: u64,
+        submit_us: u64,
+        first_token_us: u64,
+        finish_us: u64,
+        input_tokens: usize,
+        output_tokens: usize,
+    ) -> RequestMetrics {
+        let rebase = |us: u64| us.saturating_sub(epoch_us) as f64 / 1e6;
+        RequestMetrics {
+            id,
+            arrival_s: rebase(submit_us),
+            first_token_s: rebase(first_token_us),
+            finish_s: rebase(finish_us),
+            input_tokens,
+            output_tokens,
+            itl_s: vec![],
+            priority: 0,
+            ttft_budget_s: 0.0,
+        }
+    }
+
     pub fn ttft_ms(&self) -> f64 {
         (self.first_token_s - self.arrival_s) * 1e3
     }
@@ -553,6 +583,20 @@ impl WindowMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slot_times_rebase_to_epoch() {
+        let (epoch, submit, first, finish) = (1_000_000u64, 1_200_000, 1_500_000, 2_700_000);
+        let r = RequestMetrics::from_slot_times_us(3, epoch, submit, first, finish, 64, 13);
+        assert!((r.arrival_s - 0.2).abs() < 1e-9);
+        assert!((r.ttft_ms() - 300.0).abs() < 1e-6);
+        // TPOT = (finish - first) / (out - 1) = 1.2 s / 12.
+        assert!((r.tpot_ms() - 100.0).abs() < 1e-6);
+        // Timestamps before the epoch clamp to 0 rather than go negative.
+        let t = 1_000_000u64;
+        let c = RequestMetrics::from_slot_times_us(0, 5_000_000, t, t, t, 1, 1);
+        assert_eq!(c.arrival_s, 0.0);
+    }
 
     #[test]
     fn poisson_rate_close() {

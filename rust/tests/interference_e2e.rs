@@ -1,0 +1,112 @@
+//! The headline-claim tier-1 test (paper Fig 1 / §6.3), on the *modeled*
+//! executor so it never skips: under a max-intensity antagonist the
+//! host-driven placement's P99 full-iteration latency inflates ≥3× over
+//! its own isolated run, while the device-plane placement inflates <1.5×.
+//!
+//! Robustness by construction, because CI hosts are shared and noisy:
+//!
+//! * the antagonist is the *deterministic* channel
+//!   (`HostOrchestrator::set_contention`) — it inflates the host
+//!   orchestrator's **work** by samples from a seeded
+//!   `InterferenceProcess`, so iteration time scales with work and the
+//!   contended/isolated comparison is a ratio of like against like on
+//!   whatever hardware the test lands on;
+//! * assertions are **ratios**, never absolute latencies;
+//! * the modeled decode step (800 µs of spin) dominates each device-plane
+//!   iteration, so scheduler-thread preemption blips are small relative
+//!   to the quantity under test;
+//! * percentiles are exact (`SampleRing` raw samples), because the log₂
+//!   histogram's bucket resolution (2× per bucket) cannot express a
+//!   1.5× bound.
+
+use blink::eval::interference::{run_live_cell, CellSpec, LiveParams};
+
+fn params() -> LiveParams {
+    LiveParams {
+        requests: 8,
+        input_tokens: 32,
+        output_tokens: 80,
+        // Heavy enough that OS noise is a small fraction of every
+        // iteration; light enough that all four cells finish in a few
+        // seconds.
+        decode_step_us: 800.0,
+        prefill_us_per_token: 20.0,
+        expert_dispatch_us: 0.0,
+        // The host baseline's orchestration: an 8 MB scratch heap walked
+        // with a 300k-touch dependent chain is ≥ 1 ms of genuinely
+        // memory-bound work per step on any current machine — the
+        // antagonist multiplies exactly this.
+        scratch_mb: 8,
+        touches_per_step: 300_000,
+        seed: 42,
+    }
+}
+
+#[test]
+fn host_placement_collapses_under_antagonist_while_gpu_holds() {
+    let p = params();
+    let cell = |host: bool, intensity: f64| {
+        let c = run_live_cell(&CellSpec { moe: false, host, intensity }, &p);
+        assert!(c.iter_p99_us > 0.0, "cell host={host} i={intensity} recorded no iterations");
+        c
+    };
+
+    let gpu_iso = cell(false, 0.0);
+    let gpu_hot = cell(false, 1.0);
+    let host_iso = cell(true, 0.0);
+    let host_hot = cell(true, 1.0);
+
+    let gpu_ratio = gpu_hot.iter_p99_us / gpu_iso.iter_p99_us;
+    let host_ratio = host_hot.iter_p99_us / host_iso.iter_p99_us;
+
+    // The paper's Fig 1 shape, as ratios: the host-driven control loop
+    // collapses under contention (≥3×; expect ~5–15× here), the
+    // device-plane loop has no host work on its critical path and holds
+    // (<1.5×; expect ~1.0×).
+    assert!(
+        host_ratio >= 3.0,
+        "host-driven P99 iteration must inflate >=3x under max antagonist intensity: \
+         {:.1} -> {:.1} µs ({host_ratio:.2}x)",
+        host_iso.iter_p99_us,
+        host_hot.iter_p99_us,
+    );
+    assert!(
+        gpu_ratio < 1.5,
+        "device-plane P99 iteration must hold <1.5x under max antagonist intensity: \
+         {:.1} -> {:.1} µs ({gpu_ratio:.2}x)",
+        gpu_iso.iter_p99_us,
+        gpu_hot.iter_p99_us,
+    );
+
+    // And the cross-placement gap under contention is the product story:
+    // the contended host loop is far slower than the contended device
+    // loop even though both run the identical executor cost model.
+    assert!(
+        host_hot.iter_p99_us > 2.0 * gpu_hot.iter_p99_us,
+        "contended host loop ({:.1} µs) should dwarf the contended device loop ({:.1} µs)",
+        host_hot.iter_p99_us,
+        gpu_hot.iter_p99_us,
+    );
+}
+
+#[test]
+fn moe_cells_run_and_pay_the_dispatch_tax() {
+    // The sparse path is servable end-to-end: the MoE manifest runs the
+    // same pipeline, and its decode iterations carry the expert-dispatch
+    // cost (deterministic spin, so the median comparison is stable).
+    let mut p = params();
+    p.output_tokens = 24;
+    p.expert_dispatch_us = 200.0;
+    let dense = run_live_cell(&CellSpec { moe: false, host: false, intensity: 0.0 }, &p);
+    let moe = run_live_cell(&CellSpec { moe: true, host: false, intensity: 0.0 }, &p);
+    assert!(moe.tok_per_s > 0.0, "moe cell must complete its requests");
+    // 8 lanes of top-2-of-4 routing activate ~4 experts ⇒ ~800 µs of
+    // dispatch on top of the 800 µs step: ≥1.5× the dense median leaves
+    // wide noise margin.
+    assert!(
+        moe.iter_p50_us > 1.5 * dense.iter_p50_us,
+        "expert dispatch must show up in MoE iteration cost: moe {:.1} µs vs dense {:.1} µs",
+        moe.iter_p50_us,
+        dense.iter_p50_us,
+    );
+}

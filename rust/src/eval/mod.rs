@@ -10,6 +10,7 @@
 
 pub mod interference;
 pub mod live;
+pub mod overload;
 
 use std::io::Write;
 use std::path::Path;

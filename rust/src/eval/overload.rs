@@ -1,0 +1,641 @@
+//! Overload-control evaluation (DESIGN.md §9): what admission control
+//! buys at 2× over-capacity load, modeled and live.
+//!
+//! The paper's headline tails are *pre-saturation* numbers; past
+//! saturation an open-loop stack grows every queue until every deadline
+//! dies. This suite shows the DPU-side gate changing that shape:
+//!
+//! * **modeled rows** (`overload.csv`, golden): the DES with its gate
+//!   mirror ([`SimConfig`]'s `rate_limit` / `tenant_buckets` /
+//!   `shed_policy`) over the mixed interactive/batch trace at ½× and 2×
+//!   the ~12 req/s Blink capacity, plus a hot-tenant fairness pair.
+//!   Virtual time, byte-deterministic at a fixed seed.
+//! * **live rows** (`overload_live.csv`, never golden-tested): the real
+//!   `DpuFrontend` gate in front of the real ring → scheduler →
+//!   modeled-executor pipeline, Poisson arrivals paced in wall time.
+//!   [`run_live_overload`] is shared with the tier-1 acceptance test in
+//!   `tests/overload_e2e.rs`, so the collapse-vs-hold comparison runs
+//!   on every machine, artifacts or not.
+
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::frontend::overload::{OverloadConfig, Rejected};
+use crate::frontend::token_reader::ReaderConfig;
+use crate::frontend::tracker::TokenEvent;
+use crate::frontend::{DpuFrontend, FrontendConfig, RequestClass, RequestHandle};
+use crate::gpu::{Executor, ModeledCost, PrefixReuse, Scheduler, SchedulerConfig};
+use crate::rdma::{RdmaConfig, RdmaEngine};
+use crate::ringbuf::{RingBuffer, RingConfig};
+use crate::runtime::ModelManifest;
+use crate::sim::costmodel::LLAMA3_8B;
+use crate::sim::des::{simulate, ShedPolicyCfg, SimConfig, TenantBucketCfg};
+use crate::sim::systems::System;
+use crate::tokenizer::Vocab;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::workload::ClassMix;
+
+/// Priority at or above which the gate holds admission (matches
+/// [`RequestClass::interactive`] and the gate's default floor).
+pub const INTERACTIVE_PRIORITY: u32 = 4;
+
+// ---------------------------------------------------------------------------
+// Modeled rows: the DES gate mirror in virtual time (golden CSV).
+// ---------------------------------------------------------------------------
+
+/// Blink capacity reference for `ClassMix::interactive_batch` on
+/// LLAMA3-8B — the policy sweep's knee; the grid's loads are ½× and 2×.
+pub const MODELED_CAPACITY: f64 = 12.0;
+
+/// One modeled scenario: a load level plus a gate configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub rate: f64,
+    /// 0.0 = unlimited (the open-loop baseline).
+    pub rate_limit: f64,
+    pub shed: bool,
+    pub buckets: Option<TenantBucketCfg>,
+}
+
+/// The scenario grid, in CSV row order: the ½×/2× limiter story first,
+/// then the hot-tenant fairness pair.
+pub fn scenario_grid() -> Vec<Scenario> {
+    let hot = |capacity: f64, refill_per_s: f64| TenantBucketCfg {
+        capacity,
+        refill_per_s,
+        tenants: 8,
+        hot_share: 0.5,
+    };
+    vec![
+        Scenario {
+            name: "presat_unlimited",
+            rate: MODELED_CAPACITY * 0.5,
+            rate_limit: 0.0,
+            shed: false,
+            buckets: None,
+        },
+        Scenario {
+            name: "overload_unlimited",
+            rate: MODELED_CAPACITY * 2.0,
+            rate_limit: 0.0,
+            shed: false,
+            buckets: None,
+        },
+        Scenario {
+            name: "overload_limited",
+            rate: MODELED_CAPACITY * 2.0,
+            rate_limit: MODELED_CAPACITY,
+            shed: false,
+            buckets: None,
+        },
+        Scenario {
+            name: "overload_limited_shed",
+            rate: MODELED_CAPACITY * 2.0,
+            rate_limit: MODELED_CAPACITY,
+            shed: true,
+            buckets: None,
+        },
+        Scenario {
+            name: "hot_tenant_open",
+            rate: 16.0,
+            rate_limit: 0.0,
+            shed: false,
+            buckets: Some(hot(1e9, 1e9)),
+        },
+        Scenario {
+            name: "hot_tenant_buckets",
+            rate: 16.0,
+            rate_limit: 0.0,
+            shed: false,
+            buckets: Some(hot(8.0, 2.0)),
+        },
+    ]
+}
+
+/// One modeled result row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: &'static str,
+    pub rate: f64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected_rate: u64,
+    pub rejected_bucket: u64,
+    pub shed_degraded: u64,
+    pub shed_dropped: u64,
+    /// Interactive-class SLO attainment over admitted requests.
+    pub interactive_slo: f64,
+    pub ttft_p99_ms: f64,
+    pub max_tenant_share: f64,
+}
+
+fn scenario_cfg(s: &Scenario, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(System::Blink, LLAMA3_8B, s.rate, false);
+    cfg.window_s = 20.0;
+    cfg.classes = Some(ClassMix::interactive_batch());
+    cfg.rate_limit = s.rate_limit;
+    cfg.tenant_buckets = s.buckets;
+    if s.shed {
+        cfg.shed_policy = ShedPolicyCfg::degrade_then_drop(16);
+    }
+    cfg.seed = cfg.seed.wrapping_add(seed.wrapping_mul(0x9E37_79B9));
+    cfg
+}
+
+/// Run the whole modeled grid at one seed (virtual time; same seed ⇒
+/// identical rows on every host).
+pub fn modeled_rows(seed: u64) -> Vec<Row> {
+    scenario_grid()
+        .iter()
+        .map(|s| {
+            let wm = simulate(&scenario_cfg(s, seed));
+            let slo = wm
+                .class(INTERACTIVE_PRIORITY)
+                .map_or(f64::NAN, |c| c.slo_attainment);
+            Row {
+                name: s.name,
+                rate: s.rate,
+                offered: wm.overload.offered,
+                admitted: wm.overload.admitted,
+                rejected_rate: wm.overload.rejected_rate,
+                rejected_bucket: wm.overload.rejected_bucket,
+                shed_degraded: wm.overload.shed_degraded,
+                shed_dropped: wm.overload.shed_dropped,
+                interactive_slo: slo,
+                ttft_p99_ms: wm.ttft.p99,
+                max_tenant_share: wm.overload.max_tenant_share(),
+            }
+        })
+        .collect()
+}
+
+/// Serialize rows to the suite's CSV (stable column order; the golden
+/// byte-determinism test pins these bytes at a fixed seed).
+pub fn overload_csv(rows: &[Row]) -> String {
+    let mut csv = String::from(
+        "scenario,rate,offered,admitted,rejected_rate,rejected_bucket,shed_degraded,\
+         shed_dropped,interactive_slo,ttft_p99_ms,max_tenant_share\n",
+    );
+    for r in rows {
+        csv.push_str(&format!(
+            "{},{:.1},{},{},{},{},{},{},{:.4},{:.2},{:.4}\n",
+            r.name,
+            r.rate,
+            r.offered,
+            r.admitted,
+            r.rejected_rate,
+            r.rejected_bucket,
+            r.shed_degraded,
+            r.shed_dropped,
+            r.interactive_slo,
+            r.ttft_p99_ms,
+            r.max_tenant_share,
+        ));
+    }
+    csv
+}
+
+// ---------------------------------------------------------------------------
+// Live rows: the real DpuFrontend gate over the ring → scheduler →
+// modeled-executor pipeline. Wall-clock measured; never golden-tested.
+// ---------------------------------------------------------------------------
+
+/// Tiny-testbed request shapes. The decode grid below runs at most 4
+/// lanes, so with a 20 ms decode step and a ~13.6-step mean output the
+/// serving capacity is ≈ [`LIVE_CAPACITY`] req/s — small enough that a
+/// 2-second window produces real overload without thousands of requests.
+pub const INTERACTIVE_IN: usize = 24;
+pub const INTERACTIVE_OUT: u32 = 8;
+pub const BATCH_IN: usize = 48;
+pub const BATCH_OUT: u32 = 16;
+
+/// Approximate live serving capacity (req/s) of the testbed below:
+/// 4 decode lanes / (0.3·8 + 0.7·16 steps × 20 ms).
+pub const LIVE_CAPACITY: f64 = 14.7;
+
+/// A modeled manifest whose decode grid tops out at batch 4, so live
+/// overload is reachable at tens (not hundreds) of requests per second.
+pub fn overload_manifest() -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel modeled-overload\nvocab_size 2048\nd_model 256\nn_layers 4\n\
+         n_heads 8\nn_kv_heads 4\nd_head 32\nd_ff 704\nblock_size 16\nnum_blocks 512\n\
+         max_blocks_per_seq 32\nn_experts 0\ntop_k 0\neos_token 0\nmoe 0\n\
+         param tok_embed 2048x256 f32\n",
+    );
+    for b in [1usize, 2, 4] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0 modeled\n"));
+    }
+    for b in [1usize, 2, 4] {
+        for s in [16usize, 32, 64] {
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s} modeled\n"));
+        }
+    }
+    ModelManifest::parse(&text).expect("overload manifest")
+}
+
+/// The gate configuration the live suite (and the acceptance test) runs:
+/// a ~8 req/s sliding-window limit with degrade-then-drop shedding and
+/// effectively-unlimited tenant buckets (fairness is the DES's job; the
+/// live cells isolate the limiter+shed story).
+pub fn limiter_config() -> OverloadConfig {
+    OverloadConfig {
+        enabled: true,
+        window_capacity: 2,
+        window_ms: 250,
+        bucket_capacity: 1e6,
+        bucket_refill_per_s: 1e6,
+        tenant_slots: 64,
+        degrade_threshold: 0.5,
+        drop_threshold: 0.8,
+        degrade_max_new: 4,
+        interactive_floor: INTERACTIVE_PRIORITY,
+    }
+}
+
+/// Knobs for one live run.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveOverloadParams {
+    pub offered_rate: f64,
+    /// Submission window (seconds of Poisson arrivals).
+    pub window_s: f64,
+    pub interactive_share: f64,
+    pub ttft_budget: Duration,
+    pub decode_step_us: f64,
+    pub prefill_us_per_token: f64,
+    /// `None` = unlimited (open-loop baseline).
+    pub gate: Option<OverloadConfig>,
+    pub seed: u64,
+}
+
+impl LiveOverloadParams {
+    fn base(offered_rate: f64, gate: Option<OverloadConfig>) -> LiveOverloadParams {
+        LiveOverloadParams {
+            offered_rate,
+            window_s: 2.0,
+            interactive_share: 0.3,
+            ttft_budget: Duration::from_millis(750),
+            decode_step_us: 20_000.0,
+            prefill_us_per_token: 5.0,
+            gate,
+            seed: 7,
+        }
+    }
+
+    /// Pre-saturation baseline: ~½× capacity, no gate.
+    pub fn presat() -> LiveOverloadParams {
+        LiveOverloadParams::base(8.0, None)
+    }
+
+    /// 2× over-capacity, open loop — the collapse case.
+    pub fn overload_unlimited() -> LiveOverloadParams {
+        LiveOverloadParams::base(2.0 * LIVE_CAPACITY, None)
+    }
+
+    /// 2× over-capacity behind the limiter + shed.
+    pub fn overload_limited() -> LiveOverloadParams {
+        LiveOverloadParams::base(2.0 * LIVE_CAPACITY, Some(limiter_config()))
+    }
+
+    /// CI sizing: half the submission window.
+    pub fn smoke(mut self) -> LiveOverloadParams {
+        self.window_s = 1.0;
+        self
+    }
+}
+
+/// What one live run measured.
+#[derive(Debug, Clone)]
+pub struct LiveOverloadReport {
+    pub offered: usize,
+    pub admitted: usize,
+    /// 429-class refusals at the submit edge.
+    pub rejected: usize,
+    /// Admissions whose `max_new` came back capped.
+    pub degraded: usize,
+    pub interactive_offered: usize,
+    pub interactive_admitted: usize,
+    pub batch_admitted: usize,
+    /// Share of admitted interactive requests whose first token landed
+    /// within the TTFT budget.
+    pub interactive_attainment: f64,
+    pub interactive_ttft_p99_ms: f64,
+    /// Gate counters (0 on unlimited runs).
+    pub rejected_rate: u64,
+    pub rejected_bucket: u64,
+    pub shed_degraded: u64,
+    pub shed_dropped: u64,
+}
+
+struct Pending {
+    interactive: bool,
+    degraded: bool,
+    submitted: Instant,
+    first: Option<Instant>,
+    done: bool,
+    handle: RequestHandle,
+}
+
+/// Drain every pending receiver without blocking, stamping first-token
+/// times as they appear.
+fn poll_pending(pending: &mut [Pending]) {
+    for p in pending.iter_mut() {
+        if p.done {
+            continue;
+        }
+        loop {
+            match p.handle.rx.try_recv() {
+                Ok(TokenEvent::Token(_)) => {
+                    if p.first.is_none() {
+                        p.first = Some(Instant::now());
+                    }
+                }
+                Ok(TokenEvent::Done) | Ok(TokenEvent::Failed) => {
+                    p.done = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    p.done = true;
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One live overload run: Poisson arrivals paced in wall time through
+/// the real frontend gate into the real scheduler on the modeled
+/// executor. Shared between `blink eval overload` and the tier-1
+/// acceptance test, so it must run (and drain) on any machine.
+pub fn run_live_overload(p: &LiveOverloadParams) -> LiveOverloadReport {
+    let manifest = overload_manifest();
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 256,
+        max_prompt: 256,
+        max_output: 256,
+    }));
+    let rdma = RdmaEngine::spawn(ring.clone(), RdmaConfig::zero_cost());
+    let cost = ModeledCost {
+        prefill_us_per_token: p.prefill_us_per_token,
+        decode_step_us: p.decode_step_us,
+        expert_dispatch_us: 0.0,
+    };
+    let executor = Executor::spawn_modeled(&manifest, cost);
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest,
+        SchedulerConfig {
+            apply_launch_delays: false,
+            prefix_reuse: PrefixReuse::Off,
+            ..Default::default()
+        },
+    );
+    // Byte-level vocab: the live runner submits pre-tokenized ids, so
+    // only the frontend's arena shapes matter, not the merge table.
+    let vocab = Arc::new(Vocab {
+        tokens: (0..=255u8).map(|b| vec![b]).collect(),
+        merges: vec![],
+    });
+    let frontend = DpuFrontend::new(
+        rdma,
+        vocab,
+        FrontendConfig {
+            num_slots: 256,
+            max_prompt: 256,
+            max_output: 256,
+            reader: ReaderConfig::default(),
+            overload: p.gate.unwrap_or_default(),
+        },
+    );
+
+    // Deterministic arrival schedule (the pacing is wall-clock, the
+    // schedule is not).
+    let mut rng = Rng::new(p.seed);
+    let mut arrivals: Vec<(f64, bool)> = vec![];
+    let mut t = 0.0;
+    loop {
+        t += rng.exp(p.offered_rate);
+        if t >= p.window_s {
+            break;
+        }
+        arrivals.push((t, rng.f64() < p.interactive_share));
+    }
+
+    let budget_us = p.ttft_budget.as_micros() as u64;
+    let mut pending: Vec<Pending> = vec![];
+    let mut rejected = 0usize;
+    let mut interactive_offered = 0usize;
+    let t0 = Instant::now();
+    for &(at, interactive) in &arrivals {
+        while t0.elapsed().as_secs_f64() < at {
+            poll_pending(&mut pending);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        interactive_offered += interactive as usize;
+        let (len, max_new, class) = if interactive {
+            (
+                INTERACTIVE_IN,
+                INTERACTIVE_OUT,
+                RequestClass { priority: INTERACTIVE_PRIORITY, ttft_budget_us: budget_us },
+            )
+        } else {
+            (BATCH_IN, BATCH_OUT, RequestClass::default())
+        };
+        let tokens: Vec<u32> = (0..len).map(|i| (i % 251) as u32 + 1).collect();
+        match frontend.submit_tokens_class(&tokens, max_new, class) {
+            Ok(handle) => pending.push(Pending {
+                interactive,
+                degraded: handle.max_new < max_new,
+                submitted: Instant::now(),
+                first: None,
+                done: false,
+                handle,
+            }),
+            Err(Rejected::Overload { .. }) => rejected += 1,
+            Err(Rejected::Client(e)) => panic!("unexpected client rejection: {e}"),
+        }
+    }
+
+    // Drain: every admitted request must finish (the modeled executor
+    // never early-EOSes, so "done" is deterministic).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pending.iter().any(|p| !p.done) {
+        assert!(Instant::now() < deadline, "live overload run failed to drain");
+        poll_pending(&mut pending);
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    sched.drain_and_stop();
+
+    let gate = frontend.gate();
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let mut ttfts_ms: Vec<f64> = pending
+        .iter()
+        .filter(|q| q.interactive)
+        .filter_map(|q| q.first.map(|f| (f - q.submitted).as_secs_f64() * 1e3))
+        .collect();
+    ttfts_ms.sort_by(f64::total_cmp);
+    let interactive_admitted = pending.iter().filter(|q| q.interactive).count();
+    let attained = pending
+        .iter()
+        .filter(|q| q.interactive)
+        .filter(|q| q.first.is_some_and(|f| f - q.submitted <= p.ttft_budget))
+        .count();
+    LiveOverloadReport {
+        offered: arrivals.len(),
+        admitted: pending.len(),
+        rejected,
+        degraded: pending.iter().filter(|q| q.degraded).count(),
+        interactive_offered,
+        interactive_admitted,
+        batch_admitted: pending.len() - interactive_admitted,
+        interactive_attainment: attained as f64 / interactive_admitted.max(1) as f64,
+        interactive_ttft_p99_ms: percentile_sorted(&ttfts_ms, 99.0),
+        rejected_rate: gate.rejected_rate.load(ord),
+        rejected_bucket: gate.rejected_bucket.load(ord),
+        shed_degraded: gate.shed_degraded.load(ord),
+        shed_dropped: gate.shed_dropped.load(ord),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The eval entry point.
+// ---------------------------------------------------------------------------
+
+fn print_rows(rows: &[Row]) {
+    println!(
+        "{:<22} {:>6} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8} {:>12} {:>12} {:>10}",
+        "scenario",
+        "rate",
+        "offered",
+        "admitted",
+        "rej_rate",
+        "rej_bckt",
+        "degraded",
+        "dropped",
+        "inter_slo",
+        "ttft_p99_ms",
+        "max_share"
+    );
+    for r in rows {
+        println!(
+            "{:<22} {:>6.1} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8} {:>12.4} {:>12.2} {:>10.4}",
+            r.name,
+            r.rate,
+            r.offered,
+            r.admitted,
+            r.rejected_rate,
+            r.rejected_bucket,
+            r.shed_degraded,
+            r.shed_dropped,
+            r.interactive_slo,
+            r.ttft_p99_ms,
+            r.max_tenant_share,
+        );
+    }
+}
+
+/// `blink eval overload [--out DIR] [--smoke]`: the deterministic
+/// modeled sweep (golden CSV) followed by live collapse-vs-hold runs.
+pub fn overload(out: Option<&std::path::Path>, smoke: bool) {
+    println!("\n== Overload control suite (DESIGN.md §9) ==");
+    println!("(open-loop admission collapses at 2x capacity; the DPU gate holds interactive SLOs)");
+
+    let rows = modeled_rows(7);
+    println!("\n-- modeled scenarios (DES gate mirror, byte-deterministic at fixed seed) --");
+    print_rows(&rows);
+    super::live::write_out(out, "overload.csv", &overload_csv(&rows));
+
+    let live_specs = [
+        ("presat_unlimited", LiveOverloadParams::presat()),
+        ("overload_unlimited", LiveOverloadParams::overload_unlimited()),
+        ("overload_limited_shed", LiveOverloadParams::overload_limited()),
+    ];
+    println!("\n-- live runs (real frontend gate + scheduler on the modeled executor) --");
+    let mut csv = String::from(
+        "scenario,offered_rate,offered,admitted,rejected,degraded,interactive_admitted,\
+         interactive_attainment,interactive_ttft_p99_ms\n",
+    );
+    for (name, params) in live_specs {
+        let params = if smoke { params.smoke() } else { params };
+        let r = run_live_overload(&params);
+        println!(
+            "{:<22} offered {:>3} admitted {:>3} rejected {:>3} degraded {:>3} \
+             interactive slo {:.3} ttft_p99 {:.1} ms",
+            name,
+            r.offered,
+            r.admitted,
+            r.rejected,
+            r.degraded,
+            r.interactive_attainment,
+            r.interactive_ttft_p99_ms,
+        );
+        csv.push_str(&format!(
+            "{},{:.1},{},{},{},{},{},{:.4},{:.2}\n",
+            name,
+            params.offered_rate,
+            r.offered,
+            r.admitted,
+            r.rejected,
+            r.degraded,
+            r.interactive_admitted,
+            r.interactive_attainment,
+            r.interactive_ttft_p99_ms,
+        ));
+    }
+    super::live::write_out(out, "overload_live.csv", &csv);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overload_csv_is_deterministic() {
+        // Same seed ⇒ identical bytes (the acceptance criterion; the
+        // modeled grid runs the DES in virtual time, so this holds on
+        // any machine).
+        let a = overload_csv(&modeled_rows(7));
+        let b = overload_csv(&modeled_rows(7));
+        assert_eq!(a, b, "same seed must produce identical CSV bytes");
+        let c = overload_csv(&modeled_rows(8));
+        assert_ne!(a, c, "the seed must actually drive the trace");
+    }
+
+    #[test]
+    fn overload_grid_covers_the_story() {
+        let rows = modeled_rows(7);
+        assert_eq!(rows.len(), scenario_grid().len());
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+
+        // The open-loop rows admit everything; the limited rows refuse.
+        assert_eq!(get("overload_unlimited").offered, get("overload_unlimited").admitted);
+        let lim = get("overload_limited_shed");
+        assert!(lim.admitted < lim.offered, "limiter must refuse work at 2x");
+        assert!(lim.rejected_rate + lim.shed_dropped > 0);
+
+        // Admission control buys interactive attainment at 2x load.
+        let unl = get("overload_unlimited");
+        assert!(unl.interactive_slo.is_finite() && lim.interactive_slo.is_finite());
+        assert!(
+            lim.interactive_slo >= unl.interactive_slo - 0.05,
+            "limited {} vs unlimited {}",
+            lim.interactive_slo,
+            unl.interactive_slo
+        );
+
+        // Tenant buckets shrink the hot tenant's admitted share.
+        let open = get("hot_tenant_open");
+        let fair = get("hot_tenant_buckets");
+        assert!(fair.rejected_bucket > 0, "tight buckets must trip");
+        assert!(
+            fair.max_tenant_share < open.max_tenant_share,
+            "buckets must cap the flooder: {} vs {}",
+            fair.max_tenant_share,
+            open.max_tenant_share
+        );
+    }
+}

@@ -18,6 +18,7 @@
 //!   and the GPU-side prefix index (DESIGN.md §7) turns the shared
 //!   history into a KV-cache hit.
 
+pub mod overload;
 pub mod slot_tracker;
 pub mod token_reader;
 pub mod tracker;
@@ -25,11 +26,13 @@ pub mod tracker;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::gpu::stats::SchedulerStats;
 use crate::rdma::{Payload, QueuePair, RdmaEngine, RdmaOp};
 use crate::tokenizer::blink::BlinkTokenizer;
 use crate::tokenizer::{Tokenizer, Vocab};
+use overload::{Decision, OverloadConfig, OverloadGate, Rejected};
 use slot_tracker::SlotTracker;
 use token_reader::ReaderConfig;
 use tracker::{ReqState, TokenEvent, Tracker};
@@ -40,6 +43,8 @@ pub struct FrontendConfig {
     pub max_prompt: usize,
     pub max_output: usize,
     pub reader: ReaderConfig,
+    /// Admission-gate knobs (DESIGN.md §9); default = disabled.
+    pub overload: OverloadConfig,
 }
 
 /// Request class carried from the HTTP body to the scheduler's admission
@@ -76,10 +81,14 @@ pub fn session_key(id: &str) -> u64 {
 }
 
 /// A submitted request: stream of token events + ids for bookkeeping.
+/// `max_new` is the *effective* output budget — a shed-degraded
+/// admission carries the capped value so the HTTP layer can report it.
+#[derive(Debug)]
 pub struct RequestHandle {
     pub request_id: u64,
     pub slot: usize,
     pub prompt_tokens: usize,
+    pub max_new: u32,
     pub rx: Receiver<TokenEvent>,
 }
 
@@ -120,6 +129,13 @@ pub struct DpuFrontend {
     /// sessions.
     sessions: Mutex<HashMap<String, SessionEntry>>,
     session_tick: AtomicU64,
+    /// Overload-control admission gate (DESIGN.md §9), checked before a
+    /// ring slot is claimed so refused work never touches the GPU plane.
+    gate: OverloadGate,
+    /// Scheduler stats sink: gate decisions are mirrored here (once
+    /// attached by the server) so `/metrics` and `summary()` carry shed
+    /// counts without the stats plane reaching back into the frontend.
+    stats: OnceLock<Arc<SchedulerStats>>,
 }
 
 /// One conversation's DPU-side state.
@@ -185,6 +201,7 @@ impl DpuFrontend {
             config.reader.clone(),
         );
 
+        let gate = OverloadGate::new(config.overload);
         DpuFrontend {
             submit_qp: Mutex::new(QueuePair::new(engine)),
             tracker,
@@ -199,12 +216,25 @@ impl DpuFrontend {
             seed_ctr: AtomicU32::new(0x5EED),
             sessions: Mutex::new(HashMap::new()),
             session_tick: AtomicU64::new(1),
+            gate,
+            stats: OnceLock::new(),
         }
+    }
+
+    /// Attach the scheduler's stats block so gate decisions show up in
+    /// `/metrics` and `summary()`. Idempotent; the first sink wins.
+    pub fn attach_stats(&self, stats: Arc<SchedulerStats>) {
+        let _ = self.stats.set(stats);
+    }
+
+    /// The admission gate (metrics / tests).
+    pub fn gate(&self) -> &OverloadGate {
+        &self.gate
     }
 
     /// Tokenize on the DPU and submit (the paper's step ②③④⑤),
     /// default (batch) request class.
-    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, String> {
+    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, Rejected> {
         self.submit_text_class(text, max_new, RequestClass::default())
     }
 
@@ -214,7 +244,7 @@ impl DpuFrontend {
         text: &str,
         max_new: u32,
         class: RequestClass,
-    ) -> Result<RequestHandle, String> {
+    ) -> Result<RequestHandle, Rejected> {
         let mut toks = Vec::with_capacity(text.len() / 3 + 4);
         self.tokenizer.encode(text, &mut toks);
         self.submit_tokens_class(&toks, max_new, class)
@@ -222,7 +252,7 @@ impl DpuFrontend {
 
     /// Submit pre-tokenized input (workload generators / benches),
     /// default (batch) request class.
-    pub fn submit_tokens(&self, tokens: &[u32], max_new: u32) -> Result<RequestHandle, String> {
+    pub fn submit_tokens(&self, tokens: &[u32], max_new: u32) -> Result<RequestHandle, Rejected> {
         self.submit_tokens_class(tokens, max_new, RequestClass::default())
     }
 
@@ -239,11 +269,30 @@ impl DpuFrontend {
         text: &str,
         max_new: u32,
         class: RequestClass,
-    ) -> Result<RequestHandle, String> {
+    ) -> Result<RequestHandle, Rejected> {
+        self.submit_text_tenant(session, None, text, max_new, class)
+    }
+
+    /// [`submit_text_session`](Self::submit_text_session) with an
+    /// explicit tenant tag for the admission gate's per-tenant quotas.
+    /// The tenant key is the `tenant` field when given, falling back to
+    /// the session id, falling back to the shared anonymous pool (0).
+    pub fn submit_text_tenant(
+        &self,
+        session: Option<&str>,
+        tenant: Option<&str>,
+        text: &str,
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, Rejected> {
+        let tenant_key = tenant
+            .map(session_key)
+            .or_else(|| session.map(session_key))
+            .unwrap_or(0);
         let mut new_toks = Vec::with_capacity(text.len() / 3 + 4);
         self.tokenizer.encode(text, &mut new_toks);
         let Some(sid) = session else {
-            return self.submit_tokens_full(0, &new_toks, max_new, class);
+            return self.submit_tokens_gated(0, tenant_key, &new_toks, max_new, class);
         };
         let key = session_key(sid);
         let full: Vec<u32> = {
@@ -265,18 +314,23 @@ impl DpuFrontend {
                         sessions.remove(&v);
                     }
                     None => {
-                        return Err(format!(
-                            "session store full ({MAX_SESSIONS} active conversations); \
-                             retry later or omit session_id"
-                        ));
+                        return Err(Rejected::Overload {
+                            reason: format!(
+                                "session store full ({MAX_SESSIONS} active conversations); \
+                                 retry later or omit session_id"
+                            ),
+                            retry_after_ms: 1000,
+                        });
                     }
                 }
             }
             let hist: &[u32] = match sessions.get_mut(sid) {
                 Some(e) if e.overflowed => {
-                    return Err("session history is no longer consistent (overflow or a \
-                                failed turn); start a new session"
-                        .into());
+                    return Err(Rejected::Client(
+                        "session history is no longer consistent (overflow or a \
+                         failed turn); start a new session"
+                            .into(),
+                    ));
                 }
                 Some(e) => {
                     e.tick = tick;
@@ -291,7 +345,7 @@ impl DpuFrontend {
             full
         };
         let snapshot_len = full.len() - new_toks.len();
-        let handle = self.submit_tokens_full(key, &full, max_new, class)?;
+        let handle = self.submit_tokens_gated(key, tenant_key, &full, max_new, class)?;
         // Only a successfully submitted turn becomes history. Turns of a
         // session must be serialized by the client: if the stored
         // history changed between our snapshot and this commit (a racing
@@ -365,30 +419,68 @@ impl DpuFrontend {
         tokens: &[u32],
         max_new: u32,
         class: RequestClass,
-    ) -> Result<RequestHandle, String> {
+    ) -> Result<RequestHandle, Rejected> {
         self.submit_tokens_full(0, tokens, max_new, class)
     }
 
     /// Full submission path: pre-tokenized input, explicit class and
-    /// session tag (0 = no session).
+    /// session tag (0 = no session). The session tag doubles as the
+    /// tenant key for the admission gate.
     pub fn submit_tokens_full(
         &self,
         session_id: u64,
         tokens: &[u32],
         max_new: u32,
         class: RequestClass,
-    ) -> Result<RequestHandle, String> {
+    ) -> Result<RequestHandle, Rejected> {
+        self.submit_tokens_gated(session_id, session_id, tokens, max_new, class)
+    }
+
+    /// Full submission path with an explicit gate tenant key (which may
+    /// differ from the session tag when the client sent a `tenant`
+    /// field). Validation order matters for the error contract:
+    /// client-side mistakes (400-class) are checked *before* the gate so
+    /// a malformed request never consumes quota, and the gate runs
+    /// *before* the slot claim so refused work costs the ring nothing.
+    pub fn submit_tokens_gated(
+        &self,
+        session_id: u64,
+        tenant: u64,
+        tokens: &[u32],
+        max_new: u32,
+        class: RequestClass,
+    ) -> Result<RequestHandle, Rejected> {
         if tokens.is_empty() {
-            return Err("empty prompt".into());
+            return Err(Rejected::Client("empty prompt".into()));
         }
         if tokens.len() > self.config.max_prompt {
-            return Err(format!(
+            return Err(Rejected::Client(format!(
                 "prompt of {} tokens exceeds arena capacity {}",
                 tokens.len(),
                 self.config.max_prompt
-            ));
+            )));
         }
-        let max_new = max_new.clamp(1, self.config.max_output as u32);
+        let mut max_new = max_new.clamp(1, self.config.max_output as u32);
+
+        if self.gate.enabled() {
+            let occupancy =
+                1.0 - self.approx_free_slots() as f64 / self.config.num_slots.max(1) as f64;
+            let decision =
+                self.gate.check(tenant, class.priority, occupancy, self.gate.now_ms());
+            if let Some(stats) = self.stats.get() {
+                stats.mirror_gate_decision(&decision);
+            }
+            match decision {
+                Decision::Admit => {}
+                Decision::Degrade { max_new_cap } => {
+                    max_new = max_new.min(max_new_cap.max(1));
+                }
+                Decision::Reject { reason, retry_after_ms } => {
+                    return Err(Rejected::Overload { reason, retry_after_ms });
+                }
+            }
+        }
+
         let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let seed = self.seed_ctr.fetch_add(0x9E37, Ordering::Relaxed);
 
@@ -402,7 +494,10 @@ impl DpuFrontend {
                     s.acquire_hint()
                 };
                 let Some(candidate) = candidate else {
-                    return Err("ring buffer full (backpressure)".into());
+                    return Err(Rejected::Overload {
+                        reason: "ring buffer full (backpressure)".into(),
+                        retry_after_ms: 50,
+                    });
                 };
                 match qp.exec(RdmaOp::ClaimSlot { slot: candidate }) {
                     Payload::Cas(true) => break candidate,
@@ -411,7 +506,10 @@ impl DpuFrontend {
                         self.slots.lock().unwrap().mark_used(candidate);
                         tries += 1;
                         if tries > self.config.num_slots {
-                            return Err("no free slot after full sweep".into());
+                            return Err(Rejected::Overload {
+                                reason: "no free slot after full sweep".into(),
+                                retry_after_ms: 50,
+                            });
                         }
                     }
                 }
@@ -442,7 +540,7 @@ impl DpuFrontend {
         });
         qp.wait(wr);
 
-        Ok(RequestHandle { request_id, slot, prompt_tokens: tokens.len(), rx })
+        Ok(RequestHandle { request_id, slot, prompt_tokens: tokens.len(), max_new, rx })
     }
 
     /// Snapshot of free-slot availability (diagnostics).
@@ -482,9 +580,93 @@ mod tests {
                 max_prompt: 64,
                 max_output: 16,
                 reader: token_reader::ReaderConfig::default(),
+                overload: OverloadConfig::default(),
             },
         );
         (ring, fe)
+    }
+
+    fn gated_frontend(overload: OverloadConfig) -> DpuFrontend {
+        let ring = Arc::new(RingBuffer::new(RingConfig {
+            num_slots: 16,
+            max_prompt: 64,
+            max_output: 16,
+        }));
+        let engine = RdmaEngine::spawn(ring, RdmaConfig::zero_cost());
+        let vocab = Arc::new(crate::tokenizer::tests::tiny_vocab());
+        DpuFrontend::new(
+            engine,
+            vocab,
+            FrontendConfig {
+                num_slots: 16,
+                max_prompt: 64,
+                max_output: 16,
+                reader: token_reader::ReaderConfig::default(),
+                overload,
+            },
+        )
+    }
+
+    #[test]
+    fn gate_rejects_and_degrades_at_the_submit_edge() {
+        let fe = gated_frontend(OverloadConfig {
+            enabled: true,
+            window_capacity: 2,
+            window_ms: 60_000,
+            degrade_threshold: 0.5,
+            drop_threshold: 2.0, // degrade-only in this test
+            degrade_max_new: 3,
+            interactive_floor: 4,
+            ..OverloadConfig::default()
+        });
+        // First admission is clean and keeps its full budget.
+        let h = fe.submit_text("the quick", 8, RequestClass::default()).expect("admit");
+        assert_eq!(h.max_new, 8);
+        // Window half full: the next batch-class submit is degraded and
+        // the handle reports the capped budget.
+        let h2 = fe.submit_text("brown fox", 8, RequestClass::default()).expect("degraded");
+        assert_eq!(h2.max_new, 3, "degraded admission caps max_new");
+        // Window full: even interactive work is refused, as Overload
+        // (not Client) with a retry hint.
+        match fe.submit_text_class("jumps", 4, RequestClass::interactive(300_000)) {
+            Err(Rejected::Overload { retry_after_ms, .. }) => assert!(retry_after_ms > 0),
+            other => panic!("expected overload rejection, got {other:?}"),
+        }
+        // Client errors still classify as Client, and never touch quota.
+        match fe.submit_text("", 4, RequestClass::default()) {
+            Err(Rejected::Client(m)) => assert!(m.contains("empty prompt")),
+            other => panic!("expected client rejection, got {other:?}"),
+        }
+        assert_eq!(fe.gate().admitted.load(Ordering::Relaxed), 2);
+        assert_eq!(fe.gate().shed_degraded.load(Ordering::Relaxed), 1);
+        assert_eq!(fe.gate().rejected_rate.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tenant_field_beats_session_fallback_for_quota() {
+        let fe = gated_frontend(OverloadConfig {
+            enabled: true,
+            window_capacity: 10_000,
+            bucket_capacity: 1.0,
+            bucket_refill_per_s: 0.001,
+            ..OverloadConfig::default()
+        });
+        // Two sessions under one tenant share one bucket of 1.
+        fe.submit_text_tenant(Some("s1"), Some("acme"), "one", 2, RequestClass::default())
+            .expect("first request fits the acme bucket");
+        match fe.submit_text_tenant(Some("s2"), Some("acme"), "two", 2, RequestClass::default()) {
+            Err(Rejected::Overload { reason, .. }) => assert!(reason.contains("quota")),
+            other => panic!("expected tenant-quota rejection, got {other:?}"),
+        }
+        // A different tenant is untouched.
+        fe.submit_text_tenant(Some("s3"), Some("zen"), "three", 2, RequestClass::default())
+            .expect("other tenant admitted");
+        // No tenant field: the session id is the quota key.
+        fe.submit_text_tenant(Some("solo"), None, "four", 2, RequestClass::default())
+            .expect("session-keyed bucket");
+        assert!(fe
+            .submit_text_tenant(Some("solo"), None, "five", 2, RequestClass::default())
+            .is_err());
     }
 
     #[test]

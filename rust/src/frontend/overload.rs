@@ -1,0 +1,565 @@
+//! DPU-side overload control (ROADMAP "million-user regime" item): the
+//! first layer of the stack that *refuses* work instead of merely
+//! ordering it.
+//!
+//! Three mechanisms compose into one admission gate, checked on every
+//! submission before a ring slot is claimed (so rejected work costs the
+//! GPU plane nothing):
+//!
+//! * a **global sliding-window rate limiter** — the classic two-bucket
+//!   sliding-window counter: the previous window's count is weighted by
+//!   its remaining overlap, so admission is smooth across window edges
+//!   without keeping a per-request timestamp log;
+//! * **per-tenant token buckets** in a pre-sized slab (no per-request
+//!   allocation — the `hotloop_alloc` pin from PR 5 stays intact), so a
+//!   single flooding tenant exhausts its own quota instead of the whole
+//!   window;
+//! * a **shed policy** driven by measured pressure (window utilization
+//!   and ring occupancy): under sustained pressure, lowest-class work is
+//!   first *degraded* (its `max_new` capped — it still gets an answer,
+//!   just a shorter one) and then *dropped*, while interactive-class
+//!   admission holds until the hard window cap.
+//!
+//! Everything is atomics; the gate is lock-free and allocation-free on
+//! the admission path. All decisions are computed from a caller-supplied
+//! `now_ms` so unit tests and the DES mirror (`sim/des.rs`) are exactly
+//! deterministic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Why a submission was refused. The HTTP layer maps `Client` → 400 and
+/// `Overload` → 429 + `retry_after_ms`; conflating the two (the pre-PR-8
+/// bug) makes retry-after semantics meaningless because a malformed
+/// request would also look retryable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejected {
+    /// The request itself is invalid (empty/overlong prompt, inconsistent
+    /// session history). Retrying the same request can never succeed.
+    Client(String),
+    /// The system refused valid work to protect itself (rate limit,
+    /// tenant quota, shed, ring backpressure). `retry_after_ms` is a
+    /// computed hint: when the window rolls or the bucket refills enough
+    /// for one request.
+    Overload { reason: String, retry_after_ms: u64 },
+}
+
+impl Rejected {
+    pub fn message(&self) -> &str {
+        match self {
+            Rejected::Client(m) => m,
+            Rejected::Overload { reason, .. } => reason,
+        }
+    }
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Client(m) => write!(f, "{m}"),
+            Rejected::Overload { reason, retry_after_ms } => {
+                write!(f, "{reason} (retry after {retry_after_ms} ms)")
+            }
+        }
+    }
+}
+
+impl From<Rejected> for String {
+    fn from(r: Rejected) -> String {
+        r.to_string()
+    }
+}
+
+/// Admission-gate configuration. `Default` is **disabled** (admit
+/// everything): overload control is opt-in per server, and every
+/// pre-existing test path keeps its exact behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct OverloadConfig {
+    pub enabled: bool,
+    /// Global cap: at most this many admissions per sliding window.
+    pub window_capacity: u32,
+    /// Sliding-window length in milliseconds.
+    pub window_ms: u64,
+    /// Per-tenant token-bucket burst capacity (requests).
+    pub bucket_capacity: f64,
+    /// Per-tenant sustained refill rate (requests/second).
+    pub bucket_refill_per_s: f64,
+    /// Pre-sized tenant slab length (hash-indexed, bounded linear probe).
+    pub tenant_slots: usize,
+    /// Pressure (max of window utilization and queue occupancy) at which
+    /// below-floor work is *degraded*: admitted with `max_new` capped.
+    pub degrade_threshold: f64,
+    /// Pressure at which below-floor work is *dropped* (429).
+    pub drop_threshold: f64,
+    /// The `max_new` cap applied to degraded admissions.
+    pub degrade_max_new: u32,
+    /// Priority at or above which a request is interactive-class: never
+    /// shed, only stopped by the hard window cap or its tenant bucket.
+    pub interactive_floor: u32,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            enabled: false,
+            window_capacity: 256,
+            window_ms: 1000,
+            bucket_capacity: 64.0,
+            bucket_refill_per_s: 128.0,
+            tenant_slots: 512,
+            degrade_threshold: 0.5,
+            drop_threshold: 0.8,
+            degrade_max_new: 16,
+            interactive_floor: 4,
+        }
+    }
+}
+
+/// Which mechanism refused the request — kept machine-readable so the
+/// stats mirror can count window, bucket and shed rejections apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// The global sliding window is at capacity.
+    Window,
+    /// The tenant's token bucket is empty.
+    Bucket,
+    /// Best-effort work dropped by the shed policy under pressure.
+    Shed,
+}
+
+/// Outcome of the gate check for one submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    Admit,
+    /// Admitted, but `max_new` must be capped to this value (shed by
+    /// degradation: the tenant still gets an answer, just a shorter one).
+    Degrade { max_new_cap: u32 },
+    Reject { kind: RejectKind, reason: String, retry_after_ms: u64 },
+}
+
+/// Token-bucket level is kept in milli-tokens so it fits an atomic u64
+/// without floating-point CAS loops.
+const MILLI: u64 = 1000;
+
+/// One slab entry: a tenant's token bucket plus admission counters.
+/// `key == 0` means unclaimed; [`claim_or_find`](OverloadGate) CASes the
+/// key in on first use. All fields are independently atomic — under
+/// contention a tenant can very slightly overshoot its bucket (two
+/// threads observing the same level), which is acceptable for a limiter
+/// whose job is shaping, not accounting.
+#[derive(Debug)]
+struct TenantBucket {
+    key: AtomicU64,
+    level_milli: AtomicU64,
+    last_refill_ms: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl TenantBucket {
+    fn empty() -> TenantBucket {
+        TenantBucket {
+            key: AtomicU64::new(0),
+            level_milli: AtomicU64::new(0),
+            last_refill_ms: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+}
+
+/// How many slab entries a tenant key may probe before falling back to
+/// sharing the home slot (documented collision behavior: two tenants
+/// hashing into the same saturated neighborhood share fate, which only
+/// matters past `tenant_slots` concurrently active tenants).
+const PROBE_LIMIT: usize = 8;
+
+/// Snapshot of one tenant's admission counters (for `/metrics`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStat {
+    pub key: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+/// The admission gate. One per [`DpuFrontend`](super::DpuFrontend);
+/// shared-reference callable from any submission thread.
+#[derive(Debug)]
+pub struct OverloadGate {
+    cfg: OverloadConfig,
+    epoch: std::time::Instant,
+    /// Index of the window `cur_count` belongs to (now_ms / window_ms).
+    cur_window: AtomicU64,
+    cur_count: AtomicU64,
+    prev_count: AtomicU64,
+    /// Aggregate counters, mirrored into `SchedulerStats` by the caller.
+    pub admitted: AtomicU64,
+    pub rejected_rate: AtomicU64,
+    pub rejected_bucket: AtomicU64,
+    pub shed_dropped: AtomicU64,
+    pub shed_degraded: AtomicU64,
+    buckets: Box<[TenantBucket]>,
+}
+
+impl OverloadGate {
+    pub fn new(cfg: OverloadConfig) -> OverloadGate {
+        let slots = cfg.tenant_slots.max(1);
+        let buckets: Vec<TenantBucket> = (0..slots).map(|_| TenantBucket::empty()).collect();
+        OverloadGate {
+            cfg,
+            epoch: std::time::Instant::now(),
+            cur_window: AtomicU64::new(0),
+            cur_count: AtomicU64::new(0),
+            prev_count: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected_rate: AtomicU64::new(0),
+            rejected_bucket: AtomicU64::new(0),
+            shed_dropped: AtomicU64::new(0),
+            shed_degraded: AtomicU64::new(0),
+            buckets: buckets.into_boxed_slice(),
+        }
+    }
+
+    pub fn config(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Milliseconds since the gate was built (the wall-clock entry point;
+    /// the decision logic itself is pure in `now_ms`).
+    pub fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Gate one submission. `queue_occupancy` is the ring's fill fraction
+    /// (0..=1), folded into shed pressure so a backlog the window cannot
+    /// see (slow drains) still sheds best-effort work.
+    pub fn check(
+        &self,
+        tenant: u64,
+        priority: u32,
+        queue_occupancy: f64,
+        now_ms: u64,
+    ) -> Decision {
+        if !self.cfg.enabled {
+            return Decision::Admit;
+        }
+
+        // 1. Tenant bucket: refill by elapsed time, then require one
+        //    whole token. Checked first so a flooding tenant is charged
+        //    to its own quota before it can load the global window.
+        let slot = self.tenant_slot(tenant);
+        if let Some(retry) = self.bucket_deficit_ms(slot, now_ms) {
+            self.rejected_bucket.fetch_add(1, Ordering::Relaxed);
+            self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
+            return Decision::Reject {
+                kind: RejectKind::Bucket,
+                reason: format!("tenant {tenant:#x} over per-tenant quota"),
+                retry_after_ms: retry,
+            };
+        }
+
+        // 2. Global sliding window + class-aware shed.
+        self.roll_window(now_ms);
+        let est = self.window_estimate(now_ms);
+        let cap = self.cfg.window_capacity as f64;
+        let pressure = (est / cap).max(queue_occupancy);
+        let retry_window = (self.cfg.window_ms - now_ms % self.cfg.window_ms).max(1);
+
+        let interactive = priority >= self.cfg.interactive_floor;
+        if est >= cap {
+            // Hard cap: nothing more fits this window, any class.
+            self.rejected_rate.fetch_add(1, Ordering::Relaxed);
+            self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
+            return Decision::Reject {
+                kind: RejectKind::Window,
+                reason: "rate limit: admission window full".into(),
+                retry_after_ms: retry_window,
+            };
+        }
+        if !interactive {
+            if pressure >= self.cfg.drop_threshold {
+                self.shed_dropped.fetch_add(1, Ordering::Relaxed);
+                self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
+                return Decision::Reject {
+                    kind: RejectKind::Shed,
+                    reason: "shedding best-effort work under overload".into(),
+                    retry_after_ms: retry_window,
+                };
+            }
+            if pressure >= self.cfg.degrade_threshold {
+                self.commit(slot, now_ms);
+                self.shed_degraded.fetch_add(1, Ordering::Relaxed);
+                return Decision::Degrade { max_new_cap: self.cfg.degrade_max_new };
+            }
+        }
+        self.commit(slot, now_ms);
+        Decision::Admit
+    }
+
+    /// Record an admission: debit the tenant bucket, count it in the
+    /// current window.
+    fn commit(&self, slot: usize, now_ms: u64) {
+        let b = &self.buckets[slot];
+        // Saturating debit: refill already guaranteed >= 1 token at
+        // check time; a concurrent racer can at worst drive this to 0.
+        let _ = b
+            .level_milli
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(MILLI))
+            });
+        b.admitted.fetch_add(1, Ordering::Relaxed);
+        b.last_refill_ms.fetch_max(now_ms, Ordering::Relaxed);
+        self.cur_count.fetch_add(1, Ordering::Relaxed);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rotate the two-bucket window if `now_ms` crossed an edge.
+    fn roll_window(&self, now_ms: u64) {
+        let w = now_ms / self.cfg.window_ms;
+        let cur = self.cur_window.load(Ordering::Relaxed);
+        if w == cur {
+            return;
+        }
+        if self
+            .cur_window
+            .compare_exchange(cur, w, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            let old = self.cur_count.swap(0, Ordering::Relaxed);
+            // Adjacent windows overlap; a gap means both are stale.
+            let carried = if w == cur + 1 { old } else { 0 };
+            self.prev_count.store(carried, Ordering::Relaxed);
+        }
+    }
+
+    /// Sliding-window admission estimate: current count plus the
+    /// previous window weighted by its remaining overlap.
+    fn window_estimate(&self, now_ms: u64) -> f64 {
+        let frac = (now_ms % self.cfg.window_ms) as f64 / self.cfg.window_ms as f64;
+        let cur = self.cur_count.load(Ordering::Relaxed) as f64;
+        let prev = self.prev_count.load(Ordering::Relaxed) as f64;
+        cur + prev * (1.0 - frac)
+    }
+
+    /// Refill the tenant's bucket to `now_ms`; `None` if it now holds at
+    /// least one whole token, else the milliseconds until it will.
+    fn bucket_deficit_ms(&self, slot: usize, now_ms: u64) -> Option<u64> {
+        let b = &self.buckets[slot];
+        let last = b.last_refill_ms.load(Ordering::Relaxed);
+        let elapsed_ms = now_ms.saturating_sub(last);
+        let cap_milli = (self.cfg.bucket_capacity * MILLI as f64) as u64;
+        let refill_milli = (self.cfg.bucket_refill_per_s * elapsed_ms as f64) as u64;
+        if refill_milli > 0 {
+            b.last_refill_ms.store(now_ms, Ordering::Relaxed);
+            let _ = b
+                .level_milli
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some((v + refill_milli).min(cap_milli))
+                });
+        }
+        let level = b.level_milli.load(Ordering::Relaxed);
+        if level >= MILLI {
+            None
+        } else {
+            let deficit = MILLI - level;
+            let ms = (deficit as f64 / self.cfg.bucket_refill_per_s).ceil() as u64;
+            Some(ms.max(1))
+        }
+    }
+
+    /// Find (or claim) the slab entry for `tenant`. New tenants start
+    /// with a full bucket stamped at `0` so the first refill at check
+    /// time fills them (a fresh tenant is never turned away by an empty
+    /// bucket it was never given a chance to fill).
+    fn tenant_slot(&self, tenant: u64) -> usize {
+        // Key 0 is the anonymous/no-tenant pool; it lives in slot 0's
+        // neighborhood like any other key but is nudged to 1 so "empty"
+        // stays unambiguous in the slab.
+        let key = if tenant == 0 { 1 } else { tenant };
+        let n = self.buckets.len();
+        let home = (key % n as u64) as usize;
+        for i in 0..PROBE_LIMIT.min(n) {
+            let idx = (home + i) % n;
+            let b = &self.buckets[idx];
+            let k = b.key.load(Ordering::Relaxed);
+            if k == key {
+                return idx;
+            }
+            if k == 0 {
+                let cap_milli = (self.cfg.bucket_capacity * MILLI as f64) as u64;
+                match b.key.compare_exchange(0, key, Ordering::Relaxed, Ordering::Relaxed) {
+                    Ok(_) => {
+                        b.level_milli.store(cap_milli, Ordering::Relaxed);
+                        return idx;
+                    }
+                    Err(actual) if actual == key => return idx,
+                    Err(_) => continue,
+                }
+            }
+        }
+        // Probe exhausted: share the home slot (documented fate-sharing
+        // past `tenant_slots` active tenants — quota shaping degrades
+        // gracefully instead of allocating).
+        home
+    }
+
+    /// Per-tenant admission counters for `/metrics`, in slab order.
+    /// Allocates (it's the metrics path, not the admission path).
+    pub fn tenant_stats(&self) -> Vec<TenantStat> {
+        self.buckets
+            .iter()
+            .filter(|b| b.key.load(Ordering::Relaxed) != 0)
+            .map(|b| TenantStat {
+                key: b.key.load(Ordering::Relaxed),
+                admitted: b.admitted.load(Ordering::Relaxed),
+                rejected: b.rejected.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OverloadConfig {
+        OverloadConfig {
+            enabled: true,
+            window_capacity: 8,
+            window_ms: 1000,
+            bucket_capacity: 100.0,
+            bucket_refill_per_s: 1000.0,
+            tenant_slots: 16,
+            degrade_threshold: 0.5,
+            drop_threshold: 0.75,
+            degrade_max_new: 4,
+            interactive_floor: 4,
+        }
+    }
+
+    #[test]
+    fn disabled_gate_admits_everything() {
+        let g = OverloadGate::new(OverloadConfig::default());
+        for i in 0..10_000 {
+            assert_eq!(g.check(i, 0, 1.0, 0), Decision::Admit);
+        }
+        assert_eq!(g.admitted.load(Ordering::Relaxed), 0, "disabled gate counts nothing");
+    }
+
+    #[test]
+    fn window_caps_interactive_and_reports_retry_after() {
+        let g = OverloadGate::new(cfg());
+        for i in 0..8 {
+            assert_eq!(g.check(1, 7, 0.0, 100 + i), Decision::Admit, "under cap");
+        }
+        match g.check(1, 7, 0.0, 200) {
+            Decision::Reject { retry_after_ms, .. } => {
+                assert_eq!(retry_after_ms, 800, "time to the window edge");
+            }
+            d => panic!("expected hard-cap reject, got {d:?}"),
+        }
+        assert_eq!(g.rejected_rate.load(Ordering::Relaxed), 1);
+        // The window rolls: admission resumes, with the previous
+        // window's weight decaying across the new one.
+        assert_eq!(g.check(1, 7, 0.0, 1999), Decision::Admit, "old window nearly decayed");
+    }
+
+    #[test]
+    fn shed_degrades_then_drops_batch_while_interactive_holds() {
+        let g = OverloadGate::new(cfg());
+        // Fill to 50% (4 of 8): batch now degrades, interactive admits.
+        for i in 0..4 {
+            assert_eq!(g.check(1, 4, 0.0, i), Decision::Admit);
+        }
+        assert_eq!(
+            g.check(2, 0, 0.0, 10),
+            Decision::Degrade { max_new_cap: 4 },
+            "batch degrades at 50% pressure"
+        );
+        assert_eq!(g.check(1, 4, 0.0, 11), Decision::Admit, "interactive holds");
+        // Fill to 75%: batch drops outright.
+        g.check(1, 4, 0.0, 12);
+        match g.check(2, 0, 0.0, 13) {
+            Decision::Reject { reason, .. } => assert!(reason.contains("shed"), "{reason}"),
+            d => panic!("expected shed drop, got {d:?}"),
+        }
+        assert_eq!(g.check(1, 7, 0.0, 14), Decision::Admit, "interactive still admitted");
+        assert_eq!(g.shed_degraded.load(Ordering::Relaxed), 1);
+        assert_eq!(g.shed_dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn queue_occupancy_alone_triggers_shedding() {
+        let g = OverloadGate::new(cfg());
+        // Empty window but a nearly-full ring: batch is degraded/dropped,
+        // interactive admitted.
+        assert_eq!(g.check(1, 0, 0.6, 0), Decision::Degrade { max_new_cap: 4 });
+        match g.check(1, 0, 0.9, 1) {
+            Decision::Reject { .. } => {}
+            d => panic!("expected drop at 0.9 occupancy, got {d:?}"),
+        }
+        assert_eq!(g.check(2, 5, 0.9, 2), Decision::Admit);
+    }
+
+    #[test]
+    fn tenant_bucket_isolates_a_flooding_tenant() {
+        let mut c = cfg();
+        c.window_capacity = 10_000; // window never binds in this test
+        c.bucket_capacity = 3.0;
+        c.bucket_refill_per_s = 1.0;
+        let g = OverloadGate::new(c);
+        // Tenant 7 burns its burst of 3, then is refused with a refill
+        // hint; tenant 9 is untouched.
+        for _ in 0..3 {
+            assert_eq!(g.check(7, 6, 0.0, 0), Decision::Admit);
+        }
+        match g.check(7, 6, 0.0, 0) {
+            Decision::Reject { kind: RejectKind::Bucket, reason, retry_after_ms } => {
+                assert!(reason.contains("quota"), "{reason}");
+                assert_eq!(retry_after_ms, 1000, "1 token / (1 token/s) = 1000 ms");
+            }
+            d => panic!("expected bucket reject, got {d:?}"),
+        }
+        assert_eq!(g.check(9, 6, 0.0, 0), Decision::Admit, "other tenants unaffected");
+        // After one second the bucket holds a token again.
+        assert_eq!(g.check(7, 6, 0.0, 1001), Decision::Admit);
+        assert_eq!(g.rejected_bucket.load(Ordering::Relaxed), 1);
+        let stats = g.tenant_stats();
+        let t7 = stats.iter().find(|t| t.key == 7).expect("tenant 7 tracked");
+        assert_eq!((t7.admitted, t7.rejected), (4, 1));
+    }
+
+    #[test]
+    fn colliding_tenants_probe_to_distinct_slots() {
+        let mut c = cfg();
+        c.tenant_slots = 16;
+        c.window_capacity = 10_000;
+        let g = OverloadGate::new(c);
+        // Keys 3, 19, 35 all hash to home slot 3; each must claim its
+        // own slab entry so their quotas stay independent.
+        for k in [3u64, 19, 35] {
+            assert_eq!(g.check(k, 6, 0.0, 0), Decision::Admit);
+        }
+        let stats = g.tenant_stats();
+        for k in [3u64, 19, 35] {
+            assert!(stats.iter().any(|t| t.key == k && t.admitted == 1), "tenant {k} tracked");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_in_now_ms() {
+        let run = || {
+            let g = OverloadGate::new(cfg());
+            (0..200)
+                .map(|i| {
+                    let d = g.check(i % 5, (i % 8) as u32, 0.0, i * 17);
+                    format!("{d:?}")
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

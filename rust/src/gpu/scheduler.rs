@@ -476,6 +476,10 @@ impl SchedulerCore {
         // is policy-stage work.
         self.stats.record_scan(t.elapsed().as_nanos() as u64);
         Candidate::collect_into(&self.ring, &self.scan_scratch, &mut self.cand_scratch);
+        // Queue-depth gauge for /metrics and the overload layer: how many
+        // submitted slots are waiting at this admission pass (one relaxed
+        // store — the scratch stays allocation-free).
+        self.stats.record_queue_depth(self.cand_scratch.len() as u64);
         !self.cand_scratch.is_empty()
     }
 

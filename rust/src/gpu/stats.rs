@@ -211,9 +211,57 @@ pub struct SchedulerStats {
     /// the manifest when the scheduler starts. A label, not a counter —
     /// OnceLock keeps the struct lock-free for the hot-path writers.
     pub attention_backend: std::sync::OnceLock<String>,
+    /// Ring-scan backlog observed at the top of the last admission pass
+    /// (gauge): candidates waiting in submitted slots. One relaxed store
+    /// per loop iteration — alloc-free, hot-path safe.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of [`SchedulerStats::queue_depth`] over the run.
+    pub queue_depth_peak: AtomicU64,
+    /// Overload-gate decisions (DESIGN.md §9), mirrored out of the DPU
+    /// frontend via [`SchedulerStats::mirror_gate_decision`]: admissions
+    /// that passed the gate, rejections by the global sliding window,
+    /// rejections by a per-tenant token bucket, best-effort work shed by
+    /// degradation (admitted with `max_new` capped), and best-effort
+    /// work shed by dropping.
+    pub overload_admitted: AtomicU64,
+    pub rate_limited: AtomicU64,
+    pub tenant_limited: AtomicU64,
+    pub shed_degraded: AtomicU64,
+    pub shed_dropped: AtomicU64,
 }
 
 impl SchedulerStats {
+    /// Mirror one admission-gate decision (called by the DPU frontend on
+    /// every gated submission) so overload counters surface next to the
+    /// scheduler's own numbers in `summary()` and `/metrics`.
+    pub fn mirror_gate_decision(&self, d: &crate::frontend::overload::Decision) {
+        use crate::frontend::overload::{Decision, RejectKind};
+        match d {
+            Decision::Admit => {
+                self.overload_admitted.fetch_add(1, Ordering::Relaxed);
+            }
+            Decision::Degrade { .. } => {
+                self.overload_admitted.fetch_add(1, Ordering::Relaxed);
+                self.shed_degraded.fetch_add(1, Ordering::Relaxed);
+            }
+            Decision::Reject { kind, .. } => {
+                match kind {
+                    RejectKind::Window => &self.rate_limited,
+                    RejectKind::Bucket => &self.tenant_limited,
+                    RejectKind::Shed => &self.shed_dropped,
+                }
+                .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Update the queue-depth gauge and its high-water mark (one relaxed
+    /// store + fetch_max; hot-path safe).
+    pub fn record_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
     pub fn record_scan(&self, ns: u64) {
         self.scan_count.fetch_add(1, Ordering::Relaxed);
         self.scan_ns_sum.fetch_add(ns, Ordering::Relaxed);
@@ -263,7 +311,9 @@ impl SchedulerStats {
              chunked_prefills={} chunk_launches={} max_chunk_wait_iters={} \
              loop_iter_p50_us={:.2} loop_iter_p99_us={:.2} iter_full_p50_us={:.2} \
              iter_full_p99_us={:.2} batch_membership_changes={} \
-             heap_allocs={} attention_backend={}",
+             heap_allocs={} attention_backend={} queue_depth={} queue_depth_peak={} \
+             overload_admitted={} rate_limited={} tenant_limited={} shed_degraded={} \
+             shed_dropped={}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.prefill_offset_batches.load(Ordering::Relaxed),
@@ -298,6 +348,13 @@ impl SchedulerStats {
             // number /metrics readers can watch, not just a test.
             crate::util::alloc::alloc_count(),
             self.attention_backend.get().map(|s| s.as_str()).unwrap_or("unspecified"),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.queue_depth_peak.load(Ordering::Relaxed),
+            self.overload_admitted.load(Ordering::Relaxed),
+            self.rate_limited.load(Ordering::Relaxed),
+            self.tenant_limited.load(Ordering::Relaxed),
+            self.shed_degraded.load(Ordering::Relaxed),
+            self.shed_dropped.load(Ordering::Relaxed),
         )
     }
 }
@@ -387,6 +444,31 @@ mod tests {
         let snap = r.snapshot_us();
         assert_eq!(snap.len(), 4, "capacity bounds retention");
         assert!(snap.iter().all(|&v| v >= 100.0), "old samples overwritten: {snap:?}");
+    }
+
+    #[test]
+    fn gate_decisions_mirror_into_overload_counters() {
+        use crate::frontend::overload::{Decision, RejectKind};
+        let s = SchedulerStats::default();
+        s.mirror_gate_decision(&Decision::Admit);
+        s.mirror_gate_decision(&Decision::Degrade { max_new_cap: 4 });
+        for kind in [RejectKind::Window, RejectKind::Bucket, RejectKind::Shed] {
+            s.mirror_gate_decision(&Decision::Reject {
+                kind,
+                reason: "x".into(),
+                retry_after_ms: 1,
+            });
+        }
+        s.record_queue_depth(7);
+        s.record_queue_depth(3);
+        let sum = s.summary();
+        assert!(sum.contains("overload_admitted=2"), "{sum}");
+        assert!(sum.contains("rate_limited=1"), "{sum}");
+        assert!(sum.contains("tenant_limited=1"), "{sum}");
+        assert!(sum.contains("shed_degraded=1"), "{sum}");
+        assert!(sum.contains("shed_dropped=1"), "{sum}");
+        assert!(sum.contains("queue_depth=3"), "{sum}");
+        assert!(sum.contains("queue_depth_peak=7"), "{sum}");
     }
 
     #[test]

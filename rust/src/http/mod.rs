@@ -15,7 +15,15 @@
 //!   `"session_id"`: an opaque string naming the conversation — the DPU
 //!   frontend prepends the session's tokenized history (prompt carries
 //!   only the *new* turn) and the scheduler's prefix index turns the
-//!   shared history into a KV-cache hit (DESIGN.md §7).
+//!   shared history into a KV-cache hit (DESIGN.md §7). Overload
+//!   extension: `"tenant"`: an opaque string naming the paying tenant
+//!   for per-tenant admission quotas (falls back to `session_id`).
+//!
+//! Error contract (DESIGN.md §9): malformed requests — bad JSON, unknown
+//! `class`, out-of-range `priority`/`max_tokens`, overlong prompt — are
+//! **400** and retrying them can never help; admission refusals — rate
+//! limit, tenant quota, load shed, ring backpressure — are **429** with
+//! a computed `retry_after_ms` in the body.
 //! * `GET /health` — liveness.
 //! * `GET /metrics` — scheduler + frontend counters, text format.
 
@@ -24,11 +32,17 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::frontend::overload::Rejected;
 use crate::frontend::tracker::TokenEvent;
 use crate::frontend::{DpuFrontend, RequestClass};
 use crate::gpu::SchedulerStats;
 use crate::tokenizer::Detokenizer;
 use crate::util::json::{parse, Json};
+
+/// Documented upper bound for `max_tokens`. The frontend additionally
+/// clamps to the ring's output-arena capacity; this cap exists so the
+/// wire-level u64 → u32 conversion is validated, never truncating.
+pub const MAX_TOKENS_LIMIT: u64 = 1 << 20;
 
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
@@ -151,11 +165,21 @@ fn handle_conn(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => respond(&mut stream, 200, "application/json", "{\"status\":\"ok\"}"),
         ("GET", "/metrics") => {
-            let body = format!(
-                "# blink scheduler\n{}\n# frontend\nfree_slots {}\n",
+            let mut body = format!(
+                "# blink scheduler\n{}\n# frontend\nfree_slots {}\n# overload\n",
                 stats.summary(),
                 frontend.approx_free_slots()
             );
+            let gate = frontend.gate();
+            body.push_str(&format!("overload_enabled {}\n", gate.enabled() as u32));
+            for t in gate.tenant_stats() {
+                let total = t.admitted + t.rejected;
+                let rate = if total == 0 { 1.0 } else { t.admitted as f64 / total as f64 };
+                body.push_str(&format!(
+                    "tenant_admission{{key=\"{:#x}\"}} admitted={} rejected={} rate={:.3}\n",
+                    t.key, t.admitted, t.rejected, rate
+                ));
+            }
             respond(&mut stream, 200, "text/plain", &body)
         }
         ("POST", "/v1/completions") => {
@@ -186,8 +210,8 @@ fn parse_request_class(obj: &Json) -> Result<RequestClass, String> {
     };
     if let Some(p) = obj.get("priority") {
         match p.as_u64() {
-            Some(v) => class.priority = v.min(7) as u32,
-            None => return Err("priority must be an integer 0-7".into()),
+            Some(v) if v <= 7 => class.priority = v as u32,
+            _ => return Err("priority must be an integer 0-7".into()),
         }
     }
     if let Some(m) = obj.get("ttft_deadline_ms") {
@@ -216,7 +240,26 @@ fn handle_completion(
     let Some(prompt) = obj.get("prompt").and_then(|p| p.as_str()) else {
         return respond(stream, 400, "application/json", "{\"error\":\"missing prompt\"}");
     };
-    let max_tokens = obj.get("max_tokens").and_then(|m| m.as_u64()).unwrap_or(16) as u32;
+    let max_tokens = match obj.get("max_tokens") {
+        None => 16u32,
+        Some(m) => match m.as_u64() {
+            // The lower edge guards PR 4's fail-fast invariant (a
+            // max_new == 0 lane must never exist); the upper edge keeps
+            // the u64→u32 conversion lossless instead of silently
+            // wrapping 4294967297 to 1.
+            Some(v) if (1..=MAX_TOKENS_LIMIT).contains(&v) => v as u32,
+            _ => {
+                let msg = Json::obj(vec![(
+                    "error",
+                    Json::Str(format!(
+                        "max_tokens must be an integer in 1..={MAX_TOKENS_LIMIT}"
+                    )),
+                )])
+                .to_string();
+                return respond(stream, 400, "application/json", &msg);
+            }
+        },
+    };
     let stream_mode = obj.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
     let class = match parse_request_class(&obj) {
         Ok(c) => c,
@@ -239,12 +282,39 @@ fn handle_completion(
             }
         },
     };
+    let tenant: Option<String> = match obj.get("tenant") {
+        None => None,
+        Some(t) => match t.as_str() {
+            Some(v) if !v.is_empty() => Some(v.to_string()),
+            _ => {
+                let msg = Json::obj(vec![(
+                    "error",
+                    Json::Str("tenant must be a non-empty string".into()),
+                )])
+                .to_string();
+                return respond(stream, 400, "application/json", &msg);
+            }
+        },
+    };
 
-    let handle = match frontend.submit_text_session(session.as_deref(), prompt, max_tokens, class)
-    {
+    let handle = match frontend.submit_text_tenant(
+        session.as_deref(),
+        tenant.as_deref(),
+        prompt,
+        max_tokens,
+        class,
+    ) {
         Ok(h) => h,
-        Err(e) => {
+        Err(Rejected::Client(e)) => {
             let msg = Json::obj(vec![("error", Json::Str(e))]).to_string();
+            return respond(stream, 400, "application/json", &msg);
+        }
+        Err(Rejected::Overload { reason, retry_after_ms }) => {
+            let msg = Json::obj(vec![
+                ("error", Json::Str(reason)),
+                ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+            ])
+            .to_string();
             return respond(stream, 429, "application/json", &msg);
         }
     };
@@ -332,6 +402,7 @@ fn handle_completion(
         streamed
     } else {
         let prompt_tokens = handle.prompt_tokens;
+        let effective_max_new = handle.max_new;
         match handle.collect() {
             Ok(tokens) => {
                 if let Some(sid) = &session {
@@ -355,6 +426,10 @@ fn handle_completion(
                         Json::obj(vec![
                             ("prompt_tokens", Json::Num(prompt_tokens as f64)),
                             ("completion_tokens", Json::Num(tokens.len() as f64)),
+                            // The *effective* output budget: a
+                            // shed-degraded admission reports its capped
+                            // value here.
+                            ("max_new", Json::Num(effective_max_new as f64)),
                         ]),
                     ),
                 ]);

@@ -5,16 +5,18 @@
 //! ```text
 //! serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
 //!         [--prefix-reuse | --no-prefix-reuse] [--prefill-chunk-tokens N]
+//!         [--rate-limit N]
 //!         start a live server (P: fcfs|priority|sjf|slo); prefix reuse
 //!         defaults to auto (on when the artifacts ship offset graphs);
 //!         chunk budget defaults to the largest offset-graph seq (0 =
 //!         whole-prompt prefill, the paper's behavior)
-//! eval    <all|policies|prefix|prefix-live|chunked|interference|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
-//!         [--out DIR] [--window S] [--threads N] [--smoke (interference: CI-sized live cells)]
+//! eval    <all|policies|prefix|prefix-live|chunked|interference|overload|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         [--out DIR] [--window S] [--threads N] [--smoke (interference/overload: CI-sized live cells)]
 //! info    print manifest + graph grid for a model
 //! ```
 
 use blink::eval;
+use blink::frontend::overload::OverloadConfig;
 use blink::gpu::{Placement, PolicyKind, PrefixReuse};
 use blink::http::HttpServer;
 use blink::server::{BlinkServer, ServerConfig};
@@ -32,10 +34,11 @@ fn main() {
                 "usage: blink <serve|eval|info> [...]\n\
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
                        [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse] \\\n\
-                       [--prefill-chunk-tokens N (0 = whole-prompt prefill)]\n\
-                 eval <all|policies|prefix|prefix-live|chunked|interference|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                       [--prefill-chunk-tokens N (0 = whole-prompt prefill)] \\\n\
+                       [--rate-limit N (req/s admission cap + shed; absent = open loop)]\n\
+                 eval <all|policies|prefix|prefix-live|chunked|interference|overload|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
                       [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)] \\\n\
-                      [--smoke (interference: CI-sized live cells)]\n\
+                      [--smoke (interference/overload: CI-sized live cells)]\n\
                  info [--model blink-tiny]"
             );
             std::process::exit(2);
@@ -74,6 +77,19 @@ fn serve(args: &Args) {
             std::process::exit(2);
         })
     });
+    // Overload control (DESIGN.md §9): --rate-limit N caps admission at
+    // N requests per 1 s sliding window and turns on the default
+    // degrade-then-drop shed policy; absent = the paper's open loop.
+    let overload = match args.get("rate-limit") {
+        None => OverloadConfig::default(),
+        Some(raw) => {
+            let n = raw.parse::<u32>().ok().filter(|&n| n > 0).unwrap_or_else(|| {
+                eprintln!("--rate-limit must be a positive integer (req/s), got {raw}");
+                std::process::exit(2);
+            });
+            OverloadConfig { enabled: true, window_capacity: n, ..OverloadConfig::default() }
+        }
+    };
     eprintln!(
         "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={:?}, \
          prefill_chunk_tokens={} ...",
@@ -90,6 +106,7 @@ fn serve(args: &Args) {
         policy,
         prefix_reuse,
         prefill_chunk_tokens,
+        overload,
         ..Default::default()
     })
     .expect("server start");
@@ -128,6 +145,9 @@ fn eval_cmd(args: &Args) {
         "chunked" => return eval::chunked_comparison(out_ref, window, threads),
         "interference" => {
             return eval::interference::interference(out_ref, args.has_flag("smoke"));
+        }
+        "overload" => {
+            return eval::overload::overload(out_ref, args.has_flag("smoke"));
         }
         _ => {}
     }

@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use crate::frontend::overload::{OverloadConfig, Rejected};
 use crate::frontend::token_reader::ReaderConfig;
 use crate::frontend::{DpuFrontend, FrontendConfig, RequestClass, RequestHandle};
 use crate::gpu::{Executor, Placement, PolicyKind, PrefixReuse, Scheduler, SchedulerConfig};
@@ -39,6 +40,10 @@ pub struct ServerConfig {
     /// the largest offset-graph seq; `Some(0)` = whole-prompt prefill
     /// (the paper's behavior).
     pub prefill_chunk_tokens: Option<usize>,
+    /// DPU-side admission gate (DESIGN.md §9): sliding-window rate
+    /// limit, per-tenant token buckets, class-aware load shedding.
+    /// Disabled by default — the paper's open-loop behavior.
+    pub overload: OverloadConfig,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +59,7 @@ impl Default for ServerConfig {
             policy: PolicyKind::Fcfs,
             prefix_reuse: PrefixReuse::Auto,
             prefill_chunk_tokens: None,
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -108,18 +114,22 @@ impl BlinkServer {
                 max_prompt: ring.config.max_prompt,
                 max_output: ring.config.max_output,
                 reader: ReaderConfig::default(),
+                overload: config.overload,
             },
         ));
+        // Gate decisions mirror into the scheduler's stats block so one
+        // `/metrics` scrape shows admission and execution side by side.
+        frontend.attach_stats(scheduler.stats.clone());
 
         Ok(BlinkServer { ring, rdma, frontend, scheduler, manifest })
     }
 
     /// Convenience passthroughs.
-    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, String> {
+    pub fn submit_text(&self, text: &str, max_new: u32) -> Result<RequestHandle, Rejected> {
         self.frontend.submit_text(text, max_new)
     }
 
-    pub fn submit_tokens(&self, toks: &[u32], max_new: u32) -> Result<RequestHandle, String> {
+    pub fn submit_tokens(&self, toks: &[u32], max_new: u32) -> Result<RequestHandle, Rejected> {
         self.frontend.submit_tokens(toks, max_new)
     }
 
@@ -128,7 +138,7 @@ impl BlinkServer {
         toks: &[u32],
         max_new: u32,
         class: RequestClass,
-    ) -> Result<RequestHandle, String> {
+    ) -> Result<RequestHandle, Rejected> {
         self.frontend.submit_tokens_class(toks, max_new, class)
     }
 

@@ -21,9 +21,61 @@ use crate::sim::interference::InterferenceProcess;
 use crate::sim::systems::System;
 use crate::util::rng::Rng;
 use crate::workload::{
-    ChunkStats, ClassMix, LengthModel, LongPromptMix, MultiTurnMix, PrefixStats, RequestMetrics,
-    TraceGen, TraceRequest, WindowMetrics,
+    ChunkStats, ClassMix, LengthModel, LongPromptMix, MultiTurnMix, OverloadStats, PrefixStats,
+    RequestMetrics, TraceGen, TraceRequest, WindowMetrics,
 };
+
+/// Per-tenant token-bucket quota for the simulated admission gate
+/// (mirrors the live `OverloadGate`'s bucket slab at float precision).
+#[derive(Debug, Clone, Copy)]
+pub struct TenantBucketCfg {
+    /// Burst capacity in requests.
+    pub capacity: f64,
+    /// Sustained refill rate in requests/second.
+    pub refill_per_s: f64,
+    /// Number of tenants stamped onto the trace
+    /// (see [`crate::workload::assign_tenants`]).
+    pub tenants: u64,
+    /// Share of the trace sent by a single hot tenant (0.0 = uniform).
+    pub hot_share: f64,
+}
+
+/// Shed policy for the simulated gate: below-floor work is degraded
+/// (output capped) above `degrade_threshold` pressure and dropped above
+/// `drop_threshold`; interactive-class work is only stopped by the hard
+/// window cap. [`ShedPolicyCfg::off`] (infinite thresholds) is the
+/// default — the paper's open-loop behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedPolicyCfg {
+    pub degrade_threshold: f64,
+    pub drop_threshold: f64,
+    /// Output-token cap applied to degraded admissions.
+    pub degrade_max_new: usize,
+    /// Priority at or above which a request is interactive-class.
+    pub interactive_floor: u32,
+}
+
+impl ShedPolicyCfg {
+    pub fn off() -> ShedPolicyCfg {
+        ShedPolicyCfg {
+            degrade_threshold: f64::INFINITY,
+            drop_threshold: f64::INFINITY,
+            degrade_max_new: 16,
+            interactive_floor: 4,
+        }
+    }
+
+    /// The live gate's default thresholds (degrade at 50 % pressure,
+    /// drop at 80 %).
+    pub fn degrade_then_drop(degrade_max_new: usize) -> ShedPolicyCfg {
+        ShedPolicyCfg {
+            degrade_threshold: 0.5,
+            drop_threshold: 0.8,
+            degrade_max_new,
+            interactive_floor: 4,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -65,6 +117,14 @@ pub struct SimConfig {
     /// comparison's trace); takes precedence over `classes`/`lengths`,
     /// but not over `multi_turn`, when set.
     pub long_prompts: Option<LongPromptMix>,
+    /// Admission-edge sliding-window rate limit (requests/second over a
+    /// 1 s window), mirroring the live `OverloadGate`. 0.0 = unlimited.
+    pub rate_limit: f64,
+    /// Per-tenant token buckets at the admission edge; `None` = no
+    /// per-tenant quota.
+    pub tenant_buckets: Option<TenantBucketCfg>,
+    /// Shed policy at the admission edge (see [`ShedPolicyCfg`]).
+    pub shed_policy: ShedPolicyCfg,
 }
 
 impl SimConfig {
@@ -85,6 +145,9 @@ impl SimConfig {
             prefix_cache_tokens: 0,
             prefill_chunk_tokens: 0,
             long_prompts: None,
+            rate_limit: 0.0,
+            tenant_buckets: None,
+            shed_policy: ShedPolicyCfg::off(),
         }
     }
 
@@ -195,6 +258,105 @@ impl PrefixCacheSim {
     }
 }
 
+/// The DES mirror of the live `OverloadGate`: same decision order
+/// (tenant bucket → sliding window → class-aware shed), simulated in
+/// virtual time with exact (timestamp-queue) window accounting instead
+/// of the live two-bucket estimate.
+struct GateSim {
+    rate_limit: f64,
+    buckets_cfg: Option<TenantBucketCfg>,
+    shed: ShedPolicyCfg,
+    /// Admission timestamps within the trailing 1 s window.
+    window: std::collections::VecDeque<f64>,
+    /// tenant → (bucket level, last refill time).
+    buckets: HashMap<u64, (f64, f64)>,
+    admitted_by_tenant: HashMap<u64, u64>,
+    stats: OverloadStats,
+}
+
+enum GateSimDecision {
+    Admit,
+    Degrade,
+    Drop,
+}
+
+impl GateSim {
+    fn new(cfg: &SimConfig) -> GateSim {
+        GateSim {
+            rate_limit: cfg.rate_limit,
+            buckets_cfg: cfg.tenant_buckets,
+            shed: cfg.shed_policy,
+            window: std::collections::VecDeque::new(),
+            buckets: HashMap::new(),
+            admitted_by_tenant: HashMap::new(),
+            stats: OverloadStats::default(),
+        }
+    }
+
+    /// Gate one request at virtual time `t`. `backlog_util` plays the
+    /// live gate's ring-occupancy role: schedulable backlog relative to
+    /// a few batches' worth of slack.
+    fn check(&mut self, r: &TraceRequest, t: f64, backlog_util: f64) -> GateSimDecision {
+        self.stats.offered += 1;
+        // 1. Tenant bucket (charged to the flooder before the window).
+        if let Some(cfg) = self.buckets_cfg {
+            let e = self.buckets.entry(r.tenant).or_insert((cfg.capacity, t));
+            e.0 = (e.0 + (t - e.1) * cfg.refill_per_s).min(cfg.capacity);
+            e.1 = t;
+            if e.0 < 1.0 {
+                self.stats.rejected_bucket += 1;
+                return GateSimDecision::Drop;
+            }
+        }
+        // 2. Global sliding window + class-aware shed.
+        let mut window_util = 0.0;
+        if self.rate_limit > 0.0 {
+            while self.window.front().is_some_and(|&a| a <= t - 1.0) {
+                self.window.pop_front();
+            }
+            let est = self.window.len() as f64;
+            if est >= self.rate_limit {
+                self.stats.rejected_rate += 1;
+                return GateSimDecision::Drop;
+            }
+            window_util = est / self.rate_limit;
+        }
+        let pressure = window_util.max(backlog_util);
+        let interactive = r.priority >= self.shed.interactive_floor;
+        if !interactive {
+            if pressure >= self.shed.drop_threshold {
+                self.stats.shed_dropped += 1;
+                return GateSimDecision::Drop;
+            }
+            if pressure >= self.shed.degrade_threshold {
+                self.commit(r, t);
+                self.stats.shed_degraded += 1;
+                return GateSimDecision::Degrade;
+            }
+        }
+        self.commit(r, t);
+        GateSimDecision::Admit
+    }
+
+    fn commit(&mut self, r: &TraceRequest, t: f64) {
+        if let Some(e) = self.buckets.get_mut(&r.tenant) {
+            e.0 = (e.0 - 1.0).max(0.0);
+        }
+        if self.rate_limit > 0.0 {
+            self.window.push_back(t);
+        }
+        self.stats.admitted += 1;
+        *self.admitted_by_tenant.entry(r.tenant).or_insert(0) += 1;
+    }
+
+    fn into_stats(mut self) -> OverloadStats {
+        let mut by_tenant: Vec<(u64, u64)> = self.admitted_by_tenant.into_iter().collect();
+        by_tenant.sort_unstable();
+        self.stats.admitted_by_tenant = by_tenant;
+        self.stats
+    }
+}
+
 struct Run {
     req: TraceRequest,
     produced: usize,
@@ -232,7 +394,7 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let iseed = if cfg.interference { cfg.seed.rotate_left(17) ^ 0xC010C } else { cfg.seed };
     let mut rng = Rng::new(iseed ^ sys_tag(cfg.system));
     let cm = CostModel::new(cfg.model);
-    let trace = if let Some(mt) = &cfg.multi_turn {
+    let mut trace = if let Some(mt) = &cfg.multi_turn {
         mt.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096)
     } else if let Some(lp) = &cfg.long_prompts {
         lp.generate(&mut rng.fork(1), cfg.rate, cfg.window_s, 8192, 4096)
@@ -243,6 +405,9 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
                 .generate(&mut rng.fork(1), cfg.rate, cfg.window_s),
         }
     };
+    if let Some(tb) = cfg.tenant_buckets {
+        crate::workload::assign_tenants(&mut trace, tb.tenants, tb.hot_share);
+    }
     let policy = cfg.policy.build();
     let mut prefix: Option<PrefixCacheSim> = if cfg.prefix_cache_tokens > 0 {
         let shared = cfg.multi_turn.as_ref().map_or(0, |m| m.system_prompt_tokens);
@@ -274,6 +439,7 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
     let mean_footprint = mean_tokens(&trace).max(64.0);
     let max_batch = cm.max_batch(mean_footprint).min(cfg.max_num_seqs);
 
+    let mut gate = GateSim::new(cfg);
     let mut t = 0.0f64;
     let mut next_ready = 0usize;
     // Schedulable queue: (ready_s, request, submission ticket). The
@@ -297,11 +463,22 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
         || !chunking.is_empty())
         && t < drain_deadline
     {
-        // Requests whose admission path finished become schedulable.
+        // Requests whose admission path finished become schedulable —
+        // after the overload gate (the frontend edge): the gate runs
+        // before any queueing, so refused work never joins `pending`.
         while next_ready < ready.len() && ready[next_ready].0 <= t {
-            pending.push((ready[next_ready].0, ready[next_ready].1, ticket_ctr));
-            ticket_ctr += 1;
+            let (ready_s, mut r) = (ready[next_ready].0, ready[next_ready].1);
             next_ready += 1;
+            let backlog_util = pending.len() as f64 / (4 * max_batch).max(1) as f64;
+            match gate.check(&r, ready_s, backlog_util.min(1.0)) {
+                GateSimDecision::Drop => continue,
+                GateSimDecision::Degrade => {
+                    r.output_tokens = r.output_tokens.min(cfg.shed_policy.degrade_max_new.max(1));
+                }
+                GateSimDecision::Admit => {}
+            }
+            pending.push((ready_s, r, ticket_ctr));
+            ticket_ctr += 1;
         }
 
         // Admit in policy order while capacity allows; prefill in
@@ -492,6 +669,7 @@ pub fn simulate_with_sensitivity(cfg: &SimConfig, sensitivity: f64) -> WindowMet
         wm.prefix = p.stats;
     }
     wm.chunked = chunk_stats;
+    wm.overload = gate.into_stats();
     // Energy: GPU utilization over the *active* span.
     let active = t.min(cfg.window_s).max(1e-9);
     let gpu_util = (gpu_busy_s.min(active) / active).clamp(0.0, 1.0);
@@ -637,6 +815,86 @@ mod tests {
         let b = simulate(&cfg);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.ttft.p99, b.ttft.p99);
+    }
+
+    fn overloaded_cfg(rate: f64) -> SimConfig {
+        let mut cfg = SimConfig::new(System::Blink, LLAMA3_8B, rate, false);
+        cfg.classes = Some(ClassMix::interactive_batch());
+        cfg
+    }
+
+    #[test]
+    fn gated_sim_is_deterministic() {
+        let mut cfg = overloaded_cfg(24.0);
+        cfg.rate_limit = 12.0;
+        cfg.shed_policy = ShedPolicyCfg::degrade_then_drop(16);
+        cfg.tenant_buckets =
+            Some(TenantBucketCfg { capacity: 32.0, refill_per_s: 4.0, tenants: 8, hot_share: 0.5 });
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.overload.admitted, b.overload.admitted);
+        assert_eq!(a.overload.rejected_rate, b.overload.rejected_rate);
+        assert_eq!(a.overload.rejected_bucket, b.overload.rejected_bucket);
+        assert_eq!(a.overload.shed_dropped, b.overload.shed_dropped);
+        assert_eq!(a.overload.shed_degraded, b.overload.shed_degraded);
+        assert_eq!(a.overload.admitted_by_tenant, b.overload.admitted_by_tenant);
+    }
+
+    #[test]
+    fn limiter_and_shed_protect_interactive_at_2x_overload() {
+        // 2× over the ~12 req/s Blink capacity for this mix: unlimited
+        // admission lets every queue grow and interactive attainment
+        // collapse; the limiter + shed hold admitted load near capacity
+        // and push the loss onto the batch class.
+        let unlimited = simulate(&overloaded_cfg(24.0));
+        let mut cfg = overloaded_cfg(24.0);
+        cfg.rate_limit = 12.0;
+        cfg.shed_policy = ShedPolicyCfg::degrade_then_drop(16);
+        let limited = simulate(&cfg);
+
+        assert_eq!(unlimited.overload.rejected_rate, 0);
+        assert!(limited.overload.admitted < limited.overload.offered);
+        assert!(
+            limited.overload.rejected_rate + limited.overload.shed_dropped > 0,
+            "gate must refuse work at 2x overload"
+        );
+        assert!(limited.overload.shed_degraded + limited.overload.shed_dropped > 0);
+
+        let ua = unlimited.class(4).expect("interactive class").slo_attainment;
+        let la = limited.class(4).expect("interactive class").slo_attainment;
+        assert!(ua.is_finite() && la.is_finite());
+        assert!(
+            la > ua,
+            "limited interactive attainment {la} must beat unlimited {ua}"
+        );
+    }
+
+    #[test]
+    fn tenant_buckets_cap_the_hot_tenant() {
+        // One tenant sends half the trace. Generous buckets admit it
+        // all; tight buckets clamp its admitted share toward its fair
+        // quota without touching the cold tenants' admissions.
+        let mut generous = overloaded_cfg(16.0);
+        generous.tenant_buckets = Some(TenantBucketCfg {
+            capacity: 1e9,
+            refill_per_s: 1e9,
+            tenants: 8,
+            hot_share: 0.5,
+        });
+        let g = simulate(&generous);
+
+        let mut tight = overloaded_cfg(16.0);
+        tight.tenant_buckets =
+            Some(TenantBucketCfg { capacity: 8.0, refill_per_s: 2.0, tenants: 8, hot_share: 0.5 });
+        let t = simulate(&tight);
+
+        assert_eq!(g.overload.rejected_bucket, 0);
+        assert!(t.overload.rejected_bucket > 0, "tight buckets must reject the flooder");
+        let gs = g.overload.max_tenant_share();
+        let ts = t.overload.max_tenant_share();
+        assert!(gs > 0.4, "hot tenant should dominate unthrottled: {gs}");
+        assert!(ts < gs, "buckets must shrink the hot tenant's share: {ts} vs {gs}");
     }
 
     /// The tentpole's acceptance shape: on the heavy-tailed long-prompt

@@ -71,6 +71,10 @@ pub struct TraceRequest {
     /// (system prompt + prior user/assistant exchanges) — the part a
     /// prefix cache can serve. Always < `input_tokens`; 0 for turn 1.
     pub history_tokens: usize,
+    /// Tenant tag for per-tenant admission quotas (DESIGN.md §9);
+    /// 0 = the shared anonymous pool. Generators emit 0; overload
+    /// scenarios stamp tenants post-generation ([`assign_tenants`]).
+    pub tenant: u64,
 }
 
 pub struct TraceGen {
@@ -118,10 +122,59 @@ where
             ttft_budget_s,
             session_id: 0,
             history_tokens: 0,
+            tenant: 0,
         });
         id += 1;
     }
     out
+}
+
+/// Stamp tenant tags onto a generated trace for per-tenant quota
+/// scenarios: request `i` gets tenant `1 + (i mod tenants)`. With
+/// `hot_share > 0`, that fraction of requests (every ⌈1/hot_share⌉-th,
+/// deterministically) is instead assigned to tenant 1, modeling one
+/// tenant flooding a mostly-uniform population. Tenant ids start at 1 —
+/// 0 is the shared anonymous pool.
+pub fn assign_tenants(trace: &mut [TraceRequest], tenants: u64, hot_share: f64) {
+    let tenants = tenants.max(1);
+    let stride = if hot_share > 0.0 { (1.0 / hot_share).ceil().max(1.0) as usize } else { 0 };
+    for (i, r) in trace.iter_mut().enumerate() {
+        if stride > 0 && i % stride == 0 {
+            r.tenant = 1;
+        } else {
+            r.tenant = 1 + (i as u64 % tenants);
+        }
+    }
+}
+
+/// Admission-gate counters mirrored out of the DES (all-zero when the
+/// simulated gate is disabled). `admitted_by_tenant` is sorted by tenant
+/// id so downstream CSVs are deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct OverloadStats {
+    /// Requests offered to the gate (= trace length when enabled).
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected_rate: u64,
+    pub rejected_bucket: u64,
+    pub shed_dropped: u64,
+    pub shed_degraded: u64,
+    pub admitted_by_tenant: Vec<(u64, u64)>,
+}
+
+impl OverloadStats {
+    /// The largest single tenant's share of admissions (1.0 when no
+    /// per-tenant accounting ran) — the fairness headline: without
+    /// buckets a flooding tenant's share approaches its offered share,
+    /// with buckets it is pinned near 1/N.
+    pub fn max_tenant_share(&self) -> f64 {
+        let total: u64 = self.admitted_by_tenant.iter().map(|(_, n)| n).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = self.admitted_by_tenant.iter().map(|(_, n)| *n).max().unwrap_or(0);
+        max as f64 / total as f64
+    }
 }
 
 /// One priority class of a mixed workload.
@@ -284,6 +337,7 @@ impl MultiTurnMix {
                     ttft_budget_s: self.ttft_budget_ms / 1e3,
                     session_id: session,
                     history_tokens: history,
+                    tenant: 0,
                 });
                 id += 1;
                 history = input + reply;
@@ -490,6 +544,9 @@ pub struct WindowMetrics {
     /// Chunked-prefill counters (filled by the DES when a chunk budget
     /// is set; all-zero otherwise).
     pub chunked: ChunkStats,
+    /// Admission-gate counters (filled by the DES when overload control
+    /// is configured; all-zero otherwise).
+    pub overload: OverloadStats,
     /// Per-priority-class TTFT, highest priority first (single-class
     /// workloads produce one entry with priority 0).
     pub ttft_by_class: Vec<ClassTtft>,
@@ -569,6 +626,7 @@ impl WindowMetrics {
             energy_mj_per_tok: 0.0,
             prefix: PrefixStats::default(),
             chunked: ChunkStats::default(),
+            overload: OverloadStats::default(),
             ttft_by_class,
         }
     }

@@ -1,0 +1,222 @@
+//! HTTP admission-edge contract (ISSUE 8, DESIGN.md §9): client
+//! mistakes are 400s, overload refusals are 429s with a computed
+//! `retry_after_ms`, and shed-degraded admissions report their capped
+//! `max_new`. Runs the whole stack on the modeled executor, so it never
+//! skips for missing artifacts.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use blink::eval::overload::overload_manifest;
+use blink::frontend::overload::OverloadConfig;
+use blink::frontend::token_reader::ReaderConfig;
+use blink::frontend::{DpuFrontend, FrontendConfig};
+use blink::gpu::{Executor, ModeledCost, PrefixReuse, Scheduler, SchedulerConfig};
+use blink::http::HttpServer;
+use blink::rdma::{RdmaConfig, RdmaEngine};
+use blink::ringbuf::{RingBuffer, RingConfig};
+use blink::tokenizer::Vocab;
+
+struct Stack {
+    http: HttpServer,
+    frontend: Arc<DpuFrontend>,
+    sched: Scheduler,
+}
+
+impl Stack {
+    fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr
+    }
+
+    fn stop(mut self) {
+        self.http.shutdown();
+        self.sched.drain_and_stop();
+    }
+}
+
+/// Full modeled pipeline behind the real HTTP surface: ring → RDMA →
+/// scheduler → modeled executor, fronted by a `DpuFrontend` with the
+/// given admission-gate config.
+fn stack(overload: OverloadConfig) -> Stack {
+    let manifest = overload_manifest();
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 64,
+        max_prompt: 256,
+        max_output: 256,
+    }));
+    let rdma = RdmaEngine::spawn(ring.clone(), RdmaConfig::zero_cost());
+    let executor = Executor::spawn_modeled(
+        &manifest,
+        ModeledCost { prefill_us_per_token: 1.0, decode_step_us: 200.0, expert_dispatch_us: 0.0 },
+    );
+    let sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        manifest,
+        SchedulerConfig {
+            apply_launch_delays: false,
+            prefix_reuse: PrefixReuse::Off,
+            ..Default::default()
+        },
+    );
+    // Byte-level vocab: every byte is its own token, which is all the
+    // tokenizer needs for these admission-contract checks.
+    let vocab = Arc::new(Vocab { tokens: (0..=255u8).map(|b| vec![b]).collect(), merges: vec![] });
+    let frontend = Arc::new(DpuFrontend::new(
+        rdma,
+        vocab,
+        FrontendConfig {
+            num_slots: 64,
+            max_prompt: 256,
+            max_output: 256,
+            reader: ReaderConfig::default(),
+            overload,
+        },
+    ));
+    frontend.attach_stats(sched.stats.clone());
+    let http = HttpServer::serve("127.0.0.1:0", frontend.clone(), sched.stats.clone())
+        .expect("http bind");
+    Stack { http, frontend, sched }
+}
+
+#[test]
+fn client_errors_are_400_never_429() {
+    let s = stack(OverloadConfig::default());
+    let addr = s.addr();
+
+    // Baseline: a well-formed request completes.
+    let ok = http_post(addr, r#"{"prompt": "hello", "max_tokens": 3}"#);
+    assert!(ok.starts_with("HTTP/1.1 200"), "resp: {ok}");
+
+    // Out-of-range priority is rejected, not silently clamped to 7.
+    let bad = http_post(addr, r#"{"prompt": "x", "max_tokens": 2, "priority": 9}"#);
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+    assert!(bad.contains("priority must be an integer 0-7"), "resp: {bad}");
+
+    // max_tokens 0 would create a max_new == 0 lane (PR 4's fail-fast
+    // invariant); it must die at the parse edge.
+    let bad = http_post(addr, r#"{"prompt": "x", "max_tokens": 0}"#);
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+    assert!(bad.contains("max_tokens must be an integer in 1..="), "resp: {bad}");
+
+    // 2^32 + 1 used to wrap u64→u32 into max_new == 1; now it's past the
+    // documented cap and rejected.
+    let bad = http_post(addr, r#"{"prompt": "x", "max_tokens": 4294967297}"#);
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+    assert!(bad.contains("max_tokens must be an integer in 1..="), "resp: {bad}");
+
+    // A prompt over the arena capacity is the client's mistake: 400 (it
+    // was a 429 before the Rejected::Client/Overload split), and the
+    // body must not carry overload retry advice.
+    let long = format!(r#"{{"prompt": "{}", "max_tokens": 2}}"#, "a".repeat(300));
+    let bad = http_post(addr, &long);
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+    assert!(bad.contains("exceeds arena capacity"), "resp: {bad}");
+    assert!(!bad.contains("retry_after_ms"), "client errors carry no retry hint: {bad}");
+
+    // An empty tenant tag is malformed, not an admission problem.
+    let bad = http_post(addr, r#"{"prompt": "x", "max_tokens": 2, "tenant": ""}"#);
+    assert!(bad.starts_with("HTTP/1.1 400"), "resp: {bad}");
+
+    s.stop();
+}
+
+#[test]
+fn rate_limited_requests_get_429_with_retry_after() {
+    // One admission per minute; shed thresholds parked at infinity so
+    // only the hard window cap speaks.
+    let s = stack(OverloadConfig {
+        enabled: true,
+        window_capacity: 1,
+        window_ms: 60_000,
+        bucket_capacity: 1e6,
+        bucket_refill_per_s: 1e6,
+        tenant_slots: 16,
+        degrade_threshold: f64::INFINITY,
+        drop_threshold: f64::INFINITY,
+        degrade_max_new: 4,
+        interactive_floor: 4,
+    });
+    let addr = s.addr();
+
+    let ok = http_post(addr, r#"{"prompt": "first", "max_tokens": 2, "tenant": "acme"}"#);
+    assert!(ok.starts_with("HTTP/1.1 200"), "resp: {ok}");
+
+    let limited = http_post(addr, r#"{"prompt": "second", "max_tokens": 2, "tenant": "acme"}"#);
+    assert!(limited.starts_with("HTTP/1.1 429"), "resp: {limited}");
+    assert!(limited.contains("retry_after_ms"), "429 must carry retry advice: {limited}");
+    assert!(limited.contains("rate limit"), "resp: {limited}");
+
+    // The refusal is visible on the metrics surface: the gate is on and
+    // the tenant's admission row shows one admit, one reject.
+    let m = http_get(addr, "/metrics");
+    assert!(m.contains("overload_enabled 1"), "metrics: {m}");
+    assert!(m.contains("rate_limited=1"), "metrics: {m}");
+    assert!(m.contains("tenant_admission{"), "metrics: {m}");
+    assert!(m.contains("admitted=1 rejected=1"), "metrics: {m}");
+
+    s.stop();
+}
+
+#[test]
+fn shed_degraded_completion_reports_capped_max_new() {
+    // degrade_threshold 0 puts every best-effort admission in the
+    // degrade band without ever dropping; interactive requests pass
+    // untouched.
+    let s = stack(OverloadConfig {
+        enabled: true,
+        window_capacity: 1000,
+        window_ms: 1000,
+        bucket_capacity: 1e6,
+        bucket_refill_per_s: 1e6,
+        tenant_slots: 16,
+        degrade_threshold: 0.0,
+        drop_threshold: f64::INFINITY,
+        degrade_max_new: 2,
+        interactive_floor: 4,
+    });
+    let addr = s.addr();
+
+    // Best-effort request asked for 8 tokens, was admitted degraded to 2
+    // — and the usage block says so.
+    let resp = http_post(addr, r#"{"prompt": "background batch job", "max_tokens": 8}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "resp: {resp}");
+    assert!(resp.contains("\"max_new\":2"), "degraded budget must be reported: {resp}");
+
+    // Interactive-class admission is never degraded by the shed policy.
+    let resp =
+        http_post(addr, r#"{"prompt": "user chat", "max_tokens": 8, "class": "interactive"}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "resp: {resp}");
+    assert!(resp.contains("\"max_new\":8"), "interactive budget must hold: {resp}");
+
+    let shed = s
+        .frontend
+        .gate()
+        .shed_degraded
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(shed, 1, "exactly the batch admission was degraded");
+
+    s.stop();
+}
+
+fn http_post(addr: std::net::SocketAddr, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}

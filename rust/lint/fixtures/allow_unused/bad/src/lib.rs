@@ -1,0 +1,6 @@
+//! Fixture: clean source — so the stale allowlist entry below matches
+//! nothing and must be reported.
+
+pub fn nothing_to_see() -> u32 {
+    7
+}

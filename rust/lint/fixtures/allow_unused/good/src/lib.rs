@@ -1,0 +1,7 @@
+//! Fixture: one real no_panic violation, suppressed by a scoped,
+//! reasoned allowlist entry.
+
+// lint: no_panic
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().expect("fixture: callers pass non-empty slices")
+}

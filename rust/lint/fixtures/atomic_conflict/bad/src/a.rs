@@ -1,0 +1,8 @@
+//! Fixture (1/2): `epoch` declared as a plain counter here...
+
+use std::sync::atomic::AtomicU64;
+
+pub struct A {
+    // lint: atomic(epoch) counter
+    pub epoch: AtomicU64,
+}

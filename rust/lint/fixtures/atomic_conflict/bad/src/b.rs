@@ -1,0 +1,9 @@
+//! Fixture (2/2): ...and as a release/acquire edge here. Contracts are
+//! keyed tree-wide by field name, so this is a conflict.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct B {
+    // lint: atomic(epoch) publish=Release observe=Acquire
+    pub epoch: AtomicU64,
+}

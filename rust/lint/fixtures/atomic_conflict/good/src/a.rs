@@ -1,0 +1,8 @@
+//! Fixture (1/2): both files agree on what `epoch` means.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct A {
+    // lint: atomic(epoch) counter
+    pub epoch: AtomicU64,
+}

@@ -1,0 +1,9 @@
+//! Fixture (2/2): identical resolved contract — a differently spelled
+//! but equivalent spec would also merge cleanly.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct B {
+    // lint: atomic(epoch) counter
+    pub epoch: AtomicU64,
+}

@@ -1,0 +1,21 @@
+//! Fixture: a store whose ordering is weaker than the contract's
+//! publish list.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Cell {
+    // lint: atomic(seq) publish=Release observe=Acquire rmw=AcqRel
+    pub seq: AtomicU64,
+}
+
+impl Cell {
+    pub fn publish(&self) {
+        self.seq.store(1, Ordering::Relaxed);
+    }
+    pub fn bump(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::AcqRel)
+    }
+    pub fn read(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+}

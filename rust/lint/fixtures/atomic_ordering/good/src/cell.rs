@@ -1,0 +1,20 @@
+//! Fixture: every ordering sits inside the contract's lists.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Cell {
+    // lint: atomic(seq) publish=Release observe=Acquire rmw=AcqRel
+    pub seq: AtomicU64,
+}
+
+impl Cell {
+    pub fn publish(&self) {
+        self.seq.store(1, Ordering::Release);
+    }
+    pub fn bump(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::AcqRel)
+    }
+    pub fn read(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture: an atomic field in a protocol module (`ringbuf/`) with no
+//! contract annotation, plus a use of it.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Slot {
+    pub state: AtomicU32,
+}
+
+impl Slot {
+    pub fn tick(&self) -> u32 {
+        self.state.fetch_add(1, Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture: the same protocol-module atomic, now under contract.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Slot {
+    // lint: atomic(state) counter
+    pub state: AtomicU32,
+}
+
+impl Slot {
+    pub fn tick(&self) -> u32 {
+        self.state.fetch_add(1, Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,18 @@
+//! Fixture: the contract mandates release publishes, but nothing in
+//! the tree ever observes with acquire — the Release is decoration.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Gate {
+    // lint: atomic(ready) publish=Release observe=Acquire|Relaxed
+    pub ready: AtomicU32,
+}
+
+impl Gate {
+    pub fn open(&self) {
+        self.ready.store(1, Ordering::Release);
+    }
+    pub fn peek(&self) -> u32 {
+        self.ready.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,20 @@
+//! Fixture: the release publish has an acquire-side counterpart.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Gate {
+    // lint: atomic(ready) publish=Release observe=Acquire|Relaxed
+    pub ready: AtomicU32,
+}
+
+impl Gate {
+    pub fn open(&self) {
+        self.ready.store(1, Ordering::Release);
+    }
+    pub fn wait_open(&self) -> u32 {
+        self.ready.load(Ordering::Acquire)
+    }
+    pub fn peek(&self) -> u32 {
+        self.ready.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: a typo'd ordering name in the contract spec.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct C {
+    // lint: atomic(seq) publish=Released
+    pub seq: AtomicU64,
+}

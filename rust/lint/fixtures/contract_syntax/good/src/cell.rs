@@ -1,0 +1,8 @@
+//! Fixture: a well-formed contract at its declaration.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct C {
+    // lint: atomic(seq) counter
+    pub seq: AtomicU64,
+}

@@ -1,0 +1,8 @@
+// lint: no_panic
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn g(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,15 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct S {
+    // lint: atomic(epoch) publish=Release observe=Acquire rmw=AcqRel
+    pub epoch: AtomicU64,
+}
+
+impl S {
+    pub fn bump(&self) {
+        self.epoch.store(1, Ordering::SeqCst);
+    }
+    pub fn read(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: allocation in a tagged hot-path region.
+
+// lint: no_alloc
+pub fn bump_all(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    out.extend(xs.iter().map(|x| x + 1));
+    out
+}

@@ -1,0 +1,14 @@
+//! Fixture: the hot path reuses caller-provided capacity instead.
+
+// lint: no_alloc
+pub fn bump_all_into(xs: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(xs.iter().map(|x| x + 1));
+}
+
+/// Untagged helpers may allocate freely.
+pub fn bump_all(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    bump_all_into(xs, &mut out);
+    out
+}

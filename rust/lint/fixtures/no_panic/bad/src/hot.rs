@@ -1,0 +1,6 @@
+//! Fixture: `.unwrap()` in a tagged no_panic region.
+
+// lint: no_panic
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}

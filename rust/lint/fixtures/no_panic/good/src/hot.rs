@@ -1,0 +1,11 @@
+//! Fixture: the hot path degrades instead of panicking; asserts stay
+//! legal (invariant checks are allowed under no_panic).
+
+// lint: no_panic
+pub fn first(xs: &[u32]) -> u32 {
+    debug_assert!(xs.len() < usize::MAX);
+    match xs.first() {
+        Some(x) => *x,
+        None => 0,
+    }
+}

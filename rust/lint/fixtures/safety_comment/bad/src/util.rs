@@ -1,0 +1,5 @@
+//! Fixture: `unsafe` with no SAFETY comment anywhere near it.
+
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+//! Fixture: every `unsafe` carries a SAFETY comment directly above.
+
+pub fn peek(p: *const u8) -> u8 {
+    // SAFETY: callers pass pointers derived from live slices (fixture).
+    unsafe { *p }
+}

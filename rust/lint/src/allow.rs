@@ -1,0 +1,186 @@
+//! The allowlist: `rust/lint/allow.toml`, parsed by hand (a TOML crate
+//! would violate the no-new-dependencies policy, and the format is a
+//! flat array-of-tables with string values only).
+//!
+//! ```toml
+//! [[allow]]
+//! check = "no-panic"
+//! file = "gpu/scheduler.rs"          # path suffix match
+//! line_contains = "decode grid"      # substring of the flagged line
+//! reason = "why this is sound"       # mandatory
+//! ```
+//!
+//! Entries that match nothing are themselves reported (`allow-unused`)
+//! so the list cannot rot as the code moves.
+
+use crate::diag::Violation;
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Default)]
+pub struct AllowEntry {
+    pub line: usize,
+    pub check: Option<String>,
+    pub file: Option<String>,
+    pub line_contains: Option<String>,
+    pub reason: Option<String>,
+    pub used: bool,
+}
+
+impl AllowEntry {
+    fn complete(&self) -> bool {
+        self.check.is_some()
+            && self.file.is_some()
+            && self.line_contains.is_some()
+            && self.reason.is_some()
+    }
+}
+
+pub fn parse_allowlist(path: &Path, out: &mut Vec<Violation>) -> Vec<AllowEntry> {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(_) => return Vec::new(),
+    };
+    let path_str = path.display().to_string();
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            entries.push(AllowEntry { line: lineno, ..AllowEntry::default() });
+            continue;
+        }
+        let parsed = parse_kv(line);
+        match (parsed, entries.last_mut()) {
+            (Some((k, v)), Some(cur)) => {
+                let slot = match k {
+                    "check" => &mut cur.check,
+                    "file" => &mut cur.file,
+                    "line_contains" => &mut cur.line_contains,
+                    "reason" => &mut cur.reason,
+                    _ => continue, // unknown keys tolerated, like the mirror
+                };
+                *slot = Some(v.to_string());
+            }
+            _ => {
+                out.push(Violation::new(
+                    "contract-syntax",
+                    &path_str,
+                    lineno,
+                    format!("unparseable allowlist line: {line:?}"),
+                ));
+            }
+        }
+    }
+    for e in &entries {
+        for (req, val) in [
+            ("check", &e.check),
+            ("file", &e.file),
+            ("line_contains", &e.line_contains),
+            ("reason", &e.reason),
+        ] {
+            if val.is_none() {
+                out.push(Violation::new(
+                    "contract-syntax",
+                    &path_str,
+                    e.line,
+                    format!("allowlist entry missing `{req}`"),
+                ));
+            }
+        }
+    }
+    entries
+}
+
+/// `key = "value"` — value is everything between the first and last
+/// quote; inner quotes pass through verbatim (reasons are prose).
+fn parse_kv(line: &str) -> Option<(&str, &str)> {
+    let (k, v) = line.split_once('=')?;
+    let k = k.trim();
+    if k.is_empty() || !k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+        return None;
+    }
+    let v = v.trim();
+    let v = v.strip_prefix('"')?.strip_suffix('"')?;
+    Some((k, v))
+}
+
+/// Filter `out` through the entries: a violation is suppressed by the
+/// first entry whose `check` matches exactly, whose `file` is a path
+/// suffix of the violation's file, and whose `line_contains` is a
+/// substring of the raw source line the violation points at. Unused
+/// complete entries become `allow-unused` violations.
+pub fn apply_allowlist(
+    entries: &mut [AllowEntry],
+    violations: Vec<Violation>,
+    root: &Path,
+) -> Vec<Violation> {
+    let mut kept = Vec::new();
+    let mut raw_cache: HashMap<String, Vec<String>> = HashMap::new();
+    for v in violations {
+        let mut suppressed = false;
+        for e in entries.iter_mut() {
+            if e.check.as_deref() != Some(v.check) {
+                continue;
+            }
+            let suffix = match e.file.as_deref() {
+                Some(f) => f,
+                None => continue,
+            };
+            if !v.file.ends_with(suffix) {
+                continue;
+            }
+            let needle = match e.line_contains.as_deref() {
+                Some(n) => n,
+                None => continue,
+            };
+            let lines = raw_cache.entry(v.file.clone()).or_insert_with(|| {
+                let cand = root.join(&v.file);
+                let p = if cand.exists() { cand } else { Path::new(&v.file).to_path_buf() };
+                std::fs::read_to_string(p)
+                    .map(|s| s.lines().map(String::from).collect())
+                    .unwrap_or_default()
+            });
+            let src_line = if v.line >= 1 { lines.get(v.line - 1) } else { None };
+            if src_line.map(|l| l.contains(needle)).unwrap_or(false) {
+                e.used = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            kept.push(v);
+        }
+    }
+    for e in entries.iter() {
+        if !e.used && e.complete() {
+            kept.push(Violation::new(
+                "allow-unused",
+                "allow.toml",
+                e.line,
+                format!(
+                    "allowlist entry for `{}` at {} matched nothing",
+                    e.check.as_deref().unwrap_or("?"),
+                    e.file.as_deref().unwrap_or("?")
+                ),
+            ));
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_parsing() {
+        assert_eq!(parse_kv(r#"check = "no-panic""#), Some(("check", "no-panic")));
+        assert_eq!(parse_kv(r#"reason = "a \"quoted\" word""#), Some(("reason", r#"a \"quoted\" word"#)));
+        assert_eq!(parse_kv("check = no-panic"), None);
+        assert_eq!(parse_kv("[[allow]]"), None);
+    }
+}

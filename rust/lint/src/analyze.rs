@@ -1,0 +1,526 @@
+//! Per-file analysis: two passes over the token stream.
+//!
+//! Pass 0 reads comments only — contract annotations, `no_alloc` /
+//! `no_panic` region tags, and `SAFETY:` markers.
+//!
+//! Pass 1 walks the code tokens with a brace stack, tracking struct
+//! bodies (for atomic field declarations), tagged-fn regions (for the
+//! deny-lists), `unsafe` keywords (for SAFETY coverage), and every
+//! atomic-method call that names an `Ordering` (the use sites the
+//! contract checks consume).
+
+use crate::contract::{parse_contract, Contract};
+use crate::diag::Violation;
+use crate::lex::{tokenize, Kind, Tok};
+use std::collections::HashMap;
+
+pub const ATOMIC_METHODS: [&str; 14] = [
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_nand",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+const ATOMIC_TYPES: [&str; 13] = [
+    "AtomicU8",
+    "AtomicU16",
+    "AtomicU32",
+    "AtomicU64",
+    "AtomicUsize",
+    "AtomicI8",
+    "AtomicI16",
+    "AtomicI32",
+    "AtomicI64",
+    "AtomicIsize",
+    "AtomicBool",
+    "AtomicPtr",
+];
+
+/// Modules that host the lock-free protocols (paper §4): every atomic
+/// they declare or touch must carry an explicit contract. Matched as
+/// path fragments under the lint root.
+pub const PROTOCOL_MODULES: [&str; 6] =
+    ["ringbuf/", "gpu/arena.rs", "frontend/overload.rs", "gpu/stats.rs", "rdma/", "devsim/"];
+
+const NO_ALLOC_MACROS: [&str; 6] = ["vec", "format", "println", "eprintln", "print", "eprint"];
+const NO_ALLOC_PATHS: [(&str, &str); 4] =
+    [("Box", "new"), ("Vec", "new"), ("String", "new"), ("String", "from")];
+const NO_ALLOC_METHODS: [&str; 5] = ["to_string", "to_owned", "to_vec", "collect", "lock"];
+const NO_PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+const NO_PANIC_METHODS: [&str; 2] = ["unwrap", "expect"];
+
+/// One recognized atomic operation with explicit orderings.
+#[derive(Clone, Debug)]
+pub struct UseSite {
+    pub file: String,
+    pub line: usize,
+    /// Resolved receiver name, if the walk-back found one. Bare
+    /// lowercase locals resolve but are skipped by the contract lookup
+    /// (documented hole: a local binding shadows nothing we can see
+    /// without type information).
+    pub recv: Option<String>,
+    /// True when the receiver was field-form (`something.name.load`),
+    /// i.e. preceded by a `.`.
+    pub field: bool,
+    pub method: String,
+    /// Ordering idents in argument order (`compare_exchange` has two).
+    pub ords: Vec<String>,
+    pub protocol: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Decl {
+    pub file: String,
+    #[allow(dead_code)]
+    pub line: usize,
+    pub name: String,
+    #[allow(dead_code)]
+    pub protocol: bool,
+}
+
+pub fn is_protocol(rel: &str) -> bool {
+    PROTOCOL_MODULES.iter().any(|p| {
+        rel.starts_with(&format!("src/{p}")) || rel.contains(&format!("/{p}")) || rel.ends_with(p)
+    })
+}
+
+/// A SCREAMING_CASE receiver is a static, not a local — at least one
+/// cased char and no lowercase ones.
+pub fn is_screaming(s: &str) -> bool {
+    s.chars().any(|c| c.is_uppercase()) && !s.chars().any(|c| c.is_lowercase())
+}
+
+struct TagRegion {
+    tags: (bool, bool), // (no_alloc, no_panic)
+    depth: usize,       // brace depth at which the fn body opened
+}
+
+pub struct FileAnalysis {
+    pub contracts: HashMap<String, Contract>,
+    pub uses: Vec<UseSite>,
+    pub decls: Vec<Decl>,
+}
+
+pub fn analyze_file(src: &str, rel: &str, out: &mut Vec<Violation>) -> FileAnalysis {
+    let raw_lines: Vec<&str> = src.split('\n').collect();
+    let toks = tokenize(src);
+    let protocol = is_protocol(rel);
+
+    // --- pass 0: comments → contracts, region tags, SAFETY lines.
+    let mut file_contracts: HashMap<String, Contract> = HashMap::new();
+    let mut tags: Vec<(usize, (bool, bool))> = Vec::new();
+    let mut safety_lines: Vec<usize> = Vec::new();
+    for t in &toks {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim_start_matches('*').trim();
+        if body.starts_with("SAFETY:") {
+            safety_lines.push(t.line);
+            continue;
+        }
+        let directive = match body.strip_prefix("lint:") {
+            Some(d) => d.trim(),
+            None => continue,
+        };
+        if directive.starts_with("atomic(") {
+            let c = match parse_contract(directive, rel, t.line, out) {
+                Some(c) => c,
+                None => continue,
+            };
+            if let Some(prev) = file_contracts.get(&c.name) {
+                if !prev.same_resolved(&c) {
+                    out.push(Violation::new(
+                        "atomic-conflict",
+                        rel,
+                        t.line,
+                        format!(
+                            "contract for atomic({}) conflicts with {}:{}",
+                            c.name, prev.file, prev.line
+                        ),
+                    ));
+                }
+                continue;
+            }
+            file_contracts.insert(c.name.clone(), c);
+        } else {
+            let words: Vec<&str> =
+                directive.split('#').next().unwrap_or("").split_whitespace().collect();
+            if !words.is_empty() && words.iter().all(|w| *w == "no_alloc" || *w == "no_panic") {
+                tags.push((
+                    t.line,
+                    (words.contains(&"no_alloc"), words.contains(&"no_panic")),
+                ));
+            } else {
+                out.push(Violation::new(
+                    "contract-syntax",
+                    rel,
+                    t.line,
+                    format!("unknown lint directive: {directive:?}"),
+                ));
+            }
+        }
+    }
+    tags.sort_by_key(|(l, _)| *l);
+
+    // --- pass 1: code tokens (comments removed; strings kept as spacers).
+    let code: Vec<&Tok> = toks.iter().filter(|t| t.kind != Kind::Comment).collect();
+    let blank = Tok { kind: Kind::Punct, text: String::new(), line: 0 };
+
+    let mut stack: Vec<bool> = Vec::new(); // true = struct body
+    let mut pending_struct = false;
+    let mut tag_idx = 0usize;
+    let mut pending_tag: Option<(bool, bool)> = None;
+    let mut pending_fn = false;
+    let mut region_stack: Vec<TagRegion> = Vec::new();
+
+    let mut uses: Vec<UseSite> = Vec::new();
+    let mut decls: Vec<Decl> = Vec::new();
+
+    for (idx, tok) in code.iter().enumerate() {
+        let (kind, text, line) = (tok.kind, tok.text.as_str(), tok.line);
+
+        // A tag annotates the next `fn` after its comment line.
+        while tag_idx < tags.len() && tags[tag_idx].0 < line {
+            pending_tag = Some(tags[tag_idx].1);
+            pending_fn = false;
+            tag_idx += 1;
+        }
+        if kind == Kind::Ident && text == "fn" && pending_tag.is_some() {
+            pending_fn = true;
+        }
+        if kind == Kind::Ident && text == "struct" {
+            pending_struct = true;
+        }
+        if kind == Kind::Punct && text == ";" && pending_struct {
+            pending_struct = false; // unit/tuple struct
+        }
+        if kind == Kind::Punct && text == "{" {
+            if pending_fn {
+                region_stack
+                    .push(TagRegion { tags: pending_tag.take().unwrap(), depth: stack.len() });
+                pending_fn = false;
+            }
+            stack.push(pending_struct);
+            pending_struct = false;
+            continue;
+        }
+        if kind == Kind::Punct && text == "}" {
+            if !stack.is_empty() {
+                stack.pop();
+                if region_stack.last().map(|r| r.depth == stack.len()).unwrap_or(false) {
+                    region_stack.pop();
+                }
+            }
+            continue;
+        }
+
+        let mut no_alloc = false;
+        let mut no_panic = false;
+        for r in &region_stack {
+            no_alloc |= r.tags.0;
+            no_panic |= r.tags.1;
+        }
+
+        // SAFETY coverage: an `unsafe` keyword is covered by a SAFETY:
+        // comment on the same line or in the contiguous run of
+        // comment/attribute/blank lines directly above.
+        if kind == Kind::Ident && text == "unsafe" {
+            let mut ok = safety_lines.contains(&line);
+            let mut ln = line.saturating_sub(1);
+            while !ok && ln >= 1 {
+                let raw = raw_lines.get(ln - 1).map(|s| s.trim()).unwrap_or("");
+                if raw.starts_with("//")
+                    || raw.starts_with("#[")
+                    || raw.starts_with('*')
+                    || raw.starts_with("/*")
+                    || raw.is_empty()
+                {
+                    if safety_lines.contains(&ln) || raw.contains("SAFETY:") {
+                        ok = true;
+                    }
+                    ln -= 1;
+                } else {
+                    break;
+                }
+            }
+            if !ok {
+                out.push(Violation::new(
+                    "safety-comment",
+                    rel,
+                    line,
+                    "`unsafe` without a `// SAFETY:` comment directly above".to_string(),
+                ));
+            }
+        }
+
+        // Deny-lists inside tagged regions.
+        if no_alloc || no_panic {
+            let nxt = code.get(idx + 1).copied().unwrap_or(&blank);
+            let nx2 = code.get(idx + 2).copied().unwrap_or(&blank);
+            let prev = if idx > 0 { code[idx - 1] } else { &blank };
+            if no_alloc && kind == Kind::Ident {
+                if NO_ALLOC_MACROS.contains(&text) && nxt.text == "!" {
+                    out.push(Violation::new(
+                        "no-alloc",
+                        rel,
+                        line,
+                        format!("`{text}!` in a no_alloc region"),
+                    ));
+                }
+                if nxt.text == ":" && nx2.text == ":" {
+                    if let Some(seg) = code.get(idx + 3) {
+                        if NO_ALLOC_PATHS.contains(&(text, seg.text.as_str())) {
+                            out.push(Violation::new(
+                                "no-alloc",
+                                rel,
+                                line,
+                                format!("`{}::{}` in a no_alloc region", text, seg.text),
+                            ));
+                        }
+                    }
+                }
+                if NO_ALLOC_METHODS.contains(&text) && prev.text == "." && nxt.text == "(" {
+                    out.push(Violation::new(
+                        "no-alloc",
+                        rel,
+                        line,
+                        format!("`.{text}()` in a no_alloc region"),
+                    ));
+                }
+            }
+            if no_panic && kind == Kind::Ident {
+                if NO_PANIC_MACROS.contains(&text) && nxt.text == "!" {
+                    out.push(Violation::new(
+                        "no-panic",
+                        rel,
+                        line,
+                        format!("`{text}!` in a no_panic region"),
+                    ));
+                }
+                if NO_PANIC_METHODS.contains(&text) && prev.text == "." && nxt.text == "(" {
+                    out.push(Violation::new(
+                        "no-panic",
+                        rel,
+                        line,
+                        format!("`.{text}()` in a no_panic region"),
+                    ));
+                }
+            }
+        }
+
+        // Atomic field declarations inside struct bodies.
+        if stack.last().copied().unwrap_or(false)
+            && kind == Kind::Ident
+            && code.get(idx + 1).map(|t| t.text == ":").unwrap_or(false)
+        {
+            let mut j = idx + 2;
+            let mut depth = 0i32;
+            let mut has_atomic = false;
+            while j < code.len() {
+                let t2 = code[j].text.as_str();
+                if code[j].kind == Kind::Punct && matches!(t2, "(" | "[" | "{" | "<") {
+                    depth += 1;
+                } else if code[j].kind == Kind::Punct && matches!(t2, ")" | "]" | "}" | ">") {
+                    if t2 == "}" && depth == 0 {
+                        break;
+                    }
+                    depth -= 1;
+                } else if code[j].kind == Kind::Punct && t2 == "," && depth <= 0 {
+                    break;
+                } else if code[j].kind == Kind::Ident && ATOMIC_TYPES.contains(&t2) {
+                    has_atomic = true;
+                }
+                j += 1;
+            }
+            if has_atomic {
+                decls.push(Decl { file: rel.to_string(), line, name: text.to_string(), protocol });
+                if protocol && !file_contracts.contains_key(text) {
+                    out.push(Violation::new(
+                        "atomic-undeclared",
+                        rel,
+                        line,
+                        format!(
+                            "atomic field `{text}` in protocol module has no \
+                             `// lint: atomic({text}) ...` contract"
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // Static atomics.
+        if kind == Kind::Ident && text == "static" {
+            let mut j = idx + 1;
+            if code.get(j).map(|t| t.text == "mut").unwrap_or(false) {
+                j += 1;
+            }
+            let named = code.get(j).map(|t| t.kind == Kind::Ident).unwrap_or(false)
+                && code.get(j + 1).map(|t| t.text == ":").unwrap_or(false);
+            if named {
+                let name_tok = code[j];
+                let mut k = j + 2;
+                let mut has_atomic = false;
+                while k < code.len() && code[k].text != "=" && code[k].text != ";" {
+                    if code[k].kind == Kind::Ident && ATOMIC_TYPES.contains(&code[k].text.as_str())
+                    {
+                        has_atomic = true;
+                    }
+                    k += 1;
+                }
+                if has_atomic {
+                    decls.push(Decl {
+                        file: rel.to_string(),
+                        line: name_tok.line,
+                        name: name_tok.text.clone(),
+                        protocol,
+                    });
+                    if protocol && !file_contracts.contains_key(&name_tok.text) {
+                        out.push(Violation::new(
+                            "atomic-undeclared",
+                            rel,
+                            name_tok.line,
+                            format!(
+                                "atomic static `{}` in protocol module has no contract",
+                                name_tok.text
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // Atomic use sites: RECV `.` METHOD `(` ... Ordering::X ... `)`.
+        // Only calls that name at least one `Ordering` count — this is
+        // what separates `slot.load(...)` on an atomic from `Vec::load`
+        // lookalikes and `cmp::Ordering` matches.
+        if kind == Kind::Ident
+            && ATOMIC_METHODS.contains(&text)
+            && idx >= 2
+            && code[idx - 1].text == "."
+            && code.get(idx + 1).map(|t| t.text == "(").unwrap_or(false)
+        {
+            let r = idx - 2;
+            let mut recv: Option<String> = None;
+            let mut field = false;
+            if code[r].kind == Kind::Ident {
+                recv = Some(code[r].text.clone());
+                field = r >= 1 && code[r - 1].text == ".";
+            } else if code[r].text == ")" || code[r].text == "]" {
+                let close = code[r].text.clone();
+                let opener = if close == ")" { "(" } else { "[" };
+                let mut depth = 0i32;
+                let mut k = r as isize;
+                while k >= 0 {
+                    let t = code[k as usize].text.as_str();
+                    if t == close {
+                        depth += 1;
+                    } else if t == opener {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k -= 1;
+                }
+                if k >= 1 && code[(k - 1) as usize].kind == Kind::Ident {
+                    recv = Some(code[(k - 1) as usize].text.clone());
+                    field = k >= 2 && code[(k - 2) as usize].text == ".";
+                }
+            }
+            // Collect `Ordering::X` idents inside the call parens.
+            let mut j = idx + 1;
+            let mut depth = 0i32;
+            let mut ords: Vec<String> = Vec::new();
+            while j < code.len() {
+                let t2 = code[j].text.as_str();
+                if t2 == "(" {
+                    depth += 1;
+                } else if t2 == ")" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if code[j].kind == Kind::Ident
+                    && t2 == "Ordering"
+                    && code.get(j + 1).map(|t| t.text == ":").unwrap_or(false)
+                    && code.get(j + 2).map(|t| t.text == ":").unwrap_or(false)
+                    && code.get(j + 3).map(|t| t.kind == Kind::Ident).unwrap_or(false)
+                {
+                    ords.push(code[j + 3].text.clone());
+                }
+                j += 1;
+            }
+            if !ords.is_empty() {
+                uses.push(UseSite {
+                    file: rel.to_string(),
+                    line,
+                    recv,
+                    field,
+                    method: text.to_string(),
+                    ords,
+                    protocol,
+                });
+            }
+        }
+    }
+
+    // Orphan contracts: every contract must sit with a declaration of
+    // that name in the same file (annotations live at the decl site).
+    let mut names: Vec<&Contract> = file_contracts.values().collect();
+    names.sort_by_key(|c| c.line);
+    for c in names {
+        if !decls.iter().any(|d| d.name == c.name) {
+            out.push(Violation::new(
+                "contract-syntax",
+                rel,
+                c.line,
+                format!("contract for atomic({}) matches no atomic declaration in this file", c.name),
+            ));
+        }
+    }
+
+    FileAnalysis { contracts: file_contracts, uses, decls }
+}
+
+/// Merge a file's contracts into the global registry, reporting
+/// resolved-set conflicts (contracts are keyed tree-wide by field name,
+/// so two modules naming a field `epoch` must mean the same protocol).
+pub fn merge_contracts(
+    global: &mut HashMap<String, Contract>,
+    file: HashMap<String, Contract>,
+    rel: &str,
+    out: &mut Vec<Violation>,
+) {
+    let mut entries: Vec<(String, Contract)> = file.into_iter().collect();
+    entries.sort_by_key(|(_, c)| c.line);
+    for (name, c) in entries {
+        match global.get(&name) {
+            Some(prev) if !prev.same_resolved(&c) => {
+                out.push(Violation::new(
+                    "atomic-conflict",
+                    rel,
+                    c.line,
+                    format!(
+                        "contract for atomic({}) conflicts with {}:{} (`{}` vs `{}`)",
+                        name, prev.file, prev.line, c.spec, prev.spec
+                    ),
+                ));
+            }
+            Some(_) => {}
+            None => {
+                global.insert(name, c);
+            }
+        }
+    }
+}

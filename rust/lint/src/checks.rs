@@ -1,0 +1,165 @@
+//! Tree-wide checks that run after every file is analyzed: use-site
+//! ordering conformance against the contracts, undeclared-atomic
+//! detection in protocol modules, and the publish/observe pairing
+//! cross-check.
+
+use crate::analyze::{is_screaming, UseSite};
+use crate::contract::{acquire_class, release_class, Contract, OrdSet};
+use crate::diag::Violation;
+use std::collections::HashMap;
+
+/// Which contract list governs each ordering argument:
+/// * `load` → observe
+/// * `store` → publish
+/// * `fetch_*` / `swap` → rmw
+/// * `compare_exchange[_weak]` / `fetch_update` → rmw (success) and
+///   observe (failure — a failed CAS is just a load).
+pub fn check_uses(
+    contracts: &HashMap<String, Contract>,
+    uses: &[UseSite],
+    out: &mut Vec<Violation>,
+) {
+    for u in uses {
+        let c = u.recv.as_ref().and_then(|r| contracts.get(r));
+        let c = match c {
+            Some(c) => c,
+            None => {
+                // No governing contract. Field-form receivers and
+                // SCREAMING statics inside protocol modules must be
+                // declared; bare lowercase locals are skipped (no type
+                // info without a real frontend).
+                let screaming = u.recv.as_deref().map(is_screaming).unwrap_or(false);
+                if u.protocol && (u.field || screaming) {
+                    out.push(Violation::new(
+                        "atomic-undeclared",
+                        &u.file,
+                        u.line,
+                        format!(
+                            "use of undeclared atomic `{}` ({}) in protocol module",
+                            u.recv.as_deref().unwrap_or("?"),
+                            u.method
+                        ),
+                    ));
+                }
+                continue;
+            }
+        };
+        let recv = u.recv.as_deref().unwrap_or("?");
+        let bad = |which: &str, ord: &str, allowed: OrdSet, out: &mut Vec<Violation>| {
+            out.push(
+                Violation::new(
+                    "atomic-ordering",
+                    &u.file,
+                    u.line,
+                    format!(
+                        "`{recv}.{}` uses Ordering::{ord} but the contract allows {which}={allowed}",
+                        u.method
+                    ),
+                )
+                .with_contract(c.display()),
+            );
+        };
+        let o = &u.ords;
+        match u.method.as_str() {
+            "load" => {
+                if !c.observe.contains(&o[0]) {
+                    bad("observe", &o[0], c.observe, out);
+                }
+            }
+            "store" => {
+                if !c.publish.contains(&o[0]) {
+                    bad("publish", &o[0], c.publish, out);
+                }
+            }
+            "compare_exchange" | "compare_exchange_weak" | "fetch_update" => {
+                if !c.rmw.contains(&o[0]) {
+                    bad("rmw", &o[0], c.rmw, out);
+                }
+                if o.len() > 1 && !c.observe.contains(&o[1]) {
+                    bad("observe", &o[1], c.observe, out);
+                }
+            }
+            _ => {
+                if !c.rmw.contains(&o[0]) {
+                    bad("rmw", &o[0], c.rmw, out);
+                }
+            }
+        }
+    }
+}
+
+/// Pairing cross-check: a contract that *mandates* release publishes
+/// (publish set nonempty and wholly within {Release, AcqRel, SeqCst})
+/// with actual writers in the tree must have at least one acquire-side
+/// observer somewhere — otherwise the Release is decoration and the
+/// contract is lying about the protocol. Symmetrically for mandated
+/// acquire observes with actual readers. `flag` contracts opt out:
+/// their whole point is that Relaxed is also legal on both sides.
+pub fn crosscheck(
+    contracts: &HashMap<String, Contract>,
+    uses: &[UseSite],
+    out: &mut Vec<Violation>,
+) {
+    let mut by_name: HashMap<&str, Vec<&UseSite>> = HashMap::new();
+    for u in uses {
+        if let Some(r) = u.recv.as_deref() {
+            by_name.entry(r).or_default().push(u);
+        }
+    }
+    let mut names: Vec<&String> = contracts.keys().collect();
+    names.sort();
+    for name in names {
+        let c = &contracts[name];
+        if !c.crosscheck {
+            continue;
+        }
+        let us = by_name.get(name.as_str()).map(|v| v.as_slice()).unwrap_or(&[]);
+        let has_writes = us.iter().any(|u| u.method != "load");
+        let has_reads = us.iter().any(|u| u.method != "store");
+        if !c.publish.is_empty() && c.publish.is_subset(release_class()) && has_writes {
+            let observed = us.iter().any(|u| {
+                let m = u.method.as_str();
+                (m == "load" && acquire_class().contains(&u.ords[0]))
+                    || (m != "load" && m != "store" && acquire_class().contains(&u.ords[0]))
+                    || (matches!(m, "compare_exchange" | "compare_exchange_weak" | "fetch_update")
+                        && u.ords.len() > 1
+                        && acquire_class().contains(&u.ords[1]))
+            });
+            if !observed {
+                out.push(
+                    Violation::new(
+                        "atomic-unpaired",
+                        &c.file,
+                        c.line,
+                        format!(
+                            "atomic({name}) mandates release publishes but no acquire-side \
+                             observer exists in the tree"
+                        ),
+                    )
+                    .with_contract(c.display()),
+                );
+            }
+        }
+        if !c.observe.is_empty() && c.observe.is_subset(acquire_class()) && has_reads {
+            let published = us.iter().any(|u| {
+                let m = u.method.as_str();
+                (m == "store" && release_class().contains(&u.ords[0]))
+                    || (m != "load" && m != "store" && release_class().contains(&u.ords[0]))
+            });
+            if !published {
+                out.push(
+                    Violation::new(
+                        "atomic-unpaired",
+                        &c.file,
+                        c.line,
+                        format!(
+                            "atomic({name}) mandates acquire observes but no release-side \
+                             publisher exists in the tree"
+                        ),
+                    )
+                    .with_contract(c.display()),
+                );
+            }
+        }
+    }
+}

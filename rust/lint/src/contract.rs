@@ -1,0 +1,312 @@
+//! The contract annotation grammar (DESIGN.md §10):
+//!
+//! ```text
+//! // lint: atomic(NAME) SPEC [# prose]
+//! SPEC  := counter | plane | flag | KV+
+//! KV    := publish=LIST | observe=LIST | rmw=LIST
+//! LIST  := ORD("|"ORD)*      ORD := Relaxed|Acquire|Release|AcqRel|SeqCst
+//! ```
+//!
+//! `publish` governs `store` orderings, `observe` governs `load` (and
+//! the failure ordering of compare-exchange / fetch_update), `rmw`
+//! governs read-modify-write success orderings. The shorthands encode
+//! the three recurring protocol roles:
+//!
+//! * `counter` — statistics only, every op Relaxed; never used to
+//!   order other memory.
+//! * `plane` — a data-plane cell (Relaxed load/store only) whose
+//!   visibility is guaranteed by a *different* field's release edge.
+//! * `flag` — a shutdown/drain bit: Release publish and Acquire
+//!   observe permitted but Relaxed also legal (spin loops that only
+//!   need eventual visibility). Exempt from pairing cross-checks.
+
+use crate::diag::Violation;
+use std::fmt;
+
+pub const ORDERINGS: [&str; 5] = ["AcqRel", "Acquire", "Relaxed", "Release", "SeqCst"];
+
+/// Set of memory orderings, packed; display is alphabetical to match
+/// the report format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct OrdSet(u8);
+
+impl OrdSet {
+    pub const EMPTY: OrdSet = OrdSet(0);
+
+    pub fn bit(name: &str) -> Option<u8> {
+        ORDERINGS.iter().position(|o| *o == name).map(|i| 1 << i)
+    }
+
+    pub fn of(names: &[&str]) -> OrdSet {
+        let mut s = OrdSet(0);
+        for n in names {
+            s.0 |= OrdSet::bit(n).expect("known ordering");
+        }
+        s
+    }
+
+    pub fn insert(&mut self, name: &str) -> bool {
+        match OrdSet::bit(name) {
+            Some(b) => {
+                self.0 |= b;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        OrdSet::bit(name).map(|b| self.0 & b != 0).unwrap_or(false)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn is_subset(&self, other: OrdSet) -> bool {
+        self.0 & !other.0 == 0
+    }
+}
+
+impl fmt::Display for OrdSet {
+    /// `Acquire|SeqCst`, alphabetical; `(none)` for the empty set.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            return write!(f, "(none)");
+        }
+        let mut first = true;
+        for (i, name) in ORDERINGS.iter().enumerate() {
+            if self.0 & (1 << i) != 0 {
+                if !first {
+                    write!(f, "|")?;
+                }
+                write!(f, "{name}")?;
+                first = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stores must synchronize-with something to be a release edge.
+pub fn release_class() -> OrdSet {
+    OrdSet::of(&["Release", "AcqRel", "SeqCst"])
+}
+
+/// Loads that complete a synchronizes-with edge.
+pub fn acquire_class() -> OrdSet {
+    OrdSet::of(&["Acquire", "AcqRel", "SeqCst"])
+}
+
+#[derive(Clone, Debug)]
+pub struct Contract {
+    pub name: String,
+    /// Original spec text (after the name, before any `#` prose) — kept
+    /// verbatim for diagnostics.
+    pub spec: String,
+    pub publish: OrdSet,
+    pub observe: OrdSet,
+    pub rmw: OrdSet,
+    /// Whether this contract participates in the release/acquire
+    /// pairing cross-check (`flag` opts out).
+    pub crosscheck: bool,
+    pub file: String,
+    pub line: usize,
+}
+
+impl Contract {
+    /// Two contracts for the same name are compatible iff their
+    /// *resolved* sets match — `publish=Relaxed observe=Relaxed` and a
+    /// differently-ordered spelling of the same sets merge cleanly.
+    pub fn same_resolved(&self, other: &Contract) -> bool {
+        self.publish == other.publish
+            && self.observe == other.observe
+            && self.rmw == other.rmw
+            && self.crosscheck == other.crosscheck
+    }
+
+    pub fn display(&self) -> String {
+        format!("atomic({}) {}", self.name, self.spec)
+    }
+}
+
+fn shorthand(spec: &str) -> Option<(OrdSet, OrdSet, OrdSet, bool)> {
+    match spec {
+        "counter" => {
+            let r = OrdSet::of(&["Relaxed"]);
+            Some((r, r, r, true))
+        }
+        "plane" => {
+            let r = OrdSet::of(&["Relaxed"]);
+            Some((r, r, OrdSet::EMPTY, true))
+        }
+        "flag" => Some((
+            OrdSet::of(&["Relaxed", "Release"]),
+            OrdSet::of(&["Relaxed", "Acquire"]),
+            OrdSet::EMPTY,
+            false,
+        )),
+        _ => None,
+    }
+}
+
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse the directive body after `lint: ` when it starts with
+/// `atomic(`. Returns `None` (with a `contract-syntax` violation
+/// pushed) on any malformation — a half-parsed contract must never
+/// silently weaken enforcement.
+pub fn parse_contract(
+    directive: &str,
+    file: &str,
+    line: usize,
+    out: &mut Vec<Violation>,
+) -> Option<Contract> {
+    let bad = |out: &mut Vec<Violation>, msg: String| {
+        out.push(Violation::new("contract-syntax", file, line, msg));
+    };
+    let rest = match directive.strip_prefix("atomic(") {
+        Some(r) => r,
+        None => {
+            bad(out, format!("unparseable atomic contract: {directive:?}"));
+            return None;
+        }
+    };
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => {
+            bad(out, format!("unparseable atomic contract: {directive:?}"));
+            return None;
+        }
+    };
+    let name = &rest[..close];
+    if !is_ident(name) {
+        bad(out, format!("unparseable atomic contract: {directive:?}"));
+        return None;
+    }
+    // Strip trailing `# prose`.
+    let spec_full = rest[close + 1..].trim();
+    let spec = spec_full.split('#').next().unwrap_or("").trim().to_string();
+
+    if let Some((publish, observe, rmw, crosscheck)) = shorthand(&spec) {
+        return Some(Contract {
+            name: name.to_string(),
+            spec,
+            publish,
+            observe,
+            rmw,
+            crosscheck,
+            file: file.to_string(),
+            line,
+        });
+    }
+    if spec.is_empty() {
+        bad(out, format!("empty contract for atomic({name})"));
+        return None;
+    }
+    let mut c = Contract {
+        name: name.to_string(),
+        spec: spec.clone(),
+        publish: OrdSet::EMPTY,
+        observe: OrdSet::EMPTY,
+        rmw: OrdSet::EMPTY,
+        crosscheck: true,
+        file: file.to_string(),
+        line,
+    };
+    for kv in spec.split_whitespace() {
+        let (k, v) = match kv.split_once('=') {
+            Some(p) => p,
+            None => {
+                bad(out, format!("bad contract token {kv:?} for atomic({name})"));
+                return None;
+            }
+        };
+        let set = match k {
+            "publish" => &mut c.publish,
+            "observe" => &mut c.observe,
+            "rmw" => &mut c.rmw,
+            _ => {
+                bad(out, format!("unknown contract key {k:?} for atomic({name})"));
+                return None;
+            }
+        };
+        if v.is_empty() || !v.split('|').all(|o| set.insert(o)) {
+            bad(out, format!("bad ordering list {v:?} for atomic({name})"));
+            return None;
+        }
+    }
+    Some(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(d: &str) -> Contract {
+        let mut out = vec![];
+        let c = parse_contract(d, "f.rs", 1, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        c.unwrap()
+    }
+
+    #[test]
+    fn shorthands_resolve() {
+        let c = parse_ok("atomic(hits) counter");
+        assert_eq!(c.publish, OrdSet::of(&["Relaxed"]));
+        assert_eq!(c.rmw, OrdSet::of(&["Relaxed"]));
+        assert!(c.crosscheck);
+        let f = parse_ok("atomic(stop) flag");
+        assert!(!f.crosscheck);
+        assert!(f.publish.contains("Release") && f.publish.contains("Relaxed"));
+        let p = parse_ok("atomic(row) plane");
+        assert!(p.rmw.is_empty());
+    }
+
+    #[test]
+    fn explicit_lists_and_prose() {
+        let c = parse_ok("atomic(state) publish=Release observe=Acquire|Relaxed rmw=AcqRel # x");
+        assert_eq!(c.publish, OrdSet::of(&["Release"]));
+        assert_eq!(c.observe, OrdSet::of(&["Acquire", "Relaxed"]));
+        assert_eq!(c.rmw, OrdSet::of(&["AcqRel"]));
+        assert_eq!(c.spec, "publish=Release observe=Acquire|Relaxed rmw=AcqRel");
+    }
+
+    #[test]
+    fn resolved_equality_ignores_spelling() {
+        let a = parse_ok("atomic(x) publish=Relaxed observe=Relaxed rmw=Relaxed");
+        let b = parse_ok("atomic(x) counter");
+        assert!(a.same_resolved(&b));
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "atomic(x)",
+            "atomic(x) bogus",
+            "atomic(x) publish=Released",
+            "atomic(x) lock=Relaxed",
+            "atomic(x) publish=",
+            "atomic(2x) counter",
+            "atomic(x counter",
+        ] {
+            let mut out = vec![];
+            assert!(parse_contract(bad, "f.rs", 1, &mut out).is_none(), "{bad}");
+            assert_eq!(out.len(), 1, "{bad}");
+            assert_eq!(out[0].check, "contract-syntax");
+        }
+    }
+
+    #[test]
+    fn ordset_display_sorted() {
+        assert_eq!(OrdSet::of(&["SeqCst", "Acquire"]).to_string(), "Acquire|SeqCst");
+        assert_eq!(OrdSet::EMPTY.to_string(), "(none)");
+    }
+}

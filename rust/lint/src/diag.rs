@@ -1,0 +1,125 @@
+//! Diagnostics: the violation record, deterministic ordering, and the
+//! two output formats (human one-liners and the versioned JSON report
+//! the CI job uploads).
+
+use crate::Report;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Stable check id: one of `atomic-undeclared`, `atomic-ordering`,
+    /// `atomic-unpaired`, `atomic-conflict`, `contract-syntax`,
+    /// `no-alloc`, `no-panic`, `safety-comment`, `allow-unused`.
+    pub check: &'static str,
+    /// Path relative to the lint root (e.g. `src/ringbuf/slot.rs`).
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// The governing contract (`atomic(name) spec`), when one applies.
+    pub contract: Option<String>,
+}
+
+impl Violation {
+    pub fn new(check: &'static str, file: &str, line: usize, message: String) -> Violation {
+        Violation { check, file: file.to_string(), line, message, contract: None }
+    }
+
+    pub fn with_contract(mut self, contract: String) -> Violation {
+        self.contract = Some(contract);
+        self
+    }
+
+    /// Sort key — reports are deterministic regardless of analysis order.
+    pub fn key(&self) -> (String, usize, &'static str, String) {
+        (self.file.clone(), self.line, self.check, self.message.clone())
+    }
+}
+
+/// Human format, one line per violation plus a summary tail.
+pub fn render_human(report: &Report) -> String {
+    let mut out = String::new();
+    for v in &report.violations {
+        out.push_str(&format!("{}:{}: [{}] {}", v.file, v.line, v.check, v.message));
+        if let Some(c) = &v.contract {
+            out.push_str(&format!("  [{c}]"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{} violation(s), {} contract(s), {} checked use site(s), {} atomic decl(s)\n",
+        report.violations.len(),
+        report.contracts,
+        report.uses,
+        report.decls
+    ));
+    out
+}
+
+/// Versioned machine format. Single line, stable field order, sorted
+/// violations — byte-for-byte reproducible so it can be diffed across
+/// CI runs and pinned by the golden test.
+pub fn render_json(report: &Report) -> String {
+    let mut out = String::from("{\"version\":1,\"violations\":[");
+    for (i, v) in report.violations.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"check\":{},\"file\":{},\"line\":{},\"message\":{}",
+            json_str(v.check),
+            json_str(&v.file),
+            v.line,
+            json_str(&v.message)
+        ));
+        if let Some(c) = &v.contract {
+            out.push_str(&format!(",\"contract\":{}", json_str(c)));
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), r#""a\"b\\c\nd""#);
+        assert_eq!(json_str("`unsafe`"), "\"`unsafe`\"");
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = Report {
+            violations: vec![Violation::new("no-alloc", "src/x.rs", 3, "`vec!` bad".into())
+                .with_contract("atomic(x) counter".into())],
+            contracts: 1,
+            uses: 2,
+            decls: 3,
+        };
+        assert_eq!(
+            render_json(&report),
+            "{\"version\":1,\"violations\":[{\"check\":\"no-alloc\",\"file\":\"src/x.rs\",\
+             \"line\":3,\"message\":\"`vec!` bad\",\"contract\":\"atomic(x) counter\"}]}"
+        );
+    }
+}

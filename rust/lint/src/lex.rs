@@ -1,0 +1,235 @@
+//! A deliberately small Rust lexer — just enough token structure for the
+//! protocol checks. It understands exactly the constructs that would
+//! otherwise confuse a text scan: line/block comments (kept, because the
+//! contract annotations live in them), string/char literals (blanked,
+//! so `"Vec::new"` inside a message never trips a deny-list), raw
+//! strings with `#` fences, and lifetimes (dropped, so `'a` is not a
+//! char literal). Everything else degrades to single-character `Punct`
+//! tokens; the analyses that need grouping re-match delimiters
+//! themselves.
+
+/// Token classes. `Str` tokens keep their position but drop their text —
+/// they act as opaque spacers so neighbor-pattern matches (`.` `load`
+/// `(`) can never be satisfied by literal contents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Punct,
+    Str,
+    Comment,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Lines are 1-based. Comments are yielded with their
+/// full text (including the `//` / `/*` sigils) so the annotation pass
+/// can strip them itself.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let at = |i: usize, a: char, b: char| -> bool { i + 1 < n && s[i] == a && s[i + 1] == b };
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if at(i, '/', '/') {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Comment, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if at(i, '/', '*') {
+            let mut j = i + 2;
+            while j < n && !at(j, '*', '/') {
+                j += 1;
+            }
+            let j = if j < n { j + 2 } else { n };
+            let text: String = s[i..j].iter().collect();
+            toks.push(Tok { kind: Kind::Comment, text: text.clone(), line });
+            line += text.matches('\n').count();
+            i = j;
+            continue;
+        }
+        // Raw string: r"..." or r#..#"..."#..# (any fence width).
+        if c == 'r' && i + 1 < n && (s[i + 1] == '"' || s[i + 1] == '#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == '"' {
+                // Find the closing `"###...` fence.
+                let mut k = j + 1;
+                let end;
+                loop {
+                    if k >= n {
+                        end = n;
+                        break;
+                    }
+                    if s[k] == '"' {
+                        let mut h = 0usize;
+                        while k + 1 + h < n && s[k + 1 + h] == '#' && h < hashes {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            end = k + 1 + hashes;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                line += s[i..end].iter().filter(|c| **c == '\n').count();
+                toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+                i = end;
+                continue;
+            }
+            // `r` followed by `#` but no quote: fall through as ident.
+        }
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if s[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            line += s[i..j].iter().filter(|c| **c == '\n').count();
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // Char literal vs lifetime.
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+                i = if j < n { j + 1 } else { n };
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == '\'' {
+                toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            i += 1; // lifetime tick — the name lexes as a plain ident
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(s[j]) || s[j] == '.') {
+                // Stop before `..` so ranges like `0..len` keep their dots.
+                if s[j] == '.' && j + 1 < n && s[j + 1] == '.' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Num, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<(Kind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        let t = texts(r#"let x = "Vec::new()"; y.load(o)"#);
+        assert!(t.iter().any(|(k, _)| *k == Kind::Str));
+        assert!(!t.iter().any(|(_, s)| s.contains("Vec")));
+        assert!(t.iter().any(|(_, s)| s == "load"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let t = texts("fn f<'a>(x: &'a str) -> &'a str { x }");
+        // The lifetime name lexes as a bare ident, not a string.
+        assert!(t.iter().filter(|(_, s)| s == "a").count() >= 3);
+        assert!(!t.iter().any(|(k, _)| *k == Kind::Str));
+    }
+
+    #[test]
+    fn char_literals_and_escapes() {
+        let t = texts(r"let c = '\n'; let d = 'x';");
+        assert_eq!(t.iter().filter(|(k, _)| *k == Kind::Str).count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let t = texts(r###"let s = r#"a "quoted" b"#; z.store(1, o)"###);
+        assert!(t.iter().any(|(_, s)| s == "store"));
+        assert!(!t.iter().any(|(_, s)| s == "quoted"));
+    }
+
+    #[test]
+    fn comments_keep_text_and_lines() {
+        let t = tokenize("// lint: atomic(x) counter\nlet y = 1;\n/* block */ z");
+        assert_eq!(t[0].kind, Kind::Comment);
+        assert!(t[0].text.contains("atomic(x)"));
+        assert_eq!(t[0].line, 1);
+        let z = t.iter().find(|t| t.text == "z").unwrap();
+        assert_eq!(z.line, 3);
+    }
+
+    #[test]
+    fn range_dots_stay_punct() {
+        let t = texts("for i in 0..n {}");
+        assert!(t.iter().any(|(_, s)| s == "0"));
+        assert_eq!(t.iter().filter(|(_, s)| s == ".").count(), 2);
+    }
+}

@@ -1,0 +1,113 @@
+//! blink-lint — the repo-native static analysis pass that enforces the
+//! lock-free protocol contracts (DESIGN.md §10 "Static invariants").
+//!
+//! The serving stack's correctness rests on a handful of cross-thread
+//! protocols (ring-slot state machine, launch-arena epoch handoff,
+//! overload-gate slab, stats planes). The compiler cannot check that a
+//! `store(Release)` here is matched by a `load(Acquire)` there, or that
+//! the steady-state decode loop stays allocation-free; this pass can,
+//! because the repo writes those obligations down next to the code:
+//!
+//! * `// lint: atomic(name) spec` — an ordering contract on an atomic
+//!   field or static (see [`contract`] for the grammar). Every use of
+//!   that atomic, tree-wide, must conform; contracts mandating release
+//!   publishes must have acquire observers and vice versa; atomics in
+//!   protocol modules must be declared at all.
+//! * `// lint: no_alloc no_panic` — tags the next `fn` as a hot-path
+//!   region where allocation (and/or panicking) calls are denied.
+//! * `// SAFETY:` — required directly above every `unsafe`.
+//! * `rust/lint/allow.toml` — narrowly scoped, reasoned suppressions.
+//!
+//! Dependency-free by design: a hand-rolled lexer ([`lex`]) instead of
+//! syn, a hand-parsed allowlist instead of a TOML crate. The analysis
+//! is resolutely syntactic — no type information — and the known holes
+//! are documented where they live (bare-local receivers in
+//! [`analyze::UseSite::recv`]).
+
+pub mod allow;
+pub mod analyze;
+pub mod checks;
+pub mod contract;
+pub mod diag;
+pub mod lex;
+
+use analyze::{analyze_file, merge_contracts};
+use diag::Violation;
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use diag::{render_human, render_json};
+
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Sorted by (file, line, check, message); post-allowlist.
+    pub violations: Vec<Violation>,
+    pub contracts: usize,
+    pub uses: usize,
+    pub decls: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Run the full pass over `<root>/src`, applying `<root>/lint/allow.toml`
+/// when present. `root` is the crate directory (the repo invokes this
+/// with `rust/`).
+pub fn run(root: &Path) -> io::Result<Report> {
+    let src_root = root.join("src");
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    // Sort by the relative path string so the walk order (and with it
+    // every first-wins rule: contract registration, duplicate merge) is
+    // stable across platforms.
+    files.sort();
+
+    let mut out: Vec<Violation> = Vec::new();
+    let mut contracts = HashMap::new();
+    let mut uses = Vec::new();
+    let mut decls = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)?;
+        let fa = analyze_file(&src, &rel, &mut out);
+        decls += fa.decls.len();
+        uses.extend(fa.uses);
+        merge_contracts(&mut contracts, fa.contracts, &rel, &mut out);
+    }
+    checks::check_uses(&contracts, &uses, &mut out);
+    checks::crosscheck(&contracts, &uses, &mut out);
+
+    let mut entries = allow::parse_allowlist(&root.join("lint").join("allow.toml"), &mut out);
+    let mut out = allow::apply_allowlist(&mut entries, out, root);
+    out.sort_by_key(|v| v.key());
+
+    Ok(Report { violations: out, contracts: contracts.len(), uses: uses.len(), decls })
+}
+
+fn collect_rs(dir: &Path, files: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("lint root has no src/ directory: {}", dir.display()),
+        ));
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, files)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            files.push(path);
+        }
+    }
+    Ok(())
+}

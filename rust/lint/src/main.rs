@@ -1,0 +1,47 @@
+//! CLI: `cargo run -p blink-lint [-- <root>] [--json]`
+//!
+//! `<root>` defaults to `rust` (the crate directory, relative to the
+//! working directory — from the repo root that is the tree the tier-1
+//! gate lints). Exit code 0 = clean, 1 = violations, 2 = usage/io
+//! error. `--json` emits the versioned machine report the CI job
+//! uploads; the human format goes to stdout otherwise.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust");
+    let mut json = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("usage: blink-lint [ROOT] [--json]");
+                println!("lints ROOT/src against ROOT/lint/allow.toml (default ROOT: rust)");
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("blink-lint: unknown flag {a:?} (try --help)");
+                return ExitCode::from(2);
+            }
+            a => root = PathBuf::from(a),
+        }
+    }
+    let report = match blink_lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("blink-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", blink_lint::render_json(&report));
+    } else {
+        print!("{}", blink_lint::render_human(&report));
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,121 @@
+//! Every check is demonstrated by a fixture pair under
+//! `rust/lint/fixtures/<check>/{bad,good}`: the bad tree fires the
+//! check (and nothing else), the good tree is the minimal fix and
+//! lints clean. The `json_golden` tree pins the machine-report format
+//! byte-for-byte.
+
+use std::path::PathBuf;
+
+fn fixture_root(name: &str, variant: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name).join(variant)
+}
+
+fn run(name: &str, variant: &str) -> blink_lint::Report {
+    blink_lint::run(&fixture_root(name, variant))
+        .unwrap_or_else(|e| panic!("fixture {name}/{variant}: {e}"))
+}
+
+/// bad/ must produce at least one violation, all of the named check;
+/// good/ must be clean.
+fn assert_pair(name: &str, check: &str) {
+    let bad = run(name, "bad");
+    assert!(!bad.violations.is_empty(), "{name}/bad fired nothing");
+    for v in &bad.violations {
+        assert_eq!(v.check, check, "{name}/bad fired an unexpected check: {v:?}");
+    }
+    let good = run(name, "good");
+    assert!(
+        good.clean(),
+        "{name}/good must lint clean:\n{}",
+        blink_lint::render_human(&good)
+    );
+}
+
+#[test]
+fn safety_comment_pair() {
+    assert_pair("safety_comment", "safety-comment");
+}
+
+#[test]
+fn no_alloc_pair() {
+    assert_pair("no_alloc", "no-alloc");
+}
+
+#[test]
+fn no_panic_pair() {
+    assert_pair("no_panic", "no-panic");
+}
+
+#[test]
+fn atomic_undeclared_pair() {
+    // Fires twice in bad/: once at the declaration, once at the use.
+    let bad = run("atomic_undeclared", "bad");
+    assert_eq!(bad.violations.len(), 2, "{:?}", bad.violations);
+    assert_pair("atomic_undeclared", "atomic-undeclared");
+}
+
+#[test]
+fn atomic_ordering_pair() {
+    let bad = run("atomic_ordering", "bad");
+    assert_eq!(bad.violations.len(), 1, "{:?}", bad.violations);
+    let v = &bad.violations[0];
+    assert!(v.message.contains("`seq.store` uses Ordering::Relaxed"), "{v:?}");
+    assert_eq!(v.contract.as_deref(), Some("atomic(seq) publish=Release observe=Acquire rmw=AcqRel"));
+    assert_pair("atomic_ordering", "atomic-ordering");
+}
+
+#[test]
+fn atomic_unpaired_pair() {
+    let bad = run("atomic_unpaired", "bad");
+    assert_eq!(bad.violations.len(), 1, "{:?}", bad.violations);
+    assert!(bad.violations[0].message.contains("no acquire-side observer"));
+    assert_pair("atomic_unpaired", "atomic-unpaired");
+}
+
+#[test]
+fn atomic_conflict_pair() {
+    let bad = run("atomic_conflict", "bad");
+    assert_eq!(bad.violations.len(), 1, "{:?}", bad.violations);
+    assert!(
+        bad.violations[0].message.contains("conflicts with src/a.rs"),
+        "{:?}",
+        bad.violations[0]
+    );
+    assert_pair("atomic_conflict", "atomic-conflict");
+}
+
+#[test]
+fn contract_syntax_pair() {
+    assert_pair("contract_syntax", "contract-syntax");
+}
+
+#[test]
+fn allow_unused_pair() {
+    // bad/: clean source + a stale allow entry → the entry itself is
+    // the violation. good/: a real violation suppressed by a scoped,
+    // reasoned entry → fully clean.
+    assert_pair("allow_unused", "allow-unused");
+}
+
+#[test]
+fn json_report_matches_golden() {
+    let root = fixture_root("json_golden", "");
+    let report = blink_lint::run(&root).expect("json_golden run");
+    let got = blink_lint::render_json(&report);
+    let expected = std::fs::read_to_string(root.join("expected.json")).expect("expected.json");
+    assert_eq!(got, expected.trim_end(), "JSON report drifted from the golden file");
+}
+
+#[test]
+fn violations_are_sorted() {
+    let report = run("json_golden", "");
+    let mut keys: Vec<_> = report.violations.iter().map(|v| v.key()).collect();
+    let sorted = {
+        let mut s = keys.clone();
+        s.sort();
+        s
+    };
+    assert_eq!(keys, sorted);
+    keys.dedup();
+    assert_eq!(keys.len(), report.violations.len(), "duplicate diagnostics");
+}

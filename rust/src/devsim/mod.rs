@@ -253,9 +253,17 @@ impl<T> Doorbell<T> {
 /// `epoch` guarantees token visibility, mirroring the device memory
 /// fences in the CUDA implementation.
 pub struct CompletionBuffer {
+    // lint: atomic(epoch) observe=Acquire rmw=Release # completion edge:
+    // the Release bump publishes the token (and failure) stores below it;
+    // the polling scheduler's Acquire load receives them. Same contract
+    // as the launch arena's epoch — it is the same protocol, reversed.
     epoch: AtomicU64,
+    // lint: atomic(tokens) plane # per-lane cells published by the epoch.
     tokens: Vec<AtomicU32>,
     /// Set when the producing executor hit an error (poisons the poll).
+    // lint: atomic(failed) publish=Release observe=Acquire # failure bit;
+    // Release so a poller that sees it also sees everything the failing
+    // executor did first.
     failed: AtomicU32,
 }
 
@@ -269,6 +277,7 @@ impl CompletionBuffer {
     }
 
     /// Executor side: publish `tokens` for this step and bump the epoch.
+    // lint: no_alloc no_panic
     pub fn publish(&self, tokens: &[u32]) {
         for (i, t) in tokens.iter().enumerate() {
             self.tokens[i].store(*t, Ordering::Relaxed);
@@ -276,11 +285,13 @@ impl CompletionBuffer {
         self.epoch.fetch_add(1, Ordering::Release);
     }
 
+    // lint: no_alloc no_panic
     pub fn fail(&self) {
         self.failed.store(1, Ordering::Release);
         self.epoch.fetch_add(1, Ordering::Release);
     }
 
+    // lint: no_alloc no_panic
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
     }
@@ -296,6 +307,8 @@ impl CompletionBuffer {
     /// until the epoch advances, then fill the caller's scratch with the
     /// `n` tokens (cleared first; no reallocation once the scratch has
     /// grown to the widest grid). Returns false on executor failure.
+    // lint: no_alloc no_panic # `out.extend` fills persistent scratch;
+    // the hotloop_alloc runtime pin covers the reallocation case.
     pub fn poll_wait_into(&self, last_seen: u64, n: usize, out: &mut Vec<u32>) -> bool {
         out.clear();
         while self.epoch.load(Ordering::Acquire) <= last_seen {

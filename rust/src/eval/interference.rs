@@ -426,9 +426,12 @@ pub fn run_live_cell(spec: &CellSpec, p: &LiveParams) -> Cell {
 
     // Per-request metrics off the slot timestamps (stamped by the ring
     // at submit / first published token / completion), re-based to the
-    // earliest submit.
+    // earliest submit. Relaxed loads: the DecodeCompleted state read
+    // (Acquire, paired with the scheduler's Release transition) already
+    // ordered these timestamp reads after the stores — and the stores
+    // are Relaxed anyway, so an Acquire here would pair with nothing.
     let epoch_us = (0..p.requests)
-        .map(|i| ring.slot(i).submit_time_us.load(Ordering::Acquire))
+        .map(|i| ring.slot(i).submit_time_us.load(Ordering::Relaxed))
         .min()
         .unwrap_or(0);
     let reqs: Vec<RequestMetrics> = (0..p.requests)
@@ -438,9 +441,9 @@ pub fn run_live_cell(spec: &CellSpec, p: &LiveParams) -> Cell {
             RequestMetrics::from_slot_times_us(
                 i as u64,
                 epoch_us,
-                s.submit_time_us.load(Ordering::Acquire),
-                s.first_token_time_us.load(Ordering::Acquire),
-                s.finish_time_us.load(Ordering::Acquire),
+                s.submit_time_us.load(Ordering::Relaxed),
+                s.first_token_time_us.load(Ordering::Relaxed),
+                s.finish_time_us.load(Ordering::Relaxed),
                 p.input_tokens,
                 p.output_tokens,
             )

@@ -111,13 +111,19 @@ pub struct DpuFrontend {
     submit_qp: Mutex<QueuePair>,
     tracker: Arc<Mutex<Tracker>>,
     slots: Arc<Mutex<SlotTracker>>,
+    // lint: atomic(urgent) observe=Acquire rmw=AcqRel # wake hint for the
+    // token reader; the AcqRel bumps keep it ordered with the slot
+    // registrations it advertises.
     urgent: Arc<AtomicU32>,
+    // lint: atomic(stop) flag
     stop: Arc<AtomicBool>,
     reader_handle: Option<std::thread::JoinHandle<()>>,
     pub tokenizer: Arc<BlinkTokenizer>,
     pub vocab: Arc<Vocab>,
+    // lint: atomic(next_id) counter
     next_id: AtomicU64,
     config: FrontendConfig,
+    // lint: atomic(seed_ctr) counter
     seed_ctr: AtomicU32,
     /// Per-session token history (prompt + generated tokens of previous
     /// turns), keyed by the *client's session-id string* — not its hash,
@@ -128,6 +134,7 @@ pub struct DpuFrontend {
     /// store is capped at [`MAX_SESSIONS`], reclaiming only idle
     /// sessions.
     sessions: Mutex<HashMap<String, SessionEntry>>,
+    // lint: atomic(session_tick) counter
     session_tick: AtomicU64,
     /// Overload-control admission gate (DESIGN.md §9), checked before a
     /// ring slot is claimed so refused work never touches the GPU plane.
@@ -475,8 +482,13 @@ impl DpuFrontend {
                 Decision::Degrade { max_new_cap } => {
                     max_new = max_new.min(max_new_cap.max(1));
                 }
-                Decision::Reject { reason, retry_after_ms } => {
-                    return Err(Rejected::Overload { reason, retry_after_ms });
+                Decision::Reject { kind: _, reason, retry_after_ms } => {
+                    // The gate hands back a static reason; the String
+                    // conversion happens here, off the admission fast path.
+                    return Err(Rejected::Overload {
+                        reason: reason.to_string(),
+                        retry_after_ms,
+                    });
                 }
             }
         }

@@ -127,13 +127,18 @@ pub enum RejectKind {
 }
 
 /// Outcome of the gate check for one submission.
+///
+/// `reason` is `&'static str`, not `String`: the gate is called on every
+/// submission and must stay allocation-free under overload — precisely
+/// when it runs most often. Dynamic context (tenant id, counters) belongs
+/// to the metrics path, not the reject message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
     Admit,
     /// Admitted, but `max_new` must be capped to this value (shed by
     /// degradation: the tenant still gets an answer, just a shorter one).
     Degrade { max_new_cap: u32 },
-    Reject { kind: RejectKind, reason: String, retry_after_ms: u64 },
+    Reject { kind: RejectKind, reason: &'static str, retry_after_ms: u64 },
 }
 
 /// Token-bucket level is kept in milli-tokens so it fits an atomic u64
@@ -148,18 +153,33 @@ const MILLI: u64 = 1000;
 /// whose job is shaping, not accounting.
 #[derive(Debug)]
 struct TenantBucket {
+    // lint: atomic(key) observe=Relaxed rmw=Relaxed # claim arbiter only: the
+    // 0->key CAS decides slab ownership, and every other bucket field is
+    // pre-initialized in `OverloadGate::new` before the gate is shared, so
+    // no release/acquire edge hangs off the key.
     key: AtomicU64,
+    // lint: atomic(level_milli) observe=Relaxed rmw=Relaxed # milli-token
+    // level; refill/debit race can overshoot by one request, accepted for a
+    // limiter that shapes rather than accounts.
     level_milli: AtomicU64,
+    // lint: atomic(last_refill_ms) publish=Relaxed observe=Relaxed rmw=Relaxed
+    // # refill stamp; a smeared read only smears the next refill amount.
     last_refill_ms: AtomicU64,
+    // lint: atomic(admitted) counter
     admitted: AtomicU64,
+    // lint: atomic(rejected) counter
     rejected: AtomicU64,
 }
 
 impl TenantBucket {
-    fn empty() -> TenantBucket {
+    /// Buckets start *full* (`level_milli == cap_milli`): initializing the
+    /// level here, before the gate is ever shared across threads, is what
+    /// lets the claim CAS in [`OverloadGate::tenant_slot`] stay `Relaxed` —
+    /// there is no post-claim publish of bucket state to order.
+    fn fresh(cap_milli: u64) -> TenantBucket {
         TenantBucket {
             key: AtomicU64::new(0),
-            level_milli: AtomicU64::new(0),
+            level_milli: AtomicU64::new(cap_milli),
             last_refill_ms: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -188,14 +208,26 @@ pub struct OverloadGate {
     cfg: OverloadConfig,
     epoch: std::time::Instant,
     /// Index of the window `cur_count` belongs to (now_ms / window_ms).
+    // lint: atomic(cur_window) observe=Relaxed rmw=Relaxed # rotate arbiter:
+    // the CAS picks a single rotator per edge; counters it guards tolerate
+    // one-window smear by design, so no release edge is required.
     cur_window: AtomicU64,
+    // lint: atomic(cur_count) observe=Relaxed rmw=Relaxed # in-window
+    // admission count; swap(0) on rotate, estimate reads tolerate smear.
     cur_count: AtomicU64,
+    // lint: atomic(prev_count) publish=Relaxed observe=Relaxed # previous
+    // window's carried count; staleness is bounded by one window edge.
     prev_count: AtomicU64,
     /// Aggregate counters, mirrored into `SchedulerStats` by the caller.
+    // lint: atomic(admitted) counter
     pub admitted: AtomicU64,
+    // lint: atomic(rejected_rate) counter
     pub rejected_rate: AtomicU64,
+    // lint: atomic(rejected_bucket) counter
     pub rejected_bucket: AtomicU64,
+    // lint: atomic(shed_dropped) counter
     pub shed_dropped: AtomicU64,
+    // lint: atomic(shed_degraded) counter
     pub shed_degraded: AtomicU64,
     buckets: Box<[TenantBucket]>,
 }
@@ -203,7 +235,8 @@ pub struct OverloadGate {
 impl OverloadGate {
     pub fn new(cfg: OverloadConfig) -> OverloadGate {
         let slots = cfg.tenant_slots.max(1);
-        let buckets: Vec<TenantBucket> = (0..slots).map(|_| TenantBucket::empty()).collect();
+        let cap_milli = (cfg.bucket_capacity * MILLI as f64) as u64;
+        let buckets: Vec<TenantBucket> = (0..slots).map(|_| TenantBucket::fresh(cap_milli)).collect();
         OverloadGate {
             cfg,
             epoch: std::time::Instant::now(),
@@ -236,6 +269,7 @@ impl OverloadGate {
     /// Gate one submission. `queue_occupancy` is the ring's fill fraction
     /// (0..=1), folded into shed pressure so a backlog the window cannot
     /// see (slow drains) still sheds best-effort work.
+    // lint: no_alloc no_panic
     pub fn check(
         &self,
         tenant: u64,
@@ -256,7 +290,7 @@ impl OverloadGate {
             self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
             return Decision::Reject {
                 kind: RejectKind::Bucket,
-                reason: format!("tenant {tenant:#x} over per-tenant quota"),
+                reason: "tenant over per-tenant quota",
                 retry_after_ms: retry,
             };
         }
@@ -275,7 +309,7 @@ impl OverloadGate {
             self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
             return Decision::Reject {
                 kind: RejectKind::Window,
-                reason: "rate limit: admission window full".into(),
+                reason: "rate limit: admission window full",
                 retry_after_ms: retry_window,
             };
         }
@@ -285,7 +319,7 @@ impl OverloadGate {
                 self.buckets[slot].rejected.fetch_add(1, Ordering::Relaxed);
                 return Decision::Reject {
                     kind: RejectKind::Shed,
-                    reason: "shedding best-effort work under overload".into(),
+                    reason: "shedding best-effort work under overload",
                     retry_after_ms: retry_window,
                 };
             }
@@ -301,6 +335,7 @@ impl OverloadGate {
 
     /// Record an admission: debit the tenant bucket, count it in the
     /// current window.
+    // lint: no_alloc no_panic
     fn commit(&self, slot: usize, now_ms: u64) {
         let b = &self.buckets[slot];
         // Saturating debit: refill already guaranteed >= 1 token at
@@ -317,6 +352,7 @@ impl OverloadGate {
     }
 
     /// Rotate the two-bucket window if `now_ms` crossed an edge.
+    // lint: no_alloc no_panic
     fn roll_window(&self, now_ms: u64) {
         let w = now_ms / self.cfg.window_ms;
         let cur = self.cur_window.load(Ordering::Relaxed);
@@ -337,6 +373,7 @@ impl OverloadGate {
 
     /// Sliding-window admission estimate: current count plus the
     /// previous window weighted by its remaining overlap.
+    // lint: no_alloc no_panic
     fn window_estimate(&self, now_ms: u64) -> f64 {
         let frac = (now_ms % self.cfg.window_ms) as f64 / self.cfg.window_ms as f64;
         let cur = self.cur_count.load(Ordering::Relaxed) as f64;
@@ -346,6 +383,7 @@ impl OverloadGate {
 
     /// Refill the tenant's bucket to `now_ms`; `None` if it now holds at
     /// least one whole token, else the milliseconds until it will.
+    // lint: no_alloc no_panic
     fn bucket_deficit_ms(&self, slot: usize, now_ms: u64) -> Option<u64> {
         let b = &self.buckets[slot];
         let last = b.last_refill_ms.load(Ordering::Relaxed);
@@ -370,10 +408,14 @@ impl OverloadGate {
         }
     }
 
-    /// Find (or claim) the slab entry for `tenant`. New tenants start
-    /// with a full bucket stamped at `0` so the first refill at check
-    /// time fills them (a fresh tenant is never turned away by an empty
-    /// bucket it was never given a chance to fill).
+    /// Find (or claim) the slab entry for `tenant`. Buckets are built
+    /// full in [`OverloadGate::new`], so claiming is *only* the key CAS:
+    /// there is no bucket state to publish afterwards, and a racing
+    /// prober that wins the `k == key` fast path can never observe a
+    /// half-initialized bucket. (The previous scheme stored the level
+    /// *after* the CAS, which let a concurrent checker read level 0 and
+    /// spuriously reject a fresh tenant.)
+    // lint: no_alloc no_panic
     fn tenant_slot(&self, tenant: u64) -> usize {
         // Key 0 is the anonymous/no-tenant pool; it lives in slot 0's
         // neighborhood like any other key but is nudged to 1 so "empty"
@@ -389,12 +431,8 @@ impl OverloadGate {
                 return idx;
             }
             if k == 0 {
-                let cap_milli = (self.cfg.bucket_capacity * MILLI as f64) as u64;
                 match b.key.compare_exchange(0, key, Ordering::Relaxed, Ordering::Relaxed) {
-                    Ok(_) => {
-                        b.level_milli.store(cap_milli, Ordering::Relaxed);
-                        return idx;
-                    }
+                    Ok(_) => return idx,
                     Err(actual) if actual == key => return idx,
                     Err(_) => continue,
                 }

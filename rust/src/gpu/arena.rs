@@ -68,13 +68,22 @@ pub struct ArenaDims {
 /// One region's staging planes plus the extents staged for the current
 /// launch (what the executor snapshots and validates against the graph).
 struct RegionPlanes {
+    // lint: atomic(block_tables) plane # staged cells; the epoch
+    // release/acquire pair (module docs) publishes them, not the cells.
     block_tables: Vec<AtomicI32>,
+    // lint: atomic(seq_lens) plane
     seq_lens: Vec<AtomicI32>,
+    // lint: atomic(tokens) plane
     tokens: Vec<AtomicI32>,
+    // lint: atomic(offsets) plane
     offsets: Vec<AtomicI32>,
+    // lint: atomic(staged_bt) plane
     staged_bt: AtomicUsize,
+    // lint: atomic(staged_sl) plane
     staged_sl: AtomicUsize,
+    // lint: atomic(staged_tok) plane
     staged_tok: AtomicUsize,
+    // lint: atomic(staged_off) plane
     staged_off: AtomicUsize,
 }
 
@@ -102,6 +111,9 @@ pub struct LaunchArena {
     dims: ArenaDims,
     decode: RegionPlanes,
     prefill: RegionPlanes,
+    // lint: atomic(epoch) observe=Acquire rmw=Release # the one ordering
+    // edge of the arena: the Release bump publishes every relaxed plane
+    // store staged before it; the executor's Acquire load receives them.
     epoch: AtomicU64,
 }
 
@@ -133,6 +145,7 @@ impl LaunchArena {
     /// Write one block-table row: the lane's block list, zero-padded to
     /// the `max_blocks_per_seq` row width (block 0 is never handed out,
     /// matching `SeqCache::table_row`'s padding convention).
+    // lint: no_alloc no_panic
     pub fn write_block_row(&self, r: Region, row: usize, blocks: &[u32]) {
         let mbs = self.dims.max_blocks_per_seq;
         let p = &self.region(r).block_tables[row * mbs..(row + 1) * mbs];
@@ -142,6 +155,7 @@ impl LaunchArena {
         }
     }
 
+    // lint: no_alloc no_panic
     pub fn write_seq_len(&self, r: Region, row: usize, v: i32) {
         self.region(r).seq_lens[row].store(v, Ordering::Relaxed);
     }
@@ -149,11 +163,13 @@ impl LaunchArena {
     /// Write one token at a flat plane index (decode: index = lane;
     /// prefill: index = lane × grid_seq + position, the row-major layout
     /// the graphs expect).
+    // lint: no_alloc no_panic
     pub fn write_token(&self, r: Region, idx: usize, v: i32) {
         self.region(r).tokens[idx].store(v, Ordering::Relaxed);
     }
 
     /// Per-lane runtime offset (prefill region only).
+    // lint: no_alloc no_panic
     pub fn write_offset(&self, row: usize, v: i32) {
         self.prefill.offsets[row].store(v, Ordering::Relaxed);
     }
@@ -162,6 +178,7 @@ impl LaunchArena {
     /// by the *planner* from the shape it marshaled — the executor
     /// validates them against the launched graph's spec, preserving the
     /// planner-vs-graph cross-check the owned-`Vec` path had.
+    // lint: no_alloc no_panic
     pub fn stage_extents(&self, r: Region, bt: usize, sl: usize, tok: usize, off: usize) {
         let p = self.region(r);
         debug_assert!(
@@ -179,6 +196,7 @@ impl LaunchArena {
 
     /// Release-publish the staged state; the returned epoch goes into
     /// the `LaunchCmd` (protocol step 2 in the module docs).
+    // lint: no_alloc no_panic
     pub fn publish(&self) -> u64 {
         self.epoch.fetch_add(1, Ordering::Release) + 1
     }
@@ -186,6 +204,7 @@ impl LaunchArena {
     // --- reader (executor thread) -------------------------------------
 
     /// Acquire-load the current epoch (protocol step 3).
+    // lint: no_alloc no_panic
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
     }

@@ -158,7 +158,9 @@ impl Default for SchedulerConfig {
 /// Handle to the running scheduler thread.
 pub struct Scheduler {
     pub stats: Arc<SchedulerStats>,
+    // lint: atomic(stop) flag
     stop: Arc<AtomicBool>,
+    // lint: atomic(drain) flag
     drain: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -464,6 +466,7 @@ impl SchedulerCore {
     /// when at least one candidate was found. Allocation-free: both
     /// scratches persist across iterations, and the cheap doorbell check
     /// skips even the sweep when nothing is pending.
+    // lint: no_alloc no_panic # scratches persist; hotloop_alloc pins this at runtime
     fn scan_into(&mut self, only_if_hinted: bool) -> bool {
         self.cand_scratch.clear();
         if only_if_hinted && self.ring.pending_hint() == 0 {
@@ -538,7 +541,10 @@ impl SchedulerCore {
             if slot.state() != SlotState::PrefillPending {
                 continue; // raced with... nothing today, but benign
             }
-            let prompt_len = slot.prompt_len.load(Ordering::Acquire) as usize;
+            // Relaxed: the PrefillPending read above came through the
+            // state word's edge; `prompt_len` itself is stored Relaxed,
+            // so Acquire here would pair with nothing.
+            let prompt_len = slot.prompt_len.load(Ordering::Relaxed) as usize;
             let max_new = slot.max_new_tokens.load(Ordering::Relaxed).max(1);
             // With chunking off, a prompt must fit one full-prefill
             // graph; chunked prefill lifts that single-launch cap (each
@@ -1095,6 +1101,7 @@ impl SchedulerCore {
     /// zero-alloc regression test pins: incremental arena staging, an
     /// epoch-tagged doorbell launch, overlapped scratch scan, scratch
     /// completion poll, and a single reverse in-place retire pass.
+    // lint: no_alloc no_panic # steady-state decode: the zero-alloc contract, statically
     fn decode_step(&mut self, draining: bool, iter_t0: Instant) {
         let live = self.lanes.len();
         debug_assert!(live > 0);
@@ -1194,6 +1201,7 @@ impl SchedulerCore {
     /// only thing standing between the steady loop and pure in-place
     /// updates, so `/metrics` reports it alongside the iteration
     /// percentiles.
+    // lint: no_alloc no_panic
     fn note_membership_change(&mut self, n: u64) {
         if n > 0 {
             self.planner.mark_decode_dirty();

@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// 50 µs one.
 #[derive(Debug)]
 pub struct LatencyHistogram {
+    // lint: atomic(buckets) counter
     buckets: [AtomicU64; HIST_BUCKETS],
 }
 
@@ -26,6 +27,7 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     /// Record one sample. Bucket = ⌊log₂ ns⌋, clamped to the top bucket.
+    // lint: no_alloc no_panic
     pub fn record_ns(&self, ns: u64) {
         let idx = (ns.max(1).ilog2() as usize).min(HIST_BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
@@ -68,7 +70,10 @@ impl LatencyHistogram {
 /// interpolate on their own (cold-path) heap.
 #[derive(Debug)]
 pub struct SampleRing {
+    // lint: atomic(slots) plane # sample cells; a reader that races a wrap
+    // sees either the old or the new sample, both of which were real.
     slots: Box<[AtomicU64]>,
+    // lint: atomic(cursor) counter
     cursor: AtomicU64,
 }
 
@@ -94,6 +99,7 @@ impl SampleRing {
 
     /// Record one raw sample (alloc-free; hot-path safe). Samples are
     /// stored as `ns + 1` so an unwritten slot (0) is distinguishable.
+    // lint: no_alloc no_panic
     pub fn record_ns(&self, ns: u64) {
         let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
         self.slots[i].store(ns.saturating_add(1), Ordering::Relaxed);
@@ -127,62 +133,91 @@ impl SampleRing {
     }
 }
 
+/// All counter fields below share the `counter` contract: relaxed
+/// increments on the device plane, relaxed reads from `/metrics` — the
+/// observability path never needs to order against the data it describes.
 #[derive(Debug, Default)]
 pub struct SchedulerStats {
+    // lint: atomic(decode_steps) counter
     pub decode_steps: AtomicU64,
+    // lint: atomic(prefill_batches) counter
     pub prefill_batches: AtomicU64,
+    // lint: atomic(prefilled_requests) counter
     pub prefilled_requests: AtomicU64,
+    // lint: atomic(completed_requests) counter
     pub completed_requests: AtomicU64,
+    // lint: atomic(failed_requests) counter
     pub failed_requests: AtomicU64,
+    // lint: atomic(tokens_generated) counter
     pub tokens_generated: AtomicU64,
     /// Sum of live-lane counts over decode steps (occupancy = sum/steps).
+    // lint: atomic(batch_occupancy_sum) counter
     pub batch_occupancy_sum: AtomicU64,
     /// Continuous-batching pauses taken for inline prefill.
+    // lint: atomic(pauses) counter
     pub pauses: AtomicU64,
     /// Ring-scan latency accounting, nanoseconds.
+    // lint: atomic(scan_count) counter
     pub scan_count: AtomicU64,
+    // lint: atomic(scan_ns_sum) counter
     pub scan_ns_sum: AtomicU64,
+    // lint: atomic(scan_ns_max) counter
     pub scan_ns_max: AtomicU64,
     /// Launch-window telemetry mirrored out of the scheduler loop.
+    // lint: atomic(fnf_launches) counter
     pub fnf_launches: AtomicU64,
+    // lint: atomic(tail_relaunches) counter
     pub tail_relaunches: AtomicU64,
     /// Admission backpressure events (no KV blocks / no batch slot).
+    // lint: atomic(backpressure_events) counter
     pub backpressure_events: AtomicU64,
     /// Admissions whose ticket was lower than an earlier admission's —
     /// zero under FCFS, positive when a policy reorders the queue.
+    // lint: atomic(admitted_out_of_order) counter
     pub admitted_out_of_order: AtomicU64,
     /// Requests whose first token was published after their TTFT
     /// deadline (only counted for requests that carry a deadline).
+    // lint: atomic(ttft_deadline_misses) counter
     pub ttft_deadline_misses: AtomicU64,
     /// Prefix-reuse telemetry (mirrors `kvcache::KvStats`): admissions
     /// that reused at least one cached block, prompt tokens served from
     /// the prefix index, and parked blocks reclaimed under pool pressure.
+    // lint: atomic(prefix_hits) counter
     pub prefix_hits: AtomicU64,
+    // lint: atomic(prefix_hit_tokens) counter
     pub prefix_hit_tokens: AtomicU64,
+    // lint: atomic(prefix_evicted_blocks) counter
     pub prefix_evicted_blocks: AtomicU64,
     /// Blocks currently shared or parked in the prefix index (gauge).
+    // lint: atomic(prefix_indexed_blocks) counter
     pub prefix_indexed_blocks: AtomicU64,
     /// Offset-prefill graph launches (suffix-only prefills of live
     /// prefix-cache hits) — the counter `eval prefix-live` and
     /// `/metrics` report.
+    // lint: atomic(prefill_offset_batches) counter
     pub prefill_offset_batches: AtomicU64,
     /// Prefix hits demoted to a full cold prefill because their suffix
     /// fit no offset graph (partial or absent offset grid).
+    // lint: atomic(prefix_fallback_full) counter
     pub prefix_fallback_full: AtomicU64,
     /// Admissions carrying a session tag (multi-turn traffic) — read off
     /// the slot's RDMA-written `session_id` by the GPU plane, so
     /// `/metrics` distinguishes conversation turns from one-shot load.
+    // lint: atomic(session_requests) counter
     pub session_requests: AtomicU64,
     /// Chunked-prefill telemetry (DESIGN.md §5): admissions whose
     /// uncached suffix exceeded the per-iteration budget and entered
     /// the chunked state machine, ...
+    // lint: atomic(chunked_prefills) counter
     pub chunked_prefills: AtomicU64,
     /// ... individual chunk launches (one per lane per chunk, the final
     /// chunk included), ...
+    // lint: atomic(chunk_launches) counter
     pub chunk_launches: AtomicU64,
     /// ... and the worst backlog a chunked lane saw: the maximum number
     /// of consecutive scheduler iterations a lane spent waiting for the
     /// per-iteration token budget to reach it.
+    // lint: atomic(max_chunk_wait_iters) counter
     pub max_chunk_wait_iters: AtomicU64,
     /// Per-iteration control overhead (loop top → decode-launch enqueue,
     /// ns): ring scan, chunk servicing, policy work, arena staging and
@@ -205,6 +240,7 @@ pub struct SchedulerStats {
     /// down on launch failure) — each one forces a full arena resync of
     /// the decode region instead of the in-place incremental update, so
     /// this counter is also "full block-table rewrites per run".
+    // lint: atomic(batch_membership_changes) counter
     pub batch_membership_changes: AtomicU64,
     /// Which attention implementation the loaded artifacts were lowered
     /// against ("pallas" / "ref" / "mixed" / "modeled"), set once from
@@ -214,8 +250,10 @@ pub struct SchedulerStats {
     /// Ring-scan backlog observed at the top of the last admission pass
     /// (gauge): candidates waiting in submitted slots. One relaxed store
     /// per loop iteration — alloc-free, hot-path safe.
+    // lint: atomic(queue_depth) counter
     pub queue_depth: AtomicU64,
     /// High-water mark of [`SchedulerStats::queue_depth`] over the run.
+    // lint: atomic(queue_depth_peak) counter
     pub queue_depth_peak: AtomicU64,
     /// Overload-gate decisions (DESIGN.md §9), mirrored out of the DPU
     /// frontend via [`SchedulerStats::mirror_gate_decision`]: admissions
@@ -223,10 +261,15 @@ pub struct SchedulerStats {
     /// rejections by a per-tenant token bucket, best-effort work shed by
     /// degradation (admitted with `max_new` capped), and best-effort
     /// work shed by dropping.
+    // lint: atomic(overload_admitted) counter
     pub overload_admitted: AtomicU64,
+    // lint: atomic(rate_limited) counter
     pub rate_limited: AtomicU64,
+    // lint: atomic(tenant_limited) counter
     pub tenant_limited: AtomicU64,
+    // lint: atomic(shed_degraded) counter
     pub shed_degraded: AtomicU64,
+    // lint: atomic(shed_dropped) counter
     pub shed_dropped: AtomicU64,
 }
 
@@ -234,6 +277,7 @@ impl SchedulerStats {
     /// Mirror one admission-gate decision (called by the DPU frontend on
     /// every gated submission) so overload counters surface next to the
     /// scheduler's own numbers in `summary()` and `/metrics`.
+    // lint: no_alloc no_panic
     pub fn mirror_gate_decision(&self, d: &crate::frontend::overload::Decision) {
         use crate::frontend::overload::{Decision, RejectKind};
         match d {
@@ -257,11 +301,13 @@ impl SchedulerStats {
 
     /// Update the queue-depth gauge and its high-water mark (one relaxed
     /// store + fetch_max; hot-path safe).
+    // lint: no_alloc no_panic
     pub fn record_queue_depth(&self, depth: u64) {
         self.queue_depth.store(depth, Ordering::Relaxed);
         self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
     }
 
+    // lint: no_alloc no_panic
     pub fn record_scan(&self, ns: u64) {
         self.scan_count.fetch_add(1, Ordering::Relaxed);
         self.scan_ns_sum.fetch_add(ns, Ordering::Relaxed);
@@ -455,7 +501,7 @@ mod tests {
         for kind in [RejectKind::Window, RejectKind::Bucket, RejectKind::Shed] {
             s.mirror_gate_decision(&Decision::Reject {
                 kind,
-                reason: "x".into(),
+                reason: "x",
                 retry_after_ms: 1,
             });
         }

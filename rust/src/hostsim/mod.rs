@@ -124,7 +124,9 @@ impl HostOrchestrator {
 /// Live CPU interferer: `threads` workers doing compression-like passes
 /// over private large buffers (the pbzip2/Ninja stand-in).
 pub struct Interferer {
+    // lint: atomic(stop) flag
     stop: Arc<AtomicBool>,
+    // lint: atomic(work_units) counter
     pub work_units: Arc<AtomicU64>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }

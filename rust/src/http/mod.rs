@@ -46,8 +46,10 @@ pub const MAX_TOKENS_LIMIT: u64 = 1 << 20;
 
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
+    // lint: atomic(stop) flag
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    // lint: atomic(requests_served) counter
     pub requests_served: Arc<AtomicU64>,
 }
 

@@ -154,10 +154,14 @@ impl Ord for Pending {
 /// The shared "NIC": executes ops against the ring buffer.
 pub struct RdmaEngine {
     tx: Sender<Pending>,
+    // lint: atomic(seq) counter # FIFO tie-break stamp; ordering between
+    // ops comes from the channel send, not from this counter.
     seq: AtomicU64,
     config: RdmaConfig,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    // lint: atomic(ops_executed) counter
     ops_executed: Arc<AtomicU64>,
+    // lint: atomic(bytes_moved) counter
     bytes_moved: Arc<AtomicU64>,
 }
 

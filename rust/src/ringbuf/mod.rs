@@ -72,13 +72,24 @@ pub struct RingBuffer {
     pub config: RingConfig,
     slots: Vec<Slot>,
     /// Input-token arena: slot i owns `[i*max_prompt, (i+1)*max_prompt)`.
+    // lint: atomic(input_arena) plane # token cells; the write_prompt
+    // release fence / read-side acquire edge orders them, not the cells.
     input_arena: Vec<AtomicU32>,
     /// Output-token arena: slot i owns `[i*max_output, (i+1)*max_output)`.
+    // lint: atomic(output_arena) plane # token cells published by the
+    // `generated` Release store, observed through its Acquire load.
     output_arena: Vec<AtomicU32>,
     /// Approximate count of PREFILL_PENDING slots — a doorbell the
     /// scheduler checks before paying for a full scan.
+    // lint: atomic(pending_hint) observe=Acquire rmw=AcqRel # the doorbell
+    // is a hint, but its AcqRel edges keep it from drifting ahead of the
+    // state words it summarizes.
     pending_hint: AtomicU32,
     /// Monotone submission ticket used for FCFS ordering across slots.
+    // lint: atomic(ticket) publish=Relaxed observe=Relaxed rmw=AcqRel
+    // # the global ticket counter (AcqRel fetch_add in RingBuffer) and the
+    // per-slot stamp share this contract; the stamp itself rides the
+    // state-word release edge like the rest of the metadata plane.
     ticket: AtomicU64,
 }
 
@@ -137,6 +148,7 @@ impl RingBuffer {
     /// absolute deadline stamped against the same clock as
     /// `submit_time_us`, so policy slack math needs no clock exchange
     /// with the frontend.
+    // lint: no_alloc no_panic
     pub fn submit_with_meta(&self, i: usize, meta: &SubmitMeta) -> u64 {
         let s = &self.slots[i];
         debug_assert_eq!(s.state(), SlotState::FrontendWriting);
@@ -164,6 +176,7 @@ impl RingBuffer {
 
     /// Scheduler half: claim a pending prompt (CAS PREFILL_PENDING →
     /// PREFILL_PROCESSING).
+    // lint: no_alloc no_panic
     pub fn claim_pending(&self, i: usize) -> bool {
         if self.slots[i].cas_state(SlotState::PrefillPending, SlotState::PrefillProcessing) {
             self.pending_hint.fetch_sub(1, Ordering::AcqRel);
@@ -207,6 +220,9 @@ impl RingBuffer {
     /// each candidate's ticket (relaxed load) instead of materializing
     /// (ticket, slot) pairs; the single scheduler thread is the only
     /// claimer, so tickets are stable for the duration.
+    // lint: no_alloc no_panic # `out.push` reuses persistent scratch
+    // capacity; the hotloop_alloc runtime pin covers the reallocation case
+    // this syntactic pass cannot see.
     pub fn scan_pending_into(&self, out: &mut Vec<usize>) {
         out.clear();
         for (i, slot) in self.slots.iter().enumerate() {
@@ -277,7 +293,11 @@ impl RingBuffer {
 
     /// Scheduler half: read a claimed prompt.
     pub fn read_prompt(&self, i: usize) -> Vec<u32> {
-        let len = self.slots[i].prompt_len.load(Ordering::Acquire) as usize;
+        // Relaxed: the claim CAS (AcqRel) already ordered this read after
+        // the frontend's release publish. The Acquire this load used to
+        // carry paired with nothing — `prompt_len` is stored Relaxed, so
+        // it created no edge, just the appearance of one.
+        let len = self.slots[i].prompt_len.load(Ordering::Relaxed) as usize;
         let (base, cap) = self.input_region(i);
         (0..len.min(cap)).map(|j| self.input_arena[base + j].load(Ordering::Relaxed)).collect()
     }
@@ -285,6 +305,8 @@ impl RingBuffer {
     /// Scheduler half: publish one generated token (token store happens
     /// before the release bump of `generated`, so any reader that observes
     /// the new count also observes the token — the paper's fence rule).
+    // lint: no_alloc no_panic # `assert!` stays: invariant checks are
+    // allowed in no_panic regions, unwinding escape hatches are not.
     pub fn publish_token(&self, i: usize, token: u32) -> u32 {
         let s = &self.slots[i];
         let g = s.generated.load(Ordering::Relaxed);

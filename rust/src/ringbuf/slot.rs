@@ -60,30 +60,53 @@ impl SlotState {
 /// DPU plane (RDMA) and the GPU plane (persistent scheduler).
 #[derive(Debug)]
 pub struct Slot {
+    // lint: atomic(state) publish=Release observe=Acquire|Relaxed rmw=AcqRel
+    // # the slot's ownership word. Stores publish the metadata written
+    // before the transition; Relaxed loads are scan-only peeks whose
+    // winner re-synchronizes through the AcqRel claim CAS.
     state: AtomicU32,
+    // lint: atomic(request_id) plane
     pub request_id: AtomicU64,
+    // lint: atomic(ticket) publish=Relaxed observe=Relaxed rmw=AcqRel
+    // # the global ticket counter (AcqRel fetch_add in RingBuffer) and the
+    // per-slot stamp share this contract; the stamp itself rides the
+    // state-word release edge like the rest of the metadata plane.
     pub ticket: AtomicU64,
+    // lint: atomic(prompt_len) plane
     pub prompt_len: AtomicU32,
+    // lint: atomic(max_new_tokens) plane
     pub max_new_tokens: AtomicU32,
+    // lint: atomic(seed) plane
     pub seed: AtomicU32,
     /// Request class: higher = more important; 0 = batch/default. Read by
     /// the scheduler's admission policy (paper's scheduler is FCFS-only;
     /// this field is what the pluggable policies rank by).
+    // lint: atomic(priority) plane
     pub priority: AtomicU32,
     /// Absolute TTFT deadline (µs since process epoch); 0 = no deadline.
     /// Derived from the submitted TTFT budget at publish time.
+    // lint: atomic(ttft_deadline_us) plane
     pub ttft_deadline_us: AtomicU64,
     /// Conversation-session tag (hash of the client session id); 0 = no
     /// session. Rides the same metadata write so the GPU plane can
     /// attribute multi-turn traffic (`SchedulerStats::session_requests`)
     /// without any host coordination.
+    // lint: atomic(session_id) plane
     pub session_id: AtomicU64,
     /// Number of generated tokens published to the output arena.
+    // lint: atomic(generated) publish=Release|Relaxed observe=Acquire|Relaxed
+    // # Release stores publish freshly written output-arena tokens to the
+    // token reader's Acquire load; Relaxed stores/loads are same-plane
+    // resets and progress peeks that carry no data.
     pub generated: AtomicU32,
     /// Frontend-local progress (tokens already streamed to the client).
+    // lint: atomic(read_cursor) plane
     pub read_cursor: AtomicU32,
+    // lint: atomic(submit_time_us) plane
     pub submit_time_us: AtomicU64,
+    // lint: atomic(first_token_time_us) plane
     pub first_token_time_us: AtomicU64,
+    // lint: atomic(finish_time_us) plane
     pub finish_time_us: AtomicU64,
 }
 

@@ -19,6 +19,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+// lint: atomic(ALLOCS) counter
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide allocation events observed so far (0 unless a test
@@ -34,22 +35,36 @@ pub fn alloc_count() -> u64 {
 /// state.
 pub struct CountingAlloc;
 
+// SAFETY: every method below upholds the `GlobalAlloc` contract by
+// delegating verbatim to `System`, which satisfies it; the only added
+// behavior is a relaxed counter bump, which cannot itself allocate (it
+// would recurse) and touches no allocator state.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller guarantees `layout` has non-zero size (GlobalAlloc
+    // precondition); forwarded unchanged to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: same precondition as `alloc`, forwarded unchanged; System
+    // returns zeroed memory or null exactly as the contract requires.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller guarantees `ptr` came from this allocator with
+    // `layout` and `new_size` is non-zero; since alloc/dealloc delegate
+    // to `System`, `ptr` is a valid `System` allocation to forward.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller guarantees `ptr` was returned by this allocator for
+    // `layout`; every allocation path above is a `System` allocation, so
+    // handing it back to `System.dealloc` is the matching free.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

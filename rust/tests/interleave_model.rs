@@ -1,0 +1,340 @@
+//! A dependency-free mini-loom: exhaustive two-thread schedule
+//! enumeration over a modeled-atomics shim, used to *prove* (within
+//! the model) the two protocol edges that blink-lint's contracts
+//! merely assert (DESIGN.md §10):
+//!
+//! * the launch-arena epoch handoff — staged plane writes published by
+//!   a `fetch_add(Release)` on `epoch`, observed by `load(Acquire)`
+//!   (`gpu/arena.rs`, and the same contract reversed on
+//!   `devsim` CompletionBuffer's `epoch`);
+//! * the devsim doorbell — payload written before a release "ring",
+//!   ring observed with acquire by `recv`, plus the ring-then-close
+//!   sequence where close must not hide an earlier ring.
+//!
+//! The shim is the standard operational release/acquire model: every
+//! store appends a timestamped message to its location's modification
+//! history; each thread carries a *view* (per-location minimum
+//! timestamp it may still read); a release write attaches the writer's
+//! view to the message; an acquire read joins the message's view into
+//! the reader's. Relaxed ops move only the accessed location's slot.
+//! A load may read ANY message at or above the thread's view — that
+//! per-read nondeterminism, DFS-enumerated alongside the interleaving
+//! choice, is what makes stale reads representable and the negative
+//! tests meaningful: they show the exact torn execution that would be
+//! legal if a contract's Release or Acquire were downgraded, i.e. that
+//! the orderings the lint pins are load-bearing, not decoration.
+//!
+//! The model is deliberately *weaker* than C++11 in one respect (a
+//! relaxed RMW does not continue a release sequence), so an invariant
+//! that holds over all modeled executions holds a fortiori over the
+//! real ones our protocols produce.
+
+use std::collections::BTreeSet;
+
+const NLOCS: usize = 4;
+
+/// Per-location timestamp frontier. `view[l] = t` means messages of
+/// location `l` with timestamp `< t` are no longer readable by this
+/// thread. Timestamp 0 is the initial value.
+type View = [usize; NLOCS];
+
+fn join(a: &mut View, b: &View) {
+    for l in 0..NLOCS {
+        a[l] = a[l].max(b[l]);
+    }
+}
+
+#[derive(Clone)]
+struct Msg {
+    val: u64,
+    view: View,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Store { loc: usize, val: u64, rel: bool },
+    Load { loc: usize, acq: bool, reg: usize },
+    FetchAdd { loc: usize, add: u64, acq: bool, rel: bool, reg: usize },
+    /// compare_exchange(expect → new), AcqRel success / Acquire failure;
+    /// old value lands in `reg` either way (Ok/Err both carry it).
+    Cas { loc: usize, expect: u64, new: u64, reg: usize },
+}
+
+#[derive(Clone)]
+struct State {
+    hist: [Vec<Msg>; NLOCS],
+    views: [View; 2],
+    regs: Vec<u64>,
+    pc: [usize; 2],
+}
+
+impl State {
+    fn new(nregs: usize) -> State {
+        State {
+            hist: Default::default(),
+            views: [[0; NLOCS]; 2],
+            regs: vec![0; nregs],
+            pc: [0; 2],
+        }
+    }
+
+    /// (timestamp, value, attached view) of `loc`'s latest message —
+    /// what an RMW must read for atomicity.
+    fn latest(&self, loc: usize) -> (usize, u64, View) {
+        match self.hist[loc].last() {
+            Some(m) => (self.hist[loc].len(), m.val, m.view),
+            None => (0, 0, [0; NLOCS]),
+        }
+    }
+
+    fn write(&mut self, tid: usize, loc: usize, val: u64, rel: bool) {
+        let ts = self.hist[loc].len() + 1;
+        self.views[tid][loc] = ts;
+        let view = if rel {
+            self.views[tid]
+        } else {
+            let mut v = [0; NLOCS];
+            v[loc] = ts;
+            v
+        };
+        self.hist[loc].push(Msg { val, view });
+    }
+
+    /// Successor states of `tid` executing `op` — one per legal read
+    /// choice (writes and RMWs are deterministic given the schedule).
+    fn step(&self, tid: usize, op: Op) -> Vec<State> {
+        let mut succ = Vec::new();
+        match op {
+            Op::Store { loc, val, rel } => {
+                let mut s = self.clone();
+                s.write(tid, loc, val, rel);
+                s.pc[tid] += 1;
+                succ.push(s);
+            }
+            Op::Load { loc, acq, reg } => {
+                for ts in self.views[tid][loc]..=self.hist[loc].len() {
+                    let mut s = self.clone();
+                    let (val, mview) = if ts == 0 {
+                        (0, [0; NLOCS])
+                    } else {
+                        let m = &self.hist[loc][ts - 1];
+                        (m.val, m.view)
+                    };
+                    s.views[tid][loc] = ts;
+                    if acq {
+                        join(&mut s.views[tid], &mview);
+                    }
+                    s.regs[reg] = val;
+                    s.pc[tid] += 1;
+                    succ.push(s);
+                }
+            }
+            Op::FetchAdd { loc, add, acq, rel, reg } => {
+                let mut s = self.clone();
+                let (ts, old, mview) = s.latest(loc);
+                s.views[tid][loc] = ts;
+                if acq {
+                    join(&mut s.views[tid], &mview);
+                }
+                s.regs[reg] = old;
+                s.write(tid, loc, old.wrapping_add(add), rel);
+                s.pc[tid] += 1;
+                succ.push(s);
+            }
+            Op::Cas { loc, expect, new, reg } => {
+                let mut s = self.clone();
+                let (ts, old, mview) = s.latest(loc);
+                s.views[tid][loc] = ts;
+                join(&mut s.views[tid], &mview); // acquire on both outcomes
+                s.regs[reg] = old;
+                if old == expect {
+                    s.write(tid, loc, new, true);
+                }
+                s.pc[tid] += 1;
+                succ.push(s);
+            }
+        }
+        succ
+    }
+}
+
+/// DFS over every interleaving × every legal read. Returns the set of
+/// reachable terminal register assignments and the number of complete
+/// executions explored.
+fn explore(progs: [&[Op]; 2], nregs: usize) -> (BTreeSet<Vec<u64>>, usize) {
+    let mut outcomes = BTreeSet::new();
+    let mut paths = 0usize;
+    let mut stack = vec![State::new(nregs)];
+    while let Some(s) = stack.pop() {
+        let runnable: Vec<usize> = (0..2).filter(|&t| s.pc[t] < progs[t].len()).collect();
+        if runnable.is_empty() {
+            outcomes.insert(s.regs.clone());
+            paths += 1;
+            continue;
+        }
+        for t in runnable {
+            stack.extend(s.step(t, progs[t][s.pc[t]]));
+        }
+    }
+    (outcomes, paths)
+}
+
+// Locations / registers, named for readability.
+const DATA: usize = 0;
+const EPOCH: usize = 1;
+const BELL: usize = 2;
+const CLOSED: usize = 3;
+const R0: usize = 0;
+const R1: usize = 1;
+
+#[test]
+fn enumeration_is_exhaustive() {
+    // Two independent 2-op threads: C(4,2) = 6 interleavings, no read
+    // nondeterminism — the DFS must visit exactly all of them.
+    let t0 = [
+        Op::Store { loc: DATA, val: 1, rel: false },
+        Op::Store { loc: DATA, val: 2, rel: false },
+    ];
+    let t1 = [
+        Op::Store { loc: EPOCH, val: 1, rel: false },
+        Op::Store { loc: EPOCH, val: 2, rel: false },
+    ];
+    let (_, paths) = explore([&t0, &t1], 0);
+    assert_eq!(paths, 6);
+}
+
+#[test]
+fn arena_epoch_release_handoff_is_watertight() {
+    // gpu/arena.rs contract: `atomic(epoch) observe=Acquire rmw=Release`.
+    // Writer stages a plane cell (Relaxed, per its `plane` contract),
+    // then publishes via fetch_add(Release); reader acquires the epoch
+    // and reads the plane. Epoch observed ⇒ staging visible, in EVERY
+    // execution.
+    let writer = [
+        Op::Store { loc: DATA, val: 42, rel: false },
+        Op::FetchAdd { loc: EPOCH, add: 1, acq: false, rel: true, reg: R0 },
+    ];
+    let reader = [
+        Op::Load { loc: EPOCH, acq: true, reg: R0 },
+        Op::Load { loc: DATA, acq: false, reg: R1 },
+    ];
+    let (outcomes, _) = explore([&writer, &reader], 2);
+    assert!(!outcomes.is_empty());
+    for o in &outcomes {
+        if o[R0] == 1 {
+            assert_eq!(o[R1], 42, "acquired epoch but stale plane data: {o:?}");
+        }
+    }
+    // Both branches of the race are actually reachable.
+    assert!(outcomes.iter().any(|o| o[R0] == 1));
+    assert!(outcomes.iter().any(|o| o[R0] == 0));
+}
+
+#[test]
+fn relaxed_epoch_publish_tears() {
+    // Downgrade the publish to Relaxed (what the lint would reject
+    // against the arena contract): a torn execution exists where the
+    // reader sees the new epoch but stale plane data. The Release is
+    // load-bearing.
+    let writer = [
+        Op::Store { loc: DATA, val: 42, rel: false },
+        Op::FetchAdd { loc: EPOCH, add: 1, acq: false, rel: false, reg: R0 },
+    ];
+    let reader = [
+        Op::Load { loc: EPOCH, acq: true, reg: R0 },
+        Op::Load { loc: DATA, acq: false, reg: R1 },
+    ];
+    let (outcomes, _) = explore([&writer, &reader], 2);
+    assert!(
+        outcomes.iter().any(|o| o[R0] == 1 && o[R1] == 0),
+        "expected a stale-data execution under a Relaxed publish"
+    );
+}
+
+#[test]
+fn relaxed_epoch_observe_tears() {
+    // Same, other side: keep the Release publish but observe with
+    // Relaxed — the synchronizes-with edge never forms and the stale
+    // execution reappears. The Acquire is load-bearing too.
+    let writer = [
+        Op::Store { loc: DATA, val: 42, rel: false },
+        Op::FetchAdd { loc: EPOCH, add: 1, acq: false, rel: true, reg: R0 },
+    ];
+    let reader = [
+        Op::Load { loc: EPOCH, acq: false, reg: R0 },
+        Op::Load { loc: DATA, acq: false, reg: R1 },
+    ];
+    let (outcomes, _) = explore([&writer, &reader], 2);
+    assert!(
+        outcomes.iter().any(|o| o[R0] == 1 && o[R1] == 0),
+        "expected a stale-data execution under a Relaxed observe"
+    );
+}
+
+#[test]
+fn doorbell_payload_visible_on_recv() {
+    // devsim doorbell, ring/recv: payload write (Relaxed plane), then
+    // the release ring; recv acquires the bell. Bell observed ⇒
+    // payload visible, always.
+    let ringer = [
+        Op::Store { loc: DATA, val: 7, rel: false },
+        Op::Store { loc: BELL, val: 1, rel: true },
+    ];
+    let receiver = [
+        Op::Load { loc: BELL, acq: true, reg: R0 },
+        Op::Load { loc: DATA, acq: false, reg: R1 },
+    ];
+    let (outcomes, _) = explore([&ringer, &receiver], 2);
+    for o in &outcomes {
+        if o[R0] == 1 {
+            assert_eq!(o[R1], 7, "rang bell but payload not visible: {o:?}");
+        }
+    }
+    assert!(outcomes.iter().any(|o| o[R0] == 1));
+}
+
+#[test]
+fn doorbell_close_cannot_hide_a_ring() {
+    // ring then close, both Release: a receiver that observes the
+    // close (Acquire) must also observe the earlier ring — shutdown
+    // can never swallow a delivered completion.
+    let ringer = [
+        Op::Store { loc: BELL, val: 1, rel: true },
+        Op::Store { loc: CLOSED, val: 1, rel: true },
+    ];
+    let receiver = [
+        Op::Load { loc: CLOSED, acq: true, reg: R0 },
+        Op::Load { loc: BELL, acq: true, reg: R1 },
+    ];
+    let (outcomes, _) = explore([&ringer, &receiver], 2);
+    for o in &outcomes {
+        if o[R0] == 1 {
+            assert_eq!(o[R1], 1, "observed close but lost the ring: {o:?}");
+        }
+    }
+    // With a Relaxed close the ring CAN be lost — the release edge on
+    // shutdown is what makes drain-on-close sound.
+    let ringer_relaxed = [
+        Op::Store { loc: BELL, val: 1, rel: true },
+        Op::Store { loc: CLOSED, val: 1, rel: false },
+    ];
+    let (torn, _) = explore([&ringer_relaxed, &receiver], 2);
+    assert!(torn.iter().any(|o| o[R0] == 1 && o[R1] == 0));
+}
+
+#[test]
+fn slot_claim_is_exclusive() {
+    // The ring-slot claim shape (`atomic(state) rmw=AcqRel`): two
+    // schedulers CAS the same slot from 0 to their own id. In every
+    // execution exactly one CAS reads 0 (wins) and the loser reads the
+    // winner's id — RMW atomicity, which the model must not be able to
+    // violate under any interleaving.
+    let t0 = [Op::Cas { loc: DATA, expect: 0, new: 1, reg: R0 }];
+    let t1 = [Op::Cas { loc: DATA, expect: 0, new: 2, reg: R1 }];
+    let (outcomes, paths) = explore([&t0, &t1], 2);
+    assert_eq!(paths, 2);
+    for o in &outcomes {
+        let wins = [o[R0], o[R1]].iter().filter(|&&v| v == 0).count();
+        assert_eq!(wins, 1, "slot claim must have exactly one winner: {o:?}");
+    }
+}

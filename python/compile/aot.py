@@ -34,8 +34,10 @@ from jax._src.lib import xla_client as xc
 from .manifest import (
     DENSE_DECODE_BATCHES,
     DENSE_PREFILL_GRID,
+    DENSE_VERIFY_KS,
     MOE_DECODE_BATCHES,
     MOE_PREFILL_GRID,
+    MOE_VERIFY_KS,
     manifest_text,
 )
 from .model import TINY, TINY_MOE, ModelConfig, init_params, make_flat_fns
@@ -83,7 +85,9 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
         **{k: np.asarray(v) for k, v in params.items()},
     )
 
-    decode_fn, prefill_fn, prefill_offset_fn = make_flat_fns(cfg, use_pallas=use_pallas)
+    decode_fn, prefill_fn, prefill_offset_fn, decode_verify_fn = make_flat_fns(
+        cfg, use_pallas=use_pallas
+    )
     # Donate the KV pool (input -> output alias): the rust runtime swaps
     # the pool buffer each step anyway, and the alias lets XLA update it
     # in place instead of copying ~33 MB per decode step (§Perf: ~2x on
@@ -91,6 +95,7 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
     kv_arg = len(cfg.param_specs())
     decode_batches = MOE_DECODE_BATCHES if cfg.moe else DENSE_DECODE_BATCHES
     prefill_grid = MOE_PREFILL_GRID if cfg.moe else DENSE_PREFILL_GRID
+    verify_ks = MOE_VERIFY_KS if cfg.moe else DENSE_VERIFY_KS
 
     graphs = []  # (name, kind, batch, seq)
     for b in decode_batches:
@@ -119,6 +124,20 @@ def export_model(cfg: ModelConfig, out_root: str, use_pallas: bool = True) -> No
             f.write(to_hlo_text(lowered))
         graphs.append((name, "prefill_offset", b, s))
         print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
+    # Draft-verify grid: seq in the manifest records k (the draft count);
+    # the token input is [B, k+1] — the lane's pending last token plus k
+    # drafts — and seq_lens doubles as the per-lane write offset, so no
+    # extra runtime input is needed.
+    for b in decode_batches:
+        for k in verify_ks:
+            name = f"decode_verify_b{b}_k{k}"
+            lowered = jax.jit(decode_verify_fn, donate_argnums=(kv_arg,)).lower(
+                *_arg_specs(cfg, b, k + 1)
+            )
+            with open(os.path.join(out, f"{name}.hlo.txt"), "w") as f:
+                f.write(to_hlo_text(lowered))
+            graphs.append((name, "decode_verify", b, k))
+            print(f"  [{cfg.name}] {name} ({time.time() - t0:.1f}s)")
 
     backend = "pallas" if use_pallas else "ref"
     with open(os.path.join(out, "manifest.txt"), "w") as f:

@@ -25,6 +25,16 @@ DENSE_PREFILL_GRID = [
 ]
 MOE_DECODE_BATCHES = [1, 2, 4, 8]
 MOE_PREFILL_GRID = [(b, s) for b in (1, 2) for s in (16, 32, 64, 128)]
+# Draft-verify grid: (batch, k) where k is the *draft* count — the graph
+# processes k+1 token positions per lane (last token + k drafts). Every
+# decode batch size gets verify coverage so `serve --spec-k` never has
+# to silently fall back to plain decode on the shipped artifacts
+# (`blink info` warns when a manifest covers only a strict subset). The
+# k-grid stays small: each k is a separately lowered graph, and the
+# scheduler needs an exact-k match (a wider graph would verify drafts
+# the lane never made).
+DENSE_VERIFY_KS = [2, 4]
+MOE_VERIFY_KS = [2, 4]
 
 Graph = Tuple[str, str, int, int]  # (name, kind, batch, seq)
 
@@ -33,13 +43,20 @@ def graph_grid(moe: bool) -> List[Graph]:
     """The full graph list one export produces, in manifest order:
     decode graphs, then prefill, then the offset-prefill variants (which
     share the prefill grid — S is the padded *suffix* length, and the
-    per-lane offsets are a runtime input)."""
+    per-lane offsets are a runtime input), then the draft-verify grid
+    (seq records k, the draft count; token input is [B, k+1])."""
     decode_batches = MOE_DECODE_BATCHES if moe else DENSE_DECODE_BATCHES
     prefill_grid = MOE_PREFILL_GRID if moe else DENSE_PREFILL_GRID
+    verify_ks = MOE_VERIFY_KS if moe else DENSE_VERIFY_KS
     graphs: List[Graph] = [(f"decode_b{b}", "decode", b, 0) for b in decode_batches]
     graphs += [(f"prefill_b{b}_s{s}", "prefill", b, s) for b, s in prefill_grid]
     graphs += [
         (f"prefill_offset_b{b}_s{s}", "prefill_offset", b, s) for b, s in prefill_grid
+    ]
+    graphs += [
+        (f"decode_verify_b{b}_k{k}", "decode_verify", b, k)
+        for b in decode_batches
+        for k in verify_ks
     ]
     return graphs
 

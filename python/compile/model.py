@@ -439,17 +439,101 @@ def prefill_offset(
     return first.astype(jnp.int32), kv_pool
 
 
+def decode_verify(
+    params: Dict[str, jax.Array],
+    kv_pool: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    tokens: jax.Array,
+    seed: jax.Array,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+    return_logits: bool = False,
+):
+    """Draft-verify decode: one k-wide launch scores k drafted tokens.
+
+    tokens: [B, S] int32 with S = k+1 — column 0 is the lane's pending
+    last token (exactly the input ``decode_step`` would take) and columns
+    1..k are the self-drafted candidates. seq_lens: [B] cached-token
+    counts, as in decode. K/V for all S input tokens is written at true
+    positions ``seq_lens .. seq_lens + k`` (the same pool-write the k+1
+    equivalent sequential decode steps would do), RoPE is applied at
+    those positions, and attention spans the whole cached context through
+    the paged pool — structurally this is ``prefill_offset`` with
+    ``offsets = seq_lens``, except that *every* query position samples a
+    next token rather than only the last row.
+
+    Returns (out_tokens [B, S], kv_pool'): out_tokens[:, j] is the
+    sampled successor of input position j — the verdict for draft j+1,
+    and at the first rejected position, the bonus token. The rust
+    scheduler accepts the longest prefix with drafts[j+1] == out[j] and
+    rolls back the K/V of rejected positions. S = 1 (k = 0) degenerates
+    to ``decode_step`` exactly: same flattened sampling stream, same
+    pool write.
+    """
+    b, s = tokens.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos = seq_lens[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+
+    x = params["tok_embed"][tokens]  # [B, S, D]
+
+    def layer(carry, li):
+        x, kv_pool = carry
+        h2d = _rmsnorm(x.reshape(b * s, -1), params["attn_norm"][li], use_pallas)
+        h = h2d.reshape(b, s, -1)
+        q = (h @ params["wq"][li]).reshape(b, s, hq, dh)
+        k = (h @ params["wk"][li]).reshape(b, s, hkv, dh)
+        v = (h @ params["wv"][li]).reshape(b, s, hkv, dh)
+        posf = pos.reshape(b * s)
+        q = _rope(q.reshape(b * s, hq, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hq, dh
+        )
+        k = _rope(k.reshape(b * s, hkv, dh), posf, cfg.rope_theta, use_pallas).reshape(
+            b, s, hkv, dh
+        )
+        pool_layer = kv_pool[li]
+        pool_layer = _write_kv_prefill_offset(
+            pool_layer, k, v, block_tables, seq_lens, cfg
+        )
+        kv_pool = jax.lax.dynamic_update_index_in_dim(kv_pool, pool_layer, li, 0)
+        attn_fn = (
+            kernels.paged_prefill_attention
+            if use_pallas
+            else ref.paged_prefill_attention_ref
+        )
+        o = attn_fn(q, pool_layer, block_tables, seq_lens)
+        x = x + o.reshape(b, s, hq * dh) @ params["wo"][li]
+        h2 = _rmsnorm(x.reshape(b * s, -1), params["mlp_norm"][li], use_pallas)
+        x = x + _mlp(h2, params, li, cfg, use_pallas).reshape(b, s, -1)
+        return (x, kv_pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(
+        layer, (x, kv_pool), jnp.arange(cfg.n_layers), length=cfg.n_layers
+    )
+
+    # Every query position produces a next-token distribution.
+    x2d = _rmsnorm(x.reshape(b * s, -1), params["final_norm"], use_pallas)
+    logits = x2d @ params["tok_embed"].T  # [B*S, V]
+    if return_logits:
+        return logits.reshape(b, s, -1), kv_pool
+    uniform = jax.random.uniform(jax.random.PRNGKey(seed), (b * s,), jnp.float32)
+    out = _sample(logits, uniform, cfg, use_pallas)
+    return out.astype(jnp.int32).reshape(b, s), kv_pool
+
+
 # ---------------------------------------------------------------------------
 # Flat-argument wrappers for AOT export (rust passes positional buffers)
 # ---------------------------------------------------------------------------
 
 
 def make_flat_fns(cfg: ModelConfig, use_pallas: bool = True):
-    """Return (decode_fn, prefill_fn, prefill_offset_fn) taking flat
-    positional args in manifest order:
+    """Return (decode_fn, prefill_fn, prefill_offset_fn, decode_verify_fn)
+    taking flat positional args in manifest order:
     [*params, kv_pool, block_tables, seq_lens, tokens, seed] — the offset
-    variant takes an extra [B] int32 `offsets` between tokens and seed.
-    Outputs are (next_tokens, kv_pool) tuples."""
+    variant takes an extra [B] int32 `offsets` between tokens and seed;
+    the verify variant's tokens are [B, k+1] (last token + k drafts) and
+    it needs no offsets input because seq_lens already carries the write
+    positions. Outputs are (next_tokens, kv_pool) tuples."""
     names = [n for n, _ in cfg.param_specs()]
 
     def unflatten(args):
@@ -469,7 +553,11 @@ def make_flat_fns(cfg: ModelConfig, use_pallas: bool = True):
         params, (kv, bt, sl, tok, off, seed) = unflatten(args)
         return prefill_offset(params, kv, bt, sl, tok, off, seed, cfg, use_pallas)
 
-    return decode_fn, prefill_fn, prefill_offset_fn
+    def decode_verify_fn(*args):
+        params, (kv, bt, sl, tok, seed) = unflatten(args)
+        return decode_verify(params, kv, bt, sl, tok, seed, cfg, use_pallas)
+
+    return decode_fn, prefill_fn, prefill_offset_fn, decode_verify_fn
 
 
 def empty_kv_pool(cfg: ModelConfig) -> jax.Array:

@@ -14,7 +14,7 @@ CFG = dataclasses.replace(TINY, n_layers=1, num_blocks=8, max_blocks_per_seq=2)
 
 
 def test_decode_graph_lowers_to_hlo_text():
-    decode_fn, _, _ = make_flat_fns(CFG, use_pallas=True)
+    decode_fn, _, _, _ = make_flat_fns(CFG, use_pallas=True)
     lowered = jax.jit(decode_fn).lower(*_arg_specs(CFG, 2, None))
     text = to_hlo_text(lowered)
     assert text.startswith("HloModule")
@@ -23,7 +23,7 @@ def test_decode_graph_lowers_to_hlo_text():
     assert "s32[2]" in text
 
 def test_prefill_graph_lowers_to_hlo_text():
-    _, prefill_fn, _ = make_flat_fns(CFG, use_pallas=True)
+    _, prefill_fn, _, _ = make_flat_fns(CFG, use_pallas=True)
     lowered = jax.jit(prefill_fn).lower(*_arg_specs(CFG, 1, 16))
     text = to_hlo_text(lowered)
     assert text.startswith("HloModule")
@@ -31,12 +31,21 @@ def test_prefill_graph_lowers_to_hlo_text():
 
 
 def test_offset_prefill_graph_lowers_to_hlo_text():
-    _, _, prefill_offset_fn = make_flat_fns(CFG, use_pallas=True)
+    _, _, prefill_offset_fn, _ = make_flat_fns(CFG, use_pallas=True)
     lowered = jax.jit(prefill_offset_fn).lower(*_arg_specs(CFG, 1, 16, offset=True))
     text = to_hlo_text(lowered)
     assert text.startswith("HloModule")
     assert "s32[1,16]" in text  # suffix tokens
     assert "s32[1]" in text  # runtime offsets (and seq_lens)
+
+
+def test_decode_verify_graph_lowers_to_hlo_text():
+    # k = 4 drafts -> the verify graph sees S = k+1 = 5 token positions.
+    _, _, _, decode_verify_fn = make_flat_fns(CFG, use_pallas=True)
+    lowered = jax.jit(decode_verify_fn).lower(*_arg_specs(CFG, 2, 5))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[2,5]" in text  # draft window tokens [B, k+1]
 
 
 def test_arg_specs_match_manifest_order():

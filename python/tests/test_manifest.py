@@ -16,6 +16,7 @@ import pytest
 from compile.manifest import (
     MOE_DECODE_BATCHES,
     MOE_PREFILL_GRID,
+    MOE_VERIFY_KS,
     graph_grid,
     manifest_text,
 )
@@ -88,12 +89,19 @@ def test_moe_graph_grid_covers_decode_and_both_prefill_kinds():
     for b, s in MOE_PREFILL_GRID:
         assert f"prefill_b{b}_s{s}" in names
         assert f"prefill_offset_b{b}_s{s}" in names
+    # Verify coverage spans the *full* decode batch grid, so `serve
+    # --spec-k` never silently falls back on the shipped artifacts.
+    for b in MOE_DECODE_BATCHES:
+        for k in MOE_VERIFY_KS:
+            assert f"decode_verify_b{b}_k{k}" in names
     assert len(names) == len(set(names)) == len(MOE_DECODE_BATCHES) + 2 * len(
         MOE_PREFILL_GRID
-    )
+    ) + len(MOE_DECODE_BATCHES) * len(MOE_VERIFY_KS)
     # Every graph line lands in the manifest with the backend token.
     text = manifest_text(StubMoeConfig(), graphs, "ref")
     assert f"graph decode_b{MOE_DECODE_BATCHES[0]} decode {MOE_DECODE_BATCHES[0]} 0 ref" in text
+    # seq records k (the draft count), not the k+1 token width.
+    assert "graph decode_verify_b1_k2 decode_verify 1 2 ref" in text
     assert all(f"graph {n} " in text for n in names)
 
 

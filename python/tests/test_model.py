@@ -11,6 +11,7 @@ from compile.model import (
     TINY,
     TINY_MOE,
     decode_step,
+    decode_verify,
     empty_kv_pool,
     init_params,
     make_flat_fns,
@@ -240,6 +241,82 @@ def test_offset_prefill_pallas_matches_oracle_scrambled_blocks():
     np.testing.assert_allclose(np.asarray(kvp), np.asarray(kvr), rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_decode_verify_s1_matches_decode_step(setup, use_pallas):
+    """k = 0 degeneration: a 1-wide verify window IS a decode step —
+    same flattened sampling stream, same pool write — so the scheduler's
+    fallback from verify to plain decode can never change outputs."""
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 16], dtype=jnp.int32)
+    _, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=False)
+    t = jnp.asarray([7, 9], dtype=jnp.int32)
+    d, kva = decode_step(params, kv1, bt, sl, t, jnp.uint32(2), CFG, use_pallas=use_pallas)
+    v, kvb = decode_verify(
+        params, kv1, bt, sl, t[:, None], jnp.uint32(2), CFG, use_pallas=use_pallas
+    )
+    assert v.shape == (2, 1)
+    np.testing.assert_array_equal(np.asarray(v[:, 0]), np.asarray(d))
+    np.testing.assert_allclose(np.asarray(kva), np.asarray(kvb), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_decode_verify_matches_sequential_decode_steps(use_pallas):
+    """The draft-verify numerics contract: one k-wide verify launch fed
+    the window [t0, d1, d2] must (a) write the same K/V at positions
+    sl..sl+k that k+1 sequential `decode_step`s fed the same tokens
+    would, and (b) produce per-position logits matching a 1-wide verify
+    at each advanced position (which the test above pins to decode_step)
+    — RoPE phases, causal masking and pool writes all line up at the
+    true positions."""
+    params = init_params(CFG)
+    bt = jnp.asarray([[1, 2, 3, 4]], dtype=jnp.int32)
+    prompt = jnp.asarray(
+        np.random.default_rng(5).integers(0, CFG.vocab_size, (1, 16)), dtype=jnp.int32
+    )
+    sl0 = 12
+    _, kv0 = prefill(
+        params, empty_kv_pool(CFG), bt, jnp.asarray([sl0], jnp.int32), prompt,
+        jnp.uint32(1), CFG, use_pallas=False,
+    )
+    window = jnp.asarray([[3, 11, 40]], dtype=jnp.int32)  # t0 + k=2 drafts
+
+    logits, kv_ver = decode_verify(
+        params, kv0, bt, jnp.asarray([sl0], jnp.int32), window, jnp.uint32(7), CFG,
+        use_pallas=use_pallas, return_logits=True,
+    )
+    assert logits.shape == (1, 3, CFG.vocab_size)
+
+    kv_seq = kv0
+    for j in range(3):
+        sl = jnp.asarray([sl0 + j], jnp.int32)
+        lj, _ = decode_verify(
+            params, kv_seq, bt, sl, window[:, j : j + 1], jnp.uint32(7), CFG,
+            use_pallas=use_pallas, return_logits=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[:, j]), np.asarray(lj[:, 0]),
+            rtol=2e-3, atol=2e-3, err_msg=f"pos {j}",
+        )
+        _, kv_seq = decode_step(
+            params, kv_seq, bt, sl, window[:, j], jnp.uint32(7), CFG,
+            use_pallas=use_pallas,
+        )
+    np.testing.assert_allclose(
+        np.asarray(kv_ver), np.asarray(kv_seq), rtol=3e-4, atol=3e-4
+    )
+
+
+def test_decode_verify_pallas_matches_oracle(setup):
+    params, kv, bt, tok = setup
+    sl = jnp.asarray([10, 16], dtype=jnp.int32)
+    _, kv1 = prefill(params, kv, bt, sl, tok, jnp.uint32(1), CFG, use_pallas=False)
+    win = jnp.asarray([[7, 1, 5, 9, 2], [9, 3, 8, 4, 6]], dtype=jnp.int32)  # k=4
+    v1, kva = decode_verify(params, kv1, bt, sl, win, jnp.uint32(2), CFG, use_pallas=True)
+    v2, kvb = decode_verify(params, kv1, bt, sl, win, jnp.uint32(2), CFG, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_allclose(np.asarray(kva), np.asarray(kvb), rtol=3e-4, atol=3e-4)
+
+
 def test_moe_model_runs_and_matches_oracle():
     params = init_params(CFG_MOE)
     kv = empty_kv_pool(CFG_MOE)
@@ -255,7 +332,9 @@ def test_moe_model_runs_and_matches_oracle():
 
 
 def test_flat_fns_arg_order_matches_param_specs():
-    decode_fn, prefill_fn, prefill_offset_fn = make_flat_fns(CFG, use_pallas=False)
+    decode_fn, prefill_fn, prefill_offset_fn, decode_verify_fn = make_flat_fns(
+        CFG, use_pallas=False
+    )
     params = init_params(CFG)
     args = [params[n] for n, _ in CFG.param_specs()]
     kv = empty_kv_pool(CFG)
@@ -271,6 +350,9 @@ def test_flat_fns_arg_order_matches_param_specs():
     off = jnp.zeros((1,), jnp.int32)
     out, _ = prefill_offset_fn(*args, kv, bt, sl, tokp, off, jnp.uint32(0))
     assert out.shape == (1,)
+    tokv = jnp.zeros((1, 3), jnp.int32)  # k = 2 drafts + last token
+    out, _ = decode_verify_fn(*args, kv, bt, sl, tokv, jnp.uint32(0))
+    assert out.shape == (1, 3)
 
 
 def test_param_count_reasonable():

@@ -375,6 +375,7 @@ pub fn run_live_cell(spec: &CellSpec, p: &LiveParams) -> Cell {
         prefill_us_per_token: p.prefill_us_per_token,
         decode_step_us: p.decode_step_us,
         expert_dispatch_us: p.expert_dispatch_us,
+        ..ModeledCost::zero()
     };
     let executor = Executor::spawn_modeled(&manifest, cost);
     let placement = if spec.host {

@@ -278,7 +278,8 @@ pub fn prefix_live(out: Option<&std::path::Path>) {
     }));
     // Visible per-token prefill cost so the suffix-only win shows up in
     // the turn makespans, not just the counters.
-    let cost = ModeledCost { prefill_us_per_token: 50.0, decode_step_us: 200.0 };
+    let cost =
+        ModeledCost { prefill_us_per_token: 50.0, decode_step_us: 200.0, ..ModeledCost::zero() };
     let executor = Executor::spawn_modeled(&manifest, cost);
     let mut sched = Scheduler::spawn(
         ring.clone(),

@@ -11,6 +11,7 @@
 pub mod interference;
 pub mod live;
 pub mod overload;
+pub mod spec;
 
 use std::io::Write;
 use std::path::Path;

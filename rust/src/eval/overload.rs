@@ -381,7 +381,7 @@ pub fn run_live_overload(p: &LiveOverloadParams) -> LiveOverloadReport {
     let cost = ModeledCost {
         prefill_us_per_token: p.prefill_us_per_token,
         decode_step_us: p.decode_step_us,
-        expert_dispatch_us: 0.0,
+        ..ModeledCost::zero()
     };
     let executor = Executor::spawn_modeled(&manifest, cost);
     let mut sched = Scheduler::spawn(

@@ -57,6 +57,12 @@ pub enum Region {
 pub struct ArenaDims {
     /// Widest decode-graph batch.
     pub decode_lanes: usize,
+    /// Decode-region token plane width: `decode_lanes` for plain decode
+    /// (one token per lane), widened to the largest `batch × (k+1)`
+    /// verify window when the grid ships `decode_verify` graphs — the
+    /// draft-token plane rides the decode region under the same epoch
+    /// protocol, so speculative staging stays zero-allocation.
+    pub decode_tokens: usize,
     /// Widest (offset-)prefill-graph batch.
     pub prefill_lanes: usize,
     /// Largest `batch × seq` token plane over all prefill graphs.
@@ -122,8 +128,14 @@ impl LaunchArena {
         let mbs = dims.max_blocks_per_seq;
         LaunchArena {
             dims,
-            // Decode reads one token per lane; offsets never apply.
-            decode: RegionPlanes::new(dims.decode_lanes, dims.decode_lanes, mbs, false),
+            // Decode reads one token per lane — or a (k+1)-wide draft
+            // window per lane under speculation; offsets never apply.
+            decode: RegionPlanes::new(
+                dims.decode_lanes,
+                dims.decode_tokens.max(dims.decode_lanes),
+                mbs,
+                false,
+            ),
             prefill: RegionPlanes::new(dims.prefill_lanes, dims.prefill_tokens, mbs, true),
             epoch: AtomicU64::new(0),
         }
@@ -161,8 +173,9 @@ impl LaunchArena {
     }
 
     /// Write one token at a flat plane index (decode: index = lane;
-    /// prefill: index = lane × grid_seq + position, the row-major layout
-    /// the graphs expect).
+    /// decode verify: index = lane × (k+1) + window position; prefill:
+    /// index = lane × grid_seq + position — the row-major layouts the
+    /// graphs expect).
     // lint: no_alloc no_panic
     pub fn write_token(&self, r: Region, idx: usize, v: i32) {
         self.region(r).tokens[idx].store(v, Ordering::Relaxed);
@@ -253,10 +266,30 @@ mod tests {
     fn arena() -> LaunchArena {
         LaunchArena::new(ArenaDims {
             decode_lanes: 4,
+            decode_tokens: 4 * 3, // k=2 verify windows over every lane
             prefill_lanes: 2,
             prefill_tokens: 2 * 32,
             max_blocks_per_seq: 3,
         })
+    }
+
+    #[test]
+    fn decode_token_plane_carries_verify_windows() {
+        // A k=2 verify launch stages (k+1)-wide windows row-major in the
+        // decode token plane; plain decode keeps using index = lane.
+        let a = arena();
+        for lane in 0..2 {
+            a.write_seq_len(Region::Decode, lane, 10 + lane as i32);
+            for j in 0..3 {
+                a.write_token(Region::Decode, lane * 3 + j, (100 * lane + j) as i32);
+            }
+        }
+        a.stage_extents(Region::Decode, 2 * 3, 2, 6, 0);
+        a.publish();
+        let (mut bt, mut sl, mut tok, mut off) = (vec![], vec![], vec![], vec![]);
+        a.snapshot_into(Region::Decode, &mut bt, &mut sl, &mut tok, &mut off);
+        assert_eq!(tok, vec![0, 1, 2, 100, 101, 102]);
+        assert_eq!(sl, vec![10, 11]);
     }
 
     #[test]

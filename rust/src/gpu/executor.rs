@@ -49,9 +49,12 @@ pub struct LaunchCmd {
 
 impl LaunchCmd {
     /// Which arena region this launch reads, from the graph kind.
+    /// Verify launches read the decode region: they are decode steps
+    /// with a (k+1)-wide token window per lane (see `gpu::planner`'s
+    /// `stage_decode_verify`).
     pub fn region(kind: GraphKind) -> Region {
         match kind {
-            GraphKind::Decode => Region::Decode,
+            GraphKind::Decode | GraphKind::DecodeVerify => Region::Decode,
             GraphKind::Prefill | GraphKind::PrefillOffset => Region::Prefill,
         }
     }
@@ -75,18 +78,60 @@ pub struct ModeledCost {
     /// cheaper per token as the batch grows but pays a dispatch tax a
     /// dense model never sees. Ignored for dense manifests.
     pub expert_dispatch_us: f64,
+    /// Speculative verify only: extra cost per *draft* position per
+    /// lane, on top of the flat decode step — a verify launch over
+    /// batch `b` with `k` drafts charges
+    /// `decode_step_us + verify_pos_us·b·k` (plus the MoE dispatch
+    /// tax), so at `k = 0` it degenerates to a plain decode step,
+    /// mirroring `CostModel::verify_step_s`.
+    pub verify_pos_us: f64,
+    /// When set, decode/prefill emission follows the deterministic
+    /// *greedy chain* ([`greedy_chain_token`]): each lane's next token
+    /// is a pure function of (previous token, absolute position), not
+    /// of the launch seed. This makes a lane's token stream invariant
+    /// to how many launches produced it — the k-step verify window and
+    /// k sequential decode steps yield byte-identical streams, which
+    /// is what pins speculative decode's correctness tests. Chain mode
+    /// does *not* skip EOS, so mid-window EOS truncation occurs
+    /// naturally. Verify graphs are always chain-scored, regardless of
+    /// this flag.
+    pub greedy_chain: bool,
 }
 
 impl Default for ModeledCost {
     fn default() -> Self {
-        ModeledCost { prefill_us_per_token: 0.2, decode_step_us: 2.0, expert_dispatch_us: 0.0 }
+        ModeledCost {
+            prefill_us_per_token: 0.2,
+            decode_step_us: 2.0,
+            expert_dispatch_us: 0.0,
+            verify_pos_us: 0.4,
+            greedy_chain: false,
+        }
     }
 }
 
 impl ModeledCost {
     pub fn zero() -> Self {
-        ModeledCost { prefill_us_per_token: 0.0, decode_step_us: 0.0, expert_dispatch_us: 0.0 }
+        ModeledCost {
+            prefill_us_per_token: 0.0,
+            decode_step_us: 0.0,
+            expert_dispatch_us: 0.0,
+            verify_pos_us: 0.0,
+            greedy_chain: false,
+        }
     }
+}
+
+/// Deterministic greedy-chain successor: the token the modeled model
+/// "greedily decodes" after seeing `prev` at absolute sequence position
+/// `pos`. Pure in `(prev, pos)` — replaying a lane token by token and
+/// scoring a whole verify window in one launch produce byte-identical
+/// streams (the property speculative decode's acceptance rule relies
+/// on). EOS is deliberately *not* skipped: with a small test vocab the
+/// chain hits EOS naturally, exercising mid-window truncation.
+pub fn greedy_chain_token(vocab: u32, prev: u32, pos: u64) -> u32 {
+    let h = mix64(((prev as u64) << 32) ^ pos.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (h % (vocab.max(1) as u64)) as u32
 }
 
 /// Expected number of distinct experts activated by a decode step over
@@ -121,7 +166,9 @@ impl BoundaryScratch {
             seq_lens: Vec::with_capacity(sl),
             tokens: Vec::with_capacity(tok),
             offsets: Vec::with_capacity(off),
-            out: Vec::with_capacity(sl),
+            // Verify launches publish one token per *window position*
+            // (b·(k+1) = the token-plane extent), not one per lane.
+            out: Vec::with_capacity(tok.max(sl)),
         }
     }
 
@@ -212,10 +259,13 @@ impl Executor {
     /// Spawn a *modeled* executor over the manifest's graph grid: the
     /// same doorbell/poll protocol, the same arena-boundary snapshot and
     /// the same shape validation as the real engine, with deterministic
-    /// token generation instead of PJRT execution. Tokens never equal the
-    /// manifest's EOS, so a lane always runs to its `max_new` budget —
-    /// which is what makes scheduler-level assertions (batch counts,
-    /// offset-graph launches) reproducible.
+    /// token generation instead of PJRT execution. In the default
+    /// (seed-based) mode tokens never equal the manifest's EOS, so a
+    /// lane always runs to its `max_new` budget — which is what makes
+    /// scheduler-level assertions (batch counts, offset-graph launches)
+    /// reproducible. With [`ModeledCost::greedy_chain`] set, emission
+    /// follows the greedy chain instead (EOS included), the mode the
+    /// speculative-decode correctness tests run under.
     pub fn spawn_modeled(manifest: &ModelManifest, cost: ModeledCost) -> Executor {
         let cache = crate::gpu::scheduler::cache_from_manifest(manifest);
         let max_blocks = manifest.max_blocks_per_seq;
@@ -228,7 +278,8 @@ impl Executor {
         // Pre-reserve the boundary scratch to the grid's widest shapes so
         // even the first launches never grow it mid-run.
         let max_b = cache.specs().iter().map(|s| s.batch).max().unwrap_or(1).max(1);
-        let max_tok = cache.max_launch_tokens().max(max_b);
+        let max_tok =
+            cache.max_launch_tokens().max(cache.max_verify_launch_tokens()).max(max_b);
         let handle = std::thread::Builder::new()
             .name("gpu-executor-modeled".into())
             .spawn(move || {
@@ -300,12 +351,19 @@ fn modeled_step(
     }
 
     // Cost: suffix-only for offset graphs by construction — the launched
-    // token count *is* batch × padded-suffix.
+    // token count *is* batch × padded-suffix. Verify pays a flat decode
+    // step plus a per-draft-position surcharge (k = 0 would degenerate
+    // to plain decode, matching `CostModel::verify_step_s`).
     let us = match spec.kind {
-        GraphKind::Decode => {
+        GraphKind::Decode | GraphKind::DecodeVerify => {
             let dispatch =
                 moe.map_or(0.0, |(e, k)| cost.expert_dispatch_us * expected_active_experts(e, k, b));
-            cost.decode_step_us + dispatch
+            let verify = if spec.kind == GraphKind::DecodeVerify {
+                cost.verify_pos_us * (b * spec.seq) as f64
+            } else {
+                0.0
+            };
+            cost.decode_step_us + verify + dispatch
         }
         GraphKind::Prefill | GraphKind::PrefillOffset => {
             cost.prefill_us_per_token * (b * spec.seq) as f64
@@ -314,12 +372,58 @@ fn modeled_step(
     crate::devsim::spin_us(us);
 
     scratch.out.clear();
-    scratch.out.extend((0..b).map(|lane| {
-        let h = mix64((cmd.seed as u64) ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let r = (h % (vocab as u64 - 1)) as u32;
-        // Skip EOS so modeled lanes always run their full budget.
-        if r >= eos { r + 1 } else { r }
-    }));
+    match spec.kind {
+        // Verify windows are always chain-scored: out[lane·w + j] is the
+        // greedy successor of window position j at absolute position
+        // seq_len + j — byte-identical to j chain-mode decode steps,
+        // which is exactly what the retire pass's prefix-acceptance
+        // rule compares against.
+        GraphKind::DecodeVerify => {
+            let w = spec.seq + 1;
+            for lane in 0..b {
+                let base = scratch.seq_lens[lane] as u64;
+                for j in 0..w {
+                    let prev = scratch.tokens[lane * w + j] as u32;
+                    scratch.out.push(greedy_chain_token(vocab, prev, base + j as u64));
+                }
+            }
+        }
+        GraphKind::Decode if cost.greedy_chain => {
+            // The staged token is the lane's last sampled token, sitting
+            // at absolute position seq_len (its K/V write slot).
+            for lane in 0..b {
+                let prev = scratch.tokens[lane] as u32;
+                scratch.out.push(greedy_chain_token(vocab, prev, scratch.seq_lens[lane] as u64));
+            }
+        }
+        GraphKind::Prefill | GraphKind::PrefillOffset if cost.greedy_chain => {
+            // Root the chain in the prompt itself: the first generated
+            // token follows the last *real* prompt token at position
+            // len − 1, independent of the launch seed — so the whole
+            // stream is a pure function of the prompt and chain-mode
+            // runs with different launch interleavings stay comparable.
+            for lane in 0..b {
+                let len = (scratch.seq_lens[lane].max(1)) as usize;
+                let off = if spec.kind == GraphKind::PrefillOffset {
+                    scratch.offsets[lane] as usize
+                } else {
+                    0
+                };
+                let idx = lane * spec.seq + (len - off - 1).min(spec.seq - 1);
+                let prev = scratch.tokens[idx] as u32;
+                scratch.out.push(greedy_chain_token(vocab, prev, (len - 1) as u64));
+            }
+        }
+        _ => {
+            scratch.out.extend((0..b).map(|lane| {
+                let h =
+                    mix64((cmd.seed as u64) ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let r = (h % (vocab as u64 - 1)) as u32;
+                // Skip EOS so modeled lanes always run their full budget.
+                if r >= eos { r + 1 } else { r }
+            }));
+        }
+    }
     Ok(())
 }
 
@@ -363,5 +467,18 @@ mod tests {
         assert_eq!(expected_active_experts(4, 2, 0), 0.0);
         // top_k clamped to n_experts: dense-equivalent routing.
         assert!((expected_active_experts(4, 9, 3) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_chain_is_pure_and_in_range() {
+        // Pure in (prev, pos), bounded by vocab, and position-sensitive
+        // (the verify acceptance rule leans on all three).
+        let a = greedy_chain_token(17, 5, 42);
+        assert_eq!(a, greedy_chain_token(17, 5, 42));
+        assert!(a < 17);
+        assert_ne!(greedy_chain_token(1 << 20, 5, 42), greedy_chain_token(1 << 20, 5, 43));
+        assert_ne!(greedy_chain_token(1 << 20, 5, 42), greedy_chain_token(1 << 20, 6, 42));
+        // Degenerate vocab never divides by zero.
+        assert_eq!(greedy_chain_token(0, 1, 1), 0);
     }
 }

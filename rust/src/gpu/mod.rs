@@ -32,7 +32,7 @@ pub mod scheduler;
 pub mod stats;
 
 pub use arena::{ArenaDims, LaunchArena};
-pub use executor::{Executor, LaunchCmd, ModeledCost};
+pub use executor::{greedy_chain_token, Executor, LaunchCmd, ModeledCost};
 pub use policy::{AdmissionPolicy, Candidate, PolicyKind};
 pub use scheduler::{HostContention, Placement, PrefixReuse, Scheduler, SchedulerConfig};
 pub use stats::SchedulerStats;

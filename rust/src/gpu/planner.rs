@@ -112,6 +112,12 @@ pub struct BatchPlanner {
     /// row (block tables included) instead of the incremental per-step
     /// touch.
     decode_synced_grid: usize,
+    /// Token-plane extent the decode region was last staged with —
+    /// `grid` for plain decode, `grid × (k+1)` for a verify launch. A
+    /// mismatch (the batch switched between plain and verify decode, or
+    /// changed k) forces a full resync so the staged extents and ghost
+    /// windows match the new layout.
+    decode_synced_tok: usize,
 }
 
 impl BatchPlanner {
@@ -133,11 +139,13 @@ impl BatchPlanner {
             block_size,
             arena: Arc::new(LaunchArena::new(ArenaDims {
                 decode_lanes: 1,
+                decode_tokens: 1,
                 prefill_lanes: max_prefill_batch.max(max_prefill_offset_batch).max(1),
                 prefill_tokens: 1,
                 max_blocks_per_seq,
             })),
             decode_synced_grid: 0,
+            decode_synced_tok: 0,
         }
     }
 
@@ -152,6 +160,12 @@ impl BatchPlanner {
             block_size,
             arena: Arc::new(LaunchArena::new(ArenaDims {
                 decode_lanes: cache.max_decode_batch().max(1),
+                // Widened for the draft-verify windows when the grid
+                // ships decode_verify graphs (max batch × (k+1)).
+                decode_tokens: cache
+                    .max_verify_launch_tokens()
+                    .max(cache.max_decode_batch())
+                    .max(1),
                 prefill_lanes: cache
                     .max_prefill_batch()
                     .max(cache.max_prefill_offset_batch())
@@ -160,6 +174,7 @@ impl BatchPlanner {
                 max_blocks_per_seq,
             })),
             decode_synced_grid: 0,
+            decode_synced_tok: 0,
         }
     }
 
@@ -197,7 +212,7 @@ impl BatchPlanner {
             self.arena.dims().decode_lanes
         );
         let a = &self.arena;
-        if self.decode_synced_grid != grid_batch {
+        if self.decode_synced_grid != grid_batch || self.decode_synced_tok != grid_batch {
             for (i, l) in lanes.iter().enumerate() {
                 a.write_block_row(Region::Decode, i, &l.cache.blocks);
             }
@@ -212,6 +227,7 @@ impl BatchPlanner {
                 0,
             );
             self.decode_synced_grid = grid_batch;
+            self.decode_synced_tok = grid_batch;
         }
         for (i, l) in lanes.iter().enumerate() {
             a.write_seq_len(Region::Decode, i, l.cache.cached_len as i32);
@@ -222,6 +238,72 @@ impl BatchPlanner {
         for g in lanes.len()..grid_batch {
             a.write_seq_len(Region::Decode, g, lanes[0].cache.cached_len as i32);
             a.write_token(Region::Decode, g, lanes[0].last_token);
+        }
+        a.publish()
+    }
+
+    /// Stage the live decode batch as a draft-verify launch: each lane's
+    /// `(k+1)`-wide window — its pending last token followed by its `k`
+    /// drafts from `drafts[lane*k .. lane*k + k]` — lands row-major in
+    /// the decode token plane. Same incremental contract as
+    /// [`Self::stage_decode`]: block-table rows persist across steps;
+    /// switching between plain and verify layouts (or changing k)
+    /// triggers one full resync because the staged token extent changes.
+    /// Steady-state speculative decode touches `grid_batch` seq_lens
+    /// slots and `grid_batch × (k+1)` token slots, nothing else — still
+    /// zero-allocation.
+    pub fn stage_decode_verify(
+        &mut self,
+        lanes: &[Lane],
+        grid_batch: usize,
+        k: usize,
+        drafts: &[i32],
+    ) -> u64 {
+        debug_assert!(!lanes.is_empty() && lanes.len() <= grid_batch && k > 0);
+        debug_assert_eq!(drafts.len(), lanes.len() * k, "k drafts per live lane");
+        let w = k + 1;
+        let dims = self.arena.dims();
+        assert!(
+            grid_batch <= dims.decode_lanes && grid_batch * w <= dims.decode_tokens,
+            "staging a ({grid_batch}, k={k}) verify launch on an arena sized for {} lanes / {} \
+             decode tokens — planners built with BatchPlanner::new are rebuild-path only; \
+             use for_cache",
+            dims.decode_lanes,
+            dims.decode_tokens
+        );
+        let a = &self.arena;
+        if self.decode_synced_grid != grid_batch || self.decode_synced_tok != grid_batch * w {
+            for (i, l) in lanes.iter().enumerate() {
+                a.write_block_row(Region::Decode, i, &l.cache.blocks);
+            }
+            for g in lanes.len()..grid_batch {
+                a.write_block_row(Region::Decode, g, &lanes[0].cache.blocks);
+            }
+            a.stage_extents(
+                Region::Decode,
+                grid_batch * self.max_blocks_per_seq,
+                grid_batch,
+                grid_batch * w,
+                0,
+            );
+            self.decode_synced_grid = grid_batch;
+            self.decode_synced_tok = grid_batch * w;
+        }
+        for (i, l) in lanes.iter().enumerate() {
+            a.write_seq_len(Region::Decode, i, l.cache.cached_len as i32);
+            a.write_token(Region::Decode, i * w, l.last_token);
+            for j in 0..k {
+                a.write_token(Region::Decode, i * w + 1 + j, drafts[i * k + j]);
+            }
+        }
+        // Ghost lanes replicate lane 0's whole window: their KV writes
+        // must be byte-identical to lane 0's so they stay benign.
+        for g in lanes.len()..grid_batch {
+            a.write_seq_len(Region::Decode, g, lanes[0].cache.cached_len as i32);
+            a.write_token(Region::Decode, g * w, lanes[0].last_token);
+            for j in 0..k {
+                a.write_token(Region::Decode, g * w + 1 + j, drafts[j]);
+            }
         }
         a.publish()
     }
@@ -477,6 +559,39 @@ impl BatchPlanner {
         }
         LaunchInputs { block_tables, seq_lens, tokens, offsets: vec![] }
     }
+
+    /// Rebuild-path marshal for a draft-verify launch (the reference
+    /// [`Self::stage_decode_verify`] is property-tested against): each
+    /// lane contributes a `(k+1)`-wide token window — last token + its
+    /// `k` drafts — with ghost lanes replicating lane 0's window.
+    pub fn decode_verify_inputs(
+        &self,
+        lanes: &[Lane],
+        grid_batch: usize,
+        k: usize,
+        drafts: &[i32],
+    ) -> LaunchInputs {
+        let mbs = self.max_blocks_per_seq;
+        debug_assert!(!lanes.is_empty() && lanes.len() <= grid_batch && k > 0);
+        debug_assert_eq!(drafts.len(), lanes.len() * k);
+        let w = k + 1;
+        let mut block_tables = Vec::with_capacity(grid_batch * mbs);
+        let mut seq_lens = Vec::with_capacity(grid_batch);
+        let mut tokens = Vec::with_capacity(grid_batch * w);
+        for (i, l) in lanes.iter().enumerate() {
+            block_tables.extend(l.cache.table_row(mbs));
+            seq_lens.push(l.cache.cached_len as i32);
+            tokens.push(l.last_token);
+            tokens.extend_from_slice(&drafts[i * k..(i + 1) * k]);
+        }
+        for _ in lanes.len()..grid_batch {
+            block_tables.extend(lanes[0].cache.table_row(mbs));
+            seq_lens.push(lanes[0].cache.cached_len as i32);
+            tokens.push(lanes[0].last_token);
+            tokens.extend_from_slice(&drafts[..k]);
+        }
+        LaunchInputs { block_tables, seq_lens, tokens, offsets: vec![] }
+    }
 }
 
 #[cfg(test)]
@@ -652,6 +767,20 @@ mod tests {
                 }
             }
         }
+        // Verify grid k ∈ {2, 4} over every decode batch (sizes the
+        // decode token plane for the verify staging tests).
+        for b in [1usize, 2, 4] {
+            for k in [2usize, 4] {
+                specs.push(GraphSpec {
+                    id: GraphId(id),
+                    name: format!("decode_verify_b{b}_k{k}"),
+                    kind: GraphKind::DecodeVerify,
+                    batch: b,
+                    seq: k,
+                });
+                id += 1;
+            }
+        }
         BatchPlanner::for_cache(&GraphCache::new(specs), 4, 16)
     }
 
@@ -746,6 +875,70 @@ mod tests {
             assert_eq!(got.seq_lens, want.seq_lens);
             assert_eq!(got.tokens, want.tokens);
             assert_eq!(got.offsets, want.offsets);
+        });
+    }
+
+    /// The verify staging path must marshal byte-identically to its
+    /// rebuild reference — full sync, incremental same-k steps, then a
+    /// plain↔verify layout switch (which must resync extents without an
+    /// explicit mark_decode_dirty).
+    #[test]
+    fn prop_verify_staging_matches_rebuild_path() {
+        run_prop("verify-arena-vs-rebuild", 0x5EC, 100, |rng: &mut Rng| {
+            let mut p = staged_planner();
+            let k = if rng.below(2) == 0 { 2usize } else { 4 };
+            let mut next_block = 1u32;
+            let mut lanes: Vec<Lane> = (0..1 + rng.below(4) as usize)
+                .map(|i| {
+                    let nb = 1 + rng.below(4) as usize;
+                    let blocks: Vec<u32> = (next_block..next_block + nb as u32).collect();
+                    next_block += nb as u32;
+                    mk_lane(i, blocks, 1 + rng.below(60) as usize, rng.below(2048) as i32)
+                })
+                .collect();
+            let grid = lanes.len().next_power_of_two();
+            let mut drafts: Vec<i32> =
+                (0..lanes.len() * k).map(|_| rng.below(2048) as i32).collect();
+
+            p.mark_decode_dirty();
+            p.stage_decode_verify(&lanes, grid, k, &drafts);
+            let want = p.decode_verify_inputs(&lanes, grid, k, &drafts);
+            let got = snapshot(&p, Region::Decode);
+            assert_eq!(got.block_tables, want.block_tables);
+            assert_eq!(got.seq_lens, want.seq_lens);
+            assert_eq!(got.tokens, want.tokens, "verify windows row-major");
+            assert_eq!(got.tokens.len(), grid * (k + 1));
+
+            // Incremental same-k steps: fresh drafts, bumped state.
+            for _ in 0..2 {
+                for l in lanes.iter_mut() {
+                    l.cache.cached_len += 1;
+                    l.last_token = rng.below(2048) as i32;
+                }
+                for d in drafts.iter_mut() {
+                    *d = rng.below(2048) as i32;
+                }
+                p.stage_decode_verify(&lanes, grid, k, &drafts);
+                let want = p.decode_verify_inputs(&lanes, grid, k, &drafts);
+                let got = snapshot(&p, Region::Decode);
+                assert_eq!(got.tokens, want.tokens);
+                assert_eq!(got.seq_lens, want.seq_lens);
+                assert_eq!(got.block_tables, want.block_tables, "rows persist across steps");
+            }
+
+            // Drop to plain decode (no membership change): the staged
+            // token extent must shrink to `grid` without mark_decode_dirty.
+            p.stage_decode(&lanes, grid);
+            let want = p.decode_inputs(&lanes, grid);
+            let got = snapshot(&p, Region::Decode);
+            assert_eq!(got.tokens, want.tokens, "plain layout after verify");
+            assert_eq!(got.tokens.len(), grid);
+
+            // And back to verify.
+            p.stage_decode_verify(&lanes, grid, k, &drafts);
+            let want = p.decode_verify_inputs(&lanes, grid, k, &drafts);
+            let got = snapshot(&p, Region::Decode);
+            assert_eq!(got.tokens, want.tokens, "verify layout after plain");
         });
     }
 

@@ -56,7 +56,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::devsim::CompletionBuffer;
-use crate::gpu::executor::{Executor, LaunchCmd};
+use crate::gpu::executor::{greedy_chain_token, Executor, LaunchCmd};
 use crate::gpu::launcher::{Completions, Launcher};
 use crate::gpu::planner::{BatchPlanner, Lane, PrefillGroup, PrefillSeq};
 use crate::gpu::policy::{AdmissionPolicy, Candidate, PolicyKind};
@@ -127,6 +127,22 @@ pub struct SchedulerConfig {
     /// point). `None` = isolated host. See
     /// [`HostOrchestrator::set_contention`].
     pub host_contention: Option<HostContention>,
+    /// Speculative decoding (DESIGN.md §11): number of self-drafted
+    /// tokens verified per decode launch through a `decode_verify`
+    /// graph, 0 = off (the paper's one-token decode). Honored only when
+    /// the artifacts ship verify graphs at exactly this k (`blink info`
+    /// reports the grid); per-step, batch sizes the verify grid misses
+    /// and lanes within k tokens of their budget fall back to plain
+    /// decode, so enabling speculation never changes *which* tokens a
+    /// request gets — only how many launches produce them.
+    pub spec_k: usize,
+    /// Target draft-acceptance probability of the deterministic
+    /// self-drafter (clamped to [0, 1] at spawn). Each draft position
+    /// is deliberately corrupted with probability `1 − spec_accept` by
+    /// a seeded position hash, so on the modeled executor speculative
+    /// throughput is measurable at any acceptance level while emitted
+    /// tokens stay exactly the greedy sequence. 1.0 = perfect drafts.
+    pub spec_accept: f64,
 }
 
 /// Intensity of the deterministic antagonist channel: the host
@@ -151,6 +167,8 @@ impl Default for SchedulerConfig {
             prefix_reuse: PrefixReuse::Auto,
             prefill_chunk_tokens: None,
             host_contention: None,
+            spec_k: 0,
+            spec_accept: 1.0,
         }
     }
 }
@@ -297,6 +315,17 @@ struct SchedulerCore {
     chunk_tokens: usize,
     /// Ticket of the most recently admitted request (out-of-order stat).
     last_admitted_ticket: Option<u64>,
+    /// Resolved speculation width: `config.spec_k` crossed with the
+    /// artifacts (0 unless the manifest ships `decode_verify` graphs at
+    /// exactly that k). See [`SchedulerConfig::spec_k`].
+    spec_k: usize,
+    /// Drafter acceptance knob, clamped to [0, 1] at spawn.
+    spec_accept: f64,
+    /// Per-iteration draft-token scratch, row-major `[lane][spec_k]` —
+    /// filled by `draft_lanes`, consumed by `stage_decode_verify`, and
+    /// read again by the retire pass for prefix matching. Preallocated
+    /// to `max_batch × spec_k` so the verify hot loop never grows it.
+    draft_scratch: Vec<i32>,
 }
 
 impl SchedulerCore {
@@ -336,7 +365,22 @@ impl SchedulerCore {
             BatchPlanner::for_cache(&cache, manifest.max_blocks_per_seq, manifest.block_size);
         let launcher =
             Launcher::new(executor, gpu_resident, config.apply_launch_delays, stats.clone());
-        let completions = Completions::new(Arc::new(CompletionBuffer::new(max_lanes.max(16))));
+        // A verify launch retires up to batch × (k+1) tokens, so the
+        // completion buffer and the poll scratch must cover the widest
+        // verify grid, not just the lane count.
+        let max_poll = max_lanes.max(cache.max_verify_launch_tokens()).max(16);
+        let completions = Completions::new(Arc::new(CompletionBuffer::new(max_poll)));
+        // Speculation is only as real as the artifacts: a configured k
+        // with no decode_verify graphs at that exact k resolves to 0
+        // (plain decode — the graceful-fallback convention reuse and
+        // chunking follow). Partial *batch* coverage at the right k
+        // stays enabled and falls back per step (`blink info` warns).
+        let spec_k = if config.spec_k > 0 && cache.verify_ks().contains(&config.spec_k) {
+            config.spec_k
+        } else {
+            0
+        };
+        let spec_accept = config.spec_accept.clamp(0.0, 1.0);
         // Live reuse is only as real as the artifacts: `Auto` flips on
         // exactly when the manifest provides offset prefill graphs
         // (graceful fallback to the paper's cold behavior otherwise).
@@ -382,10 +426,13 @@ impl SchedulerCore {
             max_batch,
             scan_scratch: Vec::with_capacity(num_slots),
             cand_scratch: Vec::with_capacity(num_slots),
-            token_scratch: Vec::with_capacity(max_lanes.max(16)),
+            token_scratch: Vec::with_capacity(max_poll),
             reuse,
             chunk_tokens,
             last_admitted_ticket: None,
+            spec_k,
+            spec_accept,
+            draft_scratch: Vec::with_capacity(max_batch * spec_k.max(1)),
         }
     }
 
@@ -1105,7 +1152,29 @@ impl SchedulerCore {
     fn decode_step(&mut self, draining: bool, iter_t0: Instant) {
         let live = self.lanes.len();
         debug_assert!(live > 0);
-        let gid = self.cache.select_decode(live).expect("decode grid covers batch sizes");
+        // Speculative verify eligibility (DESIGN.md §11): speculation is
+        // resolved on, the verify grid covers this batch size, and every
+        // lane has strictly more than k tokens of budget left — the
+        // budget-edge clamp. A verify launch writes K/V optimistically at
+        // `cached_len .. cached_len + k`, which stays inside the
+        // admission reservation exactly when `generated + k < max_new`;
+        // tail-of-budget iterations run plain decode instead.
+        let mut verify_gid = None;
+        if self.spec_k > 0
+            && self
+                .lanes
+                .iter()
+                .all(|l| (l.max_new.saturating_sub(l.generated) as usize) > self.spec_k)
+        {
+            verify_gid = self.cache.select_decode_verify(live, self.spec_k);
+        }
+        let k = if verify_gid.is_some() { self.spec_k } else { 0 };
+        // Tokens staged and retired per lane this launch: the pending
+        // token plus k drafts. Plain decode is the w = 1 case, so one
+        // retire pass below serves both shapes.
+        let w = k + 1;
+        let gid = verify_gid
+            .unwrap_or_else(|| self.cache.select_decode(live).expect("decode grid covers batch sizes"));
         let grid_batch = self.cache.spec(gid).batch;
 
         // CPU-resident placement: the host reassembles the batch before
@@ -1115,8 +1184,20 @@ impl SchedulerCore {
         }
 
         // Stage the batch in place: per-lane seq_len bump + last_token
-        // write; block-table rows only after a membership change.
-        let epoch = self.planner.stage_decode(&self.lanes, grid_batch);
+        // write (plain decode), or the (k+1)-wide window of pending
+        // token + self-drafted tokens (verify); block-table rows only
+        // after a membership change. The scratch swap keeps the borrow
+        // checker happy without cloning: `draft_lanes` filled it, the
+        // planner reads it, and the retire pass reads it again below.
+        let epoch = if k > 0 {
+            self.draft_lanes(k);
+            let drafts = std::mem::take(&mut self.draft_scratch);
+            let e = self.planner.stage_decode_verify(&self.lanes, grid_batch, k, &drafts);
+            self.draft_scratch = drafts;
+            e
+        } else {
+            self.planner.stage_decode(&self.lanes, grid_batch)
+        };
         let seed = self.next_seed();
         self.launcher.launch(LaunchCmd {
             graph: gid,
@@ -1138,7 +1219,7 @@ impl SchedulerCore {
         };
 
         let mut tokens = std::mem::take(&mut self.token_scratch);
-        let ok = self.completions.poll_into(grid_batch, &mut tokens);
+        let ok = self.completions.poll_into(grid_batch * w, &mut tokens);
         self.token_scratch = tokens;
         if !ok {
             let lanes = std::mem::take(&mut self.lanes);
@@ -1153,24 +1234,58 @@ impl SchedulerCore {
 
         self.stats.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.stats.batch_occupancy_sum.fetch_add(live as u64, Ordering::Relaxed);
+        if k > 0 {
+            self.stats.spec_drafted.fetch_add((live * k) as u64, Ordering::Relaxed);
+        }
 
         // Apply results and retire finished lanes in one reverse
         // in-place pass — `swap_remove` only disturbs indices above the
         // cursor, which this pass has already visited, so no scratch
-        // list of finished indices is needed.
+        // list of finished indices is needed. Each lane's completion
+        // window is `w` sampled successors `o_0..o_{k}` (o_j answers
+        // window position j); plain decode is the w = 1 window.
+        let eos = self.manifest.eos_token;
         let mut retired = 0u64;
         let mut i = self.lanes.len();
         while i > 0 {
             i -= 1;
-            let tok = self.token_scratch[i] as i32;
+            let outs = &self.token_scratch[i * w..(i + 1) * w];
             let lane = &mut self.lanes[i];
-            lane.cache.cached_len += 1;
-            lane.generated += 1;
-            lane.last_token = tok;
+            // Longest accepted prefix: o_j is the true successor of
+            // window position j, so o_j is emittable only once drafts
+            // d_1..d_j all matched o_0..o_{j-1}. Stop at EOS (nothing
+            // may follow the end of sequence) and at the budget edge;
+            // o_0 (the bonus/plain token) is always valid.
+            let budget = lane.max_new.saturating_sub(lane.generated) as usize;
+            let mut emitted = 1usize;
+            while emitted <= k
+                && emitted < budget
+                && outs[emitted - 1] != eos
+                && self.draft_scratch[i * k + emitted - 1] == outs[emitted - 1] as i32
+            {
+                emitted += 1;
+            }
+            let accepted = emitted - 1;
+            // The launch optimistically wrote K/V for all w window
+            // positions; keep the accepted span and roll the rejected
+            // tail back (kvcache invariant 5's speculative extension —
+            // blocks stay reserved, only `cached_len` moves).
+            let base = lane.cache.cached_len;
+            lane.cache.cached_len = base + w;
+            self.kv.truncate_tail(&mut lane.cache, base + 1 + accepted);
+            lane.generated += emitted as u32;
+            lane.last_token = outs[emitted - 1] as i32;
             let slot = lane.slot;
-            let done = lane.generated >= lane.max_new || tok as u32 == self.manifest.eos_token;
-            self.ring.publish_token(slot, tok as u32);
-            self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
+            let done = lane.generated >= lane.max_new || outs[emitted - 1] == eos;
+            for &tok in &outs[..emitted] {
+                self.ring.publish_token(slot, tok);
+            }
+            self.stats.tokens_generated.fetch_add(emitted as u64, Ordering::Relaxed);
+            if k > 0 {
+                self.stats.spec_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+                // Counts ride the ring ×1000 — see SchedulerStats.
+                self.stats.accepted_per_verify.record_ns(accepted as u64 * 1000);
+            }
             if done {
                 let lane = self.lanes.swap_remove(i);
                 self.finish_lane(lane);
@@ -1224,6 +1339,55 @@ impl SchedulerCore {
         self.seed_ctr = self.seed_ctr.wrapping_mul(747796405).wrapping_add(2891336453);
         self.seed_ctr
     }
+
+    /// Fill `draft_scratch` with k self-drafted tokens per live lane,
+    /// row-major `[lane][k]`. The drafter runs the modeled executor's
+    /// greedy chain ([`greedy_chain_token`]) forward from each lane's
+    /// pending token, deliberately corrupting each position with
+    /// probability `1 − spec_accept` via a deterministic position hash.
+    /// On the modeled executor in chain mode this makes acceptance a
+    /// tunable knob with correctness untouched — emitted tokens are
+    /// always the verify graph's own outputs, drafts only gate how many
+    /// of them retire per launch; on real artifacts mismatched drafts
+    /// simply degrade throughput toward plain decode. After a corrupted
+    /// position the chain continues from the corrupted token, so one
+    /// miss poisons the rest of the window — matching how a real
+    /// draft-model divergence truncates the accepted prefix.
+    // lint: no_alloc no_panic # scratch preallocated to max_batch × spec_k
+    fn draft_lanes(&mut self, k: usize) {
+        let vocab = (self.manifest.vocab_size as u32).max(1);
+        self.draft_scratch.clear();
+        for lane in &self.lanes {
+            let mut prev = lane.last_token as u32;
+            let mut pos = lane.cache.cached_len as u64;
+            for _ in 0..k {
+                let mut d = greedy_chain_token(vocab, prev, pos);
+                if corrupt_unit(prev, pos) >= self.spec_accept {
+                    d = (d + 1) % vocab;
+                }
+                self.draft_scratch.push(d as i32);
+                prev = d;
+                pos += 1;
+            }
+        }
+    }
+}
+
+/// Deterministic unit-interval hash behind the drafter's acceptance
+/// knob: a draft position is corrupted exactly when this value lands at
+/// or above `spec_accept`, so acceptance converges to the configured
+/// rate while staying reproducible run-to-run. A distinct stream
+/// constant decouples it from `greedy_chain_token`'s mix, so *which*
+/// positions get corrupted is independent of the chain values.
+// lint: no_alloc no_panic
+fn corrupt_unit(prev: u32, pos: u64) -> f64 {
+    let mut x = ((prev as u64) << 32) ^ pos ^ 0xD6E8_FEB8_6659_FD93;
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
 }
 
 /// Furthest K/V position any chunk launch writes when prefilling the

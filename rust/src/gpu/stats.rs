@@ -271,6 +271,20 @@ pub struct SchedulerStats {
     pub shed_degraded: AtomicU64,
     // lint: atomic(shed_dropped) counter
     pub shed_dropped: AtomicU64,
+    /// Speculative-decoding telemetry (DESIGN.md §11): draft tokens
+    /// offered to `decode_verify` launches, ...
+    // lint: atomic(spec_drafted) counter
+    pub spec_drafted: AtomicU64,
+    /// ... drafts accepted by the longest-prefix rule (the bonus token
+    /// each verify emits is *not* counted here — `accepted / drafted`
+    /// is the raw acceptance rate), ...
+    // lint: atomic(spec_accepted) counter
+    pub spec_accepted: AtomicU64,
+    /// ... and per-verify accepted-draft counts as exact samples for
+    /// the `accepted_per_verify` P50/P99 the eval table reports.
+    /// Samples are stored ×1000 (a count recorded as "microseconds")
+    /// so the ring's µs-scaled readers report whole accepted counts.
+    pub accepted_per_verify: SampleRing,
 }
 
 impl SchedulerStats {
@@ -348,6 +362,17 @@ impl SchedulerStats {
         self.iter_full.percentile_us(99.0)
     }
 
+    /// Accepted-drafts-per-verify percentiles — *counts*, not times:
+    /// samples go into the ring ×1000, so the µs conversion cancels and
+    /// these read back as draft-token counts in `0.0..=k`.
+    pub fn accepted_per_verify_p50(&self) -> f64 {
+        self.accepted_per_verify.percentile_us(50.0)
+    }
+
+    pub fn accepted_per_verify_p99(&self) -> f64 {
+        self.accepted_per_verify.percentile_us(99.0)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "decode_steps={} prefills={} offset_prefills={} completed={} failed={} tokens={} \
@@ -359,7 +384,8 @@ impl SchedulerStats {
              iter_full_p99_us={:.2} batch_membership_changes={} \
              heap_allocs={} attention_backend={} queue_depth={} queue_depth_peak={} \
              overload_admitted={} rate_limited={} tenant_limited={} shed_degraded={} \
-             shed_dropped={}",
+             shed_dropped={} spec_drafted={} spec_accepted={} accepted_per_verify_p50={:.2} \
+             accepted_per_verify_p99={:.2}",
             self.decode_steps.load(Ordering::Relaxed),
             self.prefill_batches.load(Ordering::Relaxed),
             self.prefill_offset_batches.load(Ordering::Relaxed),
@@ -401,6 +427,10 @@ impl SchedulerStats {
             self.tenant_limited.load(Ordering::Relaxed),
             self.shed_degraded.load(Ordering::Relaxed),
             self.shed_dropped.load(Ordering::Relaxed),
+            self.spec_drafted.load(Ordering::Relaxed),
+            self.spec_accepted.load(Ordering::Relaxed),
+            self.accepted_per_verify_p50(),
+            self.accepted_per_verify_p99(),
         )
     }
 }
@@ -515,6 +545,25 @@ mod tests {
         assert!(sum.contains("shed_dropped=1"), "{sum}");
         assert!(sum.contains("queue_depth=3"), "{sum}");
         assert!(sum.contains("queue_depth_peak=7"), "{sum}");
+    }
+
+    #[test]
+    fn spec_counters_surface_as_counts_not_times() {
+        let s = SchedulerStats::default();
+        s.spec_drafted.store(40, Ordering::Relaxed);
+        s.spec_accepted.store(30, Ordering::Relaxed);
+        // Ten verifies accepting 3 drafts each, stored ×1000 so the
+        // ring's µs readers return the raw count.
+        for _ in 0..10 {
+            s.accepted_per_verify.record_ns(3 * 1000);
+        }
+        assert!((s.accepted_per_verify_p50() - 3.0).abs() < 1e-9);
+        assert!((s.accepted_per_verify_p99() - 3.0).abs() < 1e-9);
+        let sum = s.summary();
+        assert!(sum.contains("spec_drafted=40"), "{sum}");
+        assert!(sum.contains("spec_accepted=30"), "{sum}");
+        assert!(sum.contains("accepted_per_verify_p50=3.00"), "{sum}");
+        assert!(sum.contains("accepted_per_verify_p99=3.00"), "{sum}");
     }
 
     #[test]

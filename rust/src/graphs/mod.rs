@@ -19,17 +19,25 @@ pub enum GraphKind {
     /// block-aligned offsets are a runtime input.
     PrefillOffset,
     Decode,
+    /// Draft-verify decode (speculative decoding): the graph's `seq`
+    /// records **k**, the draft count — the token input is `[B, k+1]`
+    /// (each lane's pending last token plus k self-drafted candidates)
+    /// and every one of the k+1 query positions samples a successor.
+    /// Selection requires an *exact* k match: a wider graph would score
+    /// draft positions the lane never staged.
+    DecodeVerify,
 }
 
 impl GraphKind {
     /// Manifest `graph` kind strings (see python/compile/aot.py).
     /// Unknown kinds are rejected by the manifest *parser* at load time
     /// (`runtime::manifest`), so by the time a kind string reaches this
-    /// mapping it is one of the three known values.
+    /// mapping it is one of the four known values.
     pub fn from_manifest(kind: &str) -> GraphKind {
         match kind {
             "decode" => GraphKind::Decode,
             "prefill_offset" => GraphKind::PrefillOffset,
+            "decode_verify" => GraphKind::DecodeVerify,
             _ => GraphKind::Prefill,
         }
     }
@@ -41,7 +49,8 @@ pub struct GraphSpec {
     pub name: String,
     pub kind: GraphKind,
     pub batch: usize,
-    /// Padded sequence length (prefill only; 0 for decode).
+    /// Padded sequence length (prefill), draft count k (decode verify),
+    /// 0 for decode.
     pub seq: usize,
 }
 
@@ -49,8 +58,9 @@ impl GraphSpec {
     /// Validate launch-input lengths against this graph's shape — the
     /// single check both the PJRT engine and the modeled executor
     /// apply, so the two backends can never drift: tokens are `[B]` for
-    /// decode and `[B*S]` for (offset) prefill, and `offsets` is `[B]`
-    /// exactly for offset prefill graphs, empty otherwise.
+    /// decode, `[B*S]` for (offset) prefill and `[B*(k+1)]` for decode
+    /// verify, and `offsets` is `[B]` exactly for offset prefill
+    /// graphs, empty otherwise.
     pub fn validate_launch_shapes(
         &self,
         max_blocks_per_seq: usize,
@@ -72,6 +82,7 @@ impl GraphSpec {
         let expected_tok = match self.kind {
             GraphKind::Decode => b,
             GraphKind::Prefill | GraphKind::PrefillOffset => b * self.seq,
+            GraphKind::DecodeVerify => b * (self.seq + 1),
         };
         if tokens_len != expected_tok {
             return Err(format!("{}: tokens len {} != {}", self.name, tokens_len, expected_tok));
@@ -104,6 +115,12 @@ pub struct GraphCache {
     prefill_lut: Vec<Vec<Option<GraphId>>>,
     prefill_offset_lut: Vec<Vec<Option<GraphId>>>,
     decode_lut: Vec<Option<GraphId>>,
+    /// Per-k decode-verify LUTs, sorted by k: `(k, [batch-1 -> id])`.
+    /// k is an *exact*-match axis (a wider-k graph would score draft
+    /// positions the lane never staged), batch rounds up to the
+    /// tightest fit like decode. The k population is tiny (the aot
+    /// k-grid), so the outer scan is effectively O(1).
+    verify_luts: Vec<(usize, Vec<Option<GraphId>>)>,
     /// Fallback: the maximum-shape prefill graph.
     pub fallback_prefill: Option<GraphId>,
     pub fallback_decode: Option<GraphId>,
@@ -153,6 +170,30 @@ impl GraphCache {
                 .min_by_key(|g| g.batch)
                 .map(|g| g.id);
         }
+        let mut ks: Vec<usize> = specs
+            .iter()
+            .filter(|g| g.kind == GraphKind::DecodeVerify)
+            .map(|g| g.seq)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        let verify_luts = ks
+            .into_iter()
+            .map(|k| {
+                let mut lut = vec![None; max_batch];
+                for (bi, cell) in lut.iter_mut().enumerate() {
+                    let b = bi + 1;
+                    *cell = specs
+                        .iter()
+                        .filter(|g| {
+                            g.kind == GraphKind::DecodeVerify && g.seq == k && g.batch >= b
+                        })
+                        .min_by_key(|g| g.batch)
+                        .map(|g| g.id);
+                }
+                (k, lut)
+            })
+            .collect();
         let fallback_prefill = specs
             .iter()
             .filter(|g| g.kind == GraphKind::Prefill)
@@ -171,6 +212,7 @@ impl GraphCache {
             prefill_lut,
             prefill_offset_lut,
             decode_lut,
+            verify_luts,
             fallback_prefill,
             fallback_decode,
         }
@@ -208,13 +250,27 @@ impl GraphCache {
     }
 
     /// Largest `batch × seq` token plane any (offset) prefill launch in
-    /// the grid can carry — sizes the launch arena's prefill token plane
-    /// (decode launches carry `batch` tokens, always smaller).
+    /// the grid can carry — sizes the launch arena's prefill token
+    /// plane. Decode launches carry `batch` tokens and verify launches
+    /// `batch × (k+1)`; both ride the (widened) decode token plane, so
+    /// neither participates here.
     pub fn max_launch_tokens(&self) -> usize {
         self.specs
             .iter()
-            .filter(|s| s.kind != GraphKind::Decode)
+            .filter(|s| matches!(s.kind, GraphKind::Prefill | GraphKind::PrefillOffset))
             .map(|s| s.batch * s.seq)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest `batch × (k+1)` token plane any decode-verify launch can
+    /// carry (0 = no verify graphs) — sizes the decode region's widened
+    /// token plane alongside the plain-decode `batch` width.
+    pub fn max_verify_launch_tokens(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::DecodeVerify)
+            .map(|s| s.batch * (s.seq + 1))
             .max()
             .unwrap_or(0)
     }
@@ -289,6 +345,47 @@ impl GraphCache {
         }
         None
     }
+
+    /// Decode-verify graph for `batch` lanes drafting exactly `k`
+    /// tokens: exact k match, tightest batch fit. `None` is the
+    /// fall-back-to-plain-decode signal, never a panic — a wider-k
+    /// graph would score draft positions the lane never staged, so no
+    /// rounding on the k axis.
+    pub fn select_decode_verify(&self, batch: usize, k: usize) -> Option<GraphId> {
+        if batch == 0 || k == 0 || batch > self.max_batch {
+            return None;
+        }
+        self.verify_luts
+            .iter()
+            .find(|(lk, _)| *lk == k)
+            .and_then(|(_, lut)| lut[batch - 1])
+    }
+
+    /// Do the artifacts provide any decode-verify graphs? Gates
+    /// `serve --spec-k` (requesting speculation without verify graphs
+    /// is a plain-decode serve plus a warning, not an error).
+    pub fn has_verify_graphs(&self) -> bool {
+        !self.verify_luts.is_empty()
+    }
+
+    /// The distinct draft counts the manifest ships, ascending.
+    pub fn verify_ks(&self) -> Vec<usize> {
+        self.verify_luts.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Decode batch sizes (the plain-decode grid) that have NO
+    /// decode-verify coverage at draft count `k` — the silent
+    /// fallback-to-plain-decode case `blink info` warns about. Empty
+    /// means full coverage: any batch a decode graph can serve, a
+    /// k-verify graph can serve too.
+    pub fn verify_uncovered_batches(&self, k: usize) -> Vec<usize> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == GraphKind::Decode)
+            .map(|s| s.batch)
+            .filter(|&b| self.select_decode_verify(b, k).is_none())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -332,6 +429,19 @@ mod tests {
                 kind: GraphKind::Decode,
                 batch: b,
                 seq: 0,
+            });
+            id += 1;
+        }
+        // A *partial* verify grid: k=2 covers every decode batch, k=4
+        // only up to batch 4 — batch 8 at k=4 must fall back to plain
+        // decode (and `verify_uncovered_batches` must report it).
+        for (b, k) in [(1usize, 2usize), (2, 2), (4, 2), (8, 2), (1, 4), (2, 4), (4, 4)] {
+            specs.push(GraphSpec {
+                id: GraphId(id),
+                name: format!("decode_verify_b{b}_k{k}"),
+                kind: GraphKind::DecodeVerify,
+                batch: b,
+                seq: k,
             });
             id += 1;
         }
@@ -491,5 +601,64 @@ mod tests {
         assert_eq!(GraphKind::from_manifest("decode"), GraphKind::Decode);
         assert_eq!(GraphKind::from_manifest("prefill"), GraphKind::Prefill);
         assert_eq!(GraphKind::from_manifest("prefill_offset"), GraphKind::PrefillOffset);
+        assert_eq!(GraphKind::from_manifest("decode_verify"), GraphKind::DecodeVerify);
+    }
+
+    #[test]
+    fn verify_selection_exact_k_tightest_batch() {
+        let c = cache();
+        let g = c.select_decode_verify(2, 2).unwrap();
+        assert_eq!(c.spec(g).name, "decode_verify_b2_k2");
+        // Batch rounds up to the tightest fit, like decode.
+        let g = c.select_decode_verify(3, 4).unwrap();
+        assert_eq!(c.spec(g).name, "decode_verify_b4_k4");
+        // k never rounds: k=3 has no graph even though k=4 would "fit".
+        assert!(c.select_decode_verify(1, 3).is_none());
+        // Off the batch grid at this k: fallback signal, not a panic.
+        assert!(c.select_decode_verify(8, 4).is_none());
+        assert!(c.select_decode_verify(0, 2).is_none());
+        assert!(c.select_decode_verify(1, 0).is_none());
+    }
+
+    #[test]
+    fn verify_coverage_queries() {
+        let c = cache();
+        assert!(c.has_verify_graphs());
+        assert_eq!(c.verify_ks(), vec![2, 4]);
+        assert_eq!(c.verify_uncovered_batches(2), Vec::<usize>::new());
+        assert_eq!(c.verify_uncovered_batches(4), vec![8]);
+        // Widest verify token plane: b8 × (2+1) = 24 > b4 × (4+1) = 20.
+        assert_eq!(c.max_verify_launch_tokens(), 24);
+        // Verify graphs never bleed into prefill-plane or decode-batch
+        // sizing.
+        assert_eq!(c.max_launch_tokens(), 4 * 128);
+        assert_eq!(c.max_decode_batch(), 8);
+        // A cache without verify graphs reports their absence.
+        let plain = GraphCache::new(vec![GraphSpec {
+            id: GraphId(0),
+            name: "decode_b1".into(),
+            kind: GraphKind::Decode,
+            batch: 1,
+            seq: 0,
+        }]);
+        assert!(!plain.has_verify_graphs());
+        assert!(plain.select_decode_verify(1, 2).is_none());
+        assert_eq!(plain.max_verify_launch_tokens(), 0);
+        assert_eq!(plain.verify_uncovered_batches(2), vec![1]);
+    }
+
+    #[test]
+    fn verify_launch_shape_validation() {
+        let spec = GraphSpec {
+            id: GraphId(0),
+            name: "decode_verify_b2_k4".into(),
+            kind: GraphKind::DecodeVerify,
+            batch: 2,
+            seq: 4,
+        };
+        // tokens = b*(k+1) = 10, offsets empty.
+        assert!(spec.validate_launch_shapes(8, 16, 2, 10, 0).is_ok());
+        assert!(spec.validate_launch_shapes(8, 16, 2, 2, 0).is_err());
+        assert!(spec.validate_launch_shapes(8, 16, 2, 10, 2).is_err());
     }
 }

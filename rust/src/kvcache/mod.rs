@@ -47,7 +47,15 @@
 //! 4. a prefix match never spans differing token content;
 //! 5. the index never refers to K/V that was not written: entries are
 //!    committed only after a successful prefill, so a failed launch
-//!    releases having published nothing.
+//!    releases having published nothing. Speculative verify (DESIGN.md
+//!    §11) extends this to *rejected* writes: a verify launch writes
+//!    K/V optimistically for every draft position, and
+//!    [`KvManager::truncate_tail`] rolls `cached_len` back past the
+//!    rejected suffix — those positions sit beyond `cached_len` (the
+//!    kernels mask by length, so attention never reads them, and the
+//!    lane's next launch overwrites them), and they always live in the
+//!    sequence's *partial* tail block region, which is never indexed —
+//!    so rejected-draft K/V is unreachable through the prefix index.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -430,6 +438,30 @@ impl KvManager {
         h
     }
 
+    /// Roll a sequence's cached length back to `new_len` after a
+    /// speculative verify rejected a draft suffix (DESIGN.md §11). The
+    /// verify launch wrote K/V optimistically for all k draft
+    /// positions; the rejected tail is logically discarded here and
+    /// physically overwritten by the lane's next launch before any
+    /// attention reads it (the kernels mask by `cached_len`). Blocks
+    /// stay reserved — the admission-time reservation already covers
+    /// `prompt + max_new`, so rollback never frees or reshuffles
+    /// blocks, and invariant 5 holds: the rejected positions live in
+    /// the never-indexed partial tail region, beyond `cached_len`.
+    pub fn truncate_tail(&self, cache: &mut SeqCache, new_len: usize) {
+        assert!(new_len <= cache.cached_len, "truncate_tail must not extend the cache");
+        debug_assert!(
+            new_len >= cache.prefix_len,
+            "rollback below the shared prefix ({new_len} < {})",
+            cache.prefix_len
+        );
+        debug_assert!(
+            new_len.div_ceil(self.config.block_size) <= cache.blocks.len(),
+            "cached span exceeds the block reservation"
+        );
+        cache.cached_len = new_len;
+    }
+
     /// Return a finished request's blocks: decrement refcounts; an
     /// unreferenced block is parked (if indexed) or freed (if not).
     pub fn release(&mut self, cache: SeqCache) {
@@ -809,6 +841,35 @@ mod tests {
         cold[0] ^= 1;
         assert_eq!(m.match_prefix(&cold).tokens, 0);
         m.release(a);
+    }
+
+    #[test]
+    fn truncate_tail_rolls_back_cached_len_only() {
+        let mut m = KvManager::new(cfg());
+        let mut c = m.admit(32, 20, 40).unwrap(); // span 60 -> 4 blocks
+        c.cached_len = 20; // prefill done
+        let blocks = c.blocks.clone();
+        let free = m.free_blocks();
+        // Verify wrote k=4 draft positions optimistically (20..24);
+        // 1 accepted + the bonus token survive -> roll back to 22.
+        c.cached_len += 4;
+        m.truncate_tail(&mut c, 22);
+        assert_eq!(c.cached_len, 22);
+        assert_eq!(c.blocks, blocks, "blocks stay reserved across rollback");
+        assert_eq!(m.free_blocks(), free, "rollback frees nothing");
+        // Boundary: new_len == cached_len is a no-op (fully accepted).
+        m.truncate_tail(&mut c, 22);
+        assert_eq!(c.cached_len, 22);
+        m.release(c);
+        m.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "must not extend")]
+    fn truncate_tail_rejects_extension() {
+        let m = KvManager::new(cfg());
+        let mut c = SeqCache { blocks: vec![1], cached_len: 5, prefix_len: 0 };
+        m.truncate_tail(&mut c, 6);
     }
 
     #[test]

@@ -5,14 +5,17 @@
 //! ```text
 //! serve   [--model M] [--bind ADDR] [--cpu-resident] [--policy P]
 //!         [--prefix-reuse | --no-prefix-reuse] [--prefill-chunk-tokens N]
-//!         [--rate-limit N]
+//!         [--rate-limit N] [--spec-k K]
 //!         start a live server (P: fcfs|priority|sjf|slo); prefix reuse
 //!         defaults to auto (on when the artifacts ship offset graphs);
 //!         chunk budget defaults to the largest offset-graph seq (0 =
-//!         whole-prompt prefill, the paper's behavior)
-//! eval    <all|policies|prefix|prefix-live|chunked|interference|overload|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
-//!         [--out DIR] [--window S] [--threads N] [--smoke (interference/overload: CI-sized live cells)]
-//! info    print manifest + graph grid for a model
+//!         whole-prompt prefill, the paper's behavior); --spec-k K turns
+//!         on fixed-k speculative decoding when the artifacts ship
+//!         decode_verify graphs at that k (0 = off, the default)
+//! eval    <all|policies|prefix|prefix-live|chunked|interference|overload|spec|fig1|table1..table7|fig3..fig8|tableB1|tableB2|figC1|figD|figE1>
+//!         [--out DIR] [--window S] [--threads N] [--smoke (interference/overload/spec: CI-sized live cells)]
+//! info    print manifest + graph grid for a model, including verify
+//!         k-grid coverage per decode batch size
 //! ```
 
 use blink::eval;
@@ -35,10 +38,11 @@ fn main() {
                  serve [--model blink-tiny] [--bind 127.0.0.1:8089] [--cpu-resident] \\\n\
                        [--policy fcfs|priority|sjf|slo] [--prefix-reuse|--no-prefix-reuse] \\\n\
                        [--prefill-chunk-tokens N (0 = whole-prompt prefill)] \\\n\
-                       [--rate-limit N (req/s admission cap + shed; absent = open loop)]\n\
-                 eval <all|policies|prefix|prefix-live|chunked|interference|overload|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
+                       [--rate-limit N (req/s admission cap + shed; absent = open loop)] \\\n\
+                       [--spec-k K (fixed-k speculative decode; 0 = off)]\n\
+                 eval <all|policies|prefix|prefix-live|chunked|interference|overload|spec|fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1..table7|tableB1|tableB2|figC1|figD|figE1> \\\n\
                       [--out results/] [--window 60] [--threads N] [--policy P (policies: single-policy run)] \\\n\
-                      [--smoke (interference/overload: CI-sized live cells)]\n\
+                      [--smoke (interference/overload/spec: CI-sized live cells)]\n\
                  info [--model blink-tiny]"
             );
             std::process::exit(2);
@@ -90,9 +94,14 @@ fn serve(args: &Args) {
             OverloadConfig { enabled: true, window_capacity: n, ..OverloadConfig::default() }
         }
     };
+    // Speculative decoding (DESIGN.md §11): --spec-k K drafts K tokens
+    // per lane per iteration and verifies them in one decode_verify
+    // launch; engages only when the artifacts ship verify graphs at
+    // exactly that k. 0 = the paper's one-token-per-launch decode.
+    let spec_k = args.get_usize("spec-k", 0);
     eprintln!(
         "[serve] loading {model} (compiling AOT graphs, ~30s), policy={}, prefix_reuse={:?}, \
-         prefill_chunk_tokens={} ...",
+         prefill_chunk_tokens={}, spec_k={spec_k} ...",
         policy.name(),
         prefix_reuse,
         match prefill_chunk_tokens {
@@ -107,6 +116,7 @@ fn serve(args: &Args) {
         prefix_reuse,
         prefill_chunk_tokens,
         overload,
+        spec_k,
         ..Default::default()
     })
     .expect("server start");
@@ -148,6 +158,9 @@ fn eval_cmd(args: &Args) {
         }
         "overload" => {
             return eval::overload::overload(out_ref, args.has_flag("smoke"));
+        }
+        "spec" => {
+            return eval::spec::spec(out_ref, args.has_flag("smoke"));
         }
         _ => {}
     }
@@ -253,6 +266,27 @@ fn info(args: &Args) {
                     "  {} kind={} batch={} seq={} backend={}",
                     g.name, g.kind, g.batch, g.seq, g.backend
                 );
+            }
+            // Verify k-grid coverage (DESIGN.md §11): `serve --spec-k K`
+            // only engages at batch sizes whose decode grid entry has a
+            // decode_verify twin at that k — uncovered batches silently
+            // fall back to plain decode, so surface any gap here.
+            let cache = blink::gpu::scheduler::cache_from_manifest(&m);
+            if cache.has_verify_graphs() {
+                for k in cache.verify_ks() {
+                    let uncovered = cache.verify_uncovered_batches(k);
+                    if uncovered.is_empty() {
+                        println!("spec decode k={k}: covers the full decode batch grid");
+                    } else {
+                        println!(
+                            "spec decode k={k}: WARNING: no verify graph reachable for decode \
+                             batch sizes {uncovered:?} — those batches fall back to plain decode \
+                             under --spec-k {k}"
+                        );
+                    }
+                }
+            } else {
+                println!("spec decode: no decode_verify graphs (serve --spec-k will stay off)");
             }
         }
         Err(e) => {

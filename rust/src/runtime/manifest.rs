@@ -9,7 +9,7 @@ use std::path::Path;
 #[derive(Debug, Clone, PartialEq)]
 pub struct GraphEntry {
     pub name: String,
-    pub kind: String, // "decode" | "prefill" | "prefill_offset"
+    pub kind: String, // "decode" | "prefill" | "prefill_offset" | "decode_verify"
     pub batch: usize,
     pub seq: usize,
     /// Attention build the graph was lowered against, recorded by
@@ -116,12 +116,16 @@ impl ModelManifest {
                 "graph" => {
                     let name = val()?.to_string();
                     let kind = val()?.to_string();
-                    // Reject unknown kinds here, at load time: the three
+                    // Reject unknown kinds here, at load time: the four
                     // kinds have different launch signatures (offset
-                    // prefill takes an extra [B] offsets argument), so a
-                    // typo'd kind silently defaulting to "prefill" would
-                    // surface only as runtime arg-count failures.
-                    if !matches!(kind.as_str(), "decode" | "prefill" | "prefill_offset") {
+                    // prefill takes an extra [B] offsets argument, verify
+                    // tokens are [B, k+1]), so a typo'd kind silently
+                    // defaulting to "prefill" would surface only as
+                    // runtime arg-count failures.
+                    if !matches!(
+                        kind.as_str(),
+                        "decode" | "prefill" | "prefill_offset" | "decode_verify"
+                    ) {
                         bail!("unknown graph kind {kind:?} for graph {name}");
                     }
                     let batch = val()?.parse()?;
@@ -196,6 +200,7 @@ param final_norm 256 f32
 graph decode_b1 decode 1 0 pallas
 graph prefill_b2_s32 prefill 2 32 pallas
 graph prefill_offset_b2_s32 prefill_offset 2 32 pallas
+graph decode_verify_b1_k4 decode_verify 1 4 pallas
 ";
 
     #[test]
@@ -206,7 +211,7 @@ graph prefill_offset_b2_s32 prefill_offset 2 32 pallas
         assert!(!m.moe);
         assert_eq!(m.params.len(), 2);
         assert_eq!(m.params[0], ("tok_embed".to_string(), vec![2048, 256]));
-        assert_eq!(m.graphs.len(), 3);
+        assert_eq!(m.graphs.len(), 4);
         assert_eq!(
             m.graphs[1],
             GraphEntry {
@@ -225,6 +230,17 @@ graph prefill_offset_b2_s32 prefill_offset 2 32 pallas
                 kind: "prefill_offset".into(),
                 batch: 2,
                 seq: 32,
+                backend: "pallas".into()
+            }
+        );
+        // Verify graphs record k (the draft count) in the seq slot.
+        assert_eq!(
+            m.graphs[3],
+            GraphEntry {
+                name: "decode_verify_b1_k4".into(),
+                kind: "decode_verify".into(),
+                batch: 1,
+                seq: 4,
                 backend: "pallas".into()
             }
         );

@@ -99,11 +99,14 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute one graph. `tokens` is `[B]` for decode or `[B*S]`
-    /// row-major for prefill; `block_tables` is `[B * max_blocks_per_seq]`
-    /// row-major; `seq_lens` is `[B]`. `offsets` is `[B]` for offset
-    /// prefill graphs (per-lane cached-prefix lengths) and must be empty
-    /// for every other kind. Returns the sampled tokens `[B]`.
+    /// Execute one graph. `tokens` is `[B]` for decode, `[B*S]`
+    /// row-major for prefill, or `[B*(k+1)]` row-major for decode
+    /// verify; `block_tables` is `[B * max_blocks_per_seq]` row-major;
+    /// `seq_lens` is `[B]`. `offsets` is `[B]` for offset prefill
+    /// graphs (per-lane cached-prefix lengths) and must be empty for
+    /// every other kind. Returns the sampled tokens — `[B]`, or
+    /// `[B*(k+1)]` row-major for decode verify (one successor per
+    /// window position).
     ///
     /// The KV pool is passed as a device buffer and swapped for the
     /// output's pool element — no host copy of cache state, the analogue
@@ -139,6 +142,11 @@ impl Engine {
             GraphKind::Decode => c.buffer_from_host_buffer(tokens, &[b], None),
             GraphKind::Prefill | GraphKind::PrefillOffset => {
                 c.buffer_from_host_buffer(tokens, &[b, spec.seq], None)
+            }
+            // Verify graphs take the [B, k+1] draft window; spec.seq
+            // records k.
+            GraphKind::DecodeVerify => {
+                c.buffer_from_host_buffer(tokens, &[b, spec.seq + 1], None)
             }
         }
         .map_err(wrap_xla)?;

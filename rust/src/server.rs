@@ -44,6 +44,12 @@ pub struct ServerConfig {
     /// limit, per-tenant token buckets, class-aware load shedding.
     /// Disabled by default — the paper's open-loop behavior.
     pub overload: OverloadConfig,
+    /// Fixed-k speculative decoding (`--spec-k` on the CLI,
+    /// DESIGN.md §11): each decode iteration drafts k tokens per lane
+    /// and verifies them in one `decode_verify` launch. Engages only
+    /// when the artifacts ship verify graphs at exactly this k; 0 (the
+    /// default) is the paper's one-token-per-launch decode.
+    pub spec_k: usize,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +66,7 @@ impl Default for ServerConfig {
             prefix_reuse: PrefixReuse::Auto,
             prefill_chunk_tokens: None,
             overload: OverloadConfig::default(),
+            spec_k: 0,
         }
     }
 }
@@ -102,6 +109,7 @@ impl BlinkServer {
                 policy: config.policy,
                 prefix_reuse: config.prefix_reuse,
                 prefill_chunk_tokens: config.prefill_chunk_tokens,
+                spec_k: config.spec_k,
                 ..Default::default()
             },
         );

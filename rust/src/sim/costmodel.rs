@@ -142,16 +142,47 @@ impl CostModel {
     /// near it make long-prompt prefill nearly free for decode tails,
     /// while large budgets degenerate toward the whole-prompt stall.
     pub fn decode_step_with_chunk_s(&self, b: usize, mean_ctx: f64, chunk_tokens: usize) -> f64 {
+        self.verify_step_with_chunk_s(b, mean_ctx, 0, chunk_tokens)
+    }
+
+    /// One speculative draft-verify iteration (DESIGN.md §11): each lane
+    /// scores `k + 1` window positions (pending token + k drafts) in a
+    /// single launch. Plain decode is the `k = 0` case — this is the
+    /// general form [`CostModel::decode_step_with_chunk_s`] delegates
+    /// to, so the existing decode pins hold by construction. The
+    /// roofline story of why speculation pays: the HBM-bound weight
+    /// sweep is charged **once** regardless of k (that is the whole
+    /// win — k+1 tokens ride one weight read), while attention's KV
+    /// reads and the GEMM FLOPs scale with the window. Costs therefore
+    /// grow sublinearly in k until the extra FLOPs lift the step off
+    /// the weight sweep, which is exactly the regime where acceptance
+    /// decides whether verify launches beat plain decode.
+    pub fn verify_step_s(&self, b: usize, mean_ctx: f64, k: usize) -> f64 {
+        self.verify_step_with_chunk_s(b, mean_ctx, k, 0)
+    }
+
+    /// Verify iteration that also carries a piggybacked prefill chunk
+    /// (the chunked-prefill co-scheduling applies unchanged: the
+    /// chunk's GEMMs hide under the shared weight sweep).
+    pub fn verify_step_with_chunk_s(
+        &self,
+        b: usize,
+        mean_ctx: f64,
+        k: usize,
+        chunk_tokens: usize,
+    ) -> f64 {
+        let window = (k + 1) as f64;
         let weights = self.active_weight_bytes(b) / self.hw.hbm_bytes_per_s;
         // KV bytes per token per layer ≈ 2 (K,V) × d_kv × 2 bytes. Use a
-        // GQA-typical 1024 bytes/token/layer.
-        let kv_bytes = b as f64 * mean_ctx * self.model.layers as f64 * 1024.0;
+        // GQA-typical 1024 bytes/token/layer; every window position
+        // attends over the full context, so the KV sweep scales with w.
+        let kv_bytes = b as f64 * window * mean_ctx * self.model.layers as f64 * 1024.0;
         let kv = kv_bytes / self.hw.hbm_bytes_per_s;
-        // Batched GEMV compute (rarely binding below b≈64) plus the
-        // piggybacked chunk's prefill GEMMs at the calibrated chunk
-        // efficiency.
+        // Batched GEMV compute — w tokens per lane (rarely binding below
+        // b·w ≈ 64) — plus the piggybacked chunk's prefill GEMMs at the
+        // calibrated chunk efficiency.
         let flops = 2.0 * self.model.active_params
-            * (b as f64 + chunk_tokens as f64 / self.hw.chunk_mxu_efficiency)
+            * (b as f64 * window + chunk_tokens as f64 / self.hw.chunk_mxu_efficiency)
             / self.hw.flops;
         weights.max(flops) + kv + self.hw.graph_exec_overhead_s
     }
@@ -318,6 +349,42 @@ mod tests {
             3.0 * overhead
         );
         assert!(cm.prefill_s(2048) < 0.3 * whole);
+    }
+
+    /// The verify roofline (DESIGN.md §11): k = 0 *is* plain decode
+    /// (the delegation keeps every existing decode pin), cost grows
+    /// with k but far slower than running k+1 sequential decode steps —
+    /// the weight sweep and the graph overhead are paid once — and the
+    /// break-even acceptance (verify cost ÷ per-launch emitted tokens)
+    /// sits well below 1, so speculation pays at realistic acceptance.
+    #[test]
+    fn verify_step_shares_the_weight_sweep() {
+        for model in [LLAMA3_8B, QWEN3_32B, QWEN3_30B_A3B] {
+            let cm = CostModel::new(model);
+            for b in [1usize, 16] {
+                let plain = cm.decode_step_s(b, 1200.0);
+                assert_eq!(cm.verify_step_s(b, 1200.0, 0), plain, "{}", model.name);
+                let v4 = cm.verify_step_s(b, 1200.0, 4);
+                assert!(v4 > plain, "{}: k=4 must cost more than k=0 at b={b}", model.name);
+                assert!(
+                    v4 < 2.5 * plain,
+                    "{}: one 5-wide verify must stay far under 5 decode steps \
+                     (got {v4} vs {plain} at b={b})",
+                    model.name
+                );
+                // Perfect acceptance emits 5 tokens per launch: ≥2×
+                // tokens/s over plain decode on every paper model.
+                assert!(
+                    v4 / 5.0 < plain / 2.0,
+                    "{}: per-token verify cost must beat half the decode cost at b={b}",
+                    model.name
+                );
+            }
+        }
+        // Monotone in k.
+        let cm = CostModel::new(LLAMA3_8B);
+        let costs: Vec<f64> = (0..=8).map(|k| cm.verify_step_s(16, 1200.0, k)).collect();
+        assert!(costs.windows(2).all(|w| w[0] < w[1]), "{costs:?}");
     }
 
     #[test]

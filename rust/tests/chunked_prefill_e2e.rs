@@ -110,7 +110,8 @@ fn long_prompt_chunks_across_iterations_with_decode_interleaved() {
     // Visible per-step costs so the chunking window is long enough to
     // observe interleaving from the outside (~5 ms per decode step,
     // ~0.3 ms per 16-token chunk, 12 chunks ⇒ ≳ 60 ms window).
-    let cost = ModeledCost { prefill_us_per_token: 20.0, decode_step_us: 5000.0 };
+    let cost =
+        ModeledCost { prefill_us_per_token: 20.0, decode_step_us: 5000.0, ..ModeledCost::zero() };
     let (ring, mut sched) = start(&m, cost, Some(16));
 
     // A short request first: it prefills whole (16 ≤ budget) and keeps

@@ -16,7 +16,7 @@
 //! which is exactly what the test is pinning.
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use blink::gpu::{Executor, ModeledCost, PrefixReuse, Scheduler, SchedulerConfig};
@@ -26,6 +26,11 @@ use blink::util::alloc::{alloc_count, CountingAlloc};
 
 #[global_allocator]
 static COUNTING: CountingAlloc = CountingAlloc;
+
+/// The counting allocator is process-wide, so the two zero-allocation
+/// windows in this file must never overlap: a concurrently running test
+/// would charge its allocations to the other's window.
+static WINDOW: Mutex<()> = Mutex::new(());
 
 /// Decode grid up to batch 8, prefill grid (b ≤ 4, s ≤ 64), no offset
 /// graphs (prefix reuse stays off: admission is the cold path here).
@@ -67,11 +72,13 @@ fn wait_until(deadline: Duration, what: &str, mut cond: impl FnMut() -> bool) {
 
 #[test]
 fn steady_state_decode_iterations_allocate_nothing() {
+    let _window = WINDOW.lock().unwrap_or_else(|e| e.into_inner());
     let m = manifest();
     // A visible per-step cost paces the loop at ~100 µs/iteration:
     // plenty of iterations in the window, but a lane's 1008-token budget
     // (~100 ms of decoding) comfortably outlives it.
-    let cost = ModeledCost { prefill_us_per_token: 1.0, decode_step_us: 100.0 };
+    let cost =
+        ModeledCost { prefill_us_per_token: 1.0, decode_step_us: 100.0, ..ModeledCost::zero() };
     let ring = Arc::new(RingBuffer::new(RingConfig {
         num_slots: 16,
         max_prompt: 64,
@@ -155,5 +162,105 @@ fn steady_state_decode_iterations_allocate_nothing() {
     // Hard stop: the four long lanes still hold ~900 tokens of budget
     // each; draining would serialize ~90 ms × 4 of modeled decode for no
     // additional coverage.
+    sched.stop();
+}
+
+/// Same manifest shape plus a k = 4 verify grid, `eos_token` pushed out
+/// of the vocab (verify outputs are always chain-scored, so an in-vocab
+/// EOS could retire a lane mid-window), and a 4096-token context — at
+/// ~3 accepted tokens per iteration the budget burns ~3× faster than
+/// plain decode, and no lane may finish inside the measured window.
+fn spec_manifest() -> ModelManifest {
+    let mut text = String::from(
+        "blink-manifest v1\nmodel hotloop-spec-test\nvocab_size 2048\nd_model 64\nn_layers 2\n\
+         n_heads 4\nn_kv_heads 2\nd_head 16\nd_ff 128\nblock_size 16\nnum_blocks 1200\n\
+         max_blocks_per_seq 256\nn_experts 0\ntop_k 0\neos_token 2048\nmoe 0\n\
+         param tok_embed 2048x64 f32\n",
+    );
+    for b in [1usize, 2, 4, 8] {
+        text.push_str(&format!("graph decode_b{b} decode {b} 0\n"));
+        text.push_str(&format!("graph decode_verify_b{b}_k4 decode_verify {b} 4\n"));
+    }
+    for b in [1usize, 2, 4] {
+        for s in [16usize, 32, 64] {
+            text.push_str(&format!("graph prefill_b{b}_s{s} prefill {b} {s}\n"));
+        }
+    }
+    ModelManifest::parse(&text).expect("hotloop spec manifest")
+}
+
+/// The issue's acceptance criterion: speculative steady state is held to
+/// the same zero-allocation bar as plain decode. Every per-iteration
+/// addition — drafting into the preallocated scratch, the k-wide verify
+/// staging, the w-wide poll, the variable-length prefix retire with its
+/// KV tail rollback (acceptance 0.7 rejects ~30% of drafts, so
+/// `truncate_tail` runs constantly), and the accepted-count sample ring
+/// — must touch no heap.
+#[test]
+fn steady_state_speculative_decode_allocates_nothing() {
+    let _window = WINDOW.lock().unwrap_or_else(|e| e.into_inner());
+    let m = spec_manifest();
+    let cost = ModeledCost {
+        prefill_us_per_token: 1.0,
+        decode_step_us: 100.0,
+        verify_pos_us: 1.0,
+        ..ModeledCost::zero()
+    };
+    let ring = Arc::new(RingBuffer::new(RingConfig {
+        num_slots: 16,
+        max_prompt: 64,
+        max_output: 4096,
+    }));
+    let executor = Executor::spawn_modeled(&m, cost);
+    let mut sched = Scheduler::spawn(
+        ring.clone(),
+        executor,
+        m.clone(),
+        SchedulerConfig {
+            apply_launch_delays: false,
+            prefix_reuse: PrefixReuse::Off,
+            spec_k: 4,
+            spec_accept: 0.7,
+            ..Default::default()
+        },
+    );
+    let stats = sched.stats.clone();
+    let steps = || stats.decode_steps.load(Ordering::Relaxed);
+
+    for slot in 0..4 {
+        submit(&ring, slot, 16, u32::MAX); // clamps to the 4080 headroom
+    }
+    wait_until(Duration::from_secs(20), "all four lanes decoding", || {
+        (0..4).all(|i| ring.slot(i).generated.load(Ordering::Acquire) >= 2)
+    });
+
+    // Warmup covers scratch growth and the plain↔verify arena resync.
+    let warm_target = steps() + 100;
+    wait_until(Duration::from_secs(20), "warmup verify steps", || steps() >= warm_target);
+
+    let a0 = alloc_count();
+    let s0 = steps();
+    let d0 = stats.spec_drafted.load(Ordering::Relaxed);
+    wait_until(Duration::from_secs(20), "speculative steady-state window", || {
+        steps() >= s0 + 400
+    });
+    let a1 = alloc_count();
+    let s1 = steps();
+    assert_eq!(
+        a1 - a0,
+        0,
+        "steady-state speculative decode must be allocation-free: {} heap allocations \
+         across {} iterations",
+        a1 - a0,
+        s1 - s0
+    );
+    // The window really was speculative, not a plain-decode fallback.
+    let drafted = stats.spec_drafted.load(Ordering::Relaxed) - d0;
+    assert!(drafted > 0, "the measured window must have drafted (saw {drafted})");
+    assert!(
+        stats.spec_accepted.load(Ordering::Relaxed) > 0,
+        "acceptance 0.7 must accept some drafts"
+    );
+
     sched.stop();
 }

@@ -48,7 +48,7 @@ fn stack(overload: OverloadConfig) -> Stack {
     let rdma = RdmaEngine::spawn(ring.clone(), RdmaConfig::zero_cost());
     let executor = Executor::spawn_modeled(
         &manifest,
-        ModeledCost { prefill_us_per_token: 1.0, decode_step_us: 200.0, expert_dispatch_us: 0.0 },
+        ModeledCost { prefill_us_per_token: 1.0, decode_step_us: 200.0, ..ModeledCost::zero() },
     );
     let sched = Scheduler::spawn(
         ring.clone(),

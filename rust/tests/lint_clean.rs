@@ -23,11 +23,12 @@ fn repo_lints_clean() {
 fn contract_coverage_does_not_shrink() {
     // A clean report is only meaningful if the contracts are actually
     // there — deleting every annotation would also "pass". Pin floors
-    // just under the current counts (86 contracts / 241 checked use
-    // sites / 95 atomic declarations at the time this gate landed).
+    // just under the current counts (~88 contracts / ~247 checked use
+    // sites / 97 atomic declarations after the speculative-decoding
+    // counters landed; the gate before this PR pinned 86/241/95).
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let report = blink_lint::run(root).expect("blink-lint over rust/src");
-    assert!(report.contracts >= 80, "contract registry shrank: {}", report.contracts);
-    assert!(report.uses >= 200, "checked atomic use sites shrank: {}", report.uses);
-    assert!(report.decls >= 90, "atomic declarations shrank: {}", report.decls);
+    assert!(report.contracts >= 82, "contract registry shrank: {}", report.contracts);
+    assert!(report.uses >= 210, "checked atomic use sites shrank: {}", report.uses);
+    assert!(report.decls >= 92, "atomic declarations shrank: {}", report.decls);
 }
